@@ -1,0 +1,86 @@
+//! Model-hub serving: start the hub, push a batch of models through the
+//! streaming coordinator, then serve uploads/downloads with and without
+//! compression across the paper's network regimes (§5.3 / Fig. 10 shape).
+//!
+//! ```bash
+//! cargo run --release --example hub_serving
+//! ```
+
+use zipnn::bench_support::Table;
+use zipnn::codec::CodecConfig;
+use zipnn::coordinator::{PipelineBuilder, WorkItem};
+use zipnn::fp::DType;
+use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // -- 1. Batch-compress a model zoo through the coordinator pipeline --
+    let zoo = [
+        ("llama-bf16", Category::RegularBF16),
+        ("olmo-fp32", Category::RegularF32),
+        ("xlmR-clean", Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 }),
+    ];
+    let mut pipeline = PipelineBuilder::new(CodecConfig::for_dtype(DType::BF16))
+        .workers(2)
+        .queue_depth(2)
+        .start();
+    let mut models = Vec::new();
+    for (i, (name, cat)) in zoo.iter().enumerate() {
+        let m = generate(&SyntheticSpec::new(name, *cat, 32 << 20, 100 + i as u64));
+        let raw = m.to_bytes();
+        pipeline.submit(WorkItem { name: name.to_string(), data: raw.clone() })?;
+        models.push((name.to_string(), m.dominant_dtype(), raw));
+    }
+    let (results, metrics) = pipeline.finish();
+    println!("coordinator pipeline: {} items, {:.1}% mean compressed size, {} stalls",
+        results.len(),
+        metrics.compressed_pct(),
+        metrics.stalls.load(std::sync::atomic::Ordering::Relaxed));
+
+    // -- 2. Serve them over the hub, timing each regime (Fig. 10) --
+    let server = HubServer::start()?;
+    println!("hub listening on {}", server.addr());
+    let mut client = HubClient::connect(server.addr())?.with_threads(2);
+
+    let mut table = Table::new(&[
+        "model", "size", "regime", "raw (s)", "zipnn (s)", "saving",
+    ]);
+    for (name, dtype, raw) in &models {
+        let mut up = NetSim::new(NetProfile::UPLOAD, 1);
+        let rep_up_raw = client.upload(name, raw, None, &mut up)?;
+        let rep_up_c = client.upload(name, raw, Some(CodecConfig::for_dtype(*dtype)), &mut up)?;
+        table.row(&[
+            name.clone(),
+            human_bytes(raw.len() as u64),
+            "upload".into(),
+            format!("{:.2}", rep_up_raw.total_secs()),
+            format!("{:.2}", rep_up_c.total_secs()),
+            format!("{:+.0}%", (1.0 - rep_up_c.total_secs() / rep_up_raw.total_secs()) * 100.0),
+        ]);
+        for profile in [
+            NetProfile::CLOUD_FIRST,
+            NetProfile::CLOUD_CACHED,
+            NetProfile::HOME_FIRST,
+            NetProfile::HOME_CACHED,
+        ] {
+            let mut sim = NetSim::new(profile, 2);
+            let (raw_back, rep_r) = client.download(name, false, &mut sim)?;
+            let (comp_back, rep_c) = client.download(name, true, &mut sim)?;
+            assert_eq!(&raw_back, raw);
+            assert_eq!(&comp_back, raw);
+            table.row(&[
+                name.clone(),
+                human_bytes(raw.len() as u64),
+                profile.name.into(),
+                format!("{:.2}", rep_r.total_secs()),
+                format!("{:.2}", rep_c.total_secs()),
+                format!("{:+.0}%", (1.0 - rep_c.total_secs() / rep_r.total_secs()) * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(total secs = simulated WAN transfer + measured codec time)");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: compress a model with ZipNN, inspect the breakdown, verify
+//! the roundtrip, and compare against vanilla Zstd.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use zipnn::codec::{compress_with_report, decompress, CodecConfig, Compressor};
+use zipnn::fp::DType;
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::model::{read_model, write_model};
+use zipnn::util::{human_bytes, Timer};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A Llama-class BF16 model (synthetic analog; see DESIGN.md §2).
+    let spec = SyntheticSpec::new("llama-analog", Category::RegularBF16, 64 << 20, 42);
+    println!("generating {} ...", spec.name);
+    let model = generate(&spec);
+    let raw = model.to_bytes();
+    println!(
+        "  {} tensors, {} ({} params)",
+        model.tensors.len(),
+        human_bytes(raw.len() as u64),
+        model.numel()
+    );
+
+    // 2. ZipNN compression (exponent extraction + byte grouping + Huffman).
+    let cfg = CodecConfig::for_dtype(DType::BF16);
+    let t = Timer::start();
+    let (compressed, groups) = compress_with_report(cfg, &raw)?;
+    let secs = t.secs();
+    println!(
+        "\nZipNN: {} -> {}  ({:.1}% of original, {:.2} GB/s)",
+        human_bytes(raw.len() as u64),
+        human_bytes(compressed.len() as u64),
+        compressed.len() as f64 / raw.len() as f64 * 100.0,
+        raw.len() as f64 / secs / 1e9,
+    );
+    println!("  byte-group breakdown (exponent group first):");
+    for (i, g) in groups.iter().enumerate() {
+        println!("    group {i}: {:.1}%", g.pct());
+    }
+
+    // 3. Exact roundtrip.
+    let t = Timer::start();
+    let restored = decompress(&compressed)?;
+    println!(
+        "decompress: {:.2} GB/s, roundtrip {}",
+        raw.len() as f64 / t.secs() / 1e9,
+        if restored == raw { "OK (bit-exact)" } else { "FAILED" }
+    );
+    assert_eq!(restored, raw);
+
+    // 4. Baseline comparison.
+    let vanilla = Compressor::new(CodecConfig::vanilla_zstd()).compress(&raw)?;
+    println!(
+        "\nvanilla zstd: {:.1}%  |  ZipNN: {:.1}%  ({:.1}% better)",
+        vanilla.len() as f64 / raw.len() as f64 * 100.0,
+        compressed.len() as f64 / raw.len() as f64 * 100.0,
+        (1.0 - compressed.len() as f64 / vanilla.len() as f64) * 100.0,
+    );
+
+    // 5. Model container I/O.
+    let dir = std::env::temp_dir().join("zipnn_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("model.znnm");
+    write_model(&path, &model)?;
+    let back = read_model(&path)?;
+    assert_eq!(back, model);
+    println!("\nmodel container roundtrip via {} OK", path.display());
+    Ok(())
+}

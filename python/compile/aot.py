@@ -1,0 +1,85 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO **text** + manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text with a tuple root."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    import numpy as np
+
+    return {
+        np.dtype("uint8"): "u8",
+        np.dtype("uint16"): "u16",
+        np.dtype("uint32"): "u32",
+        np.dtype("int32"): "i32",
+        np.dtype("float32"): "f32",
+    }[np.dtype(dt)]
+
+
+def lower_all(out_dir: str, only=None) -> dict:
+    """Lower all artifacts into `out_dir`; return the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = model.all_entries()
+    manifest = {"version": 1, "artifacts": {}, "models": model.model_manifests()}
+    for name, (fn, args) in sorted(entries.items()):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *args)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in args
+            ],
+            "outputs": [
+                {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+                for a in out_avals
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars, "
+              f"{len(args)} inputs, {len(out_avals)} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = parser.parse_args()
+    lower_all(args.out, only=set(args.only) if args.only else None)
+    print(f"manifest written to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Pallas byte-plane kernels: the codec's data-movement hot-spot.
+
+The ZipNN byte-group transform (paper Fig. 3/5) expressed as Pallas
+kernels. On TPU this is a pure VPU permute/mask pipeline tiled by
+BlockSpec into VMEM-sized blocks; `interpret=True` is mandatory here —
+the CPU PJRT client cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation).
+
+Block size: 32Ki elements per grid step, so a 128Ki-element chunk (one
+256 KiB bf16 chunk, the paper's granularity) runs as a 4-step grid. Per
+step the bf16 kernel touches 32Ki*2 B in + 2*32Ki B out = 128 KiB, far
+under the ~16 MiB VMEM budget; the fp32 kernel 256 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32 * 1024
+
+
+def _split_bf16_kernel(x_ref, hi_ref, lo_ref):
+    x = x_ref[...]
+    hi_ref[...] = (x >> 8).astype(jnp.uint8)
+    lo_ref[...] = (x & 0xFF).astype(jnp.uint8)
+
+
+def split_bf16(x_u16):
+    """Split bf16 words into (hi, lo) byte planes. N % BLOCK == 0."""
+    n = x_u16.shape[0]
+    grid = n // BLOCK
+    return pl.pallas_call(
+        _split_bf16_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+        ),
+        interpret=True,
+    )(x_u16)
+
+
+def _merge_bf16_kernel(hi_ref, lo_ref, o_ref):
+    o_ref[...] = (hi_ref[...].astype(jnp.uint16) << 8) | lo_ref[...].astype(jnp.uint16)
+
+
+def merge_bf16(hi_u8, lo_u8):
+    """Inverse of :func:`split_bf16`."""
+    n = hi_u8.shape[0]
+    grid = n // BLOCK
+    return pl.pallas_call(
+        _merge_bf16_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint16),
+        interpret=True,
+    )(hi_u8, lo_u8)
+
+
+def _split_fp32_kernel(x_ref, b3_ref, b2_ref, b1_ref, b0_ref):
+    x = x_ref[...]
+    b3_ref[...] = (x >> 24).astype(jnp.uint8)
+    b2_ref[...] = ((x >> 16) & 0xFF).astype(jnp.uint8)
+    b1_ref[...] = ((x >> 8) & 0xFF).astype(jnp.uint8)
+    b0_ref[...] = (x & 0xFF).astype(jnp.uint8)
+
+
+def split_fp32(x_u32):
+    """Split fp32 words into 4 byte planes (msb first). N % BLOCK == 0."""
+    n = x_u32.shape[0]
+    grid = n // BLOCK
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _split_fp32_kernel,
+        grid=(grid,),
+        in_specs=[spec],
+        out_specs=(spec, spec, spec, spec),
+        out_shape=tuple(jax.ShapeDtypeStruct((n,), jnp.uint8) for _ in range(4)),
+        interpret=True,
+    )(x_u32)
+
+
+def _merge_fp32_kernel(b3_ref, b2_ref, b1_ref, b0_ref, o_ref):
+    o_ref[...] = (
+        (b3_ref[...].astype(jnp.uint32) << 24)
+        | (b2_ref[...].astype(jnp.uint32) << 16)
+        | (b1_ref[...].astype(jnp.uint32) << 8)
+        | b0_ref[...].astype(jnp.uint32)
+    )
+
+
+def merge_fp32(b3, b2, b1, b0):
+    """Inverse of :func:`split_fp32`."""
+    n = b3.shape[0]
+    grid = n // BLOCK
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _merge_fp32_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(b3, b2, b1, b0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def analysis_bf16(x_u16):
+    """The L2 analysis graph the Rust hot path can offload to PJRT:
+    byte planes + exponent histogram of one bf16 chunk, in one HLO.
+    """
+    from . import exp_hist
+
+    hi, lo = split_bf16(x_u16)
+    hist = exp_hist.exp_hist_bf16(x_u16)
+    return hi, lo, hist

@@ -1,0 +1,44 @@
+"""Pallas exponent-histogram kernel (paper Fig. 2 statistic).
+
+TPU-shaped formulation: per block, bin membership is computed as a
+one-hot comparison matrix and reduced with a `ones @ onehot` matmul so
+the MXU does the binning; grid steps accumulate into the output ref
+(grid-carried accumulation, the standard Pallas reduction idiom).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32 * 1024
+
+
+def _exp_hist_kernel(x_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.uint32)
+    exp = ((x >> 7) & 0xFF).astype(jnp.int32)
+    # one-hot[B, 256] via broadcast compare; reduce with a matmul so the
+    # MXU performs the binning on real hardware.
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 256), 1)
+    onehot = (exp[:, None] == bins).astype(jnp.float32)
+    counts = jnp.ones((1, exp.shape[0]), jnp.float32) @ onehot
+    o_ref[...] += counts[0].astype(jnp.uint32)
+
+
+def exp_hist_bf16(x_u16):
+    """256-bin histogram of bf16 exponent fields. N % BLOCK == 0."""
+    n = x_u16.shape[0]
+    grid = n // BLOCK
+    return pl.pallas_call(
+        _exp_hist_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((256,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((256,), jnp.uint32),
+        interpret=True,
+    )(x_u16)

@@ -1,0 +1,65 @@
+"""Pallas fused linear kernel: GELU(x @ w + b).
+
+The transformer MLP hot block as a blocked MXU matmul with grid-carried
+accumulation over K, bias + GELU fused into the final K step. Tile sizes
+are MXU-friendly (128-multiples); the fp32 accumulator lives in the
+output block across K steps (VMEM-resident on TPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _gelu(y):
+    return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        o_ref[...] = _gelu(o_ref[...] + b_ref[...])
+
+
+def fused_linear(x, w, b):
+    """GELU(x @ w + b) with shapes x[M,K], w[K,N], b[N].
+
+    K and N must be 128-multiples (weight dims — true by construction for
+    the LM configs); M is padded internally to the tile size.
+    """
+    m_orig = x.shape[0]
+    if m_orig % TILE_M != 0:
+        pad = TILE_M - m_orig % TILE_M
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    m, kdim = x.shape
+    _, n = w.shape
+    k_steps = kdim // TILE_K
+    grid = (m // TILE_M, n // TILE_N, k_steps)
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, k: (k, j)),
+            pl.BlockSpec((TILE_N,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)[:m_orig]

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests `assert_allclose` (bit-exact
+for the integer kernels) against, and double as readable specifications.
+"""
+
+import jax.numpy as jnp
+
+
+def split_bf16_ref(x_u16):
+    """Split bf16 words into (exponent-carrying hi byte, lo byte) planes.
+
+    Args:
+      x_u16: uint16[N] — raw bf16 bit patterns.
+    Returns:
+      (hi uint8[N], lo uint8[N]) — hi = sign+exp[7:1], lo = exp[0]+mantissa.
+    """
+    hi = (x_u16 >> 8).astype(jnp.uint8)
+    lo = (x_u16 & 0xFF).astype(jnp.uint8)
+    return hi, lo
+
+
+def merge_bf16_ref(hi_u8, lo_u8):
+    """Inverse of :func:`split_bf16_ref`."""
+    return (hi_u8.astype(jnp.uint16) << 8) | lo_u8.astype(jnp.uint16)
+
+
+def split_fp32_ref(x_u32):
+    """Split fp32 words into 4 byte planes, most significant first.
+
+    Returns (b3, b2, b1, b0) where b3 = sign+exp[7:1] (the paper's
+    "exponent" group) and b0 = mantissa low byte.
+    """
+    b3 = (x_u32 >> 24).astype(jnp.uint8)
+    b2 = ((x_u32 >> 16) & 0xFF).astype(jnp.uint8)
+    b1 = ((x_u32 >> 8) & 0xFF).astype(jnp.uint8)
+    b0 = (x_u32 & 0xFF).astype(jnp.uint8)
+    return b3, b2, b1, b0
+
+
+def merge_fp32_ref(b3, b2, b1, b0):
+    """Inverse of :func:`split_fp32_ref`."""
+    return (
+        (b3.astype(jnp.uint32) << 24)
+        | (b2.astype(jnp.uint32) << 16)
+        | (b1.astype(jnp.uint32) << 8)
+        | b0.astype(jnp.uint32)
+    )
+
+
+def exp_hist_bf16_ref(x_u16):
+    """256-bin histogram of the bf16 exponent field (paper Fig. 2).
+
+    exponent = bits[14:7] of the bf16 word.
+    """
+    exp = (x_u16.astype(jnp.uint32) >> 7) & 0xFF
+    return jnp.zeros((256,), jnp.uint32).at[exp].add(1)
+
+
+def xor_delta_ref(a_u32, b_u32):
+    """Elementwise XOR of two raw-bits buffers (paper §4.2 delta)."""
+    return a_u32 ^ b_u32
+
+
+def fused_linear_ref(x, w, b):
+    """GELU(x @ w + b) — the transformer MLP hot block."""
+    y = x @ w + b
+    return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))

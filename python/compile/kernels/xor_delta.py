@@ -1,0 +1,27 @@
+"""Pallas XOR-delta kernel (paper §4.2): elementwise XOR of two
+checkpoints' raw bits. Pure VPU op, BlockSpec-tiled."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32 * 1024
+
+
+def _xor_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] ^ b_ref[...]
+
+
+def xor_delta_u32(a_u32, b_u32):
+    """XOR two uint32 buffers. N % BLOCK == 0."""
+    n = a_u32.shape[0]
+    grid = n // BLOCK
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _xor_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(a_u32, b_u32)

@@ -1,0 +1,209 @@
+"""Layer-2 graph assembly: every function that gets AOT-lowered, with its
+example arguments — the single source of truth `aot.py` iterates over.
+
+Each entry returns `(fn, example_args)` where `fn` is jit-able and
+`example_args` are `ShapeDtypeStruct`s. Parameters travel as flat
+positional lists (see `models.transformer.param_spec`) so the Rust
+runtime can drive the HLO with plain literal vectors.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import byteplanes, exp_hist, fused_linear, xor_delta
+from .models import resnet, transformer
+
+CHUNK_ELEMS_BF16 = 128 * 1024  # one 256 KiB bf16 chunk
+CHUNK_ELEMS_FP32 = 64 * 1024  # one 256 KiB fp32 chunk
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def kernel_entries() -> Dict[str, Tuple]:
+    """Codec-kernel artifacts (the Rust hot path's PJRT offload)."""
+    u16c = _sds((CHUNK_ELEMS_BF16,), jnp.uint16)
+    u8c = _sds((CHUNK_ELEMS_BF16,), jnp.uint8)
+    u32c = _sds((CHUNK_ELEMS_FP32,), jnp.uint32)
+    u8c4 = _sds((CHUNK_ELEMS_FP32,), jnp.uint8)
+    return {
+        "byteplanes_bf16_split": (
+            lambda x: tuple(byteplanes.split_bf16(x)),
+            [u16c],
+        ),
+        "byteplanes_bf16_merge": (
+            lambda hi, lo: (byteplanes.merge_bf16(hi, lo),),
+            [u8c, u8c],
+        ),
+        "byteplanes_fp32_split": (
+            lambda x: tuple(byteplanes.split_fp32(x)),
+            [u32c],
+        ),
+        "byteplanes_fp32_merge": (
+            lambda b3, b2, b1, b0: (byteplanes.merge_fp32(b3, b2, b1, b0),),
+            [u8c4, u8c4, u8c4, u8c4],
+        ),
+        "exp_hist_bf16": (
+            lambda x: (exp_hist.exp_hist_bf16(x),),
+            [u16c],
+        ),
+        "analysis_bf16": (
+            lambda x: (
+                *byteplanes.split_bf16(x),
+                exp_hist.exp_hist_bf16(x),
+            ),
+            [u16c],
+        ),
+        "xor_delta_u32": (
+            lambda a, b: (xor_delta.xor_delta_u32(a, b),),
+            [u32c, u32c],
+        ),
+        "fused_linear_demo": (
+            lambda x, w, b: (fused_linear.fused_linear(x, w, b),),
+            [_sds((128, 128), jnp.float32), _sds((128, 128), jnp.float32),
+             _sds((128,), jnp.float32)],
+        ),
+    }
+
+
+def lm_entries(cfg: transformer.LMConfig, prefix: str) -> Dict[str, Tuple]:
+    """Transformer-LM artifacts for one preset."""
+    spec = transformer.param_spec(cfg)
+    p_sds = [_sds(s, jnp.float32) for _, s in spec]
+    tok = _sds((cfg.batch, cfg.seq_len), jnp.int32)
+    scalar = _sds((), jnp.float32)
+    seed = _sds((), jnp.uint32)
+    n = len(spec)
+
+    def step_fn(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        tokens, lr, stp = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        new_p, new_m, new_v, loss = transformer.train_step(
+            cfg, params, m, v, tokens, lr, stp
+        )
+        return (*new_p, *new_m, *new_v, loss)
+
+    def init_fn(s):
+        params = transformer.init(cfg, s)
+        m, v = transformer.adam_init(cfg)
+        return (*params, *m, *v)
+
+    def grads_fn(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        g = transformer.grads_of(cfg, params, tokens)
+        return tuple(transformer.export_bf16(g))
+
+    def export_fn(*args):
+        return tuple(transformer.export_bf16(list(args)))
+
+    def loss_fn(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (transformer.loss_fn(cfg, params, tokens),)
+
+    return {
+        f"{prefix}_init": (init_fn, [seed]),
+        f"{prefix}_step": (step_fn, p_sds * 3 + [tok, scalar, scalar]),
+        f"{prefix}_grads": (grads_fn, p_sds + [tok]),
+        f"{prefix}_export": (export_fn, p_sds),
+        f"{prefix}_loss": (loss_fn, p_sds + [tok]),
+    }
+
+
+def cnn_entries(cfg: resnet.CNNConfig, prefix: str) -> Dict[str, Tuple]:
+    """Residual-CNN artifacts for one preset."""
+    spec = resnet.param_spec(cfg)
+    p_sds = [_sds(s, jnp.float32) for _, s in spec]
+    img = _sds((cfg.batch, cfg.image, cfg.image, cfg.channels), jnp.float32)
+    lbl = _sds((cfg.batch,), jnp.int32)
+    scalar = _sds((), jnp.float32)
+    seed = _sds((), jnp.uint32)
+    n = len(spec)
+
+    def init_fn(s):
+        params = resnet.init(cfg, s)
+        mom = resnet.momentum_init(cfg)
+        return (*params, *mom)
+
+    def step_fn(*args):
+        params = list(args[:n])
+        mom = list(args[n : 2 * n])
+        images, labels, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+        new_p, new_m, loss = resnet.train_step(cfg, params, mom, images, labels, lr)
+        return (*new_p, *new_m, loss)
+
+    def export_fn(*args):
+        return tuple(resnet.export_f32(list(args)))
+
+    return {
+        f"{prefix}_init": (init_fn, [seed]),
+        f"{prefix}_step": (step_fn, p_sds * 2 + [img, lbl, scalar]),
+        f"{prefix}_export": (export_fn, p_sds),
+    }
+
+
+def model_manifests() -> Dict[str, Dict]:
+    """Per-preset metadata recorded in the manifest for the Rust runtime."""
+
+    def lm_meta(cfg):
+        return {
+            "kind": "lm",
+            "params": [
+                {"name": n, "shape": list(s), "dtype": "f32"}
+                for n, s in transformer.param_spec(cfg)
+            ],
+            "config": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads, "n_blocks": cfg.n_blocks,
+                "seq_len": cfg.seq_len, "batch": cfg.batch,
+            },
+            "export_dtype": "bf16",
+        }
+
+    def cnn_meta(cfg):
+        return {
+            "kind": "cnn",
+            "params": [
+                {"name": n, "shape": list(s), "dtype": "f32"}
+                for n, s in resnet.param_spec(cfg)
+            ],
+            "config": {
+                "image": cfg.image, "channels": cfg.channels,
+                "width": cfg.width, "n_blocks": cfg.n_blocks,
+                "classes": cfg.classes, "batch": cfg.batch,
+            },
+            "export_dtype": "f32",
+        }
+
+    return {
+        "lm_tiny": lm_meta(transformer.TINY),
+        "lm_small": lm_meta(transformer.SMALL),
+        "cnn_tiny": cnn_meta(resnet.TINY),
+        "cnn_small": cnn_meta(resnet.SMALL),
+    }
+
+
+def all_entries() -> Dict[str, Tuple]:
+    """Every artifact to lower."""
+    entries: Dict[str, Tuple] = {}
+    entries.update(kernel_entries())
+    entries.update(lm_entries(transformer.TINY, "lm_tiny"))
+    entries.update(lm_entries(transformer.SMALL, "lm_small"))
+    entries.update(cnn_entries(resnet.TINY, "cnn_tiny"))
+    entries.update(cnn_entries(resnet.SMALL, "cnn_small"))
+    return entries
+
+
+def spec_names(kind: str, preset: str) -> List[str]:
+    """Parameter names for a preset (layer labels for Fig. 7)."""
+    if kind == "lm":
+        cfg = {"lm_tiny": transformer.TINY, "lm_small": transformer.SMALL}[preset]
+        return [n for n, _ in transformer.param_spec(cfg)]
+    cfg = {"cnn_tiny": resnet.TINY, "cnn_small": resnet.SMALL}[preset]
+    return [n for n, _ in resnet.param_spec(cfg)]

@@ -1,0 +1,1 @@
+"""Layer-2 JAX training workloads (build-time only)."""

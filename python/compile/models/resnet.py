@@ -1,0 +1,110 @@
+"""Small residual CNN + SGD/momentum — the ResNet-18-fine-tune analog
+(paper §4.2, Figs. 8–9).
+
+FP32 throughout, step-wise LR schedule driven from Rust (the paper's
+Fig. 8 "steps coincide with the LR scheduler" effect). Checkpoints are
+exported as fp32 bit patterns (`bitcast -> uint32`).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """Residual CNN hyperparameters."""
+
+    image: int = 16
+    channels: int = 3
+    width: int = 16
+    n_blocks: int = 2
+    classes: int = 10
+    batch: int = 16
+
+
+TINY = CNNConfig(image=8, width=8, n_blocks=1, batch=4)
+SMALL = CNNConfig()
+
+
+def param_spec(cfg: CNNConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the flattening contract with Rust."""
+    w = cfg.width
+    spec = [("stem.conv", (3, 3, cfg.channels, w)), ("stem.bias", (w,))]
+    for b in range(cfg.n_blocks):
+        p = f"layer.{b}"
+        spec += [
+            (f"{p}.conv1", (3, 3, w, w)),
+            (f"{p}.bias1", (w,)),
+            (f"{p}.conv2", (3, 3, w, w)),
+            (f"{p}.bias2", (w,)),
+        ]
+    spec += [("head.fc", (w, cfg.classes)), ("head.bias", (cfg.classes,))]
+    return spec
+
+
+def init(cfg: CNNConfig, seed):
+    """He-init parameters from a scalar uint32 seed."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("bias") or ".bias" in name:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+    return params
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def forward(cfg: CNNConfig, params, images):
+    """Class logits. images: f32[B, H, W, C]."""
+    it = iter(params)
+    x = jax.nn.relu(_conv(images, next(it)) + next(it))
+    for _ in range(cfg.n_blocks):
+        h = jax.nn.relu(_conv(x, next(it)) + next(it))
+        h = _conv(h, next(it)) + next(it)
+        x = jax.nn.relu(x + h)
+    x = x.mean(axis=(1, 2))  # global average pool
+    return x @ next(it) + next(it)
+
+
+def loss_fn(cfg: CNNConfig, params, images, labels):
+    """Mean cross-entropy."""
+    logits = forward(cfg, params, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def momentum_init(cfg: CNNConfig):
+    """Zeroed momentum buffers."""
+    return [jnp.zeros(s, jnp.float32) for _, s in param_spec(cfg)]
+
+
+def train_step(cfg: CNNConfig, params, mom, images, labels, lr):
+    """One SGD+momentum(0.9) step. Returns (params', mom', loss)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, images, labels))(params)
+    new_p, new_m = [], []
+    for p, m, g in zip(params, mom, grads):
+        m = 0.9 * m + g
+        new_p.append(p - lr * m)
+        new_m.append(m)
+    return new_p, new_m, loss
+
+
+def export_f32(arrays):
+    """Bitcast fp32 arrays to uint32 bit patterns for Rust-side bytes."""
+    return [jax.lax.bitcast_convert_type(a, jnp.uint32) for a in arrays]

@@ -1,0 +1,181 @@
+"""Small transformer LM + Adam — the RoBERTa-fine-tune analog (paper §4.1).
+
+Functional, flat-parameter-list style so the train step lowers to an HLO
+module with a stable positional signature the Rust runtime can drive.
+Parameters are fp32 masters; checkpoints/gradients/optimizer state are
+exported as bf16 bit patterns (`bitcast -> uint16`) matching the paper's
+"BF16 version of RoBERTa" setup, so the Rust side reads raw bits directly.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Transformer LM hyperparameters."""
+
+    vocab: int = 1024
+    d_model: int = 192
+    n_heads: int = 4
+    n_blocks: int = 3
+    seq_len: int = 64
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TINY = LMConfig(vocab=128, d_model=32, n_heads=2, n_blocks=1, seq_len=16, batch=4)
+SMALL = LMConfig()
+
+
+def param_spec(cfg: LMConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the flattening contract with Rust."""
+    d = cfg.d_model
+    spec = [("embed.weight", (cfg.vocab, d))]
+    for b in range(cfg.n_blocks):
+        p = f"blocks.{b}"
+        spec += [
+            (f"{p}.ln1.scale", (d,)),
+            (f"{p}.ln1.bias", (d,)),
+            (f"{p}.attn.wq", (d, d)),
+            (f"{p}.attn.wk", (d, d)),
+            (f"{p}.attn.wv", (d, d)),
+            (f"{p}.attn.wo", (d, d)),
+            (f"{p}.ln2.scale", (d,)),
+            (f"{p}.ln2.bias", (d,)),
+            (f"{p}.mlp.up", (d, 4 * d)),
+            (f"{p}.mlp.up_bias", (4 * d,)),
+            (f"{p}.mlp.down", (4 * d, d)),
+            (f"{p}.mlp.down_bias", (d,)),
+        ]
+    spec += [("ln_f.scale", (d,)), ("ln_f.bias", (d,))]
+    # Untied output head: with a tied head the softmax would feed gradient
+    # into *every* embedding row, destroying the Fig. 7 sparsity effect the
+    # paper observes (their RoBERTa fine-tune has a separate head too).
+    spec += [("head.weight", (cfg.vocab, d))]
+    return spec
+
+
+def init(cfg: LMConfig, seed):
+    """Initialize parameters from a scalar uint32 seed."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".scale",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".bias", ".up_bias", ".down_bias")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            std = 0.02 if name == "embed.weight" else fan_in ** -0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def _layernorm(x, scale, bias):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _gelu(y):
+    return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+
+
+def forward(cfg: LMConfig, params, tokens, *, pallas_mlp: bool = False):
+    """Logits for next-token prediction. tokens: int32[B, S]."""
+    it = iter(params)
+
+    def nxt():
+        return next(it)
+
+    emb = nxt()
+    x = emb[tokens]  # [B, S, D]
+    b_, s, d = x.shape
+    pos = jnp.arange(s)
+    # fixed sinusoidal positions (no learned pos table: keeps spec small)
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half) / half * 5.0)
+    pe = jnp.concatenate(
+        [jnp.sin(pos[:, None] * freqs[None, :]), jnp.cos(pos[:, None] * freqs[None, :])],
+        axis=-1,
+    )
+    x = x + pe[None]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    for _ in range(cfg.n_blocks):
+        ln1s, ln1b = nxt(), nxt()
+        wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt()
+        ln2s, ln2b = nxt(), nxt()
+        up, upb, down, downb = nxt(), nxt(), nxt(), nxt()
+        h = _layernorm(x, ln1s, ln1b)
+        q = (h @ wq).reshape(b_, s, cfg.n_heads, cfg.d_head)
+        k = (h @ wk).reshape(b_, s, cfg.n_heads, cfg.d_head)
+        v = (h @ wv).reshape(b_, s, cfg.n_heads, cfg.d_head)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (cfg.d_head**0.5)
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b_, s, d)
+        x = x + o @ wo
+        h2 = _layernorm(x, ln2s, ln2b)
+        if pallas_mlp:
+            from ..kernels.fused_linear import fused_linear
+
+            hid = fused_linear(h2.reshape(b_ * s, d), up, upb).reshape(b_, s, 4 * d)
+        else:
+            hid = _gelu(h2 @ up + upb)
+        x = x + hid @ down + downb
+    lnfs, lnfb = nxt(), nxt()
+    x = _layernorm(x, lnfs, lnfb)
+    head = nxt()
+    return x @ head.T
+
+
+def loss_fn(cfg: LMConfig, params, tokens, *, pallas_mlp: bool = False):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens[:, :-1], pallas_mlp=pallas_mlp)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def adam_init(cfg: LMConfig):
+    """Zeroed Adam moments, same structure as params."""
+    zeros = [jnp.zeros(s, jnp.float32) for _, s in param_spec(cfg)]
+    return zeros, [z.copy() for z in zeros]
+
+
+def train_step(cfg: LMConfig, params, m, v, tokens, lr, step):
+    """One Adam step. Returns (params', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1.0
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss
+
+
+def grads_of(cfg: LMConfig, params, tokens):
+    """Raw gradients at `params` (the Fig. 7 gradient artifact)."""
+    return jax.grad(lambda p: loss_fn(cfg, p, tokens))(params)
+
+
+def export_bf16(arrays):
+    """Bitcast arrays to bf16 bit patterns (uint16) for Rust-side bytes."""
+    return [
+        jax.lax.bitcast_convert_type(a.astype(jnp.bfloat16), jnp.uint16) for a in arrays
+    ]

@@ -1,0 +1,85 @@
+"""Pallas byte-plane kernels vs pure-jnp oracle — bit-exact, hypothesis-swept."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import byteplanes
+from compile.kernels import ref
+
+BLOCK = byteplanes.BLOCK
+
+
+def _rand_u16(n, seed):
+    return np.random.default_rng(seed).integers(0, 1 << 16, size=n, dtype=np.uint16)
+
+
+def _rand_u32(n, seed):
+    return np.random.default_rng(seed).integers(0, 1 << 32, size=n, dtype=np.uint32)
+
+
+class TestBF16Planes:
+    def test_split_matches_ref(self):
+        x = _rand_u16(2 * BLOCK, 0)
+        hi, lo = byteplanes.split_bf16(x)
+        rhi, rlo = ref.split_bf16_ref(x)
+        np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+        np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+
+    def test_merge_inverts_split(self):
+        x = _rand_u16(BLOCK, 1)
+        hi, lo = byteplanes.split_bf16(x)
+        back = byteplanes.merge_bf16(hi, lo)
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_known_values(self):
+        x = np.zeros(BLOCK, np.uint16)
+        x[0] = 0x3F80  # bf16 1.0
+        x[1] = 0xBF00
+        hi, lo = byteplanes.split_bf16(x)
+        assert np.asarray(hi)[0] == 0x3F and np.asarray(lo)[0] == 0x80
+        assert np.asarray(hi)[1] == 0xBF and np.asarray(lo)[1] == 0x00
+
+    @settings(max_examples=10, deadline=None)
+    @given(grid=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_hypothesis(self, grid, seed):
+        x = _rand_u16(grid * BLOCK, seed)
+        hi, lo = byteplanes.split_bf16(x)
+        np.testing.assert_array_equal(
+            np.asarray(byteplanes.merge_bf16(hi, lo)), x
+        )
+
+
+class TestFP32Planes:
+    def test_split_matches_ref(self):
+        x = _rand_u32(BLOCK, 2)
+        planes = byteplanes.split_fp32(x)
+        rplanes = ref.split_fp32_ref(x)
+        for p, r in zip(planes, rplanes):
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(r))
+
+    def test_merge_inverts_split(self):
+        x = _rand_u32(2 * BLOCK, 3)
+        b3, b2, b1, b0 = byteplanes.split_fp32(x)
+        back = byteplanes.merge_fp32(b3, b2, b1, b0)
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_exponent_plane_extracts_sign_exp(self):
+        x = np.array([np.float32(1.0).view(np.uint32)] * BLOCK, dtype=np.uint32)
+        b3, _, _, _ = byteplanes.split_fp32(x)
+        # 1.0f32 = 0x3F800000 -> high byte 0x3F
+        assert (np.asarray(b3) == 0x3F).all()
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_hypothesis(self, seed):
+        x = _rand_u32(BLOCK, seed)
+        back = byteplanes.merge_fp32(*byteplanes.split_fp32(x))
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@pytest.mark.parametrize("special", [0x0000, 0xFFFF, 0x7F80, 0x8000])
+def test_bf16_specials_roundtrip(special):
+    x = np.full(BLOCK, special, np.uint16)
+    hi, lo = byteplanes.split_bf16(x)
+    np.testing.assert_array_equal(np.asarray(byteplanes.merge_bf16(hi, lo)), x)

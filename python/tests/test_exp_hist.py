@@ -1,0 +1,46 @@
+"""Pallas exponent-histogram kernel vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import exp_hist, ref
+
+BLOCK = exp_hist.BLOCK
+
+
+def test_matches_ref_random():
+    x = np.random.default_rng(0).integers(0, 1 << 16, size=2 * BLOCK, dtype=np.uint16)
+    got = np.asarray(exp_hist.exp_hist_bf16(x))
+    want = np.asarray(ref.exp_hist_bf16_ref(x))
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == 2 * BLOCK
+
+
+def test_constant_stream_single_bin():
+    # bf16 1.0 = 0x3F80 -> exponent 127
+    x = np.full(BLOCK, 0x3F80, np.uint16)
+    h = np.asarray(exp_hist.exp_hist_bf16(x))
+    assert h[127] == BLOCK
+    assert h.sum() == BLOCK
+
+
+def test_gaussian_weights_are_skewed():
+    rng = np.random.default_rng(1)
+    w = (rng.normal(0, 0.02, size=BLOCK)).astype(np.float32)
+    bits = ((w.view(np.uint32) >> 16).astype(np.uint16))  # truncate to bf16
+    h = np.asarray(exp_hist.exp_hist_bf16(bits))
+    nonzero = (h > 0).sum()
+    top12 = np.sort(h)[-12:].sum() / h.sum()
+    assert nonzero < 70
+    assert top12 > 0.99
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), grid=st.integers(1, 3))
+def test_hypothesis_matches_ref(seed, grid):
+    x = np.random.default_rng(seed).integers(
+        0, 1 << 16, size=grid * BLOCK, dtype=np.uint16
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exp_hist.exp_hist_bf16(x)), np.asarray(ref.exp_hist_bf16_ref(x))
+    )

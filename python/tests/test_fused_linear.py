@@ -1,0 +1,49 @@
+"""Pallas fused-linear kernel vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear, ref
+
+
+def _mats(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.normal(0, 1, (m, k)).astype(np.float32),
+        rng.normal(0, k**-0.5, (k, n)).astype(np.float32),
+        rng.normal(0, 0.1, (n,)).astype(np.float32),
+    )
+
+
+def test_matches_ref_single_tile():
+    x, w, b = _mats(128, 128, 128, 0)
+    got = np.asarray(fused_linear.fused_linear(x, w, b))
+    want = np.asarray(ref.fused_linear_ref(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matches_ref_multi_tile():
+    x, w, b = _mats(256, 384, 256, 1)
+    got = np.asarray(fused_linear.fused_linear(x, w, b))
+    want = np.asarray(ref.fused_linear_ref(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_zero_bias_zero_input():
+    x = np.zeros((128, 128), np.float32)
+    w = np.ones((128, 128), np.float32)
+    b = np.zeros((128,), np.float32)
+    got = np.asarray(fused_linear.fused_linear(x, w, b))
+    np.testing.assert_allclose(got, 0.0, atol=1e-7)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    mt=st.integers(1, 2), kt=st.integers(1, 3), nt=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(mt, kt, nt, seed):
+    x, w, b = _mats(128 * mt, 128 * kt, 128 * nt, seed)
+    got = np.asarray(fused_linear.fused_linear(x, w, b))
+    want = np.asarray(ref.fused_linear_ref(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,41 @@
+"""Pallas XOR-delta kernel vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, xor_delta
+
+BLOCK = xor_delta.BLOCK
+
+
+def _rand(n, seed):
+    return np.random.default_rng(seed).integers(0, 1 << 32, size=n, dtype=np.uint32)
+
+
+def test_matches_ref():
+    a, b = _rand(BLOCK, 0), _rand(BLOCK, 1)
+    np.testing.assert_array_equal(
+        np.asarray(xor_delta.xor_delta_u32(a, b)),
+        np.asarray(ref.xor_delta_ref(a, b)),
+    )
+
+
+def test_self_inverse():
+    a, b = _rand(2 * BLOCK, 2), _rand(2 * BLOCK, 3)
+    d = np.asarray(xor_delta.xor_delta_u32(a, b))
+    back = np.asarray(xor_delta.xor_delta_u32(a, d))
+    np.testing.assert_array_equal(back, b)
+
+
+def test_identical_inputs_zero():
+    a = _rand(BLOCK, 4)
+    assert not np.asarray(xor_delta.xor_delta_u32(a, a)).any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis(seed):
+    a, b = _rand(BLOCK, seed), _rand(BLOCK, seed + 1)
+    np.testing.assert_array_equal(
+        np.asarray(xor_delta.xor_delta_u32(a, b)), a ^ b
+    )

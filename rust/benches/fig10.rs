@@ -1,0 +1,87 @@
+//! Figure 10: end-to-end download/upload times of three models, compressed
+//! vs not, across the measured network regimes (§5.3).
+//!
+//! Transfer seconds are simulated from the paper's bandwidth regimes
+//! (first/cached download, upload) with their observed variance; codec
+//! seconds are *measured* on this machine. Error bars come from repeated
+//! simulated transfers (the paper: variance was almost entirely network).
+
+use zipnn::bench_support::{BenchEnv, Table};
+use zipnn::codec::CodecConfig;
+use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::util::human_bytes;
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let models = [
+        ("Llama-3.1 BF16", Category::RegularBF16, 701u64),
+        ("Olmo FP32", Category::RegularF32, 702),
+        (
+            "xlm-RoBERTa clean",
+            Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 },
+            703,
+        ),
+    ];
+    let server = HubServer::start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+
+    let mut table = Table::new(&[
+        "model", "regime", "raw mean±std (s)", "zipnn mean±std (s)", "saving",
+    ]);
+    for (name, cat, seed) in models {
+        let m = generate(&SyntheticSpec::new(name, cat, env.model_bytes(), seed));
+        let raw = m.to_bytes();
+        let dtype = m.dominant_dtype();
+
+        // uploads (5 sims like the paper's 1st-timer runs)
+        let mut sim = NetSim::new(NetProfile::UPLOAD, seed);
+        let rep_raw = client.upload(name, &raw, None, &mut sim).unwrap();
+        let rep_c = client
+            .upload(name, &raw, Some(CodecConfig::for_dtype(dtype)), &mut sim)
+            .unwrap();
+        let stats = |wire: usize, codec: f64, profile: NetProfile, reps: usize| {
+            let mut s = NetSim::new(profile, seed * 31);
+            let times: Vec<f64> =
+                (0..reps).map(|_| codec + s.transfer_secs(wire as u64)).collect();
+            let mean = times.iter().sum::<f64>() / reps as f64;
+            let var =
+                times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / reps as f64;
+            (mean, var.sqrt())
+        };
+        let (um_r, us_r) = stats(rep_raw.wire_len, 0.0, NetProfile::UPLOAD, 5);
+        let (um_c, us_c) = stats(rep_c.wire_len, rep_c.codec_secs, NetProfile::UPLOAD, 5);
+        table.row(&[
+            format!("{name} ({})", human_bytes(raw.len() as u64)),
+            "upload".into(),
+            format!("{um_r:.2}±{us_r:.2}"),
+            format!("{um_c:.2}±{us_c:.2}"),
+            format!("{:+.0}%", (1.0 - um_c / um_r) * 100.0),
+        ]);
+
+        // downloads across regimes (10 cached / 5 first, like the paper)
+        for (profile, reps) in [
+            (NetProfile::CLOUD_FIRST, 5),
+            (NetProfile::CLOUD_CACHED, 10),
+            (NetProfile::HOME_FIRST, 5),
+            (NetProfile::HOME_CACHED, 10),
+        ] {
+            let mut sim = NetSim::new(profile, seed);
+            let (_, drep_r) = client.download(name, false, &mut sim).unwrap();
+            let (_, drep_c) = client.download(name, true, &mut sim).unwrap();
+            let (dm_r, ds_r) = stats(drep_r.wire_len, 0.0, profile, reps);
+            let (dm_c, ds_c) = stats(drep_c.wire_len, drep_c.codec_secs, profile, reps);
+            table.row(&[
+                format!("{name} ({})", human_bytes(raw.len() as u64)),
+                profile.name.into(),
+                format!("{dm_r:.2}±{ds_r:.2}"),
+                format!("{dm_c:.2}±{ds_c:.2}"),
+                format!("{:+.0}%", (1.0 - dm_c / dm_r) * 100.0),
+            ]);
+        }
+    }
+    println!("== Figure 10: end-to-end upload/download times ==");
+    table.print();
+    println!("(paper shape: biggest savings on slow links and compressible models;\n upload savings < download savings at equal bandwidth because compression\n is slower than decompression)");
+    server.shutdown();
+}

@@ -1,0 +1,46 @@
+//! Figure 2: histogram of exponent values for four models — highly skewed,
+//! strikingly similar across models; ~40 distinct values (50 for the image
+//! model); top-12 cover ≈99.9% (17 for the image model).
+
+use zipnn::bench_support::BenchEnv;
+use zipnn::fp::stats::{exponent_histogram, summarize_exponents};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+
+fn main() {
+    let env = BenchEnv::from_env();
+    // Image models (ResNet) have a wider σ spread across layers -> more
+    // distinct exponents; mimic with a different category/seed mix.
+    let models = [
+        ("Qwen2-VL-analog (BF16)", Category::RegularBF16, 401u64),
+        ("Llama-3.1-analog (BF16)", Category::RegularBF16, 402),
+        ("granite-analog (BF16)", Category::RegularBF16, 403),
+        ("resnet50-analog (FP32)", Category::RegularF32, 404),
+    ];
+    println!("== Figure 2: exponent-value histograms ==");
+    for (name, cat, seed) in models {
+        let m = generate(&SyntheticSpec::new(name, cat, env.model_bytes(), seed));
+        let hist = exponent_histogram(&m.to_bytes(), m.dominant_dtype());
+        let s = summarize_exponents(&hist);
+        println!(
+            "\n{name}: {} distinct exponents, top-12 cover {:.2}%, entropy {:.2} bits",
+            s.distinct,
+            s.top12_coverage * 100.0,
+            s.entropy_bits
+        );
+        let total: u64 = hist.iter().sum();
+        // print the central window like the paper's figure
+        let lo = s.top.iter().map(|&(v, _)| v).min().unwrap_or(100);
+        let hi = s.top.iter().map(|&(v, _)| v).max().unwrap_or(132);
+        for e in lo.saturating_sub(2)..=hi.saturating_add(2).min(255) {
+            let frac = hist[e as usize] as f64 / total as f64;
+            if frac > 0.0005 {
+                println!(
+                    "  exp {e:>3}: {:>6.2}% {}",
+                    frac * 100.0,
+                    "#".repeat((frac * 150.0) as usize)
+                );
+            }
+        }
+    }
+    println!("\n(paper: ~40 values for LMs, ~50 for the image model; top-12 ≈ 99.9%)");
+}

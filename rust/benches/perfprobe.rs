@@ -1,0 +1,92 @@
+//! Phase-level profiling probe for the L3 hot path (used by the §Perf
+//! iteration loop; not a paper table). Times each codec phase in
+//! isolation so optimization work can target the real bottleneck.
+
+use zipnn::bench_support::{time_n, BenchEnv};
+use zipnn::codec::{decompress_with, CodecConfig, Compressor};
+use zipnn::fp::{merge_groups, split_groups, DType, GroupLayout};
+use zipnn::huffman;
+use zipnn::lz;
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::stats::{byte_histogram, zero_stats};
+
+fn gbps(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let m = generate(&SyntheticSpec::new(
+        "probe",
+        Category::RegularBF16,
+        env.model_bytes(),
+        900,
+    ));
+    let raw = m.to_bytes();
+    let n = raw.len();
+    let layout = GroupLayout::for_dtype(DType::BF16);
+    println!("probe buffer: {} MB bf16", n >> 20);
+
+    let groups = split_groups(&raw, layout).unwrap();
+    let exp = &groups[0];
+    let man = &groups[1];
+    let enc_exp = huffman::compress(exp);
+
+    let reps = env.reps;
+    let t = time_n(reps, || {
+        std::hint::black_box(split_groups(&raw, layout).unwrap());
+    });
+    println!("split_groups          : {:6.2} GB/s", gbps(n, t.min));
+
+    let t = time_n(reps, || {
+        std::hint::black_box(merge_groups(&groups, layout).unwrap());
+    });
+    println!("merge_groups          : {:6.2} GB/s", gbps(n, t.min));
+
+    let t = time_n(reps, || {
+        std::hint::black_box(byte_histogram(exp));
+    });
+    println!("byte_histogram        : {:6.2} GB/s", gbps(exp.len(), t.min));
+
+    let t = time_n(reps, || {
+        std::hint::black_box(zero_stats(man));
+    });
+    println!("zero_stats (random)   : {:6.2} GB/s", gbps(man.len(), t.min));
+
+    let t = time_n(reps, || {
+        std::hint::black_box(huffman::compress(exp));
+    });
+    println!("huffman encode (exp)  : {:6.2} GB/s", gbps(exp.len(), t.min));
+
+    let t = time_n(reps, || {
+        std::hint::black_box(huffman::compress(man));
+    });
+    println!("huffman encode (rand) : {:6.2} GB/s  (raw fallback path)", gbps(man.len(), t.min));
+
+    let t = time_n(reps, || {
+        std::hint::black_box(huffman::decompress(&enc_exp, exp.len()).unwrap());
+    });
+    println!("huffman decode (exp)  : {:6.2} GB/s", gbps(exp.len(), t.min));
+
+    let z = lz::zstd_compress(exp, 3).unwrap();
+    let t = time_n(reps, || {
+        std::hint::black_box(lz::zstd_compress(exp, 3).unwrap());
+    });
+    println!("zstd-3 encode (exp)   : {:6.2} GB/s", gbps(exp.len(), t.min));
+    let t = time_n(reps, || {
+        std::hint::black_box(lz::zstd_decompress(&z, exp.len()).unwrap());
+    });
+    println!("zstd-3 decode (exp)   : {:6.2} GB/s", gbps(exp.len(), t.min));
+
+    // end-to-end
+    let comp = Compressor::new(CodecConfig::for_dtype(DType::BF16));
+    let compressed = comp.compress(&raw).unwrap();
+    let t = time_n(reps, || {
+        std::hint::black_box(comp.compress(&raw).unwrap());
+    });
+    println!("E2E zipnn compress    : {:6.2} GB/s", gbps(n, t.min));
+    let t = time_n(reps, || {
+        std::hint::black_box(decompress_with(&compressed, 1).unwrap());
+    });
+    println!("E2E zipnn decompress  : {:6.2} GB/s", gbps(n, t.min));
+}

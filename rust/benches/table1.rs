@@ -1,0 +1,39 @@
+//! Table 1: compressed size of top-downloaded Hugging Face models.
+//!
+//! Paper values (compressed size, lower is better): Bge 42.1%, Mpnet 82.9%,
+//! Bert 83.9%, Qwen 66.9%, Whisper 42.7%, xlm-RoBERTa 42.3%, Clip 49.7%,
+//! Llama-3.1 67.2%. Models are synthetic analogs per category (DESIGN.md §2).
+
+use zipnn::bench_support::{BenchEnv, Table};
+use zipnn::codec::{compress_with_report, CodecConfig};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let rows: Vec<(&str, Category, f64)> = vec![
+        ("Bge (clean FP32)", Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 }, 42.1),
+        ("Mpnet (FP32)", Category::RegularF32, 82.9),
+        ("Bert (FP32)", Category::RegularF32, 83.9),
+        ("Qwen (BF16)", Category::RegularBF16, 66.9),
+        ("Whisper (clean FP32)", Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 }, 42.7),
+        ("xlm-RoBERTa (clean FP32)", Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 }, 42.3),
+        ("Clip (clean FP32 mix)", Category::CleanF32 { keep_bits: 10, frac_clean: 0.85 }, 49.7),
+        ("Llama 3.1 (BF16)", Category::RegularBF16, 67.2),
+    ];
+    let mut table = Table::new(&["model analog", "paper %", "measured %", "delta"]);
+    for (i, (name, cat, paper)) in rows.iter().enumerate() {
+        let m = generate(&SyntheticSpec::new(name, *cat, env.model_bytes(), 200 + i as u64));
+        let raw = m.to_bytes();
+        let (comp, _) =
+            compress_with_report(CodecConfig::for_dtype(m.dominant_dtype()), &raw).unwrap();
+        let pct = comp.len() as f64 / raw.len() as f64 * 100.0;
+        table.row(&[
+            name.to_string(),
+            format!("{paper:.1}"),
+            format!("{pct:.1}"),
+            format!("{:+.1}", pct - paper),
+        ]);
+    }
+    println!("== Table 1: compressed size of top-ranked hub models ==");
+    table.print();
+}

@@ -1,0 +1,63 @@
+//! Table 2: compressed size for the model zoo, with per-byte-group
+//! breakdown (exponent group first, then mantissa bytes high→low).
+//!
+//! Paper rows, e.g.: FALCON-7B BF16 66.4% (32.8, 100); XLM-ROBERTA FP32
+//! 41.8% (33.9, 95.6, 37.5, 0.0); T5-BASE 33.7% (34.6, 100, 0, 0);
+//! LLAMA2-13B FP16 66.6% (64.2, 69.0).
+
+use zipnn::bench_support::{BenchEnv, Table};
+use zipnn::codec::{compress_with_report, CodecConfig};
+use zipnn::model::synthetic::{generate, paper_zoo};
+
+fn main() {
+    let env = BenchEnv::from_env();
+    let paper: &[(&str, f64, &str)] = &[
+        ("falcon-7b-analog", 66.4, "(32.8, 100)"),
+        ("bloom-analog", 67.4, "(34.8, 100)"),
+        ("openllama-3b-analog", 66.4, "(32.7, 100)"),
+        ("mistral-analog", 66.3, "(32.5, 100)"),
+        ("llama-3.1-analog", 66.4, "(32.8, 99.9)"),
+        ("wav2vec-analog", 83.3, "(33.0, 100, 100, 100)"),
+        ("bert-analog", 83.0, "(32.6, 99.5, 100, 100)"),
+        ("olmo-analog", 83.1, "(32.5, 100, 100, 100)"),
+        ("stable-video-diffusion-analog", 84.8, "(69.6, 100)"),
+        ("capybarahermes-analog", 84.4, "(68.8, 100)"),
+        ("xlm-roberta-analog", 41.8, "(33.9, 95.6, 37.5, 0.0)"),
+        ("clip-analog", 48.1, "(33.1, 100, 45.9, 13.4)"),
+        ("t5-base-analog", 33.7, "(34.6, 100, 0.0, 0.0)"),
+        ("llama2-13b-fp16-analog", 66.6, "(64.2, 69.0)"),
+        ("tulu-7b-fp16-analog", 66.6, "(64.2, 68.9)"),
+    ];
+    let scale = env.model_mb / 64.0;
+    let zoo = paper_zoo(scale);
+    let mut table = Table::new(&[
+        "model", "dtype", "paper %", "meas %", "paper groups", "measured groups",
+    ]);
+    for spec in &zoo {
+        let m = generate(spec);
+        let raw = m.to_bytes();
+        let (comp, reps) =
+            compress_with_report(CodecConfig::for_dtype(m.dominant_dtype()), &raw).unwrap();
+        let pct = comp.len() as f64 / raw.len() as f64 * 100.0;
+        let groups = reps
+            .iter()
+            .map(|r| format!("{:.1}", r.pct()))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let (ppct, pgroups) = paper
+            .iter()
+            .find(|(n, _, _)| *n == spec.name)
+            .map(|(_, p, g)| (*p, *g))
+            .unwrap_or((f64::NAN, "?"));
+        table.row(&[
+            spec.name.clone(),
+            m.dominant_dtype().name().to_string(),
+            format!("{ppct:.1}"),
+            format!("{pct:.1}"),
+            pgroups.to_string(),
+            format!("({groups})"),
+        ]);
+    }
+    println!("== Table 2: compressed size + byte-group breakdown ==");
+    table.print();
+}

@@ -1,0 +1,134 @@
+//! Minimal benchmarking harness + table printers (criterion is not
+//! available offline; `cargo bench` targets use `harness = false` and call
+//! into this module to print the paper's tables/series).
+
+use crate::util::Timer;
+
+/// Timing statistics of repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    /// Mean seconds.
+    pub mean: f64,
+    /// Standard deviation (seconds).
+    pub std: f64,
+    /// Fastest run.
+    pub min: f64,
+}
+
+/// Run `f` `n` times (after one warm-up) and report timing stats.
+pub fn time_n(n: usize, mut f: impl FnMut()) -> Stats {
+    f(); // warm-up
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    Stats {
+        mean,
+        std: var.sqrt(),
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |ws: &[usize]| {
+            let mut s = String::from("+");
+            for w in ws {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        println!("{}", line(&widths));
+        let mut hdr = String::from("|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            hdr.push_str(&format!(" {h:<w$} |"));
+        }
+        println!("{hdr}");
+        println!("{}", line(&widths));
+        for row in &self.rows {
+            let mut s = String::from("|");
+            for (c, w) in row.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            println!("{s}");
+        }
+        println!("{}", line(&widths));
+    }
+}
+
+/// Bench environment knobs: scale factors via env vars so CI stays fast
+/// while full runs match the paper's sizes.
+pub struct BenchEnv {
+    /// Megabytes per model buffer (default 32).
+    pub model_mb: f64,
+    /// Timing repetitions (default 3).
+    pub reps: usize,
+}
+
+impl BenchEnv {
+    /// Read `ZIPNN_BENCH_MB` / `ZIPNN_BENCH_REPS` from the environment.
+    pub fn from_env() -> BenchEnv {
+        let model_mb = std::env::var("ZIPNN_BENCH_MB")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(32.0);
+        let reps = std::env::var("ZIPNN_BENCH_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3);
+        BenchEnv { model_mb, reps }
+    }
+
+    /// Byte budget for one synthetic model.
+    pub fn model_bytes(&self) -> usize {
+        (self.model_mb * 1024.0 * 1024.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_n_reports() {
+        let s = time_n(3, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s.mean >= 0.001);
+        assert!(s.min <= s.mean);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

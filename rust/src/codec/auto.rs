@@ -1,0 +1,203 @@
+//! Per-stream method auto-selection (paper §3.2 "identifying
+//! compressibility" and §4.2 "auto detection of compression method").
+
+use crate::stats::zero_stats;
+
+/// Compression method applied to one `(chunk, group)` stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Method {
+    /// Stored verbatim.
+    Raw = 0,
+    /// ZipNN Huffman-only entropy coding.
+    Huffman = 1,
+    /// Zstd (LZ + FSE) — wins on high-zero / long-zero-run streams.
+    Zstd = 2,
+    /// All-zero stream, truncated to nothing.
+    Zero = 3,
+}
+
+impl Method {
+    /// Stable on-disk tag.
+    pub fn tag(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Method::tag`].
+    pub fn from_tag(t: u8) -> Option<Method> {
+        match t {
+            0 => Some(Method::Raw),
+            1 => Some(Method::Huffman),
+            2 => Some(Method::Zstd),
+            3 => Some(Method::Zero),
+            _ => None,
+        }
+    }
+}
+
+/// Zstd-over-Huffman trigger: fraction of zero bytes (§4.2, found by the
+/// authors' simulation to be the crossover).
+pub const ZSTD_ZERO_FRAC: f64 = 0.90;
+/// Zstd-over-Huffman trigger: longest zero run as a fraction of the stream.
+pub const ZSTD_ZERO_RUN_FRAC: f64 = 0.03;
+/// A Huffman probe "fails" when it saves less than this fraction —
+/// the stream is ruled incompressible and the group enters skip mode.
+pub const PROBE_MIN_SAVING: f64 = 0.02;
+
+/// Per-group probe-and-skip state (§3.2): after an incompressible probe,
+/// store Raw without probing for `skip_window` chunks, then probe again to
+/// catch behaviour changes between layers.
+#[derive(Debug, Clone)]
+pub struct AutoPolicy {
+    skip_window: usize,
+    /// Remaining chunks to skip, per group.
+    skip_left: Vec<usize>,
+}
+
+/// What the selector decided for one stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Skip mode active: store raw, don't probe.
+    SkipRaw,
+    /// All-zero stream.
+    Zero,
+    /// Try Zstd (zero-heavy stream).
+    TryZstd,
+    /// Try Huffman (the default).
+    TryHuffman,
+}
+
+impl AutoPolicy {
+    /// New policy for `groups` byte groups.
+    pub fn new(groups: usize, skip_window: usize) -> AutoPolicy {
+        AutoPolicy { skip_window, skip_left: vec![0; groups] }
+    }
+
+    /// True when the next stream of `group` should skip straight to Raw
+    /// (consumes one skip credit).
+    pub fn take_skip(&mut self, group: usize) -> bool {
+        if self.skip_left[group] > 0 {
+            self.skip_left[group] -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Decide how to handle the next stream of `group`.
+    pub fn decide(&mut self, group: usize, data: &[u8]) -> Decision {
+        if self.take_skip(group) {
+            return Decision::SkipRaw;
+        }
+        let hist = crate::stats::byte_histogram(data);
+        self.decide_with_hist(data, &hist)
+    }
+
+    /// [`AutoPolicy::decide`] with a precomputed histogram (skip state must
+    /// already have been consumed via [`AutoPolicy::take_skip`]).
+    ///
+    /// The zero fraction comes straight from `hist[0]`; the longest-run
+    /// scan — the only extra pass — runs only when the zero count alone
+    /// makes a qualifying run possible.
+    pub fn decide_with_hist(&mut self, data: &[u8], hist: &[u64; 256]) -> Decision {
+        let n = data.len() as f64;
+        let zeros = hist[0] as f64;
+        if !data.is_empty() && zeros >= n {
+            return Decision::Zero;
+        }
+        if zeros > ZSTD_ZERO_FRAC * n {
+            return Decision::TryZstd;
+        }
+        // A run of 3% of the chunk requires at least that many zeros.
+        if zeros >= ZSTD_ZERO_RUN_FRAC * n
+            && zero_stats(data).longest_run as f64 > ZSTD_ZERO_RUN_FRAC * n
+        {
+            return Decision::TryZstd;
+        }
+        Decision::TryHuffman
+    }
+
+    /// Report a probe outcome so the skip window can engage.
+    pub fn report(&mut self, group: usize, raw_len: usize, comp_len: usize) {
+        let saved = raw_len.saturating_sub(comp_len) as f64;
+        if saved < PROBE_MIN_SAVING * raw_len as f64 {
+            self.skip_left[group] = self.skip_window;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_stream_detected() {
+        let mut p = AutoPolicy::new(2, 4);
+        assert_eq!(p.decide(0, &[0u8; 1000]), Decision::Zero);
+    }
+
+    #[test]
+    fn high_zero_goes_zstd() {
+        let mut p = AutoPolicy::new(1, 4);
+        let mut data = vec![0u8; 1000];
+        for i in 0..50 {
+            data[i * 20] = 7; // 95% zeros, no long runs relative to 3%? runs=19 < 30
+        }
+        assert_eq!(p.decide(0, &data), Decision::TryZstd);
+    }
+
+    #[test]
+    fn long_zero_run_goes_zstd() {
+        let mut data = vec![1u8; 10_000];
+        for b in data.iter_mut().skip(100).take(400) {
+            *b = 0; // 4% contiguous zeros
+        }
+        let mut p = AutoPolicy::new(1, 4);
+        assert_eq!(p.decide(0, &data), Decision::TryZstd);
+    }
+
+    #[test]
+    fn default_is_huffman() {
+        let data: Vec<u8> = (0..255u8).cycle().take(5000).collect();
+        let mut p = AutoPolicy::new(1, 4);
+        assert_eq!(p.decide(0, &data), Decision::TryHuffman);
+    }
+
+    #[test]
+    fn skip_engages_and_expires() {
+        let mut p = AutoPolicy::new(1, 3);
+        let data = vec![5u8, 6, 7, 8].repeat(100);
+        assert_eq!(p.decide(0, &data), Decision::TryHuffman);
+        p.report(0, 1000, 1000); // no saving -> skip mode
+        assert_eq!(p.decide(0, &data), Decision::SkipRaw);
+        assert_eq!(p.decide(0, &data), Decision::SkipRaw);
+        assert_eq!(p.decide(0, &data), Decision::SkipRaw);
+        // window exhausted -> probes again
+        assert_eq!(p.decide(0, &data), Decision::TryHuffman);
+    }
+
+    #[test]
+    fn good_probe_keeps_probing() {
+        let mut p = AutoPolicy::new(1, 3);
+        p.report(0, 1000, 500); // 50% saving
+        let data = vec![5u8; 4]; // non-zero
+        assert_ne!(p.decide(0, &data), Decision::SkipRaw);
+    }
+
+    #[test]
+    fn groups_independent() {
+        let mut p = AutoPolicy::new(2, 2);
+        p.report(0, 100, 100);
+        let data = vec![9u8; 100];
+        assert_eq!(p.decide(0, &data), Decision::SkipRaw);
+        assert_ne!(p.decide(1, &data), Decision::SkipRaw);
+    }
+
+    #[test]
+    fn method_tags_roundtrip() {
+        for m in [Method::Raw, Method::Huffman, Method::Zstd, Method::Zero] {
+            assert_eq!(Method::from_tag(m.tag()), Some(m));
+        }
+        assert_eq!(Method::from_tag(9), None);
+    }
+}

@@ -1,0 +1,261 @@
+//! Compression side of the ZipNN codec.
+
+use crate::codec::auto::{AutoPolicy, Decision, Method};
+use crate::codec::container::{write_header, ContainerHeader, StreamEntry};
+use crate::codec::parallel::{run_tasks, SUPER_CHUNK};
+use crate::codec::{checksum64, CodecConfig, MethodPolicy};
+use crate::error::Result;
+use crate::fp::{split_groups, GroupLayout};
+use crate::huffman;
+use crate::lz;
+use crate::stats::zero_stats;
+
+/// One compressed stream plus its table entry.
+struct StreamOut {
+    entry: StreamEntry,
+    bytes: Vec<u8>,
+}
+
+/// The ZipNN compressor. Construct with a [`CodecConfig`], then call
+/// [`Compressor::compress`] — thread-safe and reusable.
+pub struct Compressor {
+    cfg: CodecConfig,
+}
+
+/// Per-byte-group compression report (`Table 2` breakdown numbers).
+#[derive(Debug, Clone, Copy)]
+pub struct GroupReport {
+    /// Compressed bytes of this group across all chunks.
+    pub comp: u64,
+    /// Raw bytes of this group.
+    pub raw: u64,
+}
+
+impl GroupReport {
+    /// Compressed size in percent (paper's "lower is better" metric).
+    pub fn pct(&self) -> f64 {
+        if self.raw == 0 {
+            0.0
+        } else {
+            self.comp as f64 / self.raw as f64 * 100.0
+        }
+    }
+}
+
+impl Compressor {
+    /// New compressor with the given configuration.
+    pub fn new(cfg: CodecConfig) -> Compressor {
+        Compressor { cfg }
+    }
+
+    /// Compress `data` into a self-contained `.znn` container.
+    pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        // Buffers that are not element-aligned cannot be byte-grouped;
+        // fall back to a flat layout for the whole buffer.
+        let layout = if data.len() % self.cfg.layout.elem == 0 {
+            self.cfg.layout
+        } else {
+            GroupLayout::flat()
+        };
+        let chunk_size = self.cfg.chunk_size.max(layout.elem) / layout.elem * layout.elem;
+        let n_chunks = data.len().div_ceil(chunk_size).max(if data.is_empty() { 0 } else { 1 });
+        let groups = layout.groups();
+
+        // Super-chunk tasks: deterministic under any thread count.
+        let n_super = n_chunks.div_ceil(SUPER_CHUNK);
+        let outs: Vec<Vec<StreamOut>> = run_tasks(n_super, self.cfg.threads, |si| {
+            let mut policy = AutoPolicy::new(groups, self.cfg.skip_window);
+            let lo = si * SUPER_CHUNK;
+            let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
+            let mut streams = Vec::with_capacity((hi - lo) * groups);
+            for c in lo..hi {
+                let start = c * chunk_size;
+                let end = (start + chunk_size).min(data.len());
+                let chunk = &data[start..end];
+                let gs = split_groups(chunk, layout).expect("aligned by construction");
+                for (gi, g) in gs.iter().enumerate() {
+                    streams.push(self.compress_stream(gi, g, &mut policy));
+                }
+            }
+            streams
+        });
+
+        let mut entries = Vec::with_capacity(n_chunks * groups);
+        let mut payload_len = 0usize;
+        for s in outs.iter().flatten() {
+            entries.push(s.entry);
+            payload_len += s.bytes.len();
+        }
+        let header = ContainerHeader {
+            layout,
+            chunk_size: chunk_size as u32,
+            total_len: data.len() as u64,
+            n_chunks: n_chunks as u32,
+            checksum: self.cfg.checksum.then(|| checksum64(data)),
+        };
+        let mut out = write_header(&header, &entries);
+        out.reserve(payload_len);
+        for s in outs.iter().flatten() {
+            out.extend_from_slice(&s.bytes);
+        }
+        Ok(out)
+    }
+
+    /// Compress one group stream according to the configured policy.
+    fn compress_stream(&self, group: usize, data: &[u8], policy: &mut AutoPolicy) -> StreamOut {
+        let raw_len = data.len() as u32;
+        let raw = |data: &[u8]| StreamOut {
+            entry: StreamEntry { method: Method::Raw, comp_len: raw_len, raw_len },
+            bytes: data.to_vec(),
+        };
+        match self.cfg.policy {
+            MethodPolicy::Raw => raw(data),
+            MethodPolicy::Huffman => self.huffman_or_raw(data, None, group, policy, false),
+            MethodPolicy::Zstd => self.zstd_or_raw(data),
+            MethodPolicy::Auto => {
+                if policy.take_skip(group) {
+                    return raw(data);
+                }
+                // One histogram pass feeds both the decision and Huffman.
+                let hist = crate::stats::byte_histogram(data);
+                match policy.decide_with_hist(data, &hist) {
+                    Decision::SkipRaw => raw(data),
+                    Decision::Zero => StreamOut {
+                        entry: StreamEntry { method: Method::Zero, comp_len: 0, raw_len },
+                        bytes: Vec::new(),
+                    },
+                    Decision::TryZstd => self.zstd_or_raw(data),
+                    Decision::TryHuffman => {
+                        self.huffman_or_raw(data, Some(&hist), group, policy, true)
+                    }
+                }
+            }
+        }
+    }
+
+    fn huffman_or_raw(
+        &self,
+        data: &[u8],
+        hist: Option<&[u64; 256]>,
+        group: usize,
+        policy: &mut AutoPolicy,
+        report: bool,
+    ) -> StreamOut {
+        let enc = match hist {
+            Some(h) => huffman::compress_with_hist(data, h),
+            None => huffman::compress(data),
+        };
+        if report {
+            policy.report(group, data.len(), enc.len());
+        }
+        if enc.len() < data.len() {
+            StreamOut {
+                entry: StreamEntry {
+                    method: Method::Huffman,
+                    comp_len: enc.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: enc,
+            }
+        } else {
+            StreamOut {
+                entry: StreamEntry {
+                    method: Method::Raw,
+                    comp_len: data.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: data.to_vec(),
+            }
+        }
+    }
+
+    fn zstd_or_raw(&self, data: &[u8]) -> StreamOut {
+        // An all-zero stream is cheaper as Zero even under forced-Zstd.
+        if !data.is_empty() && zero_stats(data).zero_frac >= 1.0 {
+            return StreamOut {
+                entry: StreamEntry {
+                    method: Method::Zero,
+                    comp_len: 0,
+                    raw_len: data.len() as u32,
+                },
+                bytes: Vec::new(),
+            };
+        }
+        match lz::zstd_compress(data, self.cfg.zstd_level) {
+            Ok(enc) if enc.len() < data.len() => StreamOut {
+                entry: StreamEntry {
+                    method: Method::Zstd,
+                    comp_len: enc.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: enc,
+            },
+            _ => StreamOut {
+                entry: StreamEntry {
+                    method: Method::Raw,
+                    comp_len: data.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: data.to_vec(),
+            },
+        }
+    }
+}
+
+/// Compress and return `(container, per-group reports)` — the breakdown
+/// used by the Table 2 / Fig. 6 benches.
+pub fn compress_with_report(cfg: CodecConfig, data: &[u8]) -> Result<(Vec<u8>, Vec<GroupReport>)> {
+    let out = Compressor::new(cfg).compress(data)?;
+    let info = crate::codec::container::parse(&out)?;
+    let reports = info
+        .group_totals()
+        .into_iter()
+        .map(|(comp, raw)| GroupReport { comp, raw })
+        .collect();
+    Ok((out, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::decompress;
+    use crate::fp::DType;
+
+    #[test]
+    fn unaligned_buffer_falls_back_to_flat() {
+        let data = vec![7u8; 1001]; // not a multiple of 4
+        let cfg = CodecConfig::for_dtype(DType::F32);
+        let comp = Compressor::new(cfg).compress(&data).unwrap();
+        let info = crate::codec::container::parse(&comp).unwrap();
+        assert_eq!(info.header.layout.elem, 1);
+        assert_eq!(decompress(&comp).unwrap(), data);
+    }
+
+    #[test]
+    fn report_groups_sum_to_total() {
+        let mut rng = crate::util::Xoshiro256::seed_from_u64(12);
+        let mut data = Vec::new();
+        for _ in 0..200_000 {
+            let w = (rng.normal() * 0.02) as f32;
+            data.extend_from_slice(&crate::fp::dtype::f32_to_bf16_bits(w).to_le_bytes());
+        }
+        let (comp, reps) = compress_with_report(CodecConfig::for_dtype(DType::BF16), &data).unwrap();
+        let raw_sum: u64 = reps.iter().map(|r| r.raw).sum();
+        assert_eq!(raw_sum, data.len() as u64);
+        let comp_sum: u64 = reps.iter().map(|r| r.comp).sum();
+        assert!(comp_sum <= comp.len() as u64);
+        // exponent group compresses ~3x; mantissa ~raw (paper §3.1)
+        assert!(reps[0].pct() < 45.0, "exp pct {}", reps[0].pct());
+        assert!(reps[1].pct() > 95.0, "mantissa pct {}", reps[1].pct());
+    }
+
+    #[test]
+    fn forced_zstd_policy_marks_zstd() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 17) as u8).collect();
+        let cfg = CodecConfig::vanilla_zstd();
+        let comp = Compressor::new(cfg).compress(&data).unwrap();
+        let info = crate::codec::container::parse(&comp).unwrap();
+        assert!(info.entries.iter().all(|e| e.method == Method::Zstd));
+        assert_eq!(decompress(&comp).unwrap(), data);
+    }
+}

@@ -1,0 +1,292 @@
+//! The `.znn` container: header + per-stream metadata table + payload.
+//!
+//! The metadata table stores, for every `(chunk, group)` stream, its
+//! method, compressed length and raw length. Because raw chunk sizes are
+//! fixed, a reader can compute every stream's output placement up front and
+//! decompress streams in parallel (paper §5.1 "metadata and parallelism").
+
+use crate::codec::auto::Method;
+use crate::error::{Error, Result};
+use crate::fp::GroupLayout;
+use crate::util::{push_u32_le, push_u64_le, read_u32_le, read_u64_le};
+
+/// Container magic: "ZNN1".
+pub const MAGIC: [u8; 4] = *b"ZNN1";
+/// Container format version.
+pub const VERSION: u8 = 1;
+/// Header flag: a checksum of the raw buffer is present.
+pub const FLAG_CHECKSUM: u8 = 1;
+
+/// Fixed-size part of the container header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerHeader {
+    /// Byte-group layout used at compression time.
+    pub layout: GroupLayout,
+    /// Raw bytes per chunk.
+    pub chunk_size: u32,
+    /// Total raw length.
+    pub total_len: u64,
+    /// Number of chunks (= ceil(total_len / chunk_size)).
+    pub n_chunks: u32,
+    /// Checksum of the raw buffer, if `FLAG_CHECKSUM`.
+    pub checksum: Option<u64>,
+}
+
+/// One `(chunk, group)` stream's table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamEntry {
+    /// Compression method.
+    pub method: Method,
+    /// Compressed byte length in the payload (0 for `Zero`).
+    pub comp_len: u32,
+    /// Raw (decompressed) byte length of the stream.
+    pub raw_len: u32,
+}
+
+/// Parsed container metadata plus payload offsets — everything needed for
+/// random access and parallel decompression.
+#[derive(Debug, Clone)]
+pub struct ContainerInfo {
+    /// Fixed header.
+    pub header: ContainerHeader,
+    /// `entries[chunk * groups + group]`.
+    pub entries: Vec<StreamEntry>,
+    /// Byte offset of each stream inside the payload, same indexing.
+    pub offsets: Vec<u64>,
+    /// Offset of the payload within the container.
+    pub payload_start: usize,
+}
+
+impl ContainerInfo {
+    /// Number of byte groups.
+    pub fn groups(&self) -> usize {
+        self.header.layout.groups()
+    }
+
+    /// Entry accessor.
+    pub fn entry(&self, chunk: usize, group: usize) -> StreamEntry {
+        self.entries[chunk * self.groups() + group]
+    }
+
+    /// Total compressed payload size.
+    pub fn payload_len(&self) -> u64 {
+        self.entries.iter().map(|e| e.comp_len as u64).sum()
+    }
+
+    /// Per-group compressed/raw byte totals `(comp, raw)` — the Table 2
+    /// breakdown numbers.
+    pub fn group_totals(&self) -> Vec<(u64, u64)> {
+        let g = self.groups();
+        let mut totals = vec![(0u64, 0u64); g];
+        for c in 0..self.header.n_chunks as usize {
+            for gi in 0..g {
+                let e = self.entry(c, gi);
+                totals[gi].0 += e.comp_len as u64;
+                totals[gi].1 += e.raw_len as u64;
+            }
+        }
+        totals
+    }
+}
+
+/// Serialize the header + table. `entries` must hold
+/// `n_chunks * layout.groups()` items in chunk-major order.
+pub fn write_header(h: &ContainerHeader, entries: &[StreamEntry]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + entries.len() * 9);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    let flags = if h.checksum.is_some() { FLAG_CHECKSUM } else { 0 };
+    out.push(flags);
+    out.push(h.layout.elem as u8);
+    out.push(h.layout.exp_group as u8);
+    push_u32_le(&mut out, h.chunk_size);
+    push_u64_le(&mut out, h.total_len);
+    push_u32_le(&mut out, h.n_chunks);
+    if let Some(c) = h.checksum {
+        push_u64_le(&mut out, c);
+    }
+    for e in entries {
+        out.push(e.method.tag());
+        push_u32_le(&mut out, e.comp_len);
+        push_u32_le(&mut out, e.raw_len);
+    }
+    out
+}
+
+/// Parse and validate the header + table of a container.
+pub fn parse(data: &[u8]) -> Result<ContainerInfo> {
+    if data.len() < 24 {
+        return Err(Error::Corrupt("container too short".into()));
+    }
+    if data[0..4] != MAGIC {
+        return Err(Error::Corrupt("bad magic".into()));
+    }
+    if data[4] != VERSION {
+        return Err(Error::Corrupt(format!("unsupported version {}", data[4])));
+    }
+    let flags = data[5];
+    let elem = data[6] as usize;
+    let exp_group = data[7] as usize;
+    if elem == 0 || elem > 16 || exp_group >= elem {
+        return Err(Error::Corrupt(format!(
+            "bad layout elem={elem} exp_group={exp_group}"
+        )));
+    }
+    let chunk_size = read_u32_le(data, 8);
+    let total_len = read_u64_le(data, 12);
+    let n_chunks = read_u32_le(data, 20);
+    if chunk_size == 0 {
+        return Err(Error::Corrupt("zero chunk size".into()));
+    }
+    let expect_chunks = total_len.div_ceil(chunk_size as u64);
+    if n_chunks as u64 != expect_chunks {
+        return Err(Error::Corrupt(format!(
+            "chunk count {n_chunks} inconsistent with total {total_len}/{chunk_size}"
+        )));
+    }
+    let mut off = 24usize;
+    let checksum = if flags & FLAG_CHECKSUM != 0 {
+        if data.len() < off + 8 {
+            return Err(Error::Corrupt("truncated checksum".into()));
+        }
+        let c = read_u64_le(data, off);
+        off += 8;
+        Some(c)
+    } else {
+        None
+    };
+    let groups = elem;
+    let n_entries = n_chunks as usize * groups;
+    let table_bytes = n_entries * 9;
+    if data.len() < off + table_bytes {
+        return Err(Error::Corrupt("truncated stream table".into()));
+    }
+    let mut entries = Vec::with_capacity(n_entries);
+    let mut offsets = Vec::with_capacity(n_entries);
+    let mut payload_off = 0u64;
+    let mut raw_sum = 0u64;
+    for i in 0..n_entries {
+        let base = off + i * 9;
+        let method = Method::from_tag(data[base])
+            .ok_or_else(|| Error::Corrupt(format!("bad method tag {}", data[base])))?;
+        let comp_len = read_u32_le(data, base + 1);
+        let raw_len = read_u32_le(data, base + 5);
+        if method == Method::Zero && comp_len != 0 {
+            return Err(Error::Corrupt("zero stream with payload".into()));
+        }
+        entries.push(StreamEntry { method, comp_len, raw_len });
+        offsets.push(payload_off);
+        payload_off += comp_len as u64;
+        raw_sum += raw_len as u64;
+    }
+    if raw_sum != total_len {
+        return Err(Error::Corrupt(format!(
+            "stream raw lengths sum {raw_sum} != total {total_len}"
+        )));
+    }
+    let payload_start = off + table_bytes;
+    if (data.len() - payload_start) as u64 != payload_off {
+        return Err(Error::Corrupt(format!(
+            "payload length {} != table total {payload_off}",
+            data.len() - payload_start
+        )));
+    }
+    Ok(ContainerInfo {
+        header: ContainerHeader {
+            layout: GroupLayout { elem, exp_group },
+            chunk_size,
+            total_len,
+            n_chunks,
+            checksum,
+        },
+        entries,
+        offsets,
+        payload_start,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (ContainerHeader, Vec<StreamEntry>) {
+        let h = ContainerHeader {
+            layout: GroupLayout { elem: 2, exp_group: 1 },
+            chunk_size: 8,
+            total_len: 20,
+            n_chunks: 3,
+            checksum: Some(0xDEAD_BEEF),
+        };
+        let entries = vec![
+            StreamEntry { method: Method::Huffman, comp_len: 3, raw_len: 4 },
+            StreamEntry { method: Method::Raw, comp_len: 4, raw_len: 4 },
+            StreamEntry { method: Method::Zero, comp_len: 0, raw_len: 4 },
+            StreamEntry { method: Method::Zstd, comp_len: 2, raw_len: 4 },
+            StreamEntry { method: Method::Raw, comp_len: 2, raw_len: 2 },
+            StreamEntry { method: Method::Huffman, comp_len: 1, raw_len: 2 },
+        ];
+        (h, entries)
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let (h, entries) = sample();
+        let mut buf = write_header(&h, &entries);
+        let payload_len: usize = entries.iter().map(|e| e.comp_len as usize).sum();
+        buf.extend(std::iter::repeat_n(0u8, payload_len));
+        let info = parse(&buf).unwrap();
+        assert_eq!(info.header, h);
+        assert_eq!(info.entries, entries);
+        assert_eq!(info.offsets, vec![0, 3, 7, 7, 9, 11]);
+        assert_eq!(info.payload_len(), 12);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_layout() {
+        let (h, entries) = sample();
+        let mut buf = write_header(&h, &entries);
+        buf.extend(std::iter::repeat_n(0u8, 12));
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(parse(&bad).is_err());
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(parse(&bad).is_err());
+        let mut bad = buf.clone();
+        bad[6] = 0; // elem 0
+        assert!(parse(&bad).is_err());
+        let mut bad = buf;
+        bad[7] = 9; // exp_group >= elem
+        assert!(parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_lengths() {
+        let (h, mut entries) = sample();
+        entries[0].raw_len = 5; // raw sum now wrong
+        let mut buf = write_header(&h, &entries);
+        buf.extend(std::iter::repeat_n(0u8, 12));
+        assert!(parse(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_short_payload() {
+        let (h, entries) = sample();
+        let mut buf = write_header(&h, &entries);
+        buf.extend(std::iter::repeat_n(0u8, 11)); // one byte short
+        assert!(parse(&buf).is_err());
+    }
+
+    #[test]
+    fn group_totals() {
+        let (h, entries) = sample();
+        let mut buf = write_header(&h, &entries);
+        buf.extend(std::iter::repeat_n(0u8, 12));
+        let info = parse(&buf).unwrap();
+        let t = info.group_totals();
+        // group 0: entries 0,2,4 -> comp 3+0+2, raw 4+4+2
+        assert_eq!(t[0], (5, 10));
+        // group 1: entries 1,3,5 -> comp 4+2+1, raw 4+4+2
+        assert_eq!(t[1], (7, 10));
+    }
+}

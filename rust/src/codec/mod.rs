@@ -1,0 +1,258 @@
+//! The ZipNN codec (paper §3, §5.1): chunked, byte-grouped, entropy-coded
+//! compression of model tensor bytes.
+//!
+//! A buffer is cut into fixed-size **chunks** (default 256 KiB). Each chunk
+//! is split into per-byte-position **groups** (exponent group first), and
+//! every `(chunk, group)` stream is compressed independently with an
+//! auto-selected method — Huffman (the common case), Zstd (high-zero
+//! streams, deltas), Zero (all-zero truncation) or Raw (incompressible,
+//! with a probe-and-skip heuristic so we stop *trying* on streams that
+//! repeatedly fail, §3.2). Fixed raw chunk sizes plus a per-stream metadata
+//! table make both directions embarrassingly parallel (§5.1).
+
+pub mod auto;
+pub mod compress;
+pub mod container;
+pub mod decompress;
+pub mod parallel;
+
+pub use auto::{AutoPolicy, Method};
+pub use compress::{compress_with_report, Compressor, GroupReport};
+pub use container::{ContainerHeader, ContainerInfo, StreamEntry};
+pub use decompress::{decompress, decompress_with, inspect};
+
+use crate::fp::{DType, GroupLayout};
+
+/// Default chunk size (paper §5.1).
+pub const DEFAULT_CHUNK_SIZE: usize = 256 * 1024;
+
+/// Compression method selection policy for a whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodPolicy {
+    /// Full ZipNN auto-selection (per-stream Huffman/Zstd/Zero/Raw).
+    Auto,
+    /// Force Huffman (with Raw fallback only when Huffman expands).
+    Huffman,
+    /// Force Zstd on every stream (the "EE+Zstd" baseline of Table 3).
+    Zstd,
+    /// Store raw (identity; for measurement plumbing).
+    Raw,
+}
+
+/// Codec configuration.
+#[derive(Debug, Clone)]
+pub struct CodecConfig {
+    /// Byte-group layout (element size + exponent group). `GroupLayout::flat()`
+    /// disables exponent extraction (the "vanilla" baselines).
+    pub layout: GroupLayout,
+    /// Raw bytes per chunk. Must be a multiple of `layout.elem`.
+    pub chunk_size: usize,
+    /// Method policy.
+    pub policy: MethodPolicy,
+    /// Zstd level for Zstd-method streams (paper uses default = 3).
+    pub zstd_level: i32,
+    /// After a stream of some group probes incompressible, skip the probe
+    /// (store Raw directly) for this many subsequent chunks of that group.
+    pub skip_window: usize,
+    /// Worker threads for chunk-parallel compress/decompress (1 = inline).
+    pub threads: usize,
+    /// Record a (cheap) checksum of the raw buffer for integrity checking.
+    pub checksum: bool,
+}
+
+impl CodecConfig {
+    /// ZipNN defaults for a dtype: byte grouping on, auto methods,
+    /// 256 KiB chunks, probe-skip window of 8.
+    pub fn for_dtype(d: DType) -> CodecConfig {
+        CodecConfig {
+            layout: GroupLayout::for_dtype(d),
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            policy: MethodPolicy::Auto,
+            zstd_level: 3,
+            skip_window: 8,
+            threads: 1,
+            checksum: true,
+        }
+    }
+
+    /// Vanilla baseline: no grouping, Zstd everywhere.
+    pub fn vanilla_zstd() -> CodecConfig {
+        CodecConfig {
+            layout: GroupLayout::flat(),
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            policy: MethodPolicy::Zstd,
+            zstd_level: 3,
+            skip_window: 0,
+            threads: 1,
+            checksum: true,
+        }
+    }
+
+    /// Builder-style: set thread count.
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Builder-style: set method policy.
+    pub fn with_policy(mut self, p: MethodPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Builder-style: set chunk size (clamped to a layout multiple).
+    pub fn with_chunk_size(mut self, n: usize) -> Self {
+        let e = self.layout.elem;
+        self.chunk_size = (n.max(e) / e) * e;
+        self
+    }
+}
+
+/// Cheap 64-bit checksum: wrapping sum of little-endian words mixed with
+/// length. Fast enough to be on by default; catches the corruption classes
+/// the tests inject (bit flips, truncation, reordering).
+pub fn checksum64(data: &[u8]) -> u64 {
+    let mut acc: u64 = 0x9E37_79B9_7F4A_7C15 ^ (data.len() as u64);
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        acc = acc.wrapping_add(w).rotate_left(17).wrapping_mul(0xA24B_AED4_963E_E407);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut b = [0u8; 8];
+        b[..rem.len()].copy_from_slice(rem);
+        acc = acc.wrapping_add(u64::from_le_bytes(b)).rotate_left(17);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn gaussian_bf16(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            let w = (rng.normal() * 0.02) as f32;
+            out.extend_from_slice(&crate::fp::dtype::f32_to_bf16_bits(w).to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_bf16_model() {
+        let raw = gaussian_bf16(500_000, 1);
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let comp = Compressor::new(cfg).compress(&raw).unwrap();
+        let back = decompress(&comp).unwrap();
+        assert_eq!(back, raw);
+        // paper headline: BF16 models compress to ~66%
+        let ratio = comp.len() as f64 / raw.len() as f64;
+        assert!(ratio < 0.72, "ratio={ratio}");
+        assert!(ratio > 0.55, "ratio={ratio} suspiciously small for regular bf16");
+    }
+
+    #[test]
+    fn roundtrip_empty_and_small() {
+        for n in [0usize, 1, 2, 100, 4096] {
+            let raw = gaussian_bf16(n, 2);
+            let cfg = CodecConfig::for_dtype(DType::BF16);
+            let comp = Compressor::new(cfg).compress(&raw).unwrap();
+            assert_eq!(decompress(&comp).unwrap(), raw, "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_odd_tail_chunk() {
+        // buffer not a multiple of chunk size
+        let raw = gaussian_bf16(DEFAULT_CHUNK_SIZE / 2 + 12_345, 3);
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let comp = Compressor::new(cfg).compress(&raw).unwrap();
+        assert_eq!(decompress(&comp).unwrap(), raw);
+    }
+
+    #[test]
+    fn zipnn_beats_vanilla_zstd_on_bf16() {
+        let raw = gaussian_bf16(1_000_000, 4);
+        let zipnn = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+            .compress(&raw)
+            .unwrap();
+        let vanilla = Compressor::new(CodecConfig::vanilla_zstd())
+            .compress(&raw)
+            .unwrap();
+        assert!(
+            (zipnn.len() as f64) < vanilla.len() as f64 * 0.95,
+            "zipnn={} vanilla={}",
+            zipnn.len(),
+            vanilla.len()
+        );
+        assert_eq!(decompress(&vanilla).unwrap(), raw);
+    }
+
+    #[test]
+    fn all_zero_buffer_collapses() {
+        let raw = vec![0u8; 1 << 20];
+        let cfg = CodecConfig::for_dtype(DType::F32);
+        let comp = Compressor::new(cfg).compress(&raw).unwrap();
+        assert!(comp.len() < 1024, "len={}", comp.len());
+        assert_eq!(decompress(&comp).unwrap(), raw);
+    }
+
+    #[test]
+    fn random_buffer_stored_near_raw() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut raw = vec![0u8; 1 << 20];
+        rng.fill_bytes(&mut raw);
+        let cfg = CodecConfig::for_dtype(DType::F32);
+        let comp = Compressor::new(cfg).compress(&raw).unwrap();
+        assert!(comp.len() < raw.len() + raw.len() / 100 + 1024);
+        assert_eq!(decompress(&comp).unwrap(), raw);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let raw = gaussian_bf16(300_000, 6);
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let mut comp = Compressor::new(cfg).compress(&raw).unwrap();
+        // flip a payload byte near the end
+        let n = comp.len();
+        comp[n - 3] ^= 0x40;
+        match decompress(&comp) {
+            Err(_) => {}
+            Ok(back) => assert_ne!(back, raw, "corruption must not roundtrip silently"),
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let raw = gaussian_bf16(100_000, 7);
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let comp = Compressor::new(cfg).compress(&raw).unwrap();
+        for cut in [0, 3, 16, comp.len() / 2, comp.len() - 1] {
+            assert!(decompress(&comp[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn parallel_threads_equal_serial() {
+        let raw = gaussian_bf16(800_000, 8);
+        let serial = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+            .compress(&raw)
+            .unwrap();
+        let par = Compressor::new(CodecConfig::for_dtype(DType::BF16).with_threads(4))
+            .compress(&raw)
+            .unwrap();
+        assert_eq!(serial, par, "parallel output must be byte-identical");
+        assert_eq!(decompress_with(&par, 4).unwrap(), raw);
+    }
+
+    #[test]
+    fn checksum_mixes() {
+        assert_ne!(checksum64(b"abc"), checksum64(b"abd"));
+        assert_ne!(checksum64(b"abc"), checksum64(b"ab"));
+        assert_ne!(checksum64(&[0u8; 8]), checksum64(&[0u8; 16]));
+    }
+}

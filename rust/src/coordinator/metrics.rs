@@ -1,0 +1,77 @@
+//! Lock-free pipeline counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters for one pipeline run. All methods are thread-safe;
+/// `Relaxed` ordering is sufficient for statistics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Items submitted.
+    pub items_in: AtomicU64,
+    /// Items completed.
+    pub items_out: AtomicU64,
+    /// Raw bytes in.
+    pub bytes_in: AtomicU64,
+    /// Compressed bytes out.
+    pub bytes_out: AtomicU64,
+    /// Nanoseconds workers spent compressing.
+    pub work_ns: AtomicU64,
+    /// Times the producer blocked on a full queue (backpressure events).
+    pub stalls: AtomicU64,
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record a completed item.
+    pub fn record(&self, raw: u64, comp: u64, ns: u64) {
+        self.items_out.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(raw, Ordering::Relaxed);
+        self.bytes_out.fetch_add(comp, Ordering::Relaxed);
+        self.work_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Compressed-size percentage over everything recorded so far.
+    pub fn compressed_pct(&self) -> f64 {
+        let raw = self.bytes_in.load(Ordering::Relaxed);
+        let comp = self.bytes_out.load(Ordering::Relaxed);
+        if raw == 0 {
+            0.0
+        } else {
+            comp as f64 / raw as f64 * 100.0
+        }
+    }
+
+    /// Aggregate worker throughput in GB/s of raw input.
+    pub fn throughput_gbps(&self) -> f64 {
+        let ns = self.work_ns.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 0.0;
+        }
+        self.bytes_in.load(Ordering::Relaxed) as f64 / ns as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::new();
+        m.record(100, 50, 1000);
+        m.record(100, 30, 1000);
+        assert_eq!(m.items_out.load(Ordering::Relaxed), 2);
+        assert!((m.compressed_pct() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.compressed_pct(), 0.0);
+        assert_eq!(m.throughput_gbps(), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Streaming orchestration (the L3 "coordinator" role): a bounded-queue,
+//! multi-worker compression pipeline with backpressure and metrics.
+//!
+//! The paper's §5.1 design point — fixed-size chunks compressed
+//! independently, metadata enabling parallel decode — extends naturally to
+//! a *stream* of items (tensors, files, checkpoints). This module provides
+//! that stream layer: items flow through a bounded job queue to a worker
+//! pool and come out in submission order; a full queue blocks the producer
+//! (backpressure) instead of buffering unboundedly.
+
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::Metrics;
+pub use pipeline::{PipelineBuilder, PipelineResult, WorkItem};

@@ -1,0 +1,281 @@
+//! Bounded-queue worker pipeline with in-order delivery.
+
+use crate::codec::{CodecConfig, Compressor};
+use crate::coordinator::metrics::Metrics;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One unit of work: a named buffer to compress.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    /// Item name (tensor/file/checkpoint id).
+    pub name: String,
+    /// Raw bytes.
+    pub data: Vec<u8>,
+}
+
+/// A finished item, delivered in submission order.
+#[derive(Debug)]
+pub struct PipelineResult {
+    /// Item name.
+    pub name: String,
+    /// Compressed container.
+    pub compressed: Vec<u8>,
+    /// Raw length.
+    pub raw_len: usize,
+    /// Worker compression time (seconds).
+    pub secs: f64,
+}
+
+/// Builder for a compression pipeline.
+pub struct PipelineBuilder {
+    cfg: CodecConfig,
+    workers: usize,
+    queue_depth: usize,
+}
+
+impl PipelineBuilder {
+    /// New builder around a codec configuration.
+    pub fn new(cfg: CodecConfig) -> PipelineBuilder {
+        PipelineBuilder { cfg, workers: 1, queue_depth: 4 }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Bounded job-queue depth — the backpressure knob.
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n.max(1);
+        self
+    }
+
+    /// Start the pipeline.
+    pub fn start(self) -> Pipeline {
+        let metrics = Arc::new(Metrics::new());
+        let (job_tx, job_rx) = sync_channel::<(u64, WorkItem)>(self.queue_depth);
+        // The done channel is unbounded on purpose: results wait in the
+        // consumer-side reorder buffer, and a bounded done channel would
+        // deadlock a producer that submits everything before receiving
+        // (workers stuck sending, job queue full, submit blocked).
+        let (done_tx, done_rx) = channel::<(u64, PipelineResult)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut handles = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let rx = Arc::clone(&job_rx);
+            let tx = done_tx.clone();
+            let cfg = self.cfg.clone();
+            let metrics = Arc::clone(&metrics);
+            handles.push(std::thread::spawn(move || {
+                let comp = Compressor::new(cfg);
+                loop {
+                    let job = rx.lock().unwrap().recv();
+                    let (seq, item) = match job {
+                        Ok(j) => j,
+                        Err(_) => break, // producers gone
+                    };
+                    let t = Instant::now();
+                    let compressed = comp.compress(&item.data).expect("compress");
+                    let secs = t.elapsed().as_secs_f64();
+                    metrics.record(
+                        item.data.len() as u64,
+                        compressed.len() as u64,
+                        (secs * 1e9) as u64,
+                    );
+                    let res = PipelineResult {
+                        name: item.name,
+                        raw_len: item.data.len(),
+                        compressed,
+                        secs,
+                    };
+                    if tx.send((seq, res)).is_err() {
+                        break; // consumer gone
+                    }
+                }
+            }));
+        }
+        drop(done_tx);
+        Pipeline {
+            job_tx: Some(job_tx),
+            done_rx,
+            reorder: BTreeMap::new(),
+            next_deliver: 0,
+            next_seq: 0,
+            metrics,
+            handles,
+        }
+    }
+}
+
+/// A running pipeline. Submit items with [`Pipeline::submit`]; collect
+/// in-order results with [`Pipeline::recv`] or drain with
+/// [`Pipeline::finish`].
+pub struct Pipeline {
+    job_tx: Option<SyncSender<(u64, WorkItem)>>,
+    done_rx: Receiver<(u64, PipelineResult)>,
+    reorder: BTreeMap<u64, PipelineResult>,
+    next_deliver: u64,
+    next_seq: u64,
+    metrics: Arc<Metrics>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pipeline {
+    /// Submit an item, blocking when the queue is full (backpressure).
+    /// Returns the item's sequence number.
+    pub fn submit(&mut self, item: WorkItem) -> Result<u64> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.metrics
+            .items_in
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tx = self
+            .job_tx
+            .as_ref()
+            .ok_or_else(|| Error::Invalid("pipeline already finished".into()))?;
+        // try_send first so genuine backpressure is observable in metrics
+        match tx.try_send((seq, item)) {
+            Ok(()) => Ok(seq),
+            Err(TrySendError::Full(job)) => {
+                self.metrics
+                    .stalls
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                tx.send(job)
+                    .map_err(|_| Error::Invalid("pipeline workers exited".into()))?;
+                Ok(seq)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Invalid("pipeline workers exited".into()))
+            }
+        }
+    }
+
+    /// Receive the next result in submission order (blocking). Returns
+    /// `None` when all submitted items have been delivered and the
+    /// pipeline has been closed via [`Pipeline::close`].
+    pub fn recv(&mut self) -> Option<PipelineResult> {
+        loop {
+            if let Some(r) = self.reorder.remove(&self.next_deliver) {
+                self.next_deliver += 1;
+                return Some(r);
+            }
+            match self.done_rx.recv() {
+                Ok((seq, res)) => {
+                    self.reorder.insert(seq, res);
+                }
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Stop accepting new items (lets workers drain and exit).
+    pub fn close(&mut self) {
+        self.job_tx = None;
+    }
+
+    /// Close, drain all remaining results in order, and join workers.
+    pub fn finish(mut self) -> (Vec<PipelineResult>, Arc<Metrics>) {
+        self.close();
+        let mut out = Vec::new();
+        while let Some(r) = self.recv() {
+            out.push(r);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        (out, self.metrics)
+    }
+
+    /// Shared metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::decompress;
+    use crate::fp::DType;
+    use crate::util::Xoshiro256;
+
+    fn items(n: usize, bytes: usize, seed: u64) -> Vec<WorkItem> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let mut data = Vec::with_capacity(bytes);
+                for _ in 0..bytes / 2 {
+                    let w = (rng.normal() * 0.03) as f32;
+                    data.extend_from_slice(
+                        &crate::fp::dtype::f32_to_bf16_bits(w).to_le_bytes(),
+                    );
+                }
+                WorkItem { name: format!("t{i}"), data }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn in_order_delivery_multi_worker() {
+        let its = items(24, 40_000, 1);
+        let originals: Vec<Vec<u8>> = its.iter().map(|i| i.data.clone()).collect();
+        let mut p = PipelineBuilder::new(CodecConfig::for_dtype(DType::BF16))
+            .workers(4)
+            .queue_depth(2)
+            .start();
+        for it in its {
+            p.submit(it).unwrap();
+        }
+        let (results, metrics) = p.finish();
+        assert_eq!(results.len(), 24);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.name, format!("t{i}"), "order preserved");
+            assert_eq!(decompress(&r.compressed).unwrap(), originals[i]);
+        }
+        assert_eq!(
+            metrics.items_out.load(std::sync::atomic::Ordering::Relaxed),
+            24
+        );
+    }
+
+    #[test]
+    fn backpressure_counted() {
+        // Tiny queue + many items: the producer must stall at least once.
+        let its = items(32, 200_000, 2);
+        let mut p = PipelineBuilder::new(CodecConfig::for_dtype(DType::BF16))
+            .workers(1)
+            .queue_depth(1)
+            .start();
+        for it in its {
+            p.submit(it).unwrap();
+        }
+        let (results, metrics) = p.finish();
+        assert_eq!(results.len(), 32);
+        assert!(
+            metrics.stalls.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "expected backpressure stalls"
+        );
+    }
+
+    #[test]
+    fn empty_pipeline_finishes() {
+        let p = PipelineBuilder::new(CodecConfig::for_dtype(DType::F32)).start();
+        let (results, _) = p.finish();
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn submit_after_close_errors() {
+        let mut p = PipelineBuilder::new(CodecConfig::for_dtype(DType::F32)).start();
+        p.close();
+        assert!(p
+            .submit(WorkItem { name: "x".into(), data: vec![1, 2, 3, 4] })
+            .is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Checkpoint store with periodic-base delta strategies (paper §4.2,
+//! Fig. 9).
+//!
+//! Three strategies:
+//! - `Standalone` — every checkpoint compressed on its own;
+//! - `Chain(k)` — consecutive deltas, a full base every `k` checkpoints
+//!   (recovery walks ≤ k−1 deltas);
+//! - `FixedBase(k)` — every delta taken against the last full base
+//!   (recovery needs exactly one delta, compression degrades with
+//!   distance).
+
+use crate::codec::{decompress, CodecConfig, Compressor};
+use crate::delta::xor::DeltaCodec;
+use crate::error::{Error, Result};
+use crate::fp::DType;
+
+/// Base placement strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaseStrategy {
+    /// No deltas.
+    Standalone,
+    /// Full base every `k`; delta against the *previous checkpoint*.
+    Chain(usize),
+    /// Full base every `k`; delta against the *last base*.
+    FixedBase(usize),
+}
+
+/// How one checkpoint was stored.
+#[derive(Debug, Clone)]
+pub struct StoredDelta {
+    /// Checkpoint index.
+    pub index: usize,
+    /// Compressed bytes on disk.
+    pub bytes: Vec<u8>,
+    /// True if this entry is a full (standalone-compressed) base.
+    pub is_base: bool,
+    /// Raw checkpoint size.
+    pub raw_len: usize,
+}
+
+impl StoredDelta {
+    /// Compressed size in percent of raw.
+    pub fn pct(&self) -> f64 {
+        self.bytes.len() as f64 / self.raw_len as f64 * 100.0
+    }
+}
+
+/// An in-memory checkpoint store applying one [`BaseStrategy`].
+pub struct CheckpointStore {
+    strategy: BaseStrategy,
+    codec_cfg: CodecConfig,
+    delta: DeltaCodec,
+    /// Raw bytes of checkpoints we may still need as delta references.
+    prev_raw: Option<Vec<u8>>,
+    base_raw: Option<Vec<u8>>,
+    entries: Vec<StoredDelta>,
+}
+
+impl CheckpointStore {
+    /// New store for checkpoints of `dtype` using `strategy`.
+    pub fn new(dtype: DType, strategy: BaseStrategy) -> CheckpointStore {
+        CheckpointStore {
+            strategy,
+            codec_cfg: CodecConfig::for_dtype(dtype),
+            delta: DeltaCodec::new(dtype),
+            prev_raw: None,
+            base_raw: None,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Append a checkpoint; returns a reference to its stored entry.
+    pub fn push(&mut self, raw: &[u8]) -> Result<&StoredDelta> {
+        let idx = self.entries.len();
+        let is_base = match self.strategy {
+            BaseStrategy::Standalone => true,
+            BaseStrategy::Chain(k) | BaseStrategy::FixedBase(k) => {
+                if k == 0 {
+                    return Err(Error::Invalid("period must be > 0".into()));
+                }
+                idx % k == 0
+            }
+        };
+        let bytes = if is_base {
+            Compressor::new(self.codec_cfg.clone()).compress(raw)?
+        } else {
+            let reference = match self.strategy {
+                BaseStrategy::Chain(_) => self.prev_raw.as_ref(),
+                BaseStrategy::FixedBase(_) => self.base_raw.as_ref(),
+                BaseStrategy::Standalone => unreachable!(),
+            }
+            .ok_or_else(|| Error::Invalid("no reference checkpoint".into()))?;
+            self.delta.encode(reference, raw)?
+        };
+        if is_base {
+            self.base_raw = Some(raw.to_vec());
+        }
+        self.prev_raw = Some(raw.to_vec());
+        self.entries.push(StoredDelta {
+            index: idx,
+            bytes,
+            is_base,
+            raw_len: raw.len(),
+        });
+        Ok(self.entries.last().unwrap())
+    }
+
+    /// Recover checkpoint `index` by decompressing its base and applying
+    /// the delta chain.
+    pub fn recover(&self, index: usize) -> Result<Vec<u8>> {
+        let e = self
+            .entries
+            .get(index)
+            .ok_or_else(|| Error::Invalid(format!("no checkpoint {index}")))?;
+        if e.is_base {
+            return decompress(&e.bytes);
+        }
+        match self.strategy {
+            BaseStrategy::Standalone => unreachable!("non-base under standalone"),
+            BaseStrategy::FixedBase(k) => {
+                let base_idx = (index / k) * k;
+                let base = decompress(&self.entries[base_idx].bytes)?;
+                self.delta.decode(&base, &e.bytes)
+            }
+            BaseStrategy::Chain(k) => {
+                let base_idx = (index / k) * k;
+                let mut cur = decompress(&self.entries[base_idx].bytes)?;
+                for i in base_idx + 1..=index {
+                    cur = self.delta.decode(&cur, &self.entries[i].bytes)?;
+                }
+                Ok(cur)
+            }
+        }
+    }
+
+    /// All stored entries.
+    pub fn entries(&self) -> &[StoredDelta] {
+        &self.entries
+    }
+
+    /// Mean compressed percentage over *delta* entries only (Fig. 9
+    /// ignores the space of the periodic full bases).
+    pub fn mean_delta_pct(&self) -> f64 {
+        let deltas: Vec<&StoredDelta> = self.entries.iter().filter(|e| !e.is_base).collect();
+        if deltas.is_empty() {
+            return f64::NAN;
+        }
+        deltas.iter().map(|e| e.pct()).sum::<f64>() / deltas.len() as f64
+    }
+
+    /// Total stored bytes (bases + deltas).
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::dtype::f32_to_bf16_bits;
+    use crate::util::Xoshiro256;
+
+    /// Simulated training trajectory: weights drift by decreasing steps.
+    fn trajectory(n_ckpts: usize, n_params: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut w: Vec<f64> = (0..n_params).map(|_| rng.normal() * 0.02).collect();
+        let mut out = Vec::new();
+        for e in 0..n_ckpts {
+            let lr = 1e-4 / (1.0 + e as f64 / 4.0);
+            for v in w.iter_mut() {
+                *v += rng.normal() * lr;
+            }
+            let mut bytes = Vec::with_capacity(2 * n_params);
+            for v in &w {
+                bytes.extend_from_slice(&f32_to_bf16_bits(*v as f32).to_le_bytes());
+            }
+            out.push(bytes);
+        }
+        out
+    }
+
+    #[test]
+    fn all_strategies_recover_exactly() {
+        let ckpts = trajectory(8, 60_000, 1);
+        for strat in [
+            BaseStrategy::Standalone,
+            BaseStrategy::Chain(4),
+            BaseStrategy::FixedBase(4),
+        ] {
+            let mut store = CheckpointStore::new(DType::BF16, strat);
+            for c in &ckpts {
+                store.push(c).unwrap();
+            }
+            for (i, c) in ckpts.iter().enumerate() {
+                assert_eq!(&store.recover(i).unwrap(), c, "{strat:?} ckpt {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn deltas_beat_standalone() {
+        let ckpts = trajectory(6, 80_000, 2);
+        let mut standalone = CheckpointStore::new(DType::BF16, BaseStrategy::Standalone);
+        let mut chain = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(6));
+        for c in &ckpts {
+            standalone.push(c).unwrap();
+            chain.push(c).unwrap();
+        }
+        assert!(
+            chain.total_bytes() < standalone.total_bytes(),
+            "chain {} !< standalone {}",
+            chain.total_bytes(),
+            standalone.total_bytes()
+        );
+    }
+
+    #[test]
+    fn chain_beats_fixed_base_at_distance() {
+        // With a drifting trajectory, consecutive deltas are smaller than
+        // deltas against a distant fixed base (Fig. 9's observation).
+        let ckpts = trajectory(10, 60_000, 3);
+        let mut chain = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(10));
+        let mut fixed = CheckpointStore::new(DType::BF16, BaseStrategy::FixedBase(10));
+        for c in &ckpts {
+            chain.push(c).unwrap();
+            fixed.push(c).unwrap();
+        }
+        assert!(chain.mean_delta_pct() <= fixed.mean_delta_pct() + 1.0);
+        // and the *last* fixed-base delta (distance 9) is clearly worse
+        let chain_last = chain.entries().last().unwrap().pct();
+        let fixed_last = fixed.entries().last().unwrap().pct();
+        assert!(fixed_last > chain_last, "fixed {fixed_last} !> chain {chain_last}");
+    }
+
+    #[test]
+    fn base_cadence() {
+        let ckpts = trajectory(9, 10_000, 4);
+        let mut s = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(3));
+        for c in &ckpts {
+            s.push(c).unwrap();
+        }
+        let bases: Vec<usize> = s
+            .entries()
+            .iter()
+            .filter(|e| e.is_base)
+            .map(|e| e.index)
+            .collect();
+        assert_eq!(bases, vec![0, 3, 6]);
+    }
+
+    #[test]
+    fn recover_out_of_range_errors() {
+        let store = CheckpointStore::new(DType::BF16, BaseStrategy::Standalone);
+        assert!(store.recover(0).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Delta compression for checkpoints and model versions (paper §4.2).
+//!
+//! Two similar models are stored as a base plus the XOR of their raw bytes;
+//! XOR is self-inverse and adds no bits. The delta is then run through the
+//! ZipNN codec, whose §4.2 auto-selector picks Zstd over Huffman when the
+//! delta is zero-dominated (>90% zeros or a zero run >3% of the chunk).
+//! [`checkpoint_store`] adds the periodic-base strategies of Fig. 9.
+
+pub mod checkpoint_store;
+pub mod xor;
+
+pub use checkpoint_store::{BaseStrategy, CheckpointStore, StoredDelta};
+pub use xor::{xor_delta, xor_delta_model, DeltaCodec};

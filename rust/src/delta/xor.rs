@@ -1,0 +1,163 @@
+//! XOR deltas and their compression.
+
+use crate::codec::{decompress, CodecConfig, Compressor, MethodPolicy};
+use crate::error::{Error, Result};
+use crate::fp::DType;
+use crate::model::tensor::Model;
+
+/// XOR two equal-length byte buffers (`a ^ b`); self-inverse.
+pub fn xor_delta(a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
+    if a.len() != b.len() {
+        return Err(Error::Invalid(format!(
+            "delta requires equal sizes: {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
+    let mut out = vec![0u8; a.len()];
+    // word-at-a-time
+    let mut i = 0;
+    while i + 8 <= a.len() {
+        let x = u64::from_le_bytes(a[i..i + 8].try_into().unwrap())
+            ^ u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        out[i..i + 8].copy_from_slice(&x.to_le_bytes());
+        i += 8;
+    }
+    for k in i..a.len() {
+        out[k] = a[k] ^ b[k];
+    }
+    Ok(out)
+}
+
+/// XOR the raw bytes of two models (shapes/dtypes/order must match).
+pub fn xor_delta_model(a: &Model, b: &Model) -> Result<Vec<u8>> {
+    if a.tensors.len() != b.tensors.len() {
+        return Err(Error::Invalid("models differ in tensor count".into()));
+    }
+    for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+        if ta.shape != tb.shape || ta.dtype != tb.dtype {
+            return Err(Error::Invalid(format!(
+                "tensor '{}' differs in shape/dtype",
+                ta.name
+            )));
+        }
+    }
+    xor_delta(&a.to_bytes(), &b.to_bytes())
+}
+
+/// Compresses/decompresses XOR deltas with a given policy. The default
+/// (`MethodPolicy::Auto`) is the paper's auto-selection; forcing
+/// Huffman/Zstd reproduces the Fig. 8(c) comparison lines.
+pub struct DeltaCodec {
+    cfg: CodecConfig,
+}
+
+impl DeltaCodec {
+    /// Auto-selecting delta codec for a dtype (byte grouping stays on —
+    /// Fig. 8(b) shows grouping helps deltas too).
+    pub fn new(dtype: DType) -> DeltaCodec {
+        DeltaCodec { cfg: CodecConfig::for_dtype(dtype) }
+    }
+
+    /// Force a method (for the Fig. 8(c) Huffman-vs-Zstd-vs-Auto series).
+    pub fn with_policy(mut self, p: MethodPolicy) -> Self {
+        self.cfg.policy = p;
+        self
+    }
+
+    /// Compress `next` against `base`: XOR then codec.
+    pub fn encode(&self, base: &[u8], next: &[u8]) -> Result<Vec<u8>> {
+        let delta = xor_delta(base, next)?;
+        Compressor::new(self.cfg.clone()).compress(&delta)
+    }
+
+    /// Recover `next` from `base` + compressed delta.
+    pub fn decode(&self, base: &[u8], compressed_delta: &[u8]) -> Result<Vec<u8>> {
+        let delta = decompress(compressed_delta)?;
+        xor_delta(base, &delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::dtype::f32_to_bf16_bits;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn xor_inverse() {
+        let a: Vec<u8> = (0..1000).map(|i| (i * 7 % 251) as u8).collect();
+        let b: Vec<u8> = (0..1000).map(|i| (i * 13 % 241) as u8).collect();
+        let d = xor_delta(&a, &b).unwrap();
+        let b2 = xor_delta(&a, &d).unwrap();
+        assert_eq!(b2, b);
+    }
+
+    #[test]
+    fn mismatched_sizes_rejected() {
+        assert!(xor_delta(&[1, 2], &[1, 2, 3]).is_err());
+    }
+
+    /// Fine-tuning-like perturbation: most mantissa bits change but high
+    /// bytes stay — delta compresses far better than standalone (§4.2).
+    #[test]
+    fn finetune_delta_beats_standalone() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 400_000usize;
+        let mut base = Vec::with_capacity(2 * n);
+        let mut next = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            let w = rng.normal() * 0.02;
+            let w2 = w + rng.normal() * 1e-5; // small update
+            base.extend_from_slice(&f32_to_bf16_bits(w as f32).to_le_bytes());
+            next.extend_from_slice(&f32_to_bf16_bits(w2 as f32).to_le_bytes());
+        }
+        let dc = DeltaCodec::new(DType::BF16);
+        let delta_comp = dc.encode(&base, &next).unwrap();
+        let standalone = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+            .compress(&next)
+            .unwrap();
+        assert!(
+            delta_comp.len() < standalone.len(),
+            "delta {} !< standalone {}",
+            delta_comp.len(),
+            standalone.len()
+        );
+        assert_eq!(dc.decode(&base, &delta_comp).unwrap(), next);
+    }
+
+    #[test]
+    fn identical_models_collapse() {
+        let data = vec![42u8; 1 << 20];
+        let dc = DeltaCodec::new(DType::BF16);
+        let comp = dc.encode(&data, &data).unwrap();
+        assert!(comp.len() < 1024, "identical delta must collapse: {}", comp.len());
+        assert_eq!(dc.decode(&data, &comp).unwrap(), data);
+    }
+
+    #[test]
+    fn model_delta_validates_structure() {
+        use crate::model::synthetic::{generate, Category, SyntheticSpec};
+        let a = generate(&SyntheticSpec::new("a", Category::RegularBF16, 1 << 20, 1));
+        let b = generate(&SyntheticSpec::new("b", Category::RegularBF16, 1 << 20, 2));
+        assert!(xor_delta_model(&a, &b).is_ok());
+        let c = generate(&SyntheticSpec::new("c", Category::RegularBF16, 3 << 20, 3));
+        assert!(xor_delta_model(&a, &c).is_err());
+    }
+
+    #[test]
+    fn forced_policies_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut base = vec![0u8; 200_000];
+        rng.fill_bytes(&mut base);
+        let mut next = base.clone();
+        for i in (0..next.len()).step_by(10) {
+            next[i] ^= 1;
+        }
+        for p in [MethodPolicy::Auto, MethodPolicy::Huffman, MethodPolicy::Zstd] {
+            let dc = DeltaCodec::new(DType::BF16).with_policy(p);
+            let comp = dc.encode(&base, &next).unwrap();
+            assert_eq!(dc.decode(&base, &comp).unwrap(), next, "{p:?}");
+        }
+    }
+}

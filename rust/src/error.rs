@@ -1,0 +1,42 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the ZipNN library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A container or stream failed structural validation.
+    #[error("format error: {0}")]
+    Format(String),
+
+    /// Compressed data is corrupt (bad magic, truncated payload, checksum
+    /// mismatch, impossible code, ...).
+    #[error("corrupt data: {0}")]
+    Corrupt(String),
+
+    /// The operation's inputs are inconsistent (mismatched sizes, wrong
+    /// dtype, delta between different-shaped models, ...).
+    #[error("invalid input: {0}")]
+    Invalid(String),
+
+    /// An AOT artifact is missing or its manifest is inconsistent.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Underlying PJRT/XLA failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

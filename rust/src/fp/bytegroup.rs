@@ -1,0 +1,269 @@
+//! Byte grouping / exponent extraction (paper §3.1–§3.2, Figures 3 & 5).
+//!
+//! An array of `k`-byte elements is rearranged into `k` contiguous streams,
+//! stream `g` holding byte `g` of every element. Grouping separates the
+//! highly-skewed exponent byte from the near-random mantissa bytes so each
+//! can be entropy-coded (or skipped) on its own. The transform is its own
+//! inverse given the layout, and both directions are hot-path code.
+
+use crate::error::{Error, Result};
+use crate::fp::DType;
+
+/// How elements are split into byte streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupLayout {
+    /// Element size in bytes (= number of groups). 1 means "no grouping".
+    pub elem: usize,
+    /// Which group carries the exponent byte (little-endian index).
+    pub exp_group: usize,
+}
+
+impl GroupLayout {
+    /// Layout for a dtype: one group per element byte, exponent group
+    /// flagged per Figure 3/5 (high byte for FP32/BF16/FP16).
+    pub fn for_dtype(d: DType) -> GroupLayout {
+        GroupLayout { elem: d.size(), exp_group: d.exponent_byte() }
+    }
+
+    /// Ungrouped layout (whole bytes as a single stream).
+    pub fn flat() -> GroupLayout {
+        GroupLayout { elem: 1, exp_group: 0 }
+    }
+
+    /// Number of byte groups.
+    pub fn groups(&self) -> usize {
+        self.elem
+    }
+}
+
+/// Split `data` into `layout.elem` per-byte-position streams.
+///
+/// `data.len()` must be a multiple of the element size. Group order in the
+/// output is **exponent group first**, then the remaining byte positions in
+/// ascending little-endian order — the on-disk stream order of `.znn`.
+pub fn split_groups(data: &[u8], layout: GroupLayout) -> Result<Vec<Vec<u8>>> {
+    let k = layout.elem;
+    if k == 1 {
+        return Ok(vec![data.to_vec()]);
+    }
+    if data.len() % k != 0 {
+        return Err(Error::Invalid(format!(
+            "buffer of {} bytes is not a multiple of element size {k}",
+            data.len()
+        )));
+    }
+    let n = data.len() / k;
+    let order = group_order(layout);
+    let mut out: Vec<Vec<u8>> = order.iter().map(|_| vec![0u8; n]).collect();
+    match k {
+        2 => split2(data, layout, &mut out),
+        4 => split4(data, layout, &mut out),
+        _ => {
+            for (gi, &pos) in order.iter().enumerate() {
+                let dst = &mut out[gi];
+                for (i, chunk) in data.chunks_exact(k).enumerate() {
+                    dst[i] = chunk[pos];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Inverse of [`split_groups`]: interleave the streams back into elements.
+pub fn merge_groups(groups: &[Vec<u8>], layout: GroupLayout) -> Result<Vec<u8>> {
+    let refs: Vec<&[u8]> = groups.iter().map(|g| g.as_slice()).collect();
+    let n: usize = refs.iter().map(|g| g.len()).sum();
+    let mut out = vec![0u8; n];
+    merge_groups_into(&refs, layout, &mut out)?;
+    Ok(out)
+}
+
+/// [`merge_groups`] into a caller-provided buffer (`out.len()` must equal
+/// the summed group lengths) — the allocation-free decompression path.
+pub fn merge_groups_into(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) -> Result<()> {
+    let k = layout.elem;
+    if groups.len() != k {
+        return Err(Error::Invalid(format!(
+            "expected {k} groups, got {}",
+            groups.len()
+        )));
+    }
+    if k == 1 {
+        if out.len() != groups[0].len() {
+            return Err(Error::Corrupt("merge output size mismatch".into()));
+        }
+        out.copy_from_slice(groups[0]);
+        return Ok(());
+    }
+    let n = groups[0].len();
+    for g in groups {
+        if g.len() != n {
+            return Err(Error::Corrupt("byte-group streams differ in length".into()));
+        }
+    }
+    if out.len() != n * k {
+        return Err(Error::Corrupt("merge output size mismatch".into()));
+    }
+    let order = group_order(layout);
+    match k {
+        2 => merge2(groups, layout, out),
+        4 => merge4(groups, layout, out),
+        _ => {
+            for (gi, &pos) in order.iter().enumerate() {
+                let src = &groups[gi];
+                for (i, chunk) in out.chunks_exact_mut(k).enumerate() {
+                    chunk[pos] = src[i];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Byte positions in on-disk stream order: exponent group first, then the
+/// remaining byte positions in **descending** significance — matching the
+/// paper's Table 2 breakdown order (exp, mantissa-high, ..., mantissa-low).
+pub fn group_order(layout: GroupLayout) -> Vec<usize> {
+    let mut order = vec![layout.exp_group];
+    order.extend((0..layout.elem).rev().filter(|&p| p != layout.exp_group));
+    order
+}
+
+// --- specialized fast paths -------------------------------------------------
+
+fn split2(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
+    // stream 0 = exponent byte (hi for bf16/f16), stream 1 = the other.
+    let hi_first = layout.exp_group == 1;
+    let (a, b) = out.split_at_mut(1);
+    let (g0, g1) = (&mut a[0][..], &mut b[0][..]);
+    for (i, ch) in data.chunks_exact(2).enumerate() {
+        if hi_first {
+            g0[i] = ch[1];
+            g1[i] = ch[0];
+        } else {
+            g0[i] = ch[0];
+            g1[i] = ch[1];
+        }
+    }
+}
+
+fn merge2(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
+    let hi_first = layout.exp_group == 1;
+    let (g0, g1) = (groups[0], groups[1]);
+    for (i, ch) in out.chunks_exact_mut(2).enumerate() {
+        if hi_first {
+            ch[1] = g0[i];
+            ch[0] = g1[i];
+        } else {
+            ch[0] = g0[i];
+            ch[1] = g1[i];
+        }
+    }
+}
+
+fn split4(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
+    let order = group_order(layout);
+    // Split the output vector to get simultaneous &mut to all four streams.
+    let (o0, rest) = out.split_at_mut(1);
+    let (o1, rest) = rest.split_at_mut(1);
+    let (o2, o3) = rest.split_at_mut(1);
+    let dsts = [&mut o0[0][..], &mut o1[0][..], &mut o2[0][..], &mut o3[0][..]];
+    // dsts[gi] receives byte position order[gi]; build position->stream map.
+    let mut pos_to_stream = [0usize; 4];
+    for (gi, &pos) in order.iter().enumerate() {
+        pos_to_stream[pos] = gi;
+    }
+    for (i, ch) in data.chunks_exact(4).enumerate() {
+        dsts[pos_to_stream[0]][i] = ch[0];
+        dsts[pos_to_stream[1]][i] = ch[1];
+        dsts[pos_to_stream[2]][i] = ch[2];
+        dsts[pos_to_stream[3]][i] = ch[3];
+    }
+}
+
+fn merge4(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
+    let order = group_order(layout);
+    let mut pos_to_stream = [0usize; 4];
+    for (gi, &pos) in order.iter().enumerate() {
+        pos_to_stream[pos] = gi;
+    }
+    let srcs = [groups[0], groups[1], groups[2], groups[3]];
+    for (i, ch) in out.chunks_exact_mut(4).enumerate() {
+        ch[0] = srcs[pos_to_stream[0]][i];
+        ch[1] = srcs[pos_to_stream[1]][i];
+        ch[2] = srcs[pos_to_stream[2]][i];
+        ch[3] = srcs[pos_to_stream[3]][i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn roundtrip(layout: GroupLayout, data: &[u8]) {
+        let groups = split_groups(data, layout).unwrap();
+        assert_eq!(groups.len(), layout.groups());
+        let back = merge_groups(&groups, layout).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn bf16_exponent_first() {
+        // elements (le): [0x3F80, 0xBF00] -> bytes [80 3F 00 BF]
+        let data = [0x80u8, 0x3F, 0x00, 0xBF];
+        let layout = GroupLayout::for_dtype(DType::BF16);
+        let groups = split_groups(&data, layout).unwrap();
+        assert_eq!(groups[0], vec![0x3F, 0xBF], "exponent (hi) bytes first");
+        assert_eq!(groups[1], vec![0x80, 0x00]);
+        roundtrip(layout, &data);
+    }
+
+    #[test]
+    fn fp32_group_order() {
+        // one element 0x11223344 (le bytes 44 33 22 11); exp byte = idx 3 = 0x11
+        let data = [0x44u8, 0x33, 0x22, 0x11];
+        let layout = GroupLayout::for_dtype(DType::F32);
+        let groups = split_groups(&data, layout).unwrap();
+        assert_eq!(groups[0], vec![0x11], "exponent byte first");
+        assert_eq!(groups[1], vec![0x22], "then mantissa-high");
+        assert_eq!(groups[2], vec![0x33]);
+        assert_eq!(groups[3], vec![0x44], "mantissa-low last");
+        roundtrip(layout, &data);
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes_random() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        for d in [DType::F32, DType::BF16, DType::F16, DType::I8] {
+            let layout = GroupLayout::for_dtype(d);
+            for n in [0usize, 1, 7, 255, 4096] {
+                let mut data = vec![0u8; n * d.size()];
+                rng.fill_bytes(&mut data);
+                roundtrip(layout, &data);
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_rejected() {
+        let layout = GroupLayout::for_dtype(DType::F32);
+        assert!(split_groups(&[1, 2, 3], layout).is_err());
+    }
+
+    #[test]
+    fn merge_validates() {
+        let layout = GroupLayout::for_dtype(DType::BF16);
+        assert!(merge_groups(&[vec![1]], layout).is_err());
+        assert!(merge_groups(&[vec![1], vec![2, 3]], layout).is_err());
+    }
+
+    #[test]
+    fn flat_layout_identity() {
+        let data = vec![9u8; 100];
+        let groups = split_groups(&data, GroupLayout::flat()).unwrap();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0], data);
+    }
+}

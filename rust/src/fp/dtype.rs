@@ -1,0 +1,233 @@
+//! Parameter dtypes (Figure 1 of the paper) and their bit layouts.
+
+use crate::error::{Error, Result};
+
+/// Parameter element type of a model tensor.
+///
+/// | dtype | sign | exponent | mantissa | exponent share |
+/// |-------|------|----------|----------|----------------|
+/// | FP32  | 1    | 8        | 23       | 1/4 of bytes   |
+/// | BF16  | 1    | 8        | 7        | 1/2 of bytes   |
+/// | FP16  | 1    | 5        | 10       | (in high byte) |
+/// | I8/U8 | —    | —        | —        | quantized      |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// IEEE-754 binary32.
+    F32,
+    /// bfloat16: FP32 with the mantissa truncated to 7 bits.
+    BF16,
+    /// IEEE-754 binary16.
+    F16,
+    /// 8-bit integer (quantized models).
+    I8,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::BF16 | DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    /// Short lowercase name (container/manifest encoding).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::I8 => "i8",
+        }
+    }
+
+    /// Parse from [`DType::name`] form.
+    pub fn from_name(s: &str) -> Result<DType> {
+        match s {
+            "f32" | "fp32" | "float32" => Ok(DType::F32),
+            "bf16" | "bfloat16" => Ok(DType::BF16),
+            "f16" | "fp16" | "float16" => Ok(DType::F16),
+            "i8" | "int8" | "u8" => Ok(DType::I8),
+            other => Err(Error::Invalid(format!("unknown dtype '{other}'"))),
+        }
+    }
+
+    /// Stable one-byte tag for container headers.
+    pub fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::BF16 => 1,
+            DType::F16 => 2,
+            DType::I8 => 3,
+        }
+    }
+
+    /// Inverse of [`DType::tag`].
+    pub fn from_tag(t: u8) -> Result<DType> {
+        match t {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::BF16),
+            2 => Ok(DType::F16),
+            3 => Ok(DType::I8),
+            other => Err(Error::Corrupt(format!("bad dtype tag {other}"))),
+        }
+    }
+
+    /// Index (within one little-endian element) of the byte that carries
+    /// the exponent bits — the "group 1" stream of the paper.
+    ///
+    /// - FP32: byte 3 = sign + exp[7:1] (high byte).
+    /// - BF16: byte 1 = sign + exp[7:1] (high byte).
+    /// - FP16: byte 1 = sign + exp[4:0] + mantissa[9:8].
+    /// - I8: byte 0 (no exponent; single group).
+    pub fn exponent_byte(self) -> usize {
+        match self {
+            DType::F32 => 3,
+            DType::BF16 | DType::F16 => 1,
+            DType::I8 => 0,
+        }
+    }
+}
+
+/// Convert an `f32` to bfloat16 bits with round-to-nearest-even
+/// (the conversion used when models are cast for inference, §2.2).
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    // round-to-nearest-even on bit 16
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits + round) >> 16) as u16
+}
+
+/// Expand bfloat16 bits back to `f32` (exact).
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Convert an `f32` to IEEE binary16 bits, round-to-nearest-even, with
+/// proper subnormal/overflow handling.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if man != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    let half = 0x0000_0FFF + ((man >> 13) & 1);
+    let man_r = man + half;
+    if man_r & 0x0080_0000 != 0 {
+        // mantissa overflow bumps exponent
+        let e = e + 1;
+        if e >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((e as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | ((man_r >> 13) as u16)
+}
+
+/// Expand IEEE binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value = man * 2^-24; normalize the leading 1 away
+            let p = 31 - man.leading_zeros(); // MSB position of man (0..=9)
+            let exp = 103 + p; // 127 + (p - 24)
+            let man_f32 = (man << (23 - p)) & 0x007F_FFFF;
+            sign | (exp << 23) | man_f32
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrips() {
+        for d in [DType::F32, DType::BF16, DType::F16, DType::I8] {
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+            assert_eq!(DType::from_name(d.name()).unwrap(), d);
+        }
+        assert!(DType::from_tag(99).is_err());
+        assert!(DType::from_name("f64").is_err());
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_values() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, -0.0078125, 3.140625] {
+            let b = f32_to_bf16_bits(x);
+            let y = bf16_bits_to_f32(b);
+            // Values representable in bf16 survive exactly.
+            assert_eq!(f32_to_bf16_bits(y), b);
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between two bf16 values.
+        let x = f32::from_bits(0x3F80_8000);
+        let b = f32_to_bf16_bits(x);
+        assert_eq!(b & 1, 0, "ties must go to even");
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn f16_roundtrip_representable() {
+        let mut rng = crate::util::Xoshiro256::seed_from_u64(5);
+        for _ in 0..10_000 {
+            // random f16 bit pattern -> f32 -> f16 must be identity
+            let h = (rng.next_u32() & 0xFFFF) as u16;
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                continue; // NaN payloads may differ
+            }
+            assert_eq!(f32_to_f16_bits(x), h, "h={h:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = f16_bits_to_f32(0x0001); // smallest positive subnormal
+        assert!(tiny > 0.0 && tiny < 1e-7);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+    }
+}

@@ -1,0 +1,14 @@
+//! Floating-point format layouts and the ZipNN byte-group transforms.
+//!
+//! The paper's key observation (§3.1) is that the *exponent* byte of model
+//! parameters is highly skewed while sign+mantissa bits are near-uniform.
+//! ZipNN therefore rearranges parameter bytes into per-position streams
+//! ("byte grouping", with the exponent-carrying group first) before entropy
+//! coding each stream independently.
+
+pub mod bytegroup;
+pub mod dtype;
+pub mod stats;
+
+pub use bytegroup::{merge_groups, merge_groups_into, split_groups, GroupLayout};
+pub use dtype::DType;

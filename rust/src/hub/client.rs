@@ -1,0 +1,122 @@
+//! The hub client: upload/download with optional ZipNN compression and
+//! Fig.-10-style end-to-end timing.
+
+use crate::codec::{decompress_with, CodecConfig, Compressor};
+use crate::error::Result;
+use crate::hub::netsim::NetSim;
+use crate::hub::protocol::{read_response, write_request, Op};
+use crate::util::Timer;
+use std::net::TcpStream;
+
+/// End-to-end timing of one transfer (Fig. 10 bars).
+#[derive(Debug, Clone)]
+pub struct TransferReport {
+    /// Model/blob name.
+    pub name: String,
+    /// Raw bytes.
+    pub raw_len: usize,
+    /// Bytes on the wire (= raw when uncompressed).
+    pub wire_len: usize,
+    /// Measured compression or decompression seconds (0 when off).
+    pub codec_secs: f64,
+    /// Simulated WAN transfer seconds for `wire_len`.
+    pub transfer_secs: f64,
+}
+
+impl TransferReport {
+    /// Total end-to-end seconds.
+    pub fn total_secs(&self) -> f64 {
+        self.codec_secs + self.transfer_secs
+    }
+
+    /// Compressed size in percent.
+    pub fn pct(&self) -> f64 {
+        self.wire_len as f64 / self.raw_len as f64 * 100.0
+    }
+}
+
+/// Client connection to a [`crate::hub::HubServer`].
+pub struct HubClient {
+    stream: TcpStream,
+    threads: usize,
+}
+
+impl HubClient {
+    /// Connect to `addr`.
+    pub fn connect(addr: &str) -> Result<HubClient> {
+        Ok(HubClient { stream: TcpStream::connect(addr)?, threads: 1 })
+    }
+
+    /// Worker threads for codec work during transfers.
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Upload raw bytes, optionally compressing with `cfg`. The simulated
+    /// WAN time is charged on the wire bytes via `sim`.
+    pub fn upload(
+        &mut self,
+        name: &str,
+        raw: &[u8],
+        cfg: Option<CodecConfig>,
+        sim: &mut NetSim,
+    ) -> Result<TransferReport> {
+        let (wire, codec_secs, stored_name) = match cfg {
+            Some(cfg) => {
+                let t = Timer::start();
+                let comp = Compressor::new(cfg.with_threads(self.threads)).compress(raw)?;
+                (comp, t.secs(), format!("{name}.znn"))
+            }
+            None => (raw.to_vec(), 0.0, name.to_string()),
+        };
+        write_request(&mut self.stream, Op::Put, &stored_name, &wire)?;
+        read_response(&mut self.stream)?;
+        Ok(TransferReport {
+            name: name.to_string(),
+            raw_len: raw.len(),
+            wire_len: wire.len(),
+            codec_secs,
+            transfer_secs: sim.transfer_secs(wire.len() as u64),
+        })
+    }
+
+    /// Download a blob; decompresses when it was stored as `.znn`.
+    pub fn download(
+        &mut self,
+        name: &str,
+        compressed: bool,
+        sim: &mut NetSim,
+    ) -> Result<(Vec<u8>, TransferReport)> {
+        let stored_name = if compressed { format!("{name}.znn") } else { name.to_string() };
+        write_request(&mut self.stream, Op::Get, &stored_name, b"")?;
+        let wire = read_response(&mut self.stream)?;
+        let transfer_secs = sim.transfer_secs(wire.len() as u64);
+        let (raw, codec_secs) = if compressed {
+            let t = Timer::start();
+            let raw = decompress_with(&wire, self.threads)?;
+            let s = t.secs();
+            (raw, s)
+        } else {
+            (wire.clone(), 0.0)
+        };
+        Ok((
+            raw.clone(),
+            TransferReport {
+                name: name.to_string(),
+                raw_len: raw.len(),
+                wire_len: wire.len(),
+                codec_secs,
+                transfer_secs,
+            },
+        ))
+    }
+
+    /// List stored blob names.
+    pub fn list(&mut self) -> Result<Vec<String>> {
+        write_request(&mut self.stream, Op::List, "", b"")?;
+        let payload = read_response(&mut self.stream)?;
+        let s = String::from_utf8_lossy(&payload);
+        Ok(s.split('\n').filter(|x| !x.is_empty()).map(String::from).collect())
+    }
+}

@@ -1,0 +1,17 @@
+//! Model-hub simulator (paper §2.1.1 and §5.3, Fig. 10).
+//!
+//! A real in-process hub: server and client speak a length-prefixed binary
+//! protocol over loopback TCP, models are stored compressed or raw, and
+//! end-to-end upload/download timing combines *measured*
+//! compression/decompression time with *simulated* WAN transfer time from
+//! the paper's measured bandwidth regimes (Hugging Face is not reachable
+//! from this environment; see DESIGN.md §2 Substitutions).
+
+pub mod client;
+pub mod netsim;
+pub mod protocol;
+pub mod server;
+
+pub use client::{HubClient, TransferReport};
+pub use netsim::{NetProfile, NetSim};
+pub use server::HubServer;

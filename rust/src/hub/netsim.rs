@@ -1,0 +1,89 @@
+//! WAN bandwidth regimes measured in the paper (§5.3) and a simulated
+//! clock that converts byte counts into transfer seconds with the paper's
+//! observed variance.
+
+use crate::util::Xoshiro256;
+
+/// One network regime: mean bandwidth and relative jitter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetProfile {
+    /// Human-readable label.
+    pub name: &'static str,
+    /// Mean bandwidth in MB/s.
+    pub mbps: f64,
+    /// Uniform relative jitter (±fraction of mean) per transfer.
+    pub jitter: f64,
+}
+
+impl NetProfile {
+    /// Cloud VM, first (uncached) download: 20–40 MB/s.
+    pub const CLOUD_FIRST: NetProfile =
+        NetProfile { name: "cloud-1st", mbps: 30.0, jitter: 0.33 };
+    /// Cloud VM, cached download: 120–130 MB/s.
+    pub const CLOUD_CACHED: NetProfile =
+        NetProfile { name: "cloud-cached", mbps: 125.0, jitter: 0.04 };
+    /// Home connection, first download ≈ 10 MB/s.
+    pub const HOME_FIRST: NetProfile =
+        NetProfile { name: "home-1st", mbps: 10.0, jitter: 0.15 };
+    /// Home connection, cached ≈ 40 MB/s.
+    pub const HOME_CACHED: NetProfile =
+        NetProfile { name: "home-cached", mbps: 40.0, jitter: 0.08 };
+    /// Upload ≈ 20 MB/s, near-constant.
+    pub const UPLOAD: NetProfile = NetProfile { name: "upload", mbps: 20.0, jitter: 0.05 };
+}
+
+/// Deterministic transfer-time simulator.
+pub struct NetSim {
+    profile: NetProfile,
+    rng: Xoshiro256,
+}
+
+impl NetSim {
+    /// New simulator with a seed (deterministic benches).
+    pub fn new(profile: NetProfile, seed: u64) -> NetSim {
+        NetSim { profile, rng: Xoshiro256::seed_from_u64(seed) }
+    }
+
+    /// Simulated seconds to move `bytes` over this regime.
+    pub fn transfer_secs(&mut self, bytes: u64) -> f64 {
+        let jitter = 1.0 + (self.rng.uniform() * 2.0 - 1.0) * self.profile.jitter;
+        let bw = (self.profile.mbps * jitter).max(0.1) * 1e6; // bytes/s
+        bytes as f64 / bw
+    }
+
+    /// The regime.
+    pub fn profile(&self) -> NetProfile {
+        self.profile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_scales_with_bytes() {
+        let mut sim = NetSim::new(NetProfile::CLOUD_CACHED, 1);
+        let t1 = sim.transfer_secs(125_000_000);
+        // ~1 second ± jitter
+        assert!((0.9..1.1).contains(&t1), "t1={t1}");
+    }
+
+    #[test]
+    fn jitter_within_bounds() {
+        let mut sim = NetSim::new(NetProfile::CLOUD_FIRST, 2);
+        for _ in 0..1000 {
+            let t = sim.transfer_secs(30_000_000); // nominal 1s
+            assert!((0.7..1.55).contains(&t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = NetSim::new(NetProfile::HOME_FIRST, 3);
+        let mut b = NetSim::new(NetProfile::HOME_FIRST, 3);
+        for _ in 0..10 {
+            assert_eq!(a.transfer_secs(1 << 20), b.transfer_secs(1 << 20));
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Length-prefixed binary protocol between hub client and server.
+//!
+//! ```text
+//! request:  [op u8][name_len u32][name bytes][payload_len u64][payload]
+//! response: [status u8][payload_len u64][payload]
+//! ```
+//! ops: 0 = PUT, 1 = GET, 2 = LIST, 3 = SHUTDOWN. status: 0 = OK, 1 = err
+//! (payload is a UTF-8 message).
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// Request opcode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Store a blob.
+    Put = 0,
+    /// Fetch a blob.
+    Get = 1,
+    /// List stored names (newline-joined payload).
+    List = 2,
+    /// Stop the server (tests / clean shutdown).
+    Shutdown = 3,
+}
+
+impl Op {
+    /// Parse an opcode byte.
+    pub fn from_u8(v: u8) -> Option<Op> {
+        match v {
+            0 => Some(Op::Put),
+            1 => Some(Op::Get),
+            2 => Some(Op::List),
+            3 => Some(Op::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// Write a request frame.
+pub fn write_request(w: &mut impl Write, op: Op, name: &str, payload: &[u8]) -> Result<()> {
+    w.write_all(&[op as u8])?;
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a request frame. Returns `(op, name, payload)`.
+pub fn read_request(r: &mut impl Read) -> Result<(Op, String, Vec<u8>)> {
+    let mut op_b = [0u8; 1];
+    r.read_exact(&mut op_b)?;
+    let op = Op::from_u8(op_b[0])
+        .ok_or_else(|| Error::Format(format!("bad opcode {}", op_b[0])))?;
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let name_len = u32::from_le_bytes(len4) as usize;
+    if name_len > 4096 {
+        return Err(Error::Format("name too long".into()));
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let payload_len = u64::from_le_bytes(len8) as usize;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    Ok((
+        op,
+        String::from_utf8(name).map_err(|_| Error::Format("name not utf8".into()))?,
+        payload,
+    ))
+}
+
+/// Write a response frame.
+pub fn write_response(w: &mut impl Write, ok: bool, payload: &[u8]) -> Result<()> {
+    w.write_all(&[if ok { 0 } else { 1 }])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a response frame; error status becomes `Error::Format`.
+pub fn read_response(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut status = [0u8; 1];
+    r.read_exact(&mut status)?;
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let payload_len = u64::from_le_bytes(len8) as usize;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    if status[0] != 0 {
+        return Err(Error::Format(format!(
+            "hub error: {}",
+            String::from_utf8_lossy(&payload)
+        )));
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, Op::Put, "model-a", b"payload").unwrap();
+        let (op, name, payload) = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(op, Op::Put);
+        assert_eq!(name, "model-a");
+        assert_eq!(payload, b"payload");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, true, b"data").unwrap();
+        assert_eq!(read_response(&mut buf.as_slice()).unwrap(), b"data");
+        let mut buf = Vec::new();
+        write_response(&mut buf, false, b"nope").unwrap();
+        assert!(read_response(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_opcode_and_truncation() {
+        assert!(read_request(&mut [9u8, 0, 0, 0, 0].as_slice()).is_err());
+        let mut buf = Vec::new();
+        write_request(&mut buf, Op::Get, "x", b"abc").unwrap();
+        assert!(read_request(&mut buf[..buf.len() - 1].as_ref()).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! The hub server: a threaded TCP blob store.
+
+use crate::error::Result;
+use crate::hub::protocol::{read_request, write_response, Op};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// In-process model hub listening on loopback.
+pub struct HubServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HubServer {
+    /// Start on an ephemeral loopback port.
+    pub fn start() -> Result<HubServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let store: Arc<Mutex<HashMap<String, Vec<u8>>>> = Arc::new(Mutex::new(HashMap::new()));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let store = Arc::clone(&store);
+                let stop3 = Arc::clone(&stop2);
+                // one thread per connection; connections are short-lived
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, store, stop3);
+                });
+            }
+        });
+        Ok(HubServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// Address to connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Request shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the accept loop awake
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HubServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    store: Arc<Mutex<HashMap<String, Vec<u8>>>>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    loop {
+        let (op, name, payload) = match read_request(&mut stream) {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // client closed
+        };
+        match op {
+            Op::Put => {
+                store.lock().unwrap().insert(name, payload);
+                write_response(&mut stream, true, b"")?;
+            }
+            Op::Get => match store.lock().unwrap().get(&name) {
+                Some(data) => write_response(&mut stream, true, data)?,
+                None => write_response(&mut stream, false, b"not found")?,
+            },
+            Op::List => {
+                let names: Vec<String> =
+                    store.lock().unwrap().keys().cloned().collect();
+                write_response(&mut stream, true, names.join("\n").as_bytes())?;
+            }
+            Op::Shutdown => {
+                stop.store(true, Ordering::Relaxed);
+                write_response(&mut stream, true, b"")?;
+                return Ok(());
+            }
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Huffman decoder: single-level 2^12-entry lookup table, four interleaved
+//! LSB-first bitstreams decoded in lockstep (independent dependency
+//! chains → ILP), 4 symbols per lane refill.
+
+use super::lengths::{canonical_codes, kraft_ok, rev_bits, unpack_lens, MAX_CODE_LEN};
+use super::{MODE_HUFF, MODE_RAW, MODE_SINGLE};
+use crate::error::{Error, Result};
+use crate::util::read_u32_le;
+
+/// Decode table: `entry[peek] = (symbol << 4) | len`. `len == 0` marks an
+/// unreachable bit pattern (corrupt stream). Boxed fixed-size array so the
+/// 12-bit peek indexes without bounds checks.
+pub struct DecodeTable {
+    entries: Box<[u16; 1 << MAX_CODE_LEN]>,
+}
+
+impl DecodeTable {
+    /// Build the table from code lengths.
+    pub fn from_lengths(lens: &[u8; 256]) -> Result<DecodeTable> {
+        if !kraft_ok(lens) {
+            return Err(Error::Corrupt("code lengths violate Kraft inequality".into()));
+        }
+        let size = 1usize << MAX_CODE_LEN;
+        let mut entries: Box<[u16; 1 << MAX_CODE_LEN]> =
+            vec![0u16; size].into_boxed_slice().try_into().unwrap();
+        let codes = canonical_codes(lens);
+        for s in 0..256u16 {
+            let l = lens[s as usize];
+            if l == 0 {
+                continue;
+            }
+            let rc = rev_bits(codes[s as usize].0, l) as usize;
+            let step = 1usize << l;
+            let entry = (s << 4) | l as u16;
+            // every table slot whose low `l` bits equal the reversed code
+            let mut idx = rc;
+            while idx < size {
+                entries[idx] = entry;
+                idx += step;
+            }
+        }
+        Ok(DecodeTable { entries })
+    }
+
+    /// Decode one symbol from the peeked bits; returns `(symbol, len)`.
+    /// (Tests and the fallback lane use it; the hot loops inline the load.)
+    #[inline(always)]
+    #[cfg_attr(not(test), allow(dead_code))]
+    fn lookup(&self, peek: u32) -> (u8, u32) {
+        // peek is masked to MAX_CODE_LEN bits -> always in bounds
+        let e = self.entries[(peek & ((1 << MAX_CODE_LEN) - 1)) as usize];
+        ((e >> 4) as u8, (e & 0xF) as u32)
+    }
+}
+
+/// Decode two lanes in lockstep. Each symbol's table load depends on the
+/// previous shift (a ~6-cycle chain); interleaving two independent chains
+/// hides that latency while the state (2 × {pos, buf, nbits}) still fits
+/// in registers — four lanes at once spills and is slower.
+#[inline(never)]
+fn decode_lane2(
+    table: &DecodeTable,
+    da: &[u8],
+    db: &[u8],
+    oa: &mut [u8],
+    ob: &mut [u8],
+) -> bool {
+    let entries = &table.entries;
+    let mut ok = true;
+    let (mut pa, mut ba, mut na) = (0usize, 0u64, 0u32);
+    let (mut pb, mut bb, mut nb) = (0usize, 0u64, 0u32);
+
+    macro_rules! refill {
+        ($d:ident, $p:ident, $b:ident, $n:ident) => {
+            if $p + 8 <= $d.len() {
+                let w = u64::from_le_bytes($d[$p..$p + 8].try_into().unwrap());
+                $b |= w << $n;
+                let take = (63 - $n) >> 3;
+                $p += take as usize;
+                $n += take * 8;
+            } else {
+                while $n <= 56 && $p < $d.len() {
+                    $b |= ($d[$p] as u64) << $n;
+                    $p += 1;
+                    $n += 8;
+                }
+            }
+        };
+    }
+    macro_rules! decode1 {
+        ($b:ident, $n:ident) => {{
+            let e = entries[($b & ((1 << MAX_CODE_LEN) - 1)) as usize];
+            let l = (e & 0xF) as u32;
+            ok &= l != 0 && l <= $n;
+            $b >>= l;
+            $n -= l.min($n);
+            (e >> 4) as u8
+        }};
+    }
+
+    let q = oa.len().min(ob.len());
+    let mut i = 0;
+    // main loop: 4 symbols per lane per refill (4 × 12 = 48 ≤ 56 bits)
+    while i + 4 <= q {
+        refill!(da, pa, ba, na);
+        refill!(db, pb, bb, nb);
+        oa[i] = decode1!(ba, na);
+        ob[i] = decode1!(bb, nb);
+        oa[i + 1] = decode1!(ba, na);
+        ob[i + 1] = decode1!(bb, nb);
+        oa[i + 2] = decode1!(ba, na);
+        ob[i + 2] = decode1!(bb, nb);
+        oa[i + 3] = decode1!(ba, na);
+        ob[i + 3] = decode1!(bb, nb);
+        i += 4;
+    }
+    for slot in oa[i..].iter_mut() {
+        refill!(da, pa, ba, na);
+        *slot = decode1!(ba, na);
+    }
+    for slot in ob[i..].iter_mut() {
+        refill!(db, pb, bb, nb);
+        *slot = decode1!(bb, nb);
+    }
+    ok
+}
+
+/// Decode one lane into `out` (tail/fallback path).
+#[inline(never)]
+#[allow(dead_code)]
+fn decode_lane(table: &DecodeTable, data: &[u8], out: &mut [u8]) -> bool {
+    let entries = &table.entries;
+    let mut pos: usize = 0;
+    let mut buf: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut ok = true;
+
+    macro_rules! refill {
+        () => {
+            if pos + 8 <= data.len() {
+                let w = u64::from_le_bytes(data[pos..pos + 8].try_into().unwrap());
+                buf |= w << nbits;
+                let take = (63 - nbits) >> 3;
+                pos += take as usize;
+                nbits += take * 8;
+            } else {
+                while nbits <= 56 && pos < data.len() {
+                    buf |= (data[pos] as u64) << nbits;
+                    pos += 1;
+                    nbits += 8;
+                }
+            }
+        };
+    }
+    macro_rules! decode1 {
+        () => {{
+            let e = entries[(buf & ((1 << MAX_CODE_LEN) - 1)) as usize];
+            let l = (e & 0xF) as u32;
+            ok &= l != 0 && l <= nbits;
+            buf >>= l;
+            nbits -= l.min(nbits);
+            (e >> 4) as u8
+        }};
+    }
+
+    let mut chunks = out.chunks_exact_mut(4);
+    for ch in &mut chunks {
+        refill!();
+        ch[0] = decode1!();
+        ch[1] = decode1!();
+        ch[2] = decode1!();
+        ch[3] = decode1!();
+    }
+    for slot in chunks.into_remainder() {
+        refill!();
+        *slot = decode1!();
+    }
+    ok
+}
+
+/// Decompress a stream produced by [`super::compress`]. `expected_len` is
+/// the known raw size (stored in the codec's chunk table); it is validated
+/// against the stream header.
+pub fn decompress(data: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; expected_len];
+    decompress_into(data, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress directly into `out` (its length is the expected raw size).
+/// The allocation-free path the chunk pipeline uses.
+pub fn decompress_into(data: &[u8], out: &mut [u8]) -> Result<()> {
+    let expected_len = out.len();
+    let mode = *data.first().ok_or_else(|| Error::Corrupt("empty stream".into()))?;
+    match mode {
+        MODE_RAW => {
+            if data.len() < 5 {
+                return Err(Error::Corrupt("raw header truncated".into()));
+            }
+            let n = read_u32_le(data, 1) as usize;
+            if n != expected_len {
+                return Err(Error::Corrupt(format!(
+                    "raw length {n} != expected {expected_len}"
+                )));
+            }
+            if data.len() < 5 + n {
+                return Err(Error::Corrupt("raw payload truncated".into()));
+            }
+            out.copy_from_slice(&data[5..5 + n]);
+            Ok(())
+        }
+        MODE_SINGLE => {
+            if data.len() < 6 {
+                return Err(Error::Corrupt("single header truncated".into()));
+            }
+            let sym = data[1];
+            let n = read_u32_le(data, 2) as usize;
+            if n != expected_len {
+                return Err(Error::Corrupt(format!(
+                    "single length {n} != expected {expected_len}"
+                )));
+            }
+            out.fill(sym);
+            Ok(())
+        }
+        MODE_HUFF => decode_huff(data, out),
+        other => Err(Error::Corrupt(format!("bad stream mode {other}"))),
+    }
+}
+
+fn decode_huff(data: &[u8], out: &mut [u8]) -> Result<()> {
+    const HDR: usize = 1 + 128 + 4 + 12 + 4;
+    let expected_len = out.len();
+    if data.len() < HDR {
+        return Err(Error::Corrupt("huffman header truncated".into()));
+    }
+    let lens = unpack_lens(&data[1..129]);
+    let count = read_u32_le(data, 129) as usize;
+    let s0len = read_u32_le(data, 133) as usize;
+    let s1len = read_u32_le(data, 137) as usize;
+    let s2len = read_u32_le(data, 141) as usize;
+    let paylen = read_u32_le(data, 145) as usize;
+    if count != expected_len {
+        return Err(Error::Corrupt(format!(
+            "huffman count {count} != expected {expected_len}"
+        )));
+    }
+    if data.len() < HDR + paylen || s0len + s1len + s2len > paylen {
+        return Err(Error::Corrupt("huffman payload truncated".into()));
+    }
+    let table = DecodeTable::from_lengths(&lens)?;
+    let payload = &data[HDR..HDR + paylen];
+    let (p0, rest) = payload.split_at(s0len);
+    let (p1, rest) = rest.split_at(s1len);
+    let (p2, p3) = rest.split_at(s2len);
+
+    let q = count / 4;
+    let (o0, rest) = out.split_at_mut(q);
+    let (o1, rest) = rest.split_at_mut(q);
+    let (o2, o3) = rest.split_at_mut(q);
+
+    let ok = decode_lane2(&table, p0, p1, o0, o1)
+        & decode_lane2(&table, p2, p3, o2, o3);
+    if !ok {
+        return Err(Error::Corrupt("invalid code in huffman stream".into()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::compress;
+
+    #[test]
+    fn table_marks_unused_patterns_invalid() {
+        let mut lens = [0u8; 256];
+        lens[0] = 1;
+        lens[1] = 2; // Kraft slack -> some patterns invalid
+        let t = DecodeTable::from_lengths(&lens).unwrap();
+        let mut saw_invalid = false;
+        for p in 0..(1usize << MAX_CODE_LEN) {
+            let (_, l) = t.lookup(p as u32);
+            if l == 0 {
+                saw_invalid = true;
+            }
+        }
+        assert!(saw_invalid);
+    }
+
+    #[test]
+    fn rejects_kraft_violation() {
+        let mut lens = [0u8; 256];
+        for l in lens.iter_mut().take(5) {
+            *l = 1; // five 1-bit codes: impossible
+        }
+        assert!(DecodeTable::from_lengths(&lens).is_err());
+    }
+
+    #[test]
+    fn corrupt_payload_detected_or_differs() {
+        let data: Vec<u8> = (0..2048u32).map(|i| (i % 7) as u8).collect();
+        let mut enc = compress(&data);
+        assert_eq!(enc[0], MODE_HUFF);
+        let last = enc.len() - 1;
+        enc[last] ^= 0xFF;
+        match decompress(&enc, data.len()) {
+            Ok(dec) => assert_ne!(dec, data),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn header_length_mismatch_rejected() {
+        let data = vec![1u8, 2, 3, 4, 1, 2, 3, 4];
+        let enc = compress(&data);
+        assert!(decompress(&enc, 7).is_err());
+    }
+
+    #[test]
+    fn lane_lengths_cover_all_counts() {
+        // every count mod 4, incl. < 4
+        for count in [1usize, 2, 3, 4, 5, 7, 1023, 4096, 4097, 4098, 4099] {
+            let data: Vec<u8> = (0..count).map(|i| (i % 5) as u8).collect();
+            let enc = compress(&data);
+            assert_eq!(decompress(&enc, count).unwrap(), data, "count {count}");
+        }
+    }
+}

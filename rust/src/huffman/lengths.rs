@@ -1,0 +1,322 @@
+//! Code-length computation: two-queue Huffman build + Kraft-debt length
+//! limiting, and canonical code assignment shared by encoder and decoder.
+
+/// Maximum code length in bits. 12 keeps the decode table at 4096 entries
+//  (8 KiB of u16), resident in L1.
+pub const MAX_CODE_LEN: u32 = 12;
+
+/// Compute length-limited Huffman code lengths for a byte histogram.
+///
+/// Returns `None` when fewer than 2 symbols occur (callers emit RAW/SINGLE
+/// modes instead). Lengths are 0 for absent symbols, otherwise in
+/// `1..=MAX_CODE_LEN`, and always satisfy Kraft: `Σ 2^-len ≤ 1`.
+pub fn build_lengths(hist: &[u64; 256]) -> Option<[u8; 256]> {
+    // Gather present symbols sorted by ascending count (stable by symbol).
+    let mut syms: Vec<(u64, u16)> = (0..256u16)
+        .filter(|&s| hist[s as usize] > 0)
+        .map(|s| (hist[s as usize], s))
+        .collect();
+    let m = syms.len();
+    if m < 2 {
+        return None;
+    }
+    syms.sort_unstable();
+
+    // Two-queue Huffman: leaves (sorted) + internal nodes (created in
+    // non-decreasing weight order). parent[] links let us derive depths.
+    let total_nodes = 2 * m - 1;
+    let mut weight = vec![0u64; total_nodes];
+    let mut parent = vec![usize::MAX; total_nodes];
+    for (i, &(c, _)) in syms.iter().enumerate() {
+        weight[i] = c;
+    }
+    let mut leaf = 0usize; // next unconsumed leaf
+    let mut inode = m; // next internal node slot
+    let mut iq = std::collections::VecDeque::with_capacity(m);
+    for _ in 0..m - 1 {
+        let mut pick = |weight: &[u64], iq: &mut std::collections::VecDeque<usize>| -> usize {
+            let take_leaf = match iq.front() {
+                None => true,
+                Some(&i) => leaf < m && weight[leaf] <= weight[i],
+            };
+            if take_leaf {
+                leaf += 1;
+                leaf - 1
+            } else {
+                iq.pop_front().unwrap()
+            }
+        };
+        let a = pick(&weight, &mut iq);
+        let b = pick(&weight, &mut iq);
+        weight[inode] = weight[a] + weight[b];
+        parent[a] = inode;
+        parent[b] = inode;
+        iq.push_back(inode);
+        inode += 1;
+    }
+
+    // Depth of each leaf: root (last node) has depth 0; children depth+1.
+    // Nodes were created in increasing index order with parent > child, so
+    // a reverse sweep computes depths in one pass.
+    let mut depth = vec![0u32; total_nodes];
+    for i in (0..total_nodes - 1).rev() {
+        depth[i] = depth[parent[i]] + 1;
+    }
+
+    let mut lens = [0u8; 256];
+    for (i, &(_, s)) in syms.iter().enumerate() {
+        lens[s as usize] = depth[i].max(1) as u8;
+    }
+
+    limit_lengths(&mut lens, hist);
+    debug_assert!(kraft_ok(&lens), "Kraft violated");
+    Some(lens)
+}
+
+/// Clamp lengths to `MAX_CODE_LEN` and repair the Kraft inequality.
+///
+/// Clamping over-long codes makes the tree over-full (Σ2^-len > 1); we pay
+/// the debt back by lengthening the cheapest (lowest-count) symbols among
+/// the currently-longest sub-max lengths, then spend any surplus by
+/// shortening max-length symbols — the classic zlib/zstd repair.
+fn limit_lengths(lens: &mut [u8; 256], hist: &[u64; 256]) {
+    let max = MAX_CODE_LEN as u8;
+    let budget: i64 = 1 << MAX_CODE_LEN;
+    let mut total: i64 = 0;
+    for i in 0..256 {
+        if lens[i] > 0 {
+            if lens[i] > max {
+                lens[i] = max;
+            }
+            total += 1 << (MAX_CODE_LEN - lens[i] as u32);
+        }
+    }
+    // Pay back over-full debt: lengthen symbols, longest lengths first
+    // (smallest per-step cost), rarest symbol at that length first.
+    while total > budget {
+        let mut best: Option<usize> = None;
+        let mut best_key = (0u8, u64::MAX);
+        for i in 0..256 {
+            if lens[i] > 0 && lens[i] < max {
+                let key = (lens[i], hist[i]);
+                // prefer longer current length; tie-break on lower count
+                if best.is_none()
+                    || key.0 > best_key.0
+                    || (key.0 == best_key.0 && key.1 < best_key.1)
+                {
+                    best = Some(i);
+                    best_key = key;
+                }
+            }
+        }
+        let i = best.expect("repairable: not all symbols at max");
+        total -= 1 << (MAX_CODE_LEN - lens[i] as u32 - 1);
+        lens[i] += 1;
+    }
+    // Spend surplus: shorten the most frequent symbol whose upgrade still
+    // fits; repeat until nothing fits. Each step grows `total`, so this
+    // terminates.
+    loop {
+        let mut best: Option<usize> = None;
+        for i in 0..256 {
+            if lens[i] > 1 {
+                let gain = 1i64 << (MAX_CODE_LEN - lens[i] as u32); // doubles its slot
+                if total + gain <= budget && best.is_none_or(|j| hist[i] > hist[j]) {
+                    best = Some(i);
+                }
+            }
+        }
+        match best {
+            Some(i) => {
+                total += 1 << (MAX_CODE_LEN - lens[i] as u32);
+                lens[i] -= 1;
+            }
+            None => break,
+        }
+    }
+}
+
+/// Check `Σ 2^-len ≤ 1` (in units of `2^-MAX_CODE_LEN`).
+pub(crate) fn kraft_ok(lens: &[u8; 256]) -> bool {
+    let mut total: u64 = 0;
+    for &l in lens.iter() {
+        if l > 0 {
+            if l as u32 > MAX_CODE_LEN {
+                return false;
+            }
+            total += 1 << (MAX_CODE_LEN - l as u32);
+        }
+    }
+    total <= (1 << MAX_CODE_LEN)
+}
+
+/// Canonical code assignment from lengths (MSB-first convention), returned
+/// as `(code, len)` pairs. Symbols are ordered by `(len, symbol)`; codes
+/// increase within a length and shift left across lengths.
+pub(crate) fn canonical_codes(lens: &[u8; 256]) -> [(u16, u8); 256] {
+    let mut count_per_len = [0u16; (MAX_CODE_LEN + 1) as usize];
+    for &l in lens.iter() {
+        if l > 0 {
+            count_per_len[l as usize] += 1;
+        }
+    }
+    let mut next = [0u16; (MAX_CODE_LEN + 2) as usize];
+    let mut code = 0u16;
+    for l in 1..=MAX_CODE_LEN as usize {
+        code = (code + count_per_len[l - 1]) << 1;
+        next[l] = code;
+    }
+    let mut out = [(0u16, 0u8); 256];
+    for s in 0..256 {
+        let l = lens[s];
+        if l > 0 {
+            out[s] = (next[l as usize], l);
+            next[l as usize] += 1;
+        }
+    }
+    out
+}
+
+/// Reverse the low `len` bits of `code` (MSB-canonical -> LSB-first stream).
+#[inline]
+pub(crate) fn rev_bits(code: u16, len: u8) -> u16 {
+    code.reverse_bits() >> (16 - len as u32)
+}
+
+/// Pack 256 nibble lengths into 128 bytes (low nibble = even symbol).
+pub(crate) fn pack_lens(lens: &[u8; 256]) -> [u8; 128] {
+    let mut out = [0u8; 128];
+    for i in 0..128 {
+        debug_assert!(lens[2 * i] <= 15 && lens[2 * i + 1] <= 15);
+        out[i] = lens[2 * i] | (lens[2 * i + 1] << 4);
+    }
+    out
+}
+
+/// Inverse of [`pack_lens`].
+pub(crate) fn unpack_lens(packed: &[u8]) -> [u8; 256] {
+    let mut lens = [0u8; 256];
+    for i in 0..128 {
+        lens[2 * i] = packed[i] & 0x0F;
+        lens[2 * i + 1] = packed[i] >> 4;
+    }
+    lens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn two_symbols_get_one_bit() {
+        let mut h = [0u64; 256];
+        h[10] = 100;
+        h[20] = 1;
+        let lens = build_lengths(&h).unwrap();
+        assert_eq!(lens[10], 1);
+        assert_eq!(lens[20], 1);
+    }
+
+    #[test]
+    fn absent_symbols_zero_length() {
+        let mut h = [0u64; 256];
+        h[0] = 5;
+        h[1] = 5;
+        let lens = build_lengths(&h).unwrap();
+        for s in 2..256 {
+            assert_eq!(lens[s], 0);
+        }
+    }
+
+    #[test]
+    fn single_symbol_returns_none() {
+        let mut h = [0u64; 256];
+        h[42] = 1000;
+        assert!(build_lengths(&h).is_none());
+        assert!(build_lengths(&[0u64; 256]).is_none());
+    }
+
+    #[test]
+    fn extreme_skew_is_length_limited() {
+        // Fibonacci-ish counts force unlimited Huffman depth > 12.
+        let mut h = [0u64; 256];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for s in 0..40 {
+            h[s] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lens = build_lengths(&h).unwrap();
+        assert!(lens.iter().all(|&l| l as u32 <= MAX_CODE_LEN));
+        assert!(kraft_ok(&lens));
+        // most frequent symbol should still get a short code
+        assert!(lens[39] <= 2, "lens[39]={}", lens[39]);
+    }
+
+    #[test]
+    fn kraft_holds_on_random_histograms() {
+        let mut rng = Xoshiro256::seed_from_u64(123);
+        for _ in 0..200 {
+            let mut h = [0u64; 256];
+            let m = 2 + rng.below(255);
+            for _ in 0..m {
+                let s = rng.below(256);
+                h[s] += 1 + (rng.next_u64() % 1_000_000);
+            }
+            if let Some(lens) = build_lengths(&h) {
+                assert!(kraft_ok(&lens));
+                // all present symbols coded, all absent not
+                for s in 0..256 {
+                    assert_eq!(h[s] > 0, lens[s] > 0, "symbol {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let mut h = [0u64; 256];
+        for s in 0..32 {
+            h[s] = (s as u64 + 1) * (s as u64 + 1);
+        }
+        let lens = build_lengths(&h).unwrap();
+        let codes = canonical_codes(&lens);
+        for a in 0..256 {
+            for b in 0..256 {
+                if a == b || lens[a] == 0 || lens[b] == 0 {
+                    continue;
+                }
+                let (ca, la) = codes[a];
+                let (cb, lb) = codes[b];
+                if la <= lb {
+                    // a must not be a prefix of b (MSB-aligned comparison)
+                    assert_ne!(
+                        cb >> (lb - la),
+                        ca,
+                        "code {a} (len {la}) prefixes {b} (len {lb})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_lens_roundtrip() {
+        let mut lens = [0u8; 256];
+        for (i, l) in lens.iter_mut().enumerate() {
+            *l = (i % 13) as u8;
+        }
+        assert_eq!(unpack_lens(&pack_lens(&lens)), lens);
+    }
+
+    #[test]
+    fn rev_bits_examples() {
+        assert_eq!(rev_bits(0b1, 1), 0b1);
+        assert_eq!(rev_bits(0b10, 2), 0b01);
+        assert_eq!(rev_bits(0b110, 3), 0b011);
+        assert_eq!(rev_bits(0xFFF, 12), 0xFFF);
+    }
+}

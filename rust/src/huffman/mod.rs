@@ -1,0 +1,177 @@
+//! From-scratch length-limited canonical Huffman coder (paper §3.1).
+//!
+//! ZipNN's observation: on model byte-group streams, LZ matching finds only
+//! "random" short repetitions that *hurt* the entropy stage, so a pure
+//! Huffman coder both compresses better and runs faster. This module is the
+//! hot path of the whole system.
+//!
+//! Design (mirrors the zstd Huffman stage the paper built on, reimplemented
+//! from scratch):
+//! - code lengths from a two-queue Huffman build over the byte histogram,
+//!   limited to [`MAX_CODE_LEN`] bits with a Kraft-debt repair pass;
+//! - canonical code assignment, so the table serializes as 256 nibble
+//!   lengths (128 bytes);
+//! - LSB-first bitstream with 64-bit buffered writer/reader;
+//! - single-level 2^12-entry decode table, 4 symbols decoded per refill.
+//!
+//! Stream framing (self-contained; callers may still prefer raw when the
+//! encoded form is larger):
+//!
+//! ```text
+//! [mode u8]
+//!   mode 0 RAW:    [len u32][bytes]
+//!   mode 1 SINGLE: [sym u8][count u32]
+//!   mode 2 HUFF:   [table 128B][count u32][s0 u32][s1 u32][s2 u32]
+//!                  [paylen u32][4 concatenated lane payloads]
+//! ```
+//!
+//! The payload is **four independent lanes** over the input quarters
+//! (lanes 0–2 cover `count/4` bytes each, lane 3 the rest): interleaving
+//! four bit-buffer chains gives the out-of-order core ~3× the throughput
+//! of one chain, on both sides (the same trick zstd's Huffman uses).
+
+mod decode;
+mod encode;
+mod lengths;
+
+pub use decode::{decompress, decompress_into, DecodeTable};
+pub use encode::{compress, compress_with_hist, compressed_bound, EncodeTable};
+pub use lengths::{build_lengths, MAX_CODE_LEN};
+
+/// Stream mode tags.
+pub(crate) const MODE_RAW: u8 = 0;
+pub(crate) const MODE_SINGLE: u8 = 1;
+pub(crate) const MODE_HUFF: u8 = 2;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::byte_histogram;
+    use crate::util::Xoshiro256;
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let enc = compress(data);
+        let dec = decompress(&enc, data.len()).unwrap();
+        assert_eq!(dec, data, "roundtrip mismatch (len {})", data.len());
+        enc.len()
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[1, 2]);
+        roundtrip(b"abracadabra");
+    }
+
+    #[test]
+    fn single_symbol_collapses() {
+        let data = vec![0xABu8; 1 << 16];
+        let n = roundtrip(&data);
+        assert!(n < 16, "single-symbol stream must collapse, got {n}");
+    }
+
+    #[test]
+    fn skewed_exponent_like_stream_compresses_3x() {
+        // Reproduce the paper's headline: exponent streams compress ~3x.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut data = vec![0u8; 1 << 20];
+        for b in &mut data {
+            // ~12 values covering 99.9%, geometric-ish like Fig. 2
+            let u = rng.uniform();
+            *b = if u < 0.35 {
+                123
+            } else if u < 0.62 {
+                124
+            } else if u < 0.80 {
+                122
+            } else if u < 0.90 {
+                125
+            } else if u < 0.95 {
+                121
+            } else {
+                120 + (rng.next_u32() % 12) as u8
+            };
+        }
+        let n = roundtrip(&data);
+        let ratio = n as f64 / data.len() as f64;
+        assert!(ratio < 0.40, "expected ~3x, got ratio {ratio}");
+    }
+
+    #[test]
+    fn random_data_does_not_explode() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut data = vec![0u8; 1 << 18];
+        rng.fill_bytes(&mut data);
+        let n = roundtrip(&data);
+        // Huffman on uniform bytes ≈ 100%; header overhead bounded.
+        assert!(n <= data.len() + 256, "n={n}");
+    }
+
+    #[test]
+    fn all_byte_values_present() {
+        let mut data: Vec<u8> = (0..=255u8).collect();
+        data.extend((0..=255u8).rev());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn near_optimal_vs_entropy() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut data = vec![0u8; 1 << 20];
+        for b in &mut data {
+            *b = (rng.normal().abs() * 20.0).min(255.0) as u8;
+        }
+        let hist = byte_histogram(&data);
+        let entropy = crate::fp::stats::shannon_entropy(&hist);
+        let n = roundtrip(&data);
+        let bits_per_sym = n as f64 * 8.0 / data.len() as f64;
+        // Huffman is within 1 bit/symbol of entropy; with header slack:
+        assert!(
+            bits_per_sym < entropy + 1.1,
+            "bits/sym {bits_per_sym} vs entropy {entropy}"
+        );
+    }
+
+    #[test]
+    fn decompress_rejects_truncated() {
+        let data = b"the quick brown fox jumps over the lazy dog".repeat(64);
+        let enc = compress(&data);
+        for cut in [0, 1, 5, enc.len() / 2] {
+            assert!(
+                decompress(&enc[..cut], data.len()).is_err(),
+                "truncation at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn decompress_rejects_wrong_expected_len() {
+        let data = b"hello world hello world".to_vec();
+        let enc = compress(&data);
+        assert!(decompress(&enc, data.len() + 1).is_err());
+    }
+
+    #[test]
+    fn decompress_rejects_bad_mode() {
+        assert!(decompress(&[9, 0, 0, 0, 0], 4).is_err());
+    }
+
+    #[test]
+    fn fuzz_roundtrip_many_distributions() {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for trial in 0..60 {
+            let len = rng.below(40_000);
+            let alphabet = 1 + rng.below(256);
+            let skew = 0.5 + rng.uniform() * 3.0;
+            let mut data = vec![0u8; len];
+            for b in &mut data {
+                let u = rng.uniform().powf(skew);
+                *b = ((u * alphabet as f64) as usize).min(alphabet - 1) as u8;
+            }
+            let enc = compress(&data);
+            let dec = decompress(&enc, data.len()).unwrap();
+            assert_eq!(dec, data, "trial {trial} len {len} alphabet {alphabet}");
+        }
+    }
+}

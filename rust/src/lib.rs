@@ -1,0 +1,49 @@
+//! # ZipNN — lossless compression for AI models
+//!
+//! A reproduction of *"ZipNN: Lossless Compression for AI Models"*
+//! (Hershcovitch et al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the ZipNN codec and pipeline: exponent
+//!   extraction, byte grouping, a from-scratch length-limited canonical
+//!   Huffman coder, per-chunk auto method selection, a parallel chunked
+//!   container format, XOR delta compression with periodic bases, and a
+//!   model-hub simulator.
+//! - **Layer 2 (build-time JAX)** — training workloads (transformer LM,
+//!   residual CNN) whose checkpoints/gradients/optimizer states are the
+//!   paper's compression targets, AOT-lowered to HLO text.
+//! - **Layer 1 (build-time Pallas)** — byte-plane / histogram / xor-delta /
+//!   fused-linear kernels called by the L2 graphs.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (`xla` crate) so
+//! the Rust binary is self-contained after `make artifacts`; Python never
+//! runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use zipnn::codec::{Compressor, CodecConfig};
+//! use zipnn::fp::DType;
+//!
+//! let raw: Vec<u8> = std::fs::read("model.bin").unwrap();
+//! let cfg = CodecConfig::for_dtype(DType::BF16);
+//! let compressed = Compressor::new(cfg).compress(&raw).unwrap();
+//! let restored = zipnn::codec::decompress(&compressed).unwrap();
+//! assert_eq!(raw, restored);
+//! ```
+
+pub mod bench_support;
+pub mod codec;
+pub mod coordinator;
+pub mod delta;
+pub mod error;
+pub mod fp;
+pub mod hub;
+pub mod huffman;
+pub mod lz;
+pub mod model;
+pub mod runtime;
+pub mod stats;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,239 @@
+//! A greedy LZ77 with 4-byte minimum matches — an LZ4/Snappy stand-in.
+//!
+//! The paper (§3.1) reports that pure-LZ compressors find essentially no
+//! multi-byte repetitions in model tensors ("no gains at all"); this
+//! implementation exists so the Fig. 4 / Table 3 benches can demonstrate
+//! that claim without the real LZ4/Snappy, which are unavailable offline.
+//!
+//! Format: a sequence of ops.
+//! `[token u8]` — high nibble = literal run len (15 = extended), low nibble
+//! = match len - 4 (15 = extended); extended lengths are LEB-ish 255-chained
+//! bytes, then literals, then a 2-byte little-endian match offset (absent
+//! for the final literal-only op). Same skeleton as the LZ4 block format.
+
+use crate::error::{Error, Result};
+
+const MIN_MATCH: usize = 4;
+const HASH_BITS: u32 = 16;
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress with greedy hash-chain-less LZ77 (single-probe table, like
+/// LZ4's fast mode).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n < MIN_MATCH + 1 {
+        emit_final_literals(&mut out, data);
+        return out;
+    }
+    let mut table = vec![0u32; 1 << HASH_BITS]; // position + 1; 0 = empty
+    let mut i = 0usize; // cursor
+    let mut lit_start = 0usize;
+    while i + MIN_MATCH <= n {
+        let h = hash4(&data[i..]);
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let c = cand - 1;
+            if i - c <= u16::MAX as usize && data[c..c + 4] == data[i..i + 4] {
+                // extend match
+                let mut len = 4;
+                while i + len < n && data[c + len] == data[i + len] {
+                    len += 1;
+                }
+                emit_op(&mut out, &data[lit_start..i], len, (i - c) as u16);
+                i += len;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_final_literals(&mut out, &data[lit_start..]);
+    out
+}
+
+fn emit_len(out: &mut Vec<u8>, mut extra: usize) {
+    while extra >= 255 {
+        out.push(255);
+        extra -= 255;
+    }
+    out.push(extra as u8);
+}
+
+fn emit_op(out: &mut Vec<u8>, lits: &[u8], mlen: usize, offset: u16) {
+    let ln = lits.len();
+    let lt = ln.min(15) as u8;
+    let mt = (mlen - MIN_MATCH).min(15) as u8;
+    out.push((lt << 4) | mt);
+    if lt == 15 {
+        emit_len(out, ln - 15);
+    }
+    out.extend_from_slice(lits);
+    if mt == 15 {
+        emit_len(out, mlen - MIN_MATCH - 15);
+    }
+    out.extend_from_slice(&offset.to_le_bytes());
+}
+
+fn emit_final_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    let ln = lits.len();
+    let lt = ln.min(15) as u8;
+    out.push(lt << 4); // match nibble 0 + offset 0 marks "final"
+    if lt == 15 {
+        emit_len(out, ln - 15);
+    }
+    out.extend_from_slice(lits);
+    out.extend_from_slice(&0u16.to_le_bytes()); // offset 0 = end marker
+}
+
+/// Decompress an LZ77 stream; `expected_len` bounds the output.
+pub fn decompress(data: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0usize;
+    let read_ext = |data: &[u8], i: &mut usize| -> Result<usize> {
+        let mut v = 0usize;
+        loop {
+            let b = *data
+                .get(*i)
+                .ok_or_else(|| Error::Corrupt("lz77: truncated length".into()))?;
+            *i += 1;
+            v += b as usize;
+            if b != 255 {
+                return Ok(v);
+            }
+        }
+    };
+    loop {
+        let token = *data
+            .get(i)
+            .ok_or_else(|| Error::Corrupt("lz77: truncated token".into()))?;
+        i += 1;
+        let mut litlen = (token >> 4) as usize;
+        if litlen == 15 {
+            litlen += read_ext(data, &mut i)?;
+        }
+        if i + litlen > data.len() {
+            return Err(Error::Corrupt("lz77: truncated literals".into()));
+        }
+        out.extend_from_slice(&data[i..i + litlen]);
+        i += litlen;
+        let mut mlen = (token & 0xF) as usize + MIN_MATCH;
+        if token & 0xF == 15 {
+            mlen += read_ext(data, &mut i)?;
+        }
+        if i + 2 > data.len() {
+            return Err(Error::Corrupt("lz77: truncated offset".into()));
+        }
+        let offset = u16::from_le_bytes([data[i], data[i + 1]]) as usize;
+        i += 2;
+        if offset == 0 {
+            break; // final op
+        }
+        if offset > out.len() {
+            return Err(Error::Corrupt("lz77: offset beyond output".into()));
+        }
+        if out.len() + mlen > expected_len {
+            return Err(Error::Corrupt("lz77: output overflow".into()));
+        }
+        // overlapping copy must be byte-by-byte
+        let start = out.len() - offset;
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+        if out.len() > expected_len {
+            return Err(Error::Corrupt("lz77: output overflow".into()));
+        }
+    }
+    if out.len() != expected_len {
+        return Err(Error::Corrupt(format!(
+            "lz77: produced {} bytes, expected {expected_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+        c.len()
+    }
+
+    #[test]
+    fn basic_roundtrips() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abcd");
+        roundtrip(b"aaaaaaaaaaaaaaaaaaaaaaa");
+        roundtrip(&b"hello world ".repeat(100));
+    }
+
+    #[test]
+    fn compresses_repetitive() {
+        let data = b"0123456789abcdef".repeat(256);
+        let n = roundtrip(&data);
+        assert!(n < data.len() / 4, "n={n}");
+    }
+
+    #[test]
+    fn overlapping_match() {
+        // run-length-ish content exercises the overlapping copy
+        let mut data = vec![7u8; 1000];
+        data.extend_from_slice(b"xyz");
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn random_data_no_gain_but_roundtrips() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut data = vec![0u8; 1 << 16];
+        rng.fill_bytes(&mut data);
+        let n = roundtrip(&data);
+        // paper: pure LZ yields no gain on noise
+        assert!(n >= data.len(), "random data must not shrink: {n}");
+    }
+
+    #[test]
+    fn gaussian_bf16_tensor_no_gain() {
+        // The §3.1 claim: LZ-only on model bytes saves ~nothing.
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let mut data = Vec::with_capacity(1 << 17);
+        for _ in 0..(1 << 16) {
+            let w = (rng.normal() * 0.02) as f32;
+            data.extend_from_slice(&crate::fp::dtype::f32_to_bf16_bits(w).to_le_bytes());
+        }
+        let n = roundtrip(&data);
+        let ratio = n as f64 / data.len() as f64;
+        assert!(ratio > 0.95, "LZ77 should not compress tensors, ratio={ratio}");
+    }
+
+    #[test]
+    fn truncations_rejected() {
+        let data = b"abcabcabcabc".repeat(10);
+        let c = compress(&data);
+        for cut in 0..c.len().min(8) {
+            assert!(decompress(&c[..cut], data.len()).is_err());
+        }
+    }
+
+    #[test]
+    fn long_literal_run_extended_encoding() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let mut data = vec![0u8; 5000];
+        rng.fill_bytes(&mut data); // incompressible -> one long literal op
+        roundtrip(&data);
+    }
+}

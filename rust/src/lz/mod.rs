@@ -1,0 +1,65 @@
+//! Baseline compressors (paper §2.3): vanilla Zstd and zlib via the
+//! vendored C libraries, plus a from-scratch LZ4-class LZ77 used to
+//! reproduce the "pure-LZ saves ≈0% on tensors" observation.
+
+pub mod lz77;
+
+use crate::error::{Error, Result};
+use std::io::Write;
+
+/// Compress with Zstandard at `level` (paper default: 3).
+pub fn zstd_compress(data: &[u8], level: i32) -> Result<Vec<u8>> {
+    zstd::bulk::compress(data, level).map_err(|e| Error::Format(format!("zstd: {e}")))
+}
+
+/// Decompress a Zstandard frame with a known decompressed capacity.
+pub fn zstd_decompress(data: &[u8], capacity: usize) -> Result<Vec<u8>> {
+    zstd::bulk::decompress(data, capacity).map_err(|e| Error::Corrupt(format!("zstd: {e}")))
+}
+
+/// Compress with zlib (deflate) at `level` 0–9.
+pub fn zlib_compress(data: &[u8], level: u32) -> Result<Vec<u8>> {
+    let mut enc =
+        flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::new(level));
+    enc.write_all(data)?;
+    enc.finish().map_err(|e| Error::Format(format!("zlib: {e}")))
+}
+
+/// Decompress a zlib stream.
+pub fn zlib_decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut dec = flate2::write::ZlibDecoder::new(Vec::new());
+    dec.write_all(data)
+        .and_then(|_| dec.finish())
+        .map_err(|e| Error::Corrupt(format!("zlib: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn zstd_roundtrip() {
+        let data = b"compress me ".repeat(1000);
+        let c = zstd_compress(&data, 3).unwrap();
+        assert!(c.len() < data.len() / 4);
+        assert_eq!(zstd_decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn zlib_roundtrip() {
+        let data = b"deflate me ".repeat(1000);
+        let c = zlib_compress(&data, 6).unwrap();
+        assert!(c.len() < data.len() / 4);
+        assert_eq!(zlib_decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn zstd_on_random_is_incompressible() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut data = vec![0u8; 1 << 18];
+        rng.fill_bytes(&mut data);
+        let c = zstd_compress(&data, 3).unwrap();
+        assert!(c.len() as f64 > data.len() as f64 * 0.99);
+    }
+}

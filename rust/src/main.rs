@@ -1,0 +1,307 @@
+//! `zipnn` — CLI for the ZipNN lossless model-compression system.
+//!
+//! Subcommands:
+//!   gen         generate a synthetic model (.znnm)
+//!   compress    compress a file/model into a .znn container
+//!   decompress  restore the original bytes from a .znn container
+//!   inspect     print a container's metadata + per-group breakdown
+//!   exphist     exponent histogram of a model (paper Fig. 2)
+//!   delta       XOR-delta-compress one file against a base
+//!   apply       recover a file from base + delta
+//!   train       run the AOT training driver and report checkpoints
+//!   serve       start a model-hub server
+//!
+//! (Argument parsing is hand-rolled: no CLI crates are available offline.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use zipnn::codec::{compress_with_report, decompress_with, inspect, CodecConfig, MethodPolicy};
+use zipnn::delta::DeltaCodec;
+use zipnn::fp::stats::{exponent_histogram, summarize_exponents};
+use zipnn::fp::{DType, GroupLayout};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::model::{read_model, write_model};
+use zipnn::util::{human_bytes, Timer};
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: zipnn <gen|compress|decompress|inspect|exphist|delta|apply|train|serve> [args]
+  gen        --category <bf16|fp32|fp16|clean-fp32|clean-t5|fp16-from-bf16|gptq|gguf> --mb N --seed S --out M.znnm
+  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group]
+  decompress <in.znn> --out F [--threads N]
+  inspect    <in.znn>
+  exphist    <in.znnm>
+  delta      --base A --next B --out D.znn [--dtype bf16]
+  apply      --base A --delta D.znn --out B
+  train      [--preset lm_tiny|lm_small|cnn_tiny|cnn_small] [--steps N] [--artifacts DIR]
+  serve      (runs until killed; prints address)"
+    );
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        return usage();
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match run(&cmd, &args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn category_of(name: &str) -> anyhow::Result<Category> {
+    Ok(match name {
+        "bf16" => Category::RegularBF16,
+        "fp32" => Category::RegularF32,
+        "fp16" => Category::RegularF16,
+        "clean-fp32" => Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 },
+        "clean-t5" => Category::CleanF32 { keep_bits: 7, frac_clean: 1.0 },
+        "fp16-from-bf16" => Category::F16FromBF16,
+        "gptq" => Category::QuantizedSkewed,
+        "gguf" => Category::QuantizedUniform,
+        other => anyhow::bail!("unknown category '{other}'"),
+    })
+}
+
+/// Read input bytes: `.znnm` models contribute their parameter bytes and
+/// dominant dtype; anything else is raw bytes + the `--dtype` flag.
+fn read_input(path: &str, args: &Args) -> anyhow::Result<(Vec<u8>, DType)> {
+    if path.ends_with(".znnm") {
+        let m = read_model(path)?;
+        Ok((m.to_bytes(), m.dominant_dtype()))
+    } else {
+        let bytes = std::fs::read(path)?;
+        let dtype = DType::from_name(&args.flag("dtype", "bf16"))?;
+        Ok((bytes, dtype))
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "gen" => {
+            let cat = category_of(&args.flag("category", "bf16"))?;
+            let mb = args.usize_flag("mb", 64);
+            let seed = args.usize_flag("seed", 42) as u64;
+            let out = args.flag("out", "model.znnm");
+            let model = generate(&SyntheticSpec::new(
+                out.trim_end_matches(".znnm"),
+                cat,
+                mb << 20,
+                seed,
+            ));
+            write_model(&out, &model)?;
+            println!(
+                "wrote {} ({} tensors, {})",
+                out,
+                model.tensors.len(),
+                human_bytes(model.size_bytes() as u64)
+            );
+        }
+        "compress" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            let (raw, dtype) = read_input(input, args)?;
+            let mut cfg = CodecConfig::for_dtype(dtype)
+                .with_threads(args.usize_flag("threads", 1));
+            cfg.policy = match args.flag("policy", "auto").as_str() {
+                "auto" => MethodPolicy::Auto,
+                "huffman" => MethodPolicy::Huffman,
+                "zstd" => MethodPolicy::Zstd,
+                "raw" => MethodPolicy::Raw,
+                p => anyhow::bail!("unknown policy '{p}'"),
+            };
+            if args.flags.contains_key("no-group") {
+                cfg.layout = GroupLayout::flat();
+            }
+            let t = Timer::start();
+            let (out_bytes, groups) = compress_with_report(cfg, &raw)?;
+            let secs = t.secs();
+            let out = args.flag("out", &format!("{input}.znn"));
+            std::fs::write(&out, &out_bytes)?;
+            println!(
+                "{} -> {}: {} -> {} ({:.1}%), {:.2} GB/s",
+                input,
+                out,
+                human_bytes(raw.len() as u64),
+                human_bytes(out_bytes.len() as u64),
+                out_bytes.len() as f64 / raw.len() as f64 * 100.0,
+                raw.len() as f64 / secs / 1e9
+            );
+            for (i, g) in groups.iter().enumerate() {
+                println!("  group {i}: {:.1}%", g.pct());
+            }
+        }
+        "decompress" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            let data = std::fs::read(input)?;
+            let t = Timer::start();
+            let raw = decompress_with(&data, args.usize_flag("threads", 1))?;
+            let out = args.flag("out", &format!("{input}.raw"));
+            std::fs::write(&out, &raw)?;
+            println!(
+                "{} -> {} ({}), {:.2} GB/s",
+                input,
+                out,
+                human_bytes(raw.len() as u64),
+                raw.len() as f64 / t.secs() / 1e9
+            );
+        }
+        "inspect" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            let data = std::fs::read(input)?;
+            let info = inspect(&data)?;
+            println!(
+                "container: {} raw, {} chunks x {} groups, chunk size {}",
+                human_bytes(info.header.total_len),
+                info.header.n_chunks,
+                info.groups(),
+                human_bytes(info.header.chunk_size as u64)
+            );
+            let mut by_method = [0usize; 4];
+            for e in &info.entries {
+                by_method[e.method.tag() as usize] += 1;
+            }
+            println!(
+                "methods: raw {} / huffman {} / zstd {} / zero {}",
+                by_method[0], by_method[1], by_method[2], by_method[3]
+            );
+            for (i, (comp, raw)) in info.group_totals().iter().enumerate() {
+                println!(
+                    "  group {i}: {:.1}% ({} / {})",
+                    *comp as f64 / *raw as f64 * 100.0,
+                    human_bytes(*comp),
+                    human_bytes(*raw)
+                );
+            }
+        }
+        "exphist" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            let (raw, dtype) = read_input(input, args)?;
+            let hist = exponent_histogram(&raw, dtype);
+            let s = summarize_exponents(&hist);
+            println!(
+                "{input}: {} distinct exponents, top-12 cover {:.3}%, entropy {:.2} bits",
+                s.distinct,
+                s.top12_coverage * 100.0,
+                s.entropy_bits
+            );
+            let total: u64 = hist.iter().sum();
+            for (val, count) in s.top.iter().take(16) {
+                println!(
+                    "  exp {val:>3}: {:>6.2}%  {}",
+                    *count as f64 / total as f64 * 100.0,
+                    "#".repeat((*count as f64 / total as f64 * 120.0) as usize)
+                );
+            }
+        }
+        "delta" => {
+            let (base, _) = read_input(&args.flag("base", ""), args)?;
+            let (next, dtype) = read_input(&args.flag("next", ""), args)?;
+            let dc = DeltaCodec::new(dtype);
+            let out_bytes = dc.encode(&base, &next)?;
+            let out = args.flag("out", "delta.znn");
+            std::fs::write(&out, &out_bytes)?;
+            println!(
+                "delta {} ({:.1}% of target)",
+                human_bytes(out_bytes.len() as u64),
+                out_bytes.len() as f64 / next.len() as f64 * 100.0
+            );
+        }
+        "apply" => {
+            let (base, dtype) = read_input(&args.flag("base", ""), args)?;
+            let delta = std::fs::read(args.flag("delta", "delta.znn"))?;
+            let dc = DeltaCodec::new(dtype);
+            let next = dc.decode(&base, &delta)?;
+            let out = args.flag("out", "restored.bin");
+            std::fs::write(&out, &next)?;
+            println!("restored {} -> {}", human_bytes(next.len() as u64), out);
+        }
+        "train" => {
+            let dir = args.flag("artifacts", "artifacts");
+            let rt = zipnn::runtime::Runtime::open(&dir)?;
+            let preset = args.flag("preset", "lm_tiny");
+            let steps = args.usize_flag("steps", 50);
+            println!("platform {}, preset {preset}, {steps} steps", rt.platform());
+            if preset.starts_with("lm") {
+                let mut tr = zipnn::train::LmTrainer::new(&rt, &preset, 1)?;
+                for s in 0..steps {
+                    let loss = tr.step(1e-3)?;
+                    if s % 10 == 9 || s == 0 {
+                        println!("step {:>4}: loss {loss:.4}", s + 1);
+                    }
+                }
+            } else {
+                let mut tr = zipnn::train::CnnTrainer::new(&rt, &preset, 1)?;
+                for s in 0..steps {
+                    let loss = tr.step(0.05)?;
+                    if s % 10 == 9 || s == 0 {
+                        println!("step {:>4}: loss {loss:.4}", s + 1);
+                    }
+                }
+            }
+        }
+        "serve" => {
+            let server = zipnn::hub::HubServer::start()?;
+            println!("zipnn hub serving on {}", server.addr());
+            println!("(press Ctrl-C to stop)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        _ => anyhow::bail!("unknown command '{cmd}' (run without args for usage)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! `.znnm` — a safetensors-lite model container.
+//!
+//! Layout: magic `ZNNM`, version, a JSON header describing the tensors
+//! (name/dtype/shape/offset), then raw little-endian tensor data. Offsets
+//! are relative to the data section. Stands in for safetensors, which is
+//! unavailable offline; the format is deliberately close so a loader swap
+//! is trivial.
+
+use crate::error::{Error, Result};
+use crate::fp::DType;
+use crate::model::tensor::{Model, Tensor};
+use crate::util::json::Json;
+use crate::util::{push_u32_le, read_u32_le};
+use std::path::Path;
+
+const MAGIC: [u8; 4] = *b"ZNNM";
+const VERSION: u8 = 1;
+
+/// Serialize a model to container bytes.
+pub fn to_bytes(model: &Model) -> Vec<u8> {
+    let mut header = String::from("{");
+    header.push_str(&format!("\"name\":\"{}\",\"tensors\":[", escape(&model.name)));
+    let mut off = 0usize;
+    for (i, t) in model.tensors.iter().enumerate() {
+        if i > 0 {
+            header.push(',');
+        }
+        let shape = t
+            .shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        header.push_str(&format!(
+            "{{\"name\":\"{}\",\"dtype\":\"{}\",\"shape\":[{shape}],\"offset\":{off},\"nbytes\":{}}}",
+            escape(&t.name),
+            t.dtype.name(),
+            t.data.len()
+        ));
+        off += t.data.len();
+    }
+    header.push_str("]}");
+
+    let hbytes = header.as_bytes();
+    let mut out = Vec::with_capacity(9 + hbytes.len() + off);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    push_u32_le(&mut out, hbytes.len() as u32);
+    out.extend_from_slice(hbytes);
+    for t in &model.tensors {
+        out.extend_from_slice(&t.data);
+    }
+    out
+}
+
+/// Parse container bytes back into a model.
+pub fn from_bytes(data: &[u8]) -> Result<Model> {
+    if data.len() < 9 || data[0..4] != MAGIC {
+        return Err(Error::Corrupt("not a .znnm container".into()));
+    }
+    if data[4] != VERSION {
+        return Err(Error::Corrupt(format!("unsupported znnm version {}", data[4])));
+    }
+    let hlen = read_u32_le(data, 5) as usize;
+    if data.len() < 9 + hlen {
+        return Err(Error::Corrupt("truncated znnm header".into()));
+    }
+    let header = std::str::from_utf8(&data[9..9 + hlen])
+        .map_err(|_| Error::Corrupt("znnm header not UTF-8".into()))?;
+    let j = Json::parse(header).map_err(|e| Error::Corrupt(format!("znnm header: {e}")))?;
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Corrupt("znnm header missing name".into()))?
+        .to_string();
+    let body = &data[9 + hlen..];
+    let mut model = Model::new(&name);
+    for tj in j
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Corrupt("znnm header missing tensors".into()))?
+    {
+        let tname = tj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Corrupt("tensor missing name".into()))?;
+        let dtype = DType::from_name(
+            tj.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Corrupt("tensor missing dtype".into()))?,
+        )?;
+        let shape: Vec<usize> = tj
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Corrupt("tensor missing shape".into()))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let off = tj
+            .get("offset")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Corrupt("tensor missing offset".into()))?;
+        let nbytes = tj
+            .get("nbytes")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Corrupt("tensor missing nbytes".into()))?;
+        if off + nbytes > body.len() {
+            return Err(Error::Corrupt(format!(
+                "tensor '{tname}' extends past data section"
+            )));
+        }
+        model
+            .tensors
+            .push(Tensor::new(tname, &shape, dtype, body[off..off + nbytes].to_vec())?);
+    }
+    Ok(model)
+}
+
+/// Write a model container to a file.
+pub fn write_model(path: impl AsRef<Path>, model: &Model) -> Result<()> {
+    std::fs::write(path, to_bytes(model))?;
+    Ok(())
+}
+
+/// Read a model container from a file.
+pub fn read_model(path: impl AsRef<Path>) -> Result<Model> {
+    from_bytes(&std::fs::read(path)?)
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_model() -> Model {
+        let mut m = Model::new("test-model");
+        m.tensors.push(
+            Tensor::from_f32("emb.weight", &[4, 2], DType::BF16, &[0.1; 8]).unwrap(),
+        );
+        m.tensors.push(
+            Tensor::from_f32("head.bias", &[3], DType::F32, &[1.0, -2.0, 0.5]).unwrap(),
+        );
+        m.tensors
+            .push(Tensor::new("quant", &[5], DType::I8, vec![1, 2, 3, 4, 5]).unwrap());
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample_model();
+        let bytes = to_bytes(&m);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("zipnn_test_container");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.znnm");
+        write_model(&path, &m).unwrap();
+        assert_eq!(read_model(&path).unwrap(), m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let m = sample_model();
+        let bytes = to_bytes(&m);
+        assert!(from_bytes(&bytes[..5]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).is_err());
+        // truncate data section
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn empty_model_ok() {
+        let m = Model::new("empty");
+        assert_eq!(from_bytes(&to_bytes(&m)).unwrap(), m);
+    }
+
+    #[test]
+    fn names_with_quotes() {
+        let mut m = Model::new("weird \"name\"");
+        m.tensors
+            .push(Tensor::new("a\"b", &[1], DType::I8, vec![7]).unwrap());
+        assert_eq!(from_bytes(&to_bytes(&m)).unwrap(), m);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model substrate: an in-memory model representation, a safetensors-lite
+//! on-disk container (`.znnm`), and the synthetic model generator that
+//! stands in for Hugging Face downloads (see DESIGN.md §2 Substitutions).
+
+pub mod container;
+pub mod synthetic;
+pub mod tensor;
+
+pub use container::{read_model, write_model};
+pub use synthetic::{generate, Category, SyntheticSpec};
+pub use tensor::{Model, Tensor};

@@ -1,0 +1,417 @@
+//! Synthetic model generator — the Hugging Face substitution.
+//!
+//! The paper's own analysis (§3.1, Fig. 2) explains *why* trained weights
+//! compress: they are ≈ Gaussian around 0 (per-layer scale set by init and
+//! training), so the floating-point exponent is confined to ~40 skewed
+//! values while sign + mantissa bits are near-uniform. We therefore sample
+//! weights by construction: draw the **exponent** from the exact exponent
+//! distribution of a `N(0, σ)` variable (closed form via Φ), fill mantissa
+//! and sign with random bits. This is (a) bit-accurate for the statistics
+//! that matter to compression and (b) ~10× faster than Box–Muller per
+//! element, which matters for the GB-scale Table 3 buffers.
+//!
+//! Category knobs reproduce the paper's taxonomy (§3, Table 2):
+//! *clean* models mask mantissa tails (post-training rounding), the
+//! FP16-from-BF16 family is generated as BF16 and converted, and the
+//! quantized analogs use mildly-skewed vs saturated int8.
+
+use crate::fp::dtype::f32_to_f16_bits;
+use crate::fp::DType;
+use crate::model::tensor::{Model, Tensor};
+use crate::util::Xoshiro256;
+
+/// Compressibility category of a synthetic model (paper §3, §6.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Category {
+    /// Trained, unmodified BF16 model (Llama/Mistral/Falcon class).
+    RegularBF16,
+    /// Trained, unmodified FP32 model (Bert/wav2vec class).
+    RegularF32,
+    /// Trained, unmodified FP16 model (stable-video-diffusion class).
+    RegularF16,
+    /// "Clean" FP32: mantissa rounded post-training to `keep_bits` bits on
+    /// a `frac_clean` fraction of layers (xlm-RoBERTa/T5/CLIP class).
+    CleanF32 {
+        /// Mantissa bits kept by the rounding (of 23).
+        keep_bits: u32,
+        /// Fraction of layers that were rounded (CLIP-like mixtures < 1).
+        frac_clean: f64,
+    },
+    /// FP16 obtained by casting a BF16 model (Llama-2-fp16/Tulu class):
+    /// only 7 significant mantissa bits survive, so the low byte skews.
+    F16FromBF16,
+    /// GPTQ/AWQ-like quantized int8: mildly-skewed values, 85–91% class.
+    QuantizedSkewed,
+    /// GGUF-like quantized: saturated value range, incompressible.
+    QuantizedUniform,
+}
+
+impl Category {
+    /// Element dtype this category produces.
+    pub fn dtype(self) -> DType {
+        match self {
+            Category::RegularBF16 => DType::BF16,
+            Category::RegularF32 | Category::CleanF32 { .. } => DType::F32,
+            Category::RegularF16 | Category::F16FromBF16 => DType::F16,
+            Category::QuantizedSkewed | Category::QuantizedUniform => DType::I8,
+        }
+    }
+}
+
+/// Specification of a synthetic model.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    /// Model name.
+    pub name: String,
+    /// Category.
+    pub category: Category,
+    /// Approximate total parameter bytes to generate.
+    pub target_bytes: usize,
+    /// PRNG seed (fully deterministic output).
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// Convenience constructor.
+    pub fn new(name: &str, category: Category, target_bytes: usize, seed: u64) -> Self {
+        SyntheticSpec { name: name.to_string(), category, target_bytes, seed }
+    }
+}
+
+/// Generate a synthetic model with a transformer-like layer structure
+/// (embedding + attention/MLP blocks + norms) summing to ≈`target_bytes`.
+pub fn generate(spec: &SyntheticSpec) -> Model {
+    let mut rng = Xoshiro256::seed_from_u64(spec.seed);
+    let dtype = spec.category.dtype();
+    let esz = dtype.size();
+    let target_elems = (spec.target_bytes / esz).max(1024);
+
+    // Pick a hidden size so that ~8 blocks + embedding hit the target:
+    // total ≈ vocab*d + blocks * 12*d^2  (4 attn d² + up/down 4d² each).
+    let mut d = 64usize;
+    while 32 * d * d + 1024 * d < target_elems && d < 8192 {
+        d += 64;
+    }
+    let vocab = 1024.max(target_elems / 16 / d);
+    let mut layers: Vec<(String, Vec<usize>, f64)> = Vec::new();
+    layers.push(("embed.weight".into(), vec![vocab, d], 0.02));
+    let mut elems = vocab * d;
+    let mut b = 0;
+    while elems < target_elems {
+        let fan = d as f64;
+        for (n, shape) in [
+            (format!("blocks.{b}.attn.wq"), vec![d, d]),
+            (format!("blocks.{b}.attn.wk"), vec![d, d]),
+            (format!("blocks.{b}.attn.wv"), vec![d, d]),
+            (format!("blocks.{b}.attn.wo"), vec![d, d]),
+            (format!("blocks.{b}.mlp.up"), vec![d, 4 * d]),
+            (format!("blocks.{b}.mlp.down"), vec![4 * d, d]),
+            (format!("blocks.{b}.norm1"), vec![d]),
+            (format!("blocks.{b}.norm2"), vec![d]),
+        ] {
+            let n_elems: usize = shape.iter().product();
+            // per-layer scale jitter: training leaves layers at different σ
+            let sigma = (1.0 / fan.sqrt()) * (0.5 + rng.uniform() * 1.5);
+            layers.push((n, shape, sigma));
+            elems += n_elems;
+        }
+        b += 1;
+    }
+
+    let clean_mask: Vec<bool> = match spec.category {
+        Category::CleanF32 { frac_clean, .. } => {
+            layers.iter().map(|_| rng.uniform() < frac_clean).collect()
+        }
+        _ => layers.iter().map(|_| true).collect(),
+    };
+
+    let mut model = Model::new(&spec.name);
+    for (li, (name, shape, sigma)) in layers.iter().enumerate() {
+        let n: usize = shape.iter().product();
+        let data = match spec.category {
+            Category::RegularBF16 => gen_bf16(&mut rng, n, *sigma),
+            Category::RegularF32 => gen_f32(&mut rng, n, *sigma, 23),
+            Category::CleanF32 { keep_bits, .. } => {
+                let k = if clean_mask[li] { keep_bits } else { 23 };
+                gen_f32(&mut rng, n, *sigma, k)
+            }
+            Category::RegularF16 => gen_f16(&mut rng, n, *sigma),
+            Category::F16FromBF16 => gen_f16_from_bf16(&mut rng, n, *sigma),
+            Category::QuantizedSkewed => gen_i8(&mut rng, n, 36.0),
+            Category::QuantizedUniform => gen_i8_uniform(&mut rng, n),
+        };
+        model
+            .tensors
+            .push(Tensor::new(name, shape, dtype, data).expect("sized correctly"));
+    }
+    model
+}
+
+// --- exponent-distribution sampling ----------------------------------------
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation
+/// (|err| < 1.5e-7, plenty for a sampling table).
+fn phi(x: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * x.abs());
+    let d = 0.3989423 * (-x * x / 2.0).exp();
+    let p = d * t * (0.3193815 + t * (-0.3565638 + t * (1.781478 + t * (-1.821256 + t * 1.330274))));
+    if x >= 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Cumulative distribution over biased exponents 1..=254 for |N(0, σ)|:
+/// `P(exp = e) = Φ(2^(e-126)/σ) - Φ(2^(e-127)/σ)` (times 2, normalized).
+/// `cum[i]` is the cumulative probability of biased exponent `i`.
+fn exponent_cdf(sigma: f64) -> Vec<f64> {
+    let mut cum = vec![0.0f64; 255];
+    let mut acc = 0.0;
+    for e in 1..255usize {
+        let lo = 2f64.powi(e as i32 - 127);
+        let hi = 2f64.powi(e as i32 - 126);
+        let p = 2.0 * (phi(hi / sigma) - phi(lo / sigma)).max(0.0);
+        acc += p;
+        cum[e] = acc;
+    }
+    // normalize (mass below exponent 1 — subnormals — is vanishing)
+    if acc > 0.0 {
+        for c in cum.iter_mut() {
+            *c /= acc;
+        }
+    }
+    cum
+}
+
+fn sample_exp(cum: &[f64], rng: &mut Xoshiro256) -> u32 {
+    let u = rng.uniform();
+    match cum.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        Ok(i) => i as u32,
+        Err(i) => (i as u32).min(254),
+    }
+}
+
+fn gen_bf16(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
+    let cum = exponent_cdf(sigma);
+    let mut out = Vec::with_capacity(2 * n);
+    for _ in 0..n {
+        let exp = sample_exp(&cum, rng);
+        let r = rng.next_u32();
+        let sign = r & 0x8000_0000;
+        let man = (r >> 16) & 0x7F;
+        let bits = ((sign >> 16) | (exp << 7) | man) as u16;
+        out.extend_from_slice(&bits.to_le_bytes());
+    }
+    out
+}
+
+fn gen_f32(rng: &mut Xoshiro256, n: usize, sigma: f64, keep_bits: u32) -> Vec<u8> {
+    let cum = exponent_cdf(sigma);
+    let mask: u32 = if keep_bits >= 23 {
+        0x007F_FFFF
+    } else {
+        !((1u32 << (23 - keep_bits)) - 1) & 0x007F_FFFF
+    };
+    let mut out = Vec::with_capacity(4 * n);
+    for _ in 0..n {
+        let exp = sample_exp(&cum, rng);
+        let r = rng.next_u32();
+        let sign = r & 0x8000_0000;
+        let man = (r >> 8) & mask;
+        let bits = sign | (exp << 23) | man;
+        out.extend_from_slice(&bits.to_le_bytes());
+    }
+    out
+}
+
+fn gen_f16(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
+    // f16 biased exponent = f32 biased exponent - 112, clamped to normals.
+    let cum = exponent_cdf(sigma);
+    let mut out = Vec::with_capacity(2 * n);
+    for _ in 0..n {
+        let e32 = sample_exp(&cum, rng) as i32;
+        let e16 = (e32 - 112).clamp(1, 30) as u16;
+        let r = rng.next_u32();
+        let sign = ((r >> 16) & 0x8000) as u16;
+        let man = (r & 0x3FF) as u16;
+        out.extend_from_slice(&(sign | (e16 << 10) | man).to_le_bytes());
+    }
+    out
+}
+
+fn gen_f16_from_bf16(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
+    // generate the bf16 value, then cast: only 7 mantissa bits survive.
+    let cum = exponent_cdf(sigma);
+    let mut out = Vec::with_capacity(2 * n);
+    for _ in 0..n {
+        let exp = sample_exp(&cum, rng);
+        let r = rng.next_u32();
+        let sign = r & 0x8000_0000;
+        let man = (r >> 8) & 0x007F_0000; // bf16 precision: top 7 bits only
+        let f = f32::from_bits(sign | (exp << 23) | man);
+        out.extend_from_slice(&f32_to_f16_bits(f).to_le_bytes());
+    }
+    out
+}
+
+fn gen_i8(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
+    // Discretized Gaussian (GPTQ/AWQ-like): entropy ≈ 7.2 bits -> ~90%.
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v = (rng.normal() * sigma).clamp(-127.0, 127.0) as i8;
+        out.push(v as u8);
+    }
+    out
+}
+
+fn gen_i8_uniform(rng: &mut Xoshiro256, n: usize) -> Vec<u8> {
+    // Saturated quantization grid (GGUF-like): incompressible.
+    let mut out = vec![0u8; n];
+    rng.fill_bytes(&mut out);
+    out
+}
+
+/// The paper's named model analogs, used by the Table 1/2 and figure
+/// benches. `scale` multiplies the byte budget (1.0 ≈ 64 MiB each, enough
+/// for stable ratios; benches can raise it).
+pub fn paper_zoo(scale: f64) -> Vec<SyntheticSpec> {
+    let mb = |m: f64| (m * scale * 1024.0 * 1024.0) as usize;
+    vec![
+        // Table 2 regulars
+        SyntheticSpec::new("falcon-7b-analog", Category::RegularBF16, mb(64.0), 101),
+        SyntheticSpec::new("bloom-analog", Category::RegularBF16, mb(64.0), 102),
+        SyntheticSpec::new("openllama-3b-analog", Category::RegularBF16, mb(64.0), 103),
+        SyntheticSpec::new("mistral-analog", Category::RegularBF16, mb(64.0), 104),
+        SyntheticSpec::new("llama-3.1-analog", Category::RegularBF16, mb(64.0), 105),
+        SyntheticSpec::new("wav2vec-analog", Category::RegularF32, mb(64.0), 106),
+        SyntheticSpec::new("bert-analog", Category::RegularF32, mb(64.0), 107),
+        SyntheticSpec::new("olmo-analog", Category::RegularF32, mb(64.0), 108),
+        SyntheticSpec::new("stable-video-diffusion-analog", Category::RegularF16, mb(64.0), 109),
+        SyntheticSpec::new("capybarahermes-analog", Category::RegularF16, mb(64.0), 110),
+        // Table 2 cleans
+        SyntheticSpec::new(
+            "xlm-roberta-analog",
+            Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 },
+            mb(64.0),
+            111,
+        ),
+        SyntheticSpec::new(
+            "clip-analog",
+            Category::CleanF32 { keep_bits: 10, frac_clean: 0.85 },
+            mb(64.0),
+            112,
+        ),
+        SyntheticSpec::new(
+            "t5-base-analog",
+            Category::CleanF32 { keep_bits: 7, frac_clean: 1.0 },
+            mb(64.0),
+            113,
+        ),
+        SyntheticSpec::new("llama2-13b-fp16-analog", Category::F16FromBF16, mb(64.0), 114),
+        SyntheticSpec::new("tulu-7b-fp16-analog", Category::F16FromBF16, mb(64.0), 115),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{compress_with_report, CodecConfig};
+    use crate::fp::stats::{exponent_histogram, summarize_exponents};
+
+    fn compressed_pct(spec: &SyntheticSpec) -> (f64, Vec<f64>) {
+        let m = generate(spec);
+        let raw = m.to_bytes();
+        let cfg = CodecConfig::for_dtype(m.dominant_dtype());
+        let (comp, reps) = compress_with_report(cfg, &raw).unwrap();
+        (
+            comp.len() as f64 / raw.len() as f64 * 100.0,
+            reps.iter().map(|r| r.pct()).collect(),
+        )
+    }
+
+    #[test]
+    fn regular_bf16_compresses_to_paper_range() {
+        let spec = SyntheticSpec::new("m", Category::RegularBF16, 8 << 20, 1);
+        let (pct, groups) = compressed_pct(&spec);
+        assert!((63.0..70.0).contains(&pct), "total {pct}");
+        assert!((28.0..38.0).contains(&groups[0]), "exp group {}", groups[0]);
+        assert!(groups[1] > 97.0, "mantissa group {}", groups[1]);
+    }
+
+    #[test]
+    fn regular_f32_compresses_to_paper_range() {
+        let spec = SyntheticSpec::new("m", Category::RegularF32, 8 << 20, 2);
+        let (pct, groups) = compressed_pct(&spec);
+        assert!((80.0..86.0).contains(&pct), "total {pct}");
+        assert!(groups[0] < 40.0, "exp group {}", groups[0]);
+    }
+
+    #[test]
+    fn clean_f32_xlmr_profile() {
+        let spec = SyntheticSpec::new(
+            "m",
+            Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 },
+            8 << 20,
+            3,
+        );
+        let (pct, groups) = compressed_pct(&spec);
+        // paper: 41.8% total, (33.9, 95.6, 37.5, 0.0)
+        assert!((36.0..48.0).contains(&pct), "total {pct}");
+        assert!(groups[1] > 90.0, "man-high {}", groups[1]);
+        assert!((30.0..45.0).contains(&groups[2]), "man-mid {}", groups[2]);
+        assert!(groups[3] < 2.0, "man-low {}", groups[3]);
+    }
+
+    #[test]
+    fn f16_from_bf16_low_byte_skewed() {
+        let spec = SyntheticSpec::new("m", Category::F16FromBF16, 8 << 20, 4);
+        let (pct, groups) = compressed_pct(&spec);
+        // paper: 66.6% total, (64.2, 69.0)
+        assert!((58.0..72.0).contains(&pct), "total {pct}");
+        assert!(groups[1] < 80.0, "low byte should skew: {}", groups[1]);
+    }
+
+    #[test]
+    fn quantized_categories() {
+        let (pct_skew, _) =
+            compressed_pct(&SyntheticSpec::new("q", Category::QuantizedSkewed, 4 << 20, 5));
+        assert!((82.0..95.0).contains(&pct_skew), "gptq-like {pct_skew}");
+        let (pct_uni, _) =
+            compressed_pct(&SyntheticSpec::new("g", Category::QuantizedUniform, 4 << 20, 6));
+        assert!(pct_uni > 99.0, "gguf-like {pct_uni}");
+    }
+
+    #[test]
+    fn exponent_histogram_matches_fig2_shape() {
+        let spec = SyntheticSpec::new("m", Category::RegularBF16, 4 << 20, 7);
+        let m = generate(&spec);
+        let hist = exponent_histogram(&m.to_bytes(), DType::BF16);
+        let s = summarize_exponents(&hist);
+        assert!(s.distinct >= 20 && s.distinct <= 70, "distinct {}", s.distinct);
+        assert!(s.top12_coverage > 0.985, "top12 {}", s.top12_coverage);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = SyntheticSpec::new("m", Category::RegularBF16, 1 << 20, 42);
+        assert_eq!(generate(&spec).to_bytes(), generate(&spec).to_bytes());
+    }
+
+    #[test]
+    fn target_size_respected() {
+        for target in [1 << 20, 16 << 20] {
+            let spec = SyntheticSpec::new("m", Category::RegularBF16, target, 8);
+            let m = generate(&spec);
+            let sz = m.size_bytes();
+            assert!(sz >= target / 2 && sz <= target * 3, "target {target} got {sz}");
+        }
+    }
+
+    #[test]
+    fn phi_sanity() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-6);
+        assert!(phi(5.0) > 0.999999);
+        assert!(phi(-5.0) < 1e-6);
+    }
+}

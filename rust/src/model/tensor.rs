@@ -1,0 +1,214 @@
+//! In-memory model representation: named tensors of raw little-endian
+//! bytes plus a dtype — all the codec needs (paper §2.2: "long arrays of
+//! numeric parameters"; the code around them is negligible).
+
+use crate::error::{Error, Result};
+use crate::fp::DType;
+
+/// One tensor: a name, shape, dtype, and its raw little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Layer/tensor name (e.g. `"blocks.3.attn.wq"`).
+    pub name: String,
+    /// Shape (row-major).
+    pub shape: Vec<usize>,
+    /// Element dtype.
+    pub dtype: DType,
+    /// Raw little-endian element bytes; `len == numel * dtype.size()`.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Build from parts, validating the byte length.
+    pub fn new(name: &str, shape: &[usize], dtype: DType, data: Vec<u8>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel * dtype.size() {
+            return Err(Error::Invalid(format!(
+                "tensor '{name}': {} bytes but shape {:?} x {} needs {}",
+                data.len(),
+                shape,
+                dtype.name(),
+                numel * dtype.size()
+            )));
+        }
+        Ok(Tensor { name: name.to_string(), shape: shape.to_vec(), dtype, data })
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Build a tensor from f32 values, converting to the requested dtype.
+    pub fn from_f32(name: &str, shape: &[usize], dtype: DType, vals: &[f32]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if vals.len() != numel {
+            return Err(Error::Invalid(format!(
+                "tensor '{name}': {} values for shape {shape:?}",
+                vals.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(numel * dtype.size());
+        match dtype {
+            DType::F32 => {
+                for v in vals {
+                    data.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::BF16 => {
+                for v in vals {
+                    data.extend_from_slice(
+                        &crate::fp::dtype::f32_to_bf16_bits(*v).to_le_bytes(),
+                    );
+                }
+            }
+            DType::F16 => {
+                for v in vals {
+                    data.extend_from_slice(
+                        &crate::fp::dtype::f32_to_f16_bits(*v).to_le_bytes(),
+                    );
+                }
+            }
+            DType::I8 => {
+                for v in vals {
+                    data.push(v.clamp(-128.0, 127.0) as i8 as u8);
+                }
+            }
+        }
+        Tensor::new(name, shape, dtype, data)
+    }
+
+    /// Decode to f32 values (exact for F32/BF16/F16; cast for I8).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self.dtype {
+            DType::F32 => self
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            DType::BF16 => self
+                .data
+                .chunks_exact(2)
+                .map(|c| {
+                    crate::fp::dtype::bf16_bits_to_f32(u16::from_le_bytes(
+                        c.try_into().unwrap(),
+                    ))
+                })
+                .collect(),
+            DType::F16 => self
+                .data
+                .chunks_exact(2)
+                .map(|c| {
+                    crate::fp::dtype::f16_bits_to_f32(u16::from_le_bytes(
+                        c.try_into().unwrap(),
+                    ))
+                })
+                .collect(),
+            DType::I8 => self.data.iter().map(|&b| b as i8 as f32).collect(),
+        }
+    }
+}
+
+/// A model: an ordered collection of tensors (order matters for delta
+/// compression and deterministic containers).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Model {
+    /// Model name.
+    pub name: String,
+    /// Tensors in definition order.
+    pub tensors: Vec<Tensor>,
+}
+
+impl Model {
+    /// New empty model.
+    pub fn new(name: &str) -> Model {
+        Model { name: name.to_string(), tensors: Vec::new() }
+    }
+
+    /// Total parameter bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Find a tensor by name.
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Dominant dtype by byte count (models may mix in a few oddball
+    /// tensors; compression keys off the majority type — paper §3).
+    pub fn dominant_dtype(&self) -> DType {
+        let mut counts: Vec<(DType, usize)> = Vec::new();
+        for t in &self.tensors {
+            match counts.iter_mut().find(|(d, _)| *d == t.dtype) {
+                Some((_, c)) => *c += t.data.len(),
+                None => counts.push((t.dtype, t.data.len())),
+            }
+        }
+        counts
+            .into_iter()
+            .max_by_key(|&(_, c)| c)
+            .map(|(d, _)| d)
+            .unwrap_or(DType::F32)
+    }
+
+    /// Concatenate all tensor bytes (the buffer the codec compresses).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_validation() {
+        assert!(Tensor::new("x", &[2, 3], DType::F32, vec![0; 24]).is_ok());
+        assert!(Tensor::new("x", &[2, 3], DType::F32, vec![0; 23]).is_err());
+        assert!(Tensor::new("x", &[2, 3], DType::BF16, vec![0; 12]).is_ok());
+    }
+
+    #[test]
+    fn from_f32_roundtrip_bf16() {
+        let vals = [0.5f32, -1.0, 0.0, 2.0];
+        let t = Tensor::from_f32("w", &[4], DType::BF16, &vals).unwrap();
+        assert_eq!(t.to_f32(), vals);
+    }
+
+    #[test]
+    fn from_f32_roundtrip_f32() {
+        let vals = [0.1f32, -2.7, 1e-20, 3e20];
+        let t = Tensor::from_f32("w", &[2, 2], DType::F32, &vals).unwrap();
+        assert_eq!(t.to_f32(), vals);
+    }
+
+    #[test]
+    fn dominant_dtype_by_bytes() {
+        let mut m = Model::new("m");
+        m.tensors
+            .push(Tensor::new("big", &[100], DType::BF16, vec![0; 200]).unwrap());
+        m.tensors
+            .push(Tensor::new("small", &[10], DType::F32, vec![0; 40]).unwrap());
+        assert_eq!(m.dominant_dtype(), DType::BF16);
+    }
+
+    #[test]
+    fn model_bytes_concatenate_in_order() {
+        let mut m = Model::new("m");
+        m.tensors.push(Tensor::new("a", &[2], DType::I8, vec![1, 2]).unwrap());
+        m.tensors.push(Tensor::new("b", &[2], DType::I8, vec![3, 4]).unwrap());
+        assert_eq!(m.to_bytes(), vec![1, 2, 3, 4]);
+        assert_eq!(m.size_bytes(), 4);
+        assert_eq!(m.numel(), 4);
+    }
+}

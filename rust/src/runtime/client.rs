@@ -1,0 +1,91 @@
+//! The PJRT client wrapper: lazy-compiling artifact executor.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::Manifest;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Loads `artifacts/*.hlo.txt` on demand, compiles once per artifact, and
+/// executes with positional literal inputs.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (cached) the named artifact.
+    fn executable(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with positional inputs; returns the decomposed
+    /// output tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn exec(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Invalid(format!(
+                "{name}: {} inputs given, signature has {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        self.executable(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("just compiled");
+        let result = exe.execute::<Literal>(inputs)?;
+        let mut lit = result[0][0].to_literal_sync()?;
+        let outs = lit.decompose_tuple()?;
+        if outs.len() != spec.outputs.len() {
+            return Err(Error::Xla(format!(
+                "{name}: produced {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Pre-compile a set of artifacts (warm-up; keeps first-step timing
+    /// out of training loops).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,104 @@
+//! Literal construction/extraction helpers keyed by manifest dtype names.
+
+use crate::error::{Error, Result};
+use xla::{ElementType, Literal};
+
+/// Build a literal of `dtype`/`shape` from raw little-endian bytes.
+pub fn make_literal(dtype: &str, shape: &[usize], bytes: &[u8]) -> Result<Literal> {
+    let ty = match dtype {
+        "u8" => ElementType::U8,
+        "u16" => ElementType::U16,
+        "u32" => ElementType::U32,
+        "i32" => ElementType::S32,
+        "f32" => ElementType::F32,
+        other => return Err(Error::Invalid(format!("unsupported dtype '{other}'"))),
+    };
+    let numel: usize = shape.iter().product();
+    let elem = match ty {
+        ElementType::U8 => 1,
+        ElementType::U16 => 2,
+        _ => 4,
+    };
+    if bytes.len() != numel * elem {
+        return Err(Error::Invalid(format!(
+            "literal {dtype}{shape:?} needs {} bytes, got {}",
+            numel * elem,
+            bytes.len()
+        )));
+    }
+    Ok(Literal::create_from_shape_and_untyped_data(ty, shape, bytes)?)
+}
+
+/// Scalar f32 literal.
+pub fn make_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Scalar u32 literal.
+pub fn make_scalar_u32(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract a literal's raw little-endian bytes.
+pub fn literal_to_bytes(lit: &Literal) -> Result<Vec<u8>> {
+    let ty = lit.ty()?;
+    Ok(match ty {
+        ElementType::U8 => lit.to_vec::<u8>()?,
+        ElementType::U16 => lit
+            .to_vec::<u16>()?
+            .into_iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect(),
+        ElementType::U32 => lit
+            .to_vec::<u32>()?
+            .into_iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect(),
+        ElementType::S32 => lit
+            .to_vec::<i32>()?
+            .into_iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect(),
+        ElementType::F32 => lit
+            .to_vec::<f32>()?
+            .into_iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect(),
+        other => return Err(Error::Invalid(format!("unsupported literal type {other:?}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u16_roundtrip() {
+        let bytes: Vec<u8> = (0..16).collect();
+        let lit = make_literal("u16", &[8], &bytes).unwrap();
+        assert_eq!(literal_to_bytes(&lit).unwrap(), bytes);
+        assert_eq!(lit.element_count(), 8);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = make_literal("f32", &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        assert!(make_literal("u32", &[4], &[0u8; 15]).is_err());
+        assert!(make_literal("f64", &[1], &[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        let l = make_scalar_f32(3.5);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![3.5]);
+        let u = make_scalar_u32(7);
+        assert_eq!(u.to_vec::<u32>().unwrap(), vec![7]);
+    }
+}

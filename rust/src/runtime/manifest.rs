@@ -1,0 +1,284 @@
+//! `artifacts/manifest.json` parsing: artifact signatures + model presets.
+
+use crate::error::{Error, Result};
+use crate::fp::DType;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape + dtype of one artifact input/output or model parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Parameter name (empty for positional artifact I/O).
+    pub name: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Element dtype name as written by aot.py (`u8/u16/u32/i32/f32`).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Byte size of one element.
+    pub fn elem_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "u8" => 1,
+            "u16" => 2,
+            "u32" | "i32" | "f32" => 4,
+            _ => 4,
+        }
+    }
+
+    /// The codec [`DType`] for exported checkpoint bytes.
+    pub fn codec_dtype(&self) -> DType {
+        match self.dtype.as_str() {
+            "u16" => DType::BF16,
+            "u8" => DType::I8,
+            _ => DType::F32,
+        }
+    }
+}
+
+/// One lowered artifact: file + positional signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Artifact name (e.g. `lm_small_step`).
+    pub name: String,
+    /// HLO text filename relative to the artifacts dir.
+    pub file: String,
+    /// Input signature.
+    pub inputs: Vec<TensorSpec>,
+    /// Output signature.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One model preset: parameter layout + training config.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// `"lm"` or `"cnn"`.
+    pub kind: String,
+    /// Ordered parameter specs (the flattening contract with Python).
+    pub params: Vec<TensorSpec>,
+    /// Hyperparameters (vocab, seq_len, batch, ...).
+    pub config: BTreeMap<String, usize>,
+    /// Checkpoint export dtype (`bf16` or `f32`).
+    pub export_dtype: String,
+}
+
+impl ModelMeta {
+    /// Config value accessor.
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Artifact(format!("model config missing '{key}'")))
+    }
+
+    /// Codec dtype of exported checkpoints.
+    pub fn codec_dtype(&self) -> DType {
+        match self.export_dtype.as_str() {
+            "bf16" => DType::BF16,
+            _ => DType::F32,
+        }
+    }
+}
+
+/// The whole parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifacts by name.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Model presets by name.
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn parse_tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Artifact("tensor spec missing shape".into()))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    Ok(TensorSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        shape,
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Artifact("tensor spec missing dtype".into()))?
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| Error::Artifact(format!("manifest: {e}")))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?
+        {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing inputs")))?
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing outputs")))?
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(Json::as_obj) {
+            for (name, m) in ms {
+                let params = m
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Artifact(format!("model {name}: params")))?
+                    .iter()
+                    .map(parse_tensor_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let mut config = BTreeMap::new();
+                if let Some(c) = m.get("config").and_then(Json::as_obj) {
+                    for (k, v) in c {
+                        if let Some(u) = v.as_usize() {
+                            config.insert(k.clone(), u);
+                        }
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        kind: m
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or("lm")
+                            .to_string(),
+                        params,
+                        config,
+                        export_dtype: m
+                            .get("export_dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("f32")
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, models })
+    }
+
+    /// Load from `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Artifact lookup.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact '{name}'")))
+    }
+
+    /// Model preset lookup.
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no model preset '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "k": {"file": "k.hlo.txt",
+              "inputs": [{"shape": [8, 2], "dtype": "u16"}],
+              "outputs": [{"shape": [8], "dtype": "u8"}, {"shape": [], "dtype": "f32"}]}
+      },
+      "models": {
+        "lm_tiny": {"kind": "lm", "export_dtype": "bf16",
+          "params": [{"name": "embed.weight", "shape": [128, 32], "dtype": "f32"}],
+          "config": {"vocab": 128, "batch": 4}}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("k").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![8, 2]);
+        assert_eq!(a.inputs[0].numel(), 16);
+        assert_eq!(a.inputs[0].elem_bytes(), 2);
+        assert_eq!(a.outputs[1].shape, Vec::<usize>::new());
+        let lm = m.model("lm_tiny").unwrap();
+        assert_eq!(lm.cfg("vocab").unwrap(), 128);
+        assert_eq!(lm.params[0].name, "embed.weight");
+        assert_eq!(lm.codec_dtype(), crate::fp::DType::BF16);
+        assert!(m.artifact("nope").is_err());
+        assert!(lm.cfg("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Integration-lite: when `make artifacts` has run, the real
+        // manifest must parse and contain the core artifacts.
+        if let Ok(m) = Manifest::load("artifacts") {
+            for name in [
+                "byteplanes_bf16_split",
+                "exp_hist_bf16",
+                "xor_delta_u32",
+                "lm_tiny_step",
+                "cnn_tiny_step",
+            ] {
+                assert!(m.artifact(name).is_ok(), "{name}");
+            }
+            assert!(m.model("lm_small").is_ok());
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! Python runs once (`make artifacts`); afterwards this module is the only
+//! bridge to the compiled computations. HLO **text** is the interchange
+//! format (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids — see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use literal::{literal_to_bytes, make_literal, make_scalar_f32, make_scalar_u32};
+pub use manifest::{ArtifactSpec, Manifest, ModelMeta, TensorSpec};

@@ -1,0 +1,152 @@
+//! Compressibility probes: byte histograms, zero statistics, and the
+//! heuristics the paper uses to pick a method per chunk (§3.2, §4.2).
+
+/// 256-bin byte histogram using 4 interleaved sub-tables to break the
+/// store-to-load dependency chain (the classic histogram trick).
+pub fn byte_histogram(data: &[u8]) -> [u64; 256] {
+    let mut h0 = [0u64; 256];
+    let mut h1 = [0u64; 256];
+    let mut h2 = [0u64; 256];
+    let mut h3 = [0u64; 256];
+    let mut chunks = data.chunks_exact(4);
+    for c in &mut chunks {
+        h0[c[0] as usize] += 1;
+        h1[c[1] as usize] += 1;
+        h2[c[2] as usize] += 1;
+        h3[c[3] as usize] += 1;
+    }
+    for &b in chunks.remainder() {
+        h0[b as usize] += 1;
+    }
+    for i in 0..256 {
+        h0[i] += h1[i] + h2[i] + h3[i];
+    }
+    h0
+}
+
+/// Zero statistics of a buffer: the two signals of the paper's
+/// Huffman-vs-Zstd auto selector for deltas (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ZeroStats {
+    /// Fraction of bytes equal to zero.
+    pub zero_frac: f64,
+    /// Length of the longest run of zero bytes.
+    pub longest_run: usize,
+}
+
+/// Scan a buffer for zero fraction and longest zero run in one pass.
+pub fn zero_stats(data: &[u8]) -> ZeroStats {
+    let mut zeros = 0usize;
+    let mut run = 0usize;
+    let mut longest = 0usize;
+    let mut i = 0;
+    // Word-at-a-time skip of all-zero regions keeps this O(n/8) on the
+    // highly-zero delta buffers where it matters.
+    while i + 8 <= data.len() {
+        let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+        if w == 0 {
+            zeros += 8;
+            run += 8;
+            i += 8;
+            continue;
+        }
+        for &b in &data[i..i + 8] {
+            if b == 0 {
+                zeros += 1;
+                run += 1;
+            } else {
+                longest = longest.max(run);
+                run = 0;
+            }
+        }
+        i += 8;
+    }
+    for &b in &data[i..] {
+        if b == 0 {
+            zeros += 1;
+            run += 1;
+        } else {
+            longest = longest.max(run);
+            run = 0;
+        }
+    }
+    longest = longest.max(run);
+    ZeroStats {
+        zero_frac: if data.is_empty() { 0.0 } else { zeros as f64 / data.len() as f64 },
+        longest_run: longest,
+    }
+}
+
+/// Fraction of bytes that differ between two equal-length buffers
+/// (Fig. 8a "changed bytes" metric).
+pub fn changed_byte_frac(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let changed = a.iter().zip(b).filter(|(x, y)| x != y).count();
+    changed as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn histogram_counts() {
+        let data = [0u8, 0, 1, 2, 2, 2, 255];
+        let h = byte_histogram(&data);
+        assert_eq!(h[0], 2);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[2], 3);
+        assert_eq!(h[255], 1);
+        assert_eq!(h.iter().sum::<u64>(), 7);
+    }
+
+    #[test]
+    fn histogram_matches_naive_on_random() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let mut data = vec![0u8; 100_003]; // odd length exercises remainder
+        rng.fill_bytes(&mut data);
+        let fast = byte_histogram(&data);
+        let mut naive = [0u64; 256];
+        for &b in &data {
+            naive[b as usize] += 1;
+        }
+        assert_eq!(fast, naive);
+    }
+
+    #[test]
+    fn zero_stats_basic() {
+        let s = zero_stats(&[0, 0, 1, 0, 0, 0, 2]);
+        assert!((s.zero_frac - 5.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.longest_run, 3);
+    }
+
+    #[test]
+    fn zero_stats_all_zero_and_empty() {
+        let s = zero_stats(&[0u8; 100]);
+        assert_eq!(s.zero_frac, 1.0);
+        assert_eq!(s.longest_run, 100);
+        let e = zero_stats(&[]);
+        assert_eq!(e.zero_frac, 0.0);
+        assert_eq!(e.longest_run, 0);
+    }
+
+    #[test]
+    fn zero_stats_run_across_word_boundary() {
+        // run straddles the 8-byte fast path boundary
+        let mut data = vec![1u8; 6];
+        data.extend(vec![0u8; 12]);
+        data.extend(vec![1u8; 6]);
+        let s = zero_stats(&data);
+        assert_eq!(s.longest_run, 12);
+    }
+
+    #[test]
+    fn changed_bytes() {
+        assert_eq!(changed_byte_frac(&[1, 2, 3, 4], &[1, 0, 3, 0]), 0.5);
+        assert_eq!(changed_byte_frac(&[], &[]), 0.0);
+    }
+}

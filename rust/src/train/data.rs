@@ -1,0 +1,152 @@
+//! Synthetic-but-learnable data generators (the paper's training data is
+//! not available; what matters for §4 is a *converging* run — see
+//! DESIGN.md §2).
+
+use crate::util::prng::{Xoshiro256, Zipf};
+
+/// Token-sequence generator: a noisy deterministic Markov chain over a
+/// Zipf-weighted vocabulary. The LM can learn the transition structure
+/// (loss drops), and the Zipf skew reproduces the paper's Fig. 7
+/// embedding-sparsity effect: most vocabulary rows see no gradient.
+pub struct TokenGen {
+    vocab: usize,
+    zipf: Zipf,
+    rng: Xoshiro256,
+    /// Probability of following the deterministic transition.
+    coherence: f64,
+}
+
+impl TokenGen {
+    /// New generator over `vocab` tokens.
+    pub fn new(vocab: usize, seed: u64) -> TokenGen {
+        TokenGen {
+            vocab,
+            zipf: Zipf::new(vocab, 1.1),
+            rng: Xoshiro256::seed_from_u64(seed),
+            coherence: 0.8,
+        }
+    }
+
+    /// Generate a `[batch, seq]` token matrix as little-endian i32 bytes.
+    pub fn batch_bytes(&mut self, batch: usize, seq: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(batch * seq * 4);
+        for _ in 0..batch {
+            let mut t = self.zipf.sample(&mut self.rng);
+            for _ in 0..seq {
+                out.extend_from_slice(&(t as i32).to_le_bytes());
+                t = if self.rng.uniform() < self.coherence {
+                    (t * 31 + 17) % self.vocab
+                } else {
+                    self.zipf.sample(&mut self.rng)
+                };
+            }
+        }
+        out
+    }
+}
+
+/// Image-batch generator: Gaussian noise plus a class-dependent pattern,
+/// so the CNN's loss actually decreases (Fig. 8 needs a converging run
+/// with an LR schedule).
+pub struct CnnBatchGen {
+    image: usize,
+    channels: usize,
+    classes: usize,
+    rng: Xoshiro256,
+}
+
+impl CnnBatchGen {
+    /// New generator.
+    pub fn new(image: usize, channels: usize, classes: usize, seed: u64) -> CnnBatchGen {
+        CnnBatchGen { image, channels, classes, rng: Xoshiro256::seed_from_u64(seed) }
+    }
+
+    /// Generate `(images_f32_bytes, labels_i32_bytes)` for one batch.
+    pub fn batch_bytes(&mut self, batch: usize) -> (Vec<u8>, Vec<u8>) {
+        let hw = self.image * self.image * self.channels;
+        let mut imgs = Vec::with_capacity(batch * hw * 4);
+        let mut lbls = Vec::with_capacity(batch * 4);
+        for _ in 0..batch {
+            let label = self.rng.below(self.classes);
+            lbls.extend_from_slice(&(label as i32).to_le_bytes());
+            // class-dependent low-frequency pattern + noise
+            let phase = label as f64 / self.classes as f64 * std::f64::consts::TAU;
+            for i in 0..self.image {
+                for j in 0..self.image {
+                    for c in 0..self.channels {
+                        let sig = ((i as f64 * 0.7 + c as f64) * phase.cos()
+                            + (j as f64 * 0.7) * phase.sin())
+                        .sin();
+                        let v = (sig * 0.8 + self.rng.normal() * 0.5) as f32;
+                        imgs.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        (imgs, lbls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_batch_shape_and_range() {
+        let mut g = TokenGen::new(128, 1);
+        let bytes = g.batch_bytes(4, 16);
+        assert_eq!(bytes.len(), 4 * 16 * 4);
+        for c in bytes.chunks_exact(4) {
+            let t = i32::from_le_bytes(c.try_into().unwrap());
+            assert!((0..128).contains(&t));
+        }
+    }
+
+    #[test]
+    fn tokens_are_skewed_and_batches_sparse() {
+        // Frequency skew: the top tokens dominate.
+        let mut g = TokenGen::new(512, 2);
+        let bytes = g.batch_bytes(64, 64);
+        let mut seen = vec![0u32; 512];
+        for c in bytes.chunks_exact(4) {
+            seen[i32::from_le_bytes(c.try_into().unwrap()) as usize] += 1;
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let head: u32 = sorted[..51].iter().sum();
+        let total: u32 = sorted.iter().sum();
+        assert!(
+            head as f64 > 0.3 * total as f64,
+            "top-10% should dominate: {head}/{total}"
+        );
+        // Per-batch sparsity (the Fig. 7 embedding-gradient mechanism):
+        // one small batch cannot touch most of a large vocab.
+        let mut g = TokenGen::new(2048, 3);
+        let bytes = g.batch_bytes(8, 64);
+        let mut touched = vec![false; 2048];
+        for c in bytes.chunks_exact(4) {
+            touched[i32::from_le_bytes(c.try_into().unwrap()) as usize] = true;
+        }
+        let unseen = touched.iter().filter(|&&t| !t).count();
+        assert!(unseen > 1024, "most rows untouched per batch: {unseen}");
+    }
+
+    #[test]
+    fn cnn_batch_shapes() {
+        let mut g = CnnBatchGen::new(8, 3, 10, 3);
+        let (imgs, lbls) = g.batch_bytes(4);
+        assert_eq!(imgs.len(), 4 * 8 * 8 * 3 * 4);
+        assert_eq!(lbls.len(), 4 * 4);
+        for c in lbls.chunks_exact(4) {
+            let l = i32::from_le_bytes(c.try_into().unwrap());
+            assert!((0..10).contains(&l));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = TokenGen::new(64, 9).batch_bytes(2, 8);
+        let b = TokenGen::new(64, 9).batch_bytes(2, 8);
+        assert_eq!(a, b);
+    }
+}

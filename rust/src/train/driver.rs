@@ -1,0 +1,219 @@
+//! LM / CNN training drivers over the AOT artifacts.
+
+use crate::error::{Error, Result};
+use crate::model::tensor::{Model, Tensor};
+use crate::runtime::{literal_to_bytes, make_literal, make_scalar_f32, make_scalar_u32, Runtime};
+use crate::train::data::{CnnBatchGen, TokenGen};
+use xla::Literal;
+
+/// Transformer-LM trainer (paper §4.1 RoBERTa-finetune analog).
+pub struct LmTrainer<'rt> {
+    rt: &'rt Runtime,
+    preset: String,
+    n_params: usize,
+    /// params ++ m ++ v, in manifest order.
+    state: Vec<Literal>,
+    gen: TokenGen,
+    batch: usize,
+    seq: usize,
+    step_idx: usize,
+    /// Loss per executed step.
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> LmTrainer<'rt> {
+    /// Initialize from the `{preset}_init` artifact.
+    pub fn new(rt: &'rt Runtime, preset: &str, seed: u64) -> Result<LmTrainer<'rt>> {
+        let meta = rt.manifest().model(preset)?.clone();
+        if meta.kind != "lm" {
+            return Err(Error::Invalid(format!("{preset} is not an lm preset")));
+        }
+        let n_params = meta.params.len();
+        let state = rt.exec(&format!("{preset}_init"), &[make_scalar_u32(seed as u32)])?;
+        if state.len() != 3 * n_params {
+            return Err(Error::Artifact(format!(
+                "{preset}_init returned {} arrays, expected {}",
+                state.len(),
+                3 * n_params
+            )));
+        }
+        let vocab = meta.cfg("vocab")?;
+        Ok(LmTrainer {
+            rt,
+            preset: preset.to_string(),
+            n_params,
+            state,
+            gen: TokenGen::new(vocab, seed ^ 0xBEEF),
+            batch: meta.cfg("batch")?,
+            seq: meta.cfg("seq_len")?,
+            step_idx: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    fn tokens_literal(&mut self) -> Result<Literal> {
+        let bytes = self.gen.batch_bytes(self.batch, self.seq);
+        make_literal("i32", &[self.batch, self.seq], &bytes)
+    }
+
+    /// Run one Adam step on a fresh batch; returns the loss.
+    pub fn step(&mut self, lr: f32) -> Result<f32> {
+        let tokens = self.tokens_literal()?;
+        let mut inputs: Vec<Literal> = Vec::with_capacity(self.state.len() + 3);
+        inputs.append(&mut self.state);
+        inputs.push(tokens);
+        inputs.push(make_scalar_f32(lr));
+        inputs.push(make_scalar_f32(self.step_idx as f32));
+        let mut outs = self.rt.exec(&format!("{}_step", self.preset), &inputs)?;
+        let loss_lit = outs.pop().expect("loss output");
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        self.state = outs;
+        self.step_idx += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    fn params(&self) -> &[Literal] {
+        &self.state[..self.n_params]
+    }
+
+    fn export(&self, artifact: &str, inputs: &[Literal], what: &str) -> Result<Model> {
+        let outs = self.rt.exec(artifact, inputs)?;
+        let meta = self.rt.manifest().model(&self.preset)?;
+        let mut model = Model::new(&format!("{}-{}-step{}", self.preset, what, self.step_idx));
+        for (spec, lit) in meta.params.iter().zip(&outs) {
+            let bytes = literal_to_bytes(lit)?;
+            model.tensors.push(Tensor::new(
+                &spec.name,
+                &spec.shape,
+                meta.codec_dtype(),
+                bytes,
+            )?);
+        }
+        Ok(model)
+    }
+
+    /// Export current parameters as a bf16 checkpoint model.
+    pub fn export_model(&self) -> Result<Model> {
+        self.export(&format!("{}_export", self.preset), self.params(), "model")
+    }
+
+    /// Export gradients at the current parameters (fresh batch).
+    pub fn export_grads(&mut self) -> Result<Model> {
+        let tokens = self.tokens_literal()?;
+        let mut inputs: Vec<Literal> = self.params().to_vec();
+        inputs.push(tokens);
+        self.export(&format!("{}_grads", self.preset), &inputs, "grads")
+    }
+
+    /// Export the Adam first/second moments as two models.
+    pub fn export_optimizer(&self) -> Result<(Model, Model)> {
+        let m = self.export(
+            &format!("{}_export", self.preset),
+            &self.state[self.n_params..2 * self.n_params],
+            "adam-m",
+        )?;
+        let v = self.export(
+            &format!("{}_export", self.preset),
+            &self.state[2 * self.n_params..],
+            "adam-v",
+        )?;
+        Ok((m, v))
+    }
+
+    /// Evaluate loss on a fresh batch without updating.
+    pub fn eval_loss(&mut self) -> Result<f32> {
+        let tokens = self.tokens_literal()?;
+        let mut inputs: Vec<Literal> = self.params().to_vec();
+        inputs.push(tokens);
+        let outs = self.rt.exec(&format!("{}_loss", self.preset), &inputs)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+}
+
+/// Residual-CNN trainer (paper §4.2 ResNet-finetune analog).
+pub struct CnnTrainer<'rt> {
+    rt: &'rt Runtime,
+    preset: String,
+    n_params: usize,
+    /// params ++ momentum.
+    state: Vec<Literal>,
+    gen: CnnBatchGen,
+    batch: usize,
+    image: usize,
+    channels: usize,
+    step_idx: usize,
+    /// Loss per executed step.
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> CnnTrainer<'rt> {
+    /// Initialize from the `{preset}_init` artifact.
+    pub fn new(rt: &'rt Runtime, preset: &str, seed: u64) -> Result<CnnTrainer<'rt>> {
+        let meta = rt.manifest().model(preset)?.clone();
+        if meta.kind != "cnn" {
+            return Err(Error::Invalid(format!("{preset} is not a cnn preset")));
+        }
+        let n_params = meta.params.len();
+        let state = rt.exec(&format!("{preset}_init"), &[make_scalar_u32(seed as u32)])?;
+        Ok(CnnTrainer {
+            rt,
+            preset: preset.to_string(),
+            n_params,
+            state,
+            gen: CnnBatchGen::new(
+                meta.cfg("image")?,
+                meta.cfg("channels")?,
+                meta.cfg("classes")?,
+                seed ^ 0xF00D,
+            ),
+            batch: meta.cfg("batch")?,
+            image: meta.cfg("image")?,
+            channels: meta.cfg("channels")?,
+            step_idx: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Run one SGD+momentum step; `lr` implements the step schedule.
+    pub fn step(&mut self, lr: f32) -> Result<f32> {
+        let (imgs, lbls) = self.gen.batch_bytes(self.batch);
+        let images = make_literal(
+            "f32",
+            &[self.batch, self.image, self.image, self.channels],
+            &imgs,
+        )?;
+        let labels = make_literal("i32", &[self.batch], &lbls)?;
+        let mut inputs: Vec<Literal> = Vec::with_capacity(self.state.len() + 3);
+        inputs.append(&mut self.state);
+        inputs.push(images);
+        inputs.push(labels);
+        inputs.push(make_scalar_f32(lr));
+        let mut outs = self.rt.exec(&format!("{}_step", self.preset), &inputs)?;
+        let loss = outs.pop().expect("loss").to_vec::<f32>()?[0];
+        self.state = outs;
+        self.step_idx += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Export current parameters as an fp32 checkpoint model.
+    pub fn export_model(&self) -> Result<Model> {
+        let outs = self.rt.exec(
+            &format!("{}_export", self.preset),
+            &self.state[..self.n_params],
+        )?;
+        let meta = self.rt.manifest().model(&self.preset)?;
+        let mut model =
+            Model::new(&format!("{}-model-step{}", self.preset, self.step_idx));
+        for (spec, lit) in meta.params.iter().zip(&outs) {
+            model.tensors.push(Tensor::new(
+                &spec.name,
+                &spec.shape,
+                meta.codec_dtype(),
+                literal_to_bytes(lit)?,
+            )?);
+        }
+        Ok(model)
+    }
+}

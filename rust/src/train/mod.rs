@@ -1,0 +1,10 @@
+//! Training driver: runs the AOT train-step artifacts from Rust to produce
+//! the real checkpoints, gradients and optimizer states the paper
+//! compresses (§4). Python never runs here — only PJRT executions of the
+//! lowered L2 graphs (which embed the L1 Pallas kernels).
+
+pub mod data;
+pub mod driver;
+
+pub use data::{CnnBatchGen, TokenGen};
+pub use driver::{CnnTrainer, LmTrainer};

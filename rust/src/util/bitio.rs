@@ -1,0 +1,190 @@
+//! LSB-first bit-level writer/reader used by the Huffman coder.
+//!
+//! Convention: bits are accumulated into a `u64` from the low end
+//! (`buf |= code << nbits`), and bytes are emitted little-endian. The
+//! matching reader peeks the low `k` bits of its buffer. This is the same
+//! orientation zstd/FSE use; it permits branch-light refills via unaligned
+//! 64-bit loads.
+
+/// Bit writer: append variable-width codes, LSB-first.
+pub struct BitWriter {
+    out: Vec<u8>,
+    buf: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    /// New writer with a capacity hint (in bytes).
+    pub fn with_capacity(cap: usize) -> Self {
+        BitWriter { out: Vec::with_capacity(cap), buf: 0, nbits: 0 }
+    }
+
+    /// Append the low `len` bits of `code`. `len` must be ≤ 24 so that two
+    /// back-to-back writes never overflow the 64-bit buffer before a flush.
+    #[inline(always)]
+    pub fn put(&mut self, code: u32, len: u32) {
+        debug_assert!(len <= 24);
+        debug_assert!(len == 32 || code < (1 << len));
+        self.buf |= (code as u64) << self.nbits;
+        self.nbits += len;
+        if self.nbits >= 32 {
+            self.out.extend_from_slice(&(self.buf as u32).to_le_bytes());
+            self.buf >>= 32;
+            self.nbits -= 32;
+        }
+    }
+
+    /// Number of complete bytes emitted so far (excluding the partial tail).
+    pub fn bytes_written(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Flush the tail and return the byte stream.
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits > 0 {
+            self.out.push(self.buf as u8);
+            self.buf >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
+        self.out
+    }
+}
+
+/// Bit reader: peek/consume variable-width codes, LSB-first, with fast
+/// unaligned 64-bit refills and a safe tail path.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next byte to load into the buffer.
+    pos: usize,
+    buf: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// New reader over `data`.
+    pub fn new(data: &'a [u8]) -> Self {
+        let mut r = BitReader { data, pos: 0, buf: 0, nbits: 0 };
+        r.refill();
+        r
+    }
+
+    /// Top up the buffer to ≥ 56 valid bits (or everything left).
+    #[inline(always)]
+    pub fn refill(&mut self) {
+        if self.pos + 8 <= self.data.len() {
+            // Fast path: unaligned 64-bit load, then advance by the whole
+            // bytes we actually consumed.
+            let w = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.buf |= w << self.nbits;
+            let take = (63 - self.nbits) >> 3; // bytes that fit
+            self.pos += take as usize;
+            self.nbits += take * 8;
+        } else {
+            while self.nbits <= 56 && self.pos < self.data.len() {
+                self.buf |= (self.data[self.pos] as u64) << self.nbits;
+                self.pos += 1;
+                self.nbits += 8;
+            }
+        }
+    }
+
+    /// Peek the low `len` bits without consuming. Bits past end-of-stream
+    /// read as zero.
+    #[inline(always)]
+    pub fn peek(&self, len: u32) -> u32 {
+        debug_assert!(len <= 32);
+        (self.buf & ((1u64 << len) - 1)) as u32
+    }
+
+    /// Consume `len` bits.
+    #[inline(always)]
+    pub fn consume(&mut self, len: u32) {
+        debug_assert!(len <= self.nbits, "consumed past refill window");
+        self.buf >>= len;
+        self.nbits -= len;
+    }
+
+    /// Read and consume `len` bits (refills as needed).
+    #[inline]
+    pub fn read(&mut self, len: u32) -> u32 {
+        if self.nbits < len {
+            self.refill();
+        }
+        let v = self.peek(len);
+        self.consume(len);
+        v
+    }
+
+    /// Valid bits currently buffered.
+    #[inline]
+    pub fn available(&self) -> u32 {
+        self.nbits
+    }
+
+    /// True when the underlying stream and the buffer are both exhausted.
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.data.len() && self.nbits == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::with_capacity(64);
+        for i in 0..1000u32 {
+            w.put(i & 0x7F, 7);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..1000u32 {
+            assert_eq!(r.read(7), i & 0x7F);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let items: Vec<(u32, u32)> = (0..5000)
+            .map(|_| {
+                let len = 1 + (rng.next_u32() % 20);
+                let code = rng.next_u32() & ((1u32 << len) - 1);
+                (code, len)
+            })
+            .collect();
+        let mut w = BitWriter::with_capacity(1024);
+        for &(c, l) in &items {
+            w.put(c, l);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(c, l) in &items {
+            assert_eq!(r.read(l), c, "len={l}");
+        }
+    }
+
+    #[test]
+    fn empty_stream() {
+        let w = BitWriter::with_capacity(0);
+        let bytes = w.finish();
+        assert!(bytes.is_empty());
+        let r = BitReader::new(&bytes);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut w = BitWriter::with_capacity(8);
+        w.put(0b1011, 4);
+        w.put(0b01, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek(4), 0b1011);
+        assert_eq!(r.peek(4), 0b1011);
+        r.consume(4);
+        assert_eq!(r.read(2), 0b01);
+    }
+}

@@ -1,0 +1,43 @@
+//! Human-readable byte sizes and rates for CLI / bench output.
+
+/// Format a byte count as `"1.23 GB"` style.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a throughput in GB/s from bytes and seconds.
+pub fn gbps(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MB");
+    }
+
+    #[test]
+    fn rate() {
+        assert!((gbps(2_000_000_000, 2.0) - 1.0).abs() < 1e-9);
+        assert_eq!(gbps(100, 0.0), 0.0);
+    }
+}

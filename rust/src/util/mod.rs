@@ -1,0 +1,38 @@
+//! Small shared utilities: PRNG, bit I/O, JSON mini-parser, timers,
+//! human-readable sizes.
+
+pub mod bitio;
+pub mod human;
+pub mod json;
+pub mod prng;
+pub mod timer;
+
+pub use human::human_bytes;
+pub use prng::Xoshiro256;
+pub use timer::Timer;
+
+/// Read a little-endian `u32` from `buf` at `off`.
+#[inline]
+pub fn read_u32_le(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+}
+
+/// Read a little-endian `u64` from `buf` at `off`.
+#[inline]
+pub fn read_u64_le(buf: &[u8], off: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[off..off + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// Append a little-endian `u32` to `out`.
+#[inline]
+pub fn push_u32_le(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64` to `out`.
+#[inline]
+pub fn push_u64_le(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}

@@ -1,0 +1,141 @@
+//! Integration: codec over realistic model payloads, every category and
+//! dtype, with failure injection on the container.
+
+use zipnn::codec::{decompress, decompress_with, inspect, CodecConfig, Compressor, MethodPolicy};
+use zipnn::fp::DType;
+use zipnn::model::synthetic::{generate, paper_zoo, Category, SyntheticSpec};
+use zipnn::util::Xoshiro256;
+
+#[test]
+fn every_zoo_model_roundtrips() {
+    for spec in paper_zoo(0.05) {
+        let m = generate(&spec);
+        let raw = m.to_bytes();
+        let cfg = CodecConfig::for_dtype(m.dominant_dtype());
+        let comp = Compressor::new(cfg).compress(&raw).unwrap();
+        assert_eq!(decompress(&comp).unwrap(), raw, "{}", spec.name);
+        assert!(comp.len() < raw.len(), "{} must compress", spec.name);
+    }
+}
+
+#[test]
+fn every_policy_roundtrips_every_dtype() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    for cat in [
+        Category::RegularBF16,
+        Category::RegularF32,
+        Category::RegularF16,
+        Category::QuantizedSkewed,
+    ] {
+        let m = generate(&SyntheticSpec::new("m", cat, 2 << 20, rng.next_u64()));
+        let raw = m.to_bytes();
+        for policy in [
+            MethodPolicy::Auto,
+            MethodPolicy::Huffman,
+            MethodPolicy::Zstd,
+            MethodPolicy::Raw,
+        ] {
+            let cfg = CodecConfig::for_dtype(m.dominant_dtype()).with_policy(policy);
+            let comp = Compressor::new(cfg).compress(&raw).unwrap();
+            assert_eq!(decompress(&comp).unwrap(), raw, "{cat:?}/{policy:?}");
+        }
+    }
+}
+
+#[test]
+fn bit_flip_anywhere_never_roundtrips_silently() {
+    let m = generate(&SyntheticSpec::new("m", Category::RegularBF16, 1 << 20, 9));
+    let raw = m.to_bytes();
+    let comp = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+        .compress(&raw)
+        .unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    for _ in 0..40 {
+        let mut bad = comp.clone();
+        let at = rng.below(bad.len());
+        bad[at] ^= 1 << rng.below(8);
+        match decompress(&bad) {
+            Err(_) => {}
+            Ok(back) => assert_ne!(back, raw, "silent corruption at byte {at}"),
+        }
+    }
+}
+
+#[test]
+fn truncation_sweep_rejected() {
+    let m = generate(&SyntheticSpec::new("m", Category::RegularF32, 1 << 20, 10));
+    let raw = m.to_bytes();
+    let comp = Compressor::new(CodecConfig::for_dtype(DType::F32))
+        .compress(&raw)
+        .unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    for _ in 0..30 {
+        let cut = rng.below(comp.len());
+        assert!(decompress(&comp[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn thread_counts_agree() {
+    let m = generate(&SyntheticSpec::new("m", Category::RegularBF16, 6 << 20, 11));
+    let raw = m.to_bytes();
+    let serial = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+        .compress(&raw)
+        .unwrap();
+    for threads in [2, 3, 8] {
+        let par = Compressor::new(CodecConfig::for_dtype(DType::BF16).with_threads(threads))
+            .compress(&raw)
+            .unwrap();
+        assert_eq!(par, serial, "threads={threads}");
+        assert_eq!(decompress_with(&par, threads).unwrap(), raw);
+    }
+}
+
+#[test]
+fn inspect_totals_consistent() {
+    let m = generate(&SyntheticSpec::new(
+        "m",
+        Category::CleanF32 { keep_bits: 10, frac_clean: 1.0 },
+        3 << 20,
+        12,
+    ));
+    let raw = m.to_bytes();
+    let comp = Compressor::new(CodecConfig::for_dtype(DType::F32))
+        .compress(&raw)
+        .unwrap();
+    let info = inspect(&comp).unwrap();
+    assert_eq!(info.header.total_len as usize, raw.len());
+    let totals = info.group_totals();
+    assert_eq!(totals.iter().map(|(_, r)| r).sum::<u64>() as usize, raw.len());
+    assert_eq!(
+        totals.iter().map(|(c, _)| c).sum::<u64>(),
+        info.payload_len()
+    );
+    // clean model: last group (mantissa-low) must be all-zero truncated
+    assert_eq!(totals[3].0, 0, "clean low byte should be Zero-coded");
+}
+
+#[test]
+fn weird_sizes_roundtrip() {
+    // chunk boundaries, element alignment, tiny inputs
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    for n in [
+        0usize,
+        1,
+        2,
+        3,
+        4,
+        255,
+        256 * 1024 - 2,
+        256 * 1024,
+        256 * 1024 + 2,
+        1_000_001,
+    ] {
+        let mut raw = vec![0u8; n];
+        rng.fill_bytes(&mut raw);
+        let comp = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+            .compress(&raw)
+            .unwrap();
+        assert_eq!(decompress(&comp).unwrap(), raw, "n={n}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration: delta compression + checkpoint store over simulated
+//! training trajectories.
+
+use zipnn::codec::{CodecConfig, Compressor, MethodPolicy};
+use zipnn::delta::{BaseStrategy, CheckpointStore, DeltaCodec};
+use zipnn::fp::dtype::f32_to_bf16_bits;
+use zipnn::fp::DType;
+use zipnn::util::Xoshiro256;
+
+fn trajectory(n_ckpts: usize, n_params: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut w: Vec<f64> = (0..n_params).map(|_| rng.normal() * 0.02).collect();
+    let mut out = Vec::new();
+    for e in 0..n_ckpts {
+        let lr = 2e-4 / (1.0 + e as f64 / 3.0);
+        for v in w.iter_mut() {
+            *v += rng.normal() * lr;
+        }
+        let mut bytes = Vec::with_capacity(2 * n_params);
+        for v in &w {
+            bytes.extend_from_slice(&f32_to_bf16_bits(*v as f32).to_le_bytes());
+        }
+        out.push(bytes);
+    }
+    out
+}
+
+#[test]
+fn auto_at_least_close_to_best_forced_method() {
+    // §4.2: the auto selector should track min(Huffman, Zstd) per epoch
+    // (within per-chunk granularity slack).
+    let ckpts = trajectory(6, 150_000, 1);
+    let auto = DeltaCodec::new(DType::BF16);
+    let huff = DeltaCodec::new(DType::BF16).with_policy(MethodPolicy::Huffman);
+    let zstd = DeltaCodec::new(DType::BF16).with_policy(MethodPolicy::Zstd);
+    for w in ckpts.windows(2) {
+        let a = auto.encode(&w[0], &w[1]).unwrap().len() as f64;
+        let h = huff.encode(&w[0], &w[1]).unwrap().len() as f64;
+        let z = zstd.encode(&w[0], &w[1]).unwrap().len() as f64;
+        let best = h.min(z);
+        assert!(a <= best * 1.08, "auto {a} vs best {best}");
+    }
+}
+
+#[test]
+fn delta_improves_as_training_converges() {
+    let ckpts = trajectory(8, 120_000, 2);
+    let dc = DeltaCodec::new(DType::BF16);
+    let first = dc.encode(&ckpts[0], &ckpts[1]).unwrap().len();
+    let last = dc.encode(&ckpts[6], &ckpts[7]).unwrap().len();
+    assert!(
+        last < first,
+        "deltas should shrink with convergence: {first} -> {last}"
+    );
+}
+
+#[test]
+fn long_chain_recovery_is_exact() {
+    let ckpts = trajectory(20, 40_000, 3);
+    let mut store = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(20));
+    for c in &ckpts {
+        store.push(c).unwrap();
+    }
+    // recover the deepest checkpoint through 19 chained deltas
+    assert_eq!(&store.recover(19).unwrap(), &ckpts[19]);
+    // and a middle one
+    assert_eq!(&store.recover(10).unwrap(), &ckpts[10]);
+}
+
+#[test]
+fn fixed_base_recovery_never_chains() {
+    let ckpts = trajectory(12, 30_000, 4);
+    let mut store = CheckpointStore::new(DType::BF16, BaseStrategy::FixedBase(4));
+    for c in &ckpts {
+        store.push(c).unwrap();
+    }
+    for (i, c) in ckpts.iter().enumerate() {
+        assert_eq!(&store.recover(i).unwrap(), c, "ckpt {i}");
+    }
+}
+
+#[test]
+fn cross_size_delta_rejected() {
+    let dc = DeltaCodec::new(DType::BF16);
+    assert!(dc.encode(&[0u8; 100], &[0u8; 102]).is_err());
+}
+
+#[test]
+fn delta_of_unrelated_models_still_roundtrips() {
+    // worst case: nothing in common — delta must still be lossless
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut a = vec![0u8; 500_000];
+    let mut b = vec![0u8; 500_000];
+    rng.fill_bytes(&mut a);
+    rng.fill_bytes(&mut b);
+    let dc = DeltaCodec::new(DType::BF16);
+    let d = dc.encode(&a, &b).unwrap();
+    assert_eq!(dc.decode(&a, &d).unwrap(), b);
+}
+
+#[test]
+fn store_compressed_totals_reported() {
+    let ckpts = trajectory(10, 50_000, 6);
+    let mut chain = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(5));
+    let mut solo = CheckpointStore::new(DType::BF16, BaseStrategy::Standalone);
+    for c in &ckpts {
+        chain.push(c).unwrap();
+        solo.push(c).unwrap();
+    }
+    assert!(chain.total_bytes() < solo.total_bytes());
+    assert!(chain.mean_delta_pct() < 100.0);
+    assert!(solo.mean_delta_pct().is_nan(), "standalone has no deltas");
+    // compressing a standalone checkpoint directly matches the store's entry
+    let direct = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+        .compress(&ckpts[0])
+        .unwrap();
+    assert_eq!(solo.entries()[0].bytes.len(), direct.len());
+}

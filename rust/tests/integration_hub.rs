@@ -1,0 +1,107 @@
+//! Integration: hub server/client over loopback TCP with compression.
+
+use zipnn::codec::CodecConfig;
+use zipnn::fp::DType;
+use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+
+#[test]
+fn upload_download_roundtrip_compressed_and_raw() {
+    let server = HubServer::start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+    let model = generate(&SyntheticSpec::new(
+        "llama-analog",
+        Category::RegularBF16,
+        2 << 20,
+        1,
+    ));
+    let raw = model.to_bytes();
+    let mut up_sim = NetSim::new(NetProfile::UPLOAD, 1);
+
+    let rep_c = client
+        .upload("llama", &raw, Some(CodecConfig::for_dtype(DType::BF16)), &mut up_sim)
+        .unwrap();
+    assert!(rep_c.wire_len < raw.len(), "compressed upload smaller");
+    assert!((55.0..75.0).contains(&rep_c.pct()), "pct {}", rep_c.pct());
+
+    let rep_r = client.upload("llama", &raw, None, &mut up_sim).unwrap();
+    assert_eq!(rep_r.wire_len, raw.len());
+    assert_eq!(rep_r.codec_secs, 0.0);
+    // compressed upload moves fewer simulated bytes -> less transfer time
+    assert!(rep_c.transfer_secs < rep_r.transfer_secs);
+
+    let mut down_sim = NetSim::new(NetProfile::CLOUD_CACHED, 2);
+    let (got_c, drep_c) = client.download("llama", true, &mut down_sim).unwrap();
+    assert_eq!(got_c, raw, "compressed path returns exact bytes");
+    assert!(drep_c.codec_secs > 0.0);
+    let (got_r, drep_r) = client.download("llama", false, &mut down_sim).unwrap();
+    assert_eq!(got_r, raw);
+    assert!(drep_r.wire_len > drep_c.wire_len);
+
+    let names = client.list().unwrap();
+    assert!(names.contains(&"llama.znn".to_string()));
+    assert!(names.contains(&"llama".to_string()));
+    server.shutdown();
+}
+
+#[test]
+fn missing_blob_errors() {
+    let server = HubServer::start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+    let mut sim = NetSim::new(NetProfile::CLOUD_FIRST, 3);
+    assert!(client.download("nope", false, &mut sim).is_err());
+    // connection survives the error response
+    let names = client.list().unwrap();
+    assert!(names.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn many_clients_concurrent() {
+    let server = HubServer::start().unwrap();
+    let addr = server.addr().to_string();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = HubClient::connect(&addr).unwrap();
+                let data = vec![i as u8; 100_000];
+                let mut sim = NetSim::new(NetProfile::UPLOAD, i);
+                c.upload(&format!("m{i}"), &data, None, &mut sim).unwrap();
+                let (got, _) = c.download(&format!("m{i}"), false, &mut sim).unwrap();
+                assert_eq!(got, data);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+/// The paper's end-to-end claim (Fig. 10): when bandwidth is low, the
+/// compressed path wins end-to-end despite codec time.
+#[test]
+fn slow_network_favors_compression() {
+    let server = HubServer::start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+    let model = generate(&SyntheticSpec::new("m", Category::RegularBF16, 4 << 20, 5));
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::HOME_FIRST, 7);
+    let rep_c = client
+        .upload("m", &raw, Some(CodecConfig::for_dtype(DType::BF16)), &mut sim)
+        .unwrap();
+    let rep_r = client.upload("m", &raw, None, &mut sim).unwrap();
+    assert!(rep_c.transfer_secs < rep_r.transfer_secs);
+    if !cfg!(debug_assertions) {
+        // The full end-to-end claim needs release-build codec throughput
+        // (debug builds compress ~100x slower than the paper's setup).
+        assert!(
+            rep_c.total_secs() < rep_r.total_secs(),
+            "compressed e2e {} !< raw {}",
+            rep_c.total_secs(),
+            rep_r.total_secs()
+        );
+    }
+    server.shutdown();
+}

@@ -1,0 +1,172 @@
+//! Integration: PJRT runtime executing the AOT artifacts, and the training
+//! drivers on top. Requires `make artifacts` (tests no-op with a notice if
+//! the directory is missing so `cargo test` stays green pre-build).
+
+use zipnn::codec::{decompress, CodecConfig, Compressor};
+use zipnn::fp::{split_groups, GroupLayout};
+use zipnn::model::Model;
+use zipnn::runtime::{literal_to_bytes, make_literal, Runtime};
+use zipnn::train::{CnnTrainer, LmTrainer};
+use zipnn::util::Xoshiro256;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn byteplanes_artifact_matches_rust_split() {
+    let Some(rt) = runtime() else { return };
+    let n = 128 * 1024usize;
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut bytes = vec![0u8; 2 * n];
+    rng.fill_bytes(&mut bytes);
+
+    let x = make_literal("u16", &[n], &bytes).unwrap();
+    let outs = rt.exec("byteplanes_bf16_split", &[x]).unwrap();
+    let hi = literal_to_bytes(&outs[0]).unwrap();
+    let lo = literal_to_bytes(&outs[1]).unwrap();
+
+    // The Rust codec's own transform must agree with the Pallas kernel.
+    let layout = GroupLayout { elem: 2, exp_group: 1 };
+    let groups = split_groups(&bytes, layout).unwrap();
+    assert_eq!(hi, groups[0], "pallas hi plane == rust exponent group");
+    assert_eq!(lo, groups[1]);
+
+    // merge artifact inverts
+    let hi_l = make_literal("u8", &[n], &hi).unwrap();
+    let lo_l = make_literal("u8", &[n], &lo).unwrap();
+    let back = rt.exec("byteplanes_bf16_merge", &[hi_l, lo_l]).unwrap();
+    assert_eq!(literal_to_bytes(&back[0]).unwrap(), bytes);
+}
+
+#[test]
+fn fp32_byteplanes_artifact_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let n = 64 * 1024usize;
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut bytes = vec![0u8; 4 * n];
+    rng.fill_bytes(&mut bytes);
+    let x = make_literal("u32", &[n], &bytes).unwrap();
+    let outs = rt.exec("byteplanes_fp32_split", &[x]).unwrap();
+    let layout = GroupLayout { elem: 4, exp_group: 3 };
+    let groups = split_groups(&bytes, layout).unwrap();
+    for (o, g) in outs.iter().zip(&groups) {
+        assert_eq!(&literal_to_bytes(o).unwrap(), g);
+    }
+    let ins: Vec<_> = outs
+        .iter()
+        .map(|o| make_literal("u8", &[n], &literal_to_bytes(o).unwrap()).unwrap())
+        .collect();
+    let back = rt.exec("byteplanes_fp32_merge", &ins).unwrap();
+    assert_eq!(literal_to_bytes(&back[0]).unwrap(), bytes);
+}
+
+#[test]
+fn exp_hist_artifact_matches_rust_histogram() {
+    let Some(rt) = runtime() else { return };
+    let n = 128 * 1024usize;
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let mut bytes = Vec::with_capacity(2 * n);
+    for _ in 0..n {
+        let w = (rng.normal() * 0.02) as f32;
+        bytes.extend_from_slice(&zipnn::fp::dtype::f32_to_bf16_bits(w).to_le_bytes());
+    }
+    let x = make_literal("u16", &[n], &bytes).unwrap();
+    let outs = rt.exec("exp_hist_bf16", &[x]).unwrap();
+    let hist = outs[0].to_vec::<u32>().unwrap();
+    let rust_hist = zipnn::fp::stats::exponent_histogram(&bytes, zipnn::fp::DType::BF16);
+    for i in 0..256 {
+        assert_eq!(hist[i] as u64, rust_hist[i], "bin {i}");
+    }
+}
+
+#[test]
+fn xor_delta_artifact_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let n = 64 * 1024usize;
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let mut a = vec![0u8; 4 * n];
+    let mut b = vec![0u8; 4 * n];
+    rng.fill_bytes(&mut a);
+    rng.fill_bytes(&mut b);
+    let la = make_literal("u32", &[n], &a).unwrap();
+    let lb = make_literal("u32", &[n], &b).unwrap();
+    let outs = rt.exec("xor_delta_u32", &[la, lb]).unwrap();
+    let d = literal_to_bytes(&outs[0]).unwrap();
+    assert_eq!(d, zipnn::delta::xor_delta(&a, &b).unwrap());
+}
+
+#[test]
+fn lm_tiny_trains_and_checkpoints_compress() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = LmTrainer::new(&rt, "lm_tiny", 7).unwrap();
+    let first = tr.step(5e-3).unwrap();
+    assert!(first.is_finite() && first > 0.0);
+    for _ in 0..11 {
+        tr.step(5e-3).unwrap();
+    }
+    let last = *tr.losses.last().unwrap();
+    assert!(
+        last < first,
+        "loss should decrease: first {first} last {last}"
+    );
+
+    // checkpoint is a real bf16 model whose bytes compress like the paper
+    let ckpt: Model = tr.export_model().unwrap();
+    assert_eq!(ckpt.dominant_dtype(), zipnn::fp::DType::BF16);
+    let raw = ckpt.to_bytes();
+    let comp = Compressor::new(CodecConfig::for_dtype(zipnn::fp::DType::BF16))
+        .compress(&raw)
+        .unwrap();
+    assert_eq!(decompress(&comp).unwrap(), raw);
+    let pct = comp.len() as f64 / raw.len() as f64 * 100.0;
+    assert!(pct < 80.0, "bf16 checkpoint should compress: {pct}%");
+
+    // gradients and optimizer export with matching structure
+    let grads = tr.export_grads().unwrap();
+    assert_eq!(grads.tensors.len(), ckpt.tensors.len());
+    let (m, v) = tr.export_optimizer().unwrap();
+    assert_eq!(m.tensors.len(), ckpt.tensors.len());
+    assert_eq!(v.tensors.len(), ckpt.tensors.len());
+
+    // embedding-gradient sparsity (Fig. 7 mechanism): most vocab rows
+    // unseen in a batch -> their gradient rows are exactly zero.
+    let emb_grad = grads.tensor("embed.weight").unwrap();
+    let zs = zipnn::stats::zero_stats(&emb_grad.data);
+    assert!(
+        zs.zero_frac > 0.5,
+        "embedding grads should be row-sparse: {}",
+        zs.zero_frac
+    );
+}
+
+#[test]
+fn cnn_tiny_trains() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = CnnTrainer::new(&rt, "cnn_tiny", 11).unwrap();
+    let first = tr.step(0.05).unwrap();
+    for _ in 0..15 {
+        tr.step(0.05).unwrap();
+    }
+    let last = *tr.losses.last().unwrap();
+    assert!(last < first, "cnn loss should decrease: {first} -> {last}");
+    let ckpt = tr.export_model().unwrap();
+    assert_eq!(ckpt.dominant_dtype(), zipnn::fp::DType::F32);
+    // fp32 bit pattern survives the bitcast export exactly
+    let stem = ckpt.tensor("stem.conv").unwrap();
+    assert!(stem.to_f32().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn eval_loss_close_to_train_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut tr = LmTrainer::new(&rt, "lm_tiny", 13).unwrap();
+    let l = tr.eval_loss().unwrap();
+    assert!(l.is_finite() && l > 0.0 && l < 10.0, "loss {l}");
+}
