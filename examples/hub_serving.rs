@@ -28,8 +28,10 @@ fn main() -> anyhow::Result<()> {
     let mut models = Vec::new();
     for (i, (name, cat)) in zoo.iter().enumerate() {
         let m = generate(&SyntheticSpec::new(name, *cat, 32 << 20, 100 + i as u64));
-        let raw = m.to_bytes();
-        pipeline.submit(WorkItem { name: name.to_string(), data: raw.clone() })?;
+        // Shared buffer: the pipeline and the hub section below use the
+        // same allocation — WorkItem clones the Arc, not the bytes.
+        let raw: std::sync::Arc<[u8]> = m.to_bytes().into();
+        pipeline.submit(WorkItem::new(*name, std::sync::Arc::clone(&raw)))?;
         models.push((name.to_string(), m.dominant_dtype(), raw));
     }
     let (results, metrics) = pipeline.finish();
@@ -67,8 +69,8 @@ fn main() -> anyhow::Result<()> {
             let mut sim = NetSim::new(profile, 2);
             let (raw_back, rep_r) = client.download(name, false, &mut sim)?;
             let (comp_back, rep_c) = client.download(name, true, &mut sim)?;
-            assert_eq!(&raw_back, raw);
-            assert_eq!(&comp_back, raw);
+            assert_eq!(raw_back[..], raw[..]);
+            assert_eq!(comp_back[..], raw[..]);
             table.row(&[
                 name.clone(),
                 human_bytes(raw.len() as u64),

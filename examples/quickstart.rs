@@ -60,7 +60,28 @@ fn main() -> anyhow::Result<()> {
         (1.0 - compressed.len() as f64 / vanilla.len() as f64) * 100.0,
     );
 
-    // 5. Model container I/O.
+    // 5. Streaming codec: compress/decompress through std::io adapters
+    //    without ever materializing the compressed blob's peer buffer.
+    {
+        use std::io::{Read, Write};
+        use zipnn::codec::{ZnnReader, ZnnWriter};
+        let mut w = ZnnWriter::new(Vec::new(), CodecConfig::for_dtype(DType::BF16))?;
+        for part in raw.chunks(1 << 20) {
+            w.write_all(part)?; // arrives in arbitrary pieces
+        }
+        let streamed = w.finish()?;
+        let mut r = ZnnReader::new(streamed.as_slice())?;
+        let mut back = Vec::new();
+        r.read_to_end(&mut back)?;
+        assert_eq!(back, raw);
+        println!(
+            "\nstreaming container: {} ({:.1}%), roundtrip OK",
+            human_bytes(streamed.len() as u64),
+            streamed.len() as f64 / raw.len() as f64 * 100.0
+        );
+    }
+
+    // 6. Model container I/O.
     let dir = std::env::temp_dir().join("zipnn_quickstart");
     std::fs::create_dir_all(&dir)?;
     let path = dir.join("model.znnm");

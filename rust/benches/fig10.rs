@@ -6,11 +6,14 @@
 //! seconds are *measured* on this machine. Error bars come from repeated
 //! simulated transfers (the paper: variance was almost entirely network).
 
-use zipnn::bench_support::{BenchEnv, Table};
+use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, BenchEnv, Table};
 use zipnn::codec::CodecConfig;
 use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
 use zipnn::util::human_bytes;
+
+#[global_allocator]
+static ALLOC: zipnn::bench_support::CountingAlloc = zipnn::bench_support::CountingAlloc;
 
 fn main() {
     let env = BenchEnv::from_env();
@@ -37,9 +40,23 @@ fn main() {
         // uploads (5 sims like the paper's 1st-timer runs)
         let mut sim = NetSim::new(NetProfile::UPLOAD, seed);
         let rep_raw = client.upload(name, &raw, None, &mut sim).unwrap();
+        let allocs_before = alloc_count();
         let rep_c = client
             .upload(name, &raw, Some(CodecConfig::for_dtype(dtype)), &mut sim)
             .unwrap();
+        let upload_allocs = alloc_count() - allocs_before;
+        let mb = raw.len() as f64 / (1024.0 * 1024.0);
+        json_line(
+            "fig10",
+            &[
+                ("model_seed", seed as f64),
+                ("raw_mb", mb),
+                ("wire_pct", rep_c.pct()),
+                ("codec_mb_s", mb / rep_c.codec_secs.max(1e-9)),
+                ("allocs_per_mb", upload_allocs as f64 / mb),
+                ("peak_rss_kb", peak_rss_kb().unwrap_or(0) as f64),
+            ],
+        );
         let stats = |wire: usize, codec: f64, profile: NetProfile, reps: usize| {
             let mut s = NetSim::new(profile, seed * 31);
             let times: Vec<f64> =

@@ -4,11 +4,15 @@
 //! Paper: without grouping the fraction compresses poorly; with grouping
 //! byte1 ≈ 95.6% (barely), byte2 ≈ 37.5%, byte3 ≈ 0% (all zeros).
 
-use zipnn::bench_support::{BenchEnv, Table};
+use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, BenchEnv, Table};
 use zipnn::codec::{compress_with_report, CodecConfig};
 use zipnn::fp::{split_groups, DType, GroupLayout};
 use zipnn::huffman;
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::util::Timer;
+
+#[global_allocator]
+static ALLOC: zipnn::bench_support::CountingAlloc = zipnn::bench_support::CountingAlloc;
 
 fn main() {
     let env = BenchEnv::from_env();
@@ -21,8 +25,12 @@ fn main() {
     let raw = m.to_bytes();
 
     // With byte grouping (ZipNN):
+    let allocs_before = alloc_count();
+    let t = Timer::start();
     let (comp_bg, reps) =
         compress_with_report(CodecConfig::for_dtype(DType::F32), &raw).unwrap();
+    let comp_secs = t.secs();
+    let comp_allocs = alloc_count() - allocs_before;
     // Without byte grouping: exponent extracted, fraction kept interleaved.
     // Emulate by splitting exp group out and huffman-compressing the rest
     // as one stream (the paper's "no BG" configuration).
@@ -81,4 +89,15 @@ fn main() {
     ]);
     println!("== Figure 6: clean FP32 model with/without Byte Grouping ==");
     table.print();
+    let mb = raw.len() as f64 / (1024.0 * 1024.0);
+    json_line(
+        "fig6",
+        &[
+            ("raw_mb", mb),
+            ("compressed_pct", comp_bg.len() as f64 / raw.len() as f64 * 100.0),
+            ("throughput_mb_s", mb / comp_secs),
+            ("allocs_per_mb", comp_allocs as f64 / mb),
+            ("peak_rss_kb", peak_rss_kb().unwrap_or(0) as f64),
+        ],
+    );
 }

@@ -1,8 +1,17 @@
 //! Minimal benchmarking harness + table printers (criterion is not
 //! available offline; `cargo bench` targets use `harness = false` and call
 //! into this module to print the paper's tables/series).
+//!
+//! Besides timing, the harness reports **memory-shape** metrics so the
+//! streaming codec's wins are visible in the bench trajectory:
+//! [`peak_rss_kb`] (Linux `VmHWM`) and a process-wide allocation counter
+//! ([`CountingAlloc`]) a bench binary opts into with
+//! `#[global_allocator]`. Benches emit machine-readable results with
+//! [`json_line`], one JSON object per line.
 
 use crate::util::Timer;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Timing statistics of repeated runs.
 #[derive(Debug, Clone, Copy)]
@@ -85,6 +94,82 @@ impl Table {
     }
 }
 
+/// Peak resident set size of this process in KiB (Linux `VmHWM`), `None`
+/// where `/proc` is unavailable.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Counting global allocator: wraps [`System`] and counts every
+/// allocation (and reallocation). A bench or test binary opts in with
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: zipnn::bench_support::CountingAlloc =
+///     zipnn::bench_support::CountingAlloc;
+/// ```
+///
+/// and samples [`alloc_count`] around the region of interest. This is how
+/// the streaming codec's "allocations independent of input size" claim is
+/// asserted.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations since process start (0 unless the binary installed
+/// [`CountingAlloc`] as its global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Emit one machine-readable result line:
+/// `{"bench":"<name>","<k>":<v>,...}`. Numeric values are printed with
+/// enough precision for trend plots; strings pass through JSON-escaped
+/// minimally (benches only use plain identifiers).
+pub fn json_line(bench: &str, fields: &[(&str, f64)]) {
+    let mut s = format!("{{\"bench\":\"{bench}\"");
+    for (k, v) in fields {
+        if !v.is_finite() {
+            // inf/NaN are not valid JSON; a zero-duration division on a
+            // coarse clock must not corrupt the result stream
+            s.push_str(&format!(",\"{k}\":null"));
+        } else if v.fract() == 0.0 && v.abs() < 1e15 {
+            s.push_str(&format!(",\"{k}\":{}", *v as i64));
+        } else {
+            s.push_str(&format!(",\"{k}\":{v:.6}"));
+        }
+    }
+    s.push('}');
+    println!("{s}");
+}
+
 /// Bench environment knobs: scale factors via env vars so CI stays fast
 /// while full runs match the paper's sizes.
 pub struct BenchEnv {
@@ -130,5 +215,18 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row(&["1".into(), "2".into()]);
         t.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn peak_rss_present_on_linux() {
+        if cfg!(target_os = "linux") {
+            let kb = peak_rss_kb().expect("VmHWM on linux");
+            assert!(kb > 0);
+        }
+    }
+
+    #[test]
+    fn json_line_smoke() {
+        json_line("test", &[("a", 1.0), ("b", 2.5)]); // smoke: no panic
     }
 }

@@ -1,23 +1,20 @@
-//! Compression side of the ZipNN codec.
+//! Compression side of the ZipNN codec: a thin wrapper over the
+//! super-chunk streaming core ([`crate::codec::stream`]) that assembles the
+//! one-shot `.znn` (`ZNN1`) container — header, full stream table, payload.
+//! The emitted bytes are identical to the historical monolithic
+//! implementation (the golden-bytes test pins this).
 
-use crate::codec::auto::{AutoPolicy, Decision, Method};
-use crate::codec::container::{write_header, ContainerHeader, StreamEntry};
-use crate::codec::parallel::{run_tasks, SUPER_CHUNK};
-use crate::codec::{checksum64, CodecConfig, MethodPolicy};
+use crate::codec::container::{write_header, ContainerHeader};
+use crate::codec::parallel::{run_tasks_with, SUPER_CHUNK};
+use crate::codec::stream::compress_super_chunk;
+use crate::codec::{checksum64, CodecConfig};
 use crate::error::Result;
-use crate::fp::{split_groups, GroupLayout};
-use crate::huffman;
-use crate::lz;
-use crate::stats::zero_stats;
-
-/// One compressed stream plus its table entry.
-struct StreamOut {
-    entry: StreamEntry,
-    bytes: Vec<u8>,
-}
+use crate::fp::GroupLayout;
 
 /// The ZipNN compressor. Construct with a [`CodecConfig`], then call
-/// [`Compressor::compress`] — thread-safe and reusable.
+/// [`Compressor::compress`] — thread-safe and reusable. For
+/// chunk-incremental compression that never materializes the input or
+/// output, use [`crate::codec::ZnnWriter`] instead.
 pub struct Compressor {
     cfg: CodecConfig,
 }
@@ -51,40 +48,49 @@ impl Compressor {
     /// Compress `data` into a self-contained `.znn` container.
     pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
         // Buffers that are not element-aligned cannot be byte-grouped;
-        // fall back to a flat layout for the whole buffer.
+        // fall back to a flat layout for the whole buffer. (The streaming
+        // writer instead carries the sub-element tail in its trailer.)
         let layout = if data.len() % self.cfg.layout.elem == 0 {
             self.cfg.layout
         } else {
             GroupLayout::flat()
         };
         let chunk_size = self.cfg.chunk_size.max(layout.elem) / layout.elem * layout.elem;
-        let n_chunks = data.len().div_ceil(chunk_size).max(if data.is_empty() { 0 } else { 1 });
+        let n_chunks = data.len().div_ceil(chunk_size);
         let groups = layout.groups();
 
-        // Super-chunk tasks: deterministic under any thread count.
+        // Super-chunk tasks over the shared streaming core: deterministic
+        // under any thread count, one scratch arena per worker.
         let n_super = n_chunks.div_ceil(SUPER_CHUNK);
-        let outs: Vec<Vec<StreamOut>> = run_tasks(n_super, self.cfg.threads, |si| {
-            let mut policy = AutoPolicy::new(groups, self.cfg.skip_window);
-            let lo = si * SUPER_CHUNK;
-            let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
-            let mut streams = Vec::with_capacity((hi - lo) * groups);
-            for c in lo..hi {
-                let start = c * chunk_size;
-                let end = (start + chunk_size).min(data.len());
-                let chunk = &data[start..end];
-                let gs = split_groups(chunk, layout).expect("aligned by construction");
-                for (gi, g) in gs.iter().enumerate() {
-                    streams.push(self.compress_stream(gi, g, &mut policy));
-                }
-            }
-            streams
-        });
+        let super_bytes = SUPER_CHUNK * chunk_size;
+        let cfg = &self.cfg;
+        let supers: Vec<(Vec<crate::codec::StreamEntry>, Vec<u8>)> = run_tasks_with(
+            n_super,
+            self.cfg.threads,
+            Vec::new,
+            |group_scratch, si| {
+                let lo = si * super_bytes;
+                let hi = ((si + 1) * super_bytes).min(data.len());
+                let mut entries = Vec::with_capacity(SUPER_CHUNK * groups);
+                let mut payload = Vec::new();
+                compress_super_chunk(
+                    cfg,
+                    layout,
+                    chunk_size,
+                    &data[lo..hi],
+                    group_scratch,
+                    &mut entries,
+                    &mut payload,
+                );
+                (entries, payload)
+            },
+        );
 
         let mut entries = Vec::with_capacity(n_chunks * groups);
         let mut payload_len = 0usize;
-        for s in outs.iter().flatten() {
-            entries.push(s.entry);
-            payload_len += s.bytes.len();
+        for (es, payload) in &supers {
+            entries.extend_from_slice(es);
+            payload_len += payload.len();
         }
         let header = ContainerHeader {
             layout,
@@ -95,110 +101,10 @@ impl Compressor {
         };
         let mut out = write_header(&header, &entries);
         out.reserve(payload_len);
-        for s in outs.iter().flatten() {
-            out.extend_from_slice(&s.bytes);
+        for (_, payload) in &supers {
+            out.extend_from_slice(payload);
         }
         Ok(out)
-    }
-
-    /// Compress one group stream according to the configured policy.
-    fn compress_stream(&self, group: usize, data: &[u8], policy: &mut AutoPolicy) -> StreamOut {
-        let raw_len = data.len() as u32;
-        let raw = |data: &[u8]| StreamOut {
-            entry: StreamEntry { method: Method::Raw, comp_len: raw_len, raw_len },
-            bytes: data.to_vec(),
-        };
-        match self.cfg.policy {
-            MethodPolicy::Raw => raw(data),
-            MethodPolicy::Huffman => self.huffman_or_raw(data, None, group, policy, false),
-            MethodPolicy::Zstd => self.zstd_or_raw(data),
-            MethodPolicy::Auto => {
-                if policy.take_skip(group) {
-                    return raw(data);
-                }
-                // One histogram pass feeds both the decision and Huffman.
-                let hist = crate::stats::byte_histogram(data);
-                match policy.decide_with_hist(data, &hist) {
-                    Decision::SkipRaw => raw(data),
-                    Decision::Zero => StreamOut {
-                        entry: StreamEntry { method: Method::Zero, comp_len: 0, raw_len },
-                        bytes: Vec::new(),
-                    },
-                    Decision::TryZstd => self.zstd_or_raw(data),
-                    Decision::TryHuffman => {
-                        self.huffman_or_raw(data, Some(&hist), group, policy, true)
-                    }
-                }
-            }
-        }
-    }
-
-    fn huffman_or_raw(
-        &self,
-        data: &[u8],
-        hist: Option<&[u64; 256]>,
-        group: usize,
-        policy: &mut AutoPolicy,
-        report: bool,
-    ) -> StreamOut {
-        let enc = match hist {
-            Some(h) => huffman::compress_with_hist(data, h),
-            None => huffman::compress(data),
-        };
-        if report {
-            policy.report(group, data.len(), enc.len());
-        }
-        if enc.len() < data.len() {
-            StreamOut {
-                entry: StreamEntry {
-                    method: Method::Huffman,
-                    comp_len: enc.len() as u32,
-                    raw_len: data.len() as u32,
-                },
-                bytes: enc,
-            }
-        } else {
-            StreamOut {
-                entry: StreamEntry {
-                    method: Method::Raw,
-                    comp_len: data.len() as u32,
-                    raw_len: data.len() as u32,
-                },
-                bytes: data.to_vec(),
-            }
-        }
-    }
-
-    fn zstd_or_raw(&self, data: &[u8]) -> StreamOut {
-        // An all-zero stream is cheaper as Zero even under forced-Zstd.
-        if !data.is_empty() && zero_stats(data).zero_frac >= 1.0 {
-            return StreamOut {
-                entry: StreamEntry {
-                    method: Method::Zero,
-                    comp_len: 0,
-                    raw_len: data.len() as u32,
-                },
-                bytes: Vec::new(),
-            };
-        }
-        match lz::zstd_compress(data, self.cfg.zstd_level) {
-            Ok(enc) if enc.len() < data.len() => StreamOut {
-                entry: StreamEntry {
-                    method: Method::Zstd,
-                    comp_len: enc.len() as u32,
-                    raw_len: data.len() as u32,
-                },
-                bytes: enc,
-            },
-            _ => StreamOut {
-                entry: StreamEntry {
-                    method: Method::Raw,
-                    comp_len: data.len() as u32,
-                    raw_len: data.len() as u32,
-                },
-                bytes: data.to_vec(),
-            },
-        }
     }
 }
 
@@ -255,7 +161,7 @@ mod tests {
         let cfg = CodecConfig::vanilla_zstd();
         let comp = Compressor::new(cfg).compress(&data).unwrap();
         let info = crate::codec::container::parse(&comp).unwrap();
-        assert!(info.entries.iter().all(|e| e.method == Method::Zstd));
+        assert!(info.entries.iter().all(|e| e.method == crate::codec::Method::Zstd));
         assert_eq!(decompress(&comp).unwrap(), data);
     }
 }

@@ -113,6 +113,44 @@ pub fn write_header(h: &ContainerHeader, entries: &[StreamEntry]) -> Vec<u8> {
     out
 }
 
+/// Largest accepted declared chunk size (corruption guard: readers size
+/// buffers from the header).
+pub(crate) const MAX_CHUNK_SIZE: u32 = 1 << 30;
+
+/// Parse and validate the fixed 20 header bytes that follow the magic
+/// (version, flags, layout, chunk size, total length, chunk count).
+/// Shared by the buffer parser and the streaming [`crate::codec::stream`]
+/// reader so the two paths cannot drift. Returns
+/// `(flags, layout, chunk_size, total_len, n_chunks)`.
+pub(crate) fn parse_fixed_header(
+    head: &[u8; 20],
+) -> Result<(u8, GroupLayout, u32, u64, u32)> {
+    if head[0] != VERSION {
+        return Err(Error::Corrupt(format!("unsupported version {}", head[0])));
+    }
+    let flags = head[1];
+    let elem = head[2] as usize;
+    let exp_group = head[3] as usize;
+    if elem == 0 || elem > 16 || exp_group >= elem {
+        return Err(Error::Corrupt(format!(
+            "bad layout elem={elem} exp_group={exp_group}"
+        )));
+    }
+    let chunk_size = read_u32_le(&head[..], 4);
+    let total_len = read_u64_le(&head[..], 8);
+    let n_chunks = read_u32_le(&head[..], 16);
+    if chunk_size == 0 || chunk_size > MAX_CHUNK_SIZE {
+        return Err(Error::Corrupt("bad chunk size".into()));
+    }
+    let expect_chunks = total_len.div_ceil(chunk_size as u64);
+    if n_chunks as u64 != expect_chunks {
+        return Err(Error::Corrupt(format!(
+            "chunk count {n_chunks} inconsistent with total {total_len}/{chunk_size}"
+        )));
+    }
+    Ok((flags, GroupLayout { elem, exp_group }, chunk_size, total_len, n_chunks))
+}
+
 /// Parse and validate the header + table of a container.
 pub fn parse(data: &[u8]) -> Result<ContainerInfo> {
     if data.len() < 24 {
@@ -121,29 +159,8 @@ pub fn parse(data: &[u8]) -> Result<ContainerInfo> {
     if data[0..4] != MAGIC {
         return Err(Error::Corrupt("bad magic".into()));
     }
-    if data[4] != VERSION {
-        return Err(Error::Corrupt(format!("unsupported version {}", data[4])));
-    }
-    let flags = data[5];
-    let elem = data[6] as usize;
-    let exp_group = data[7] as usize;
-    if elem == 0 || elem > 16 || exp_group >= elem {
-        return Err(Error::Corrupt(format!(
-            "bad layout elem={elem} exp_group={exp_group}"
-        )));
-    }
-    let chunk_size = read_u32_le(data, 8);
-    let total_len = read_u64_le(data, 12);
-    let n_chunks = read_u32_le(data, 20);
-    if chunk_size == 0 {
-        return Err(Error::Corrupt("zero chunk size".into()));
-    }
-    let expect_chunks = total_len.div_ceil(chunk_size as u64);
-    if n_chunks as u64 != expect_chunks {
-        return Err(Error::Corrupt(format!(
-            "chunk count {n_chunks} inconsistent with total {total_len}/{chunk_size}"
-        )));
-    }
+    let head: [u8; 20] = data[4..24].try_into().expect("length checked");
+    let (flags, layout, chunk_size, total_len, n_chunks) = parse_fixed_header(&head)?;
     let mut off = 24usize;
     let checksum = if flags & FLAG_CHECKSUM != 0 {
         if data.len() < off + 8 {
@@ -155,7 +172,7 @@ pub fn parse(data: &[u8]) -> Result<ContainerInfo> {
     } else {
         None
     };
-    let groups = elem;
+    let groups = layout.groups();
     let n_entries = n_chunks as usize * groups;
     let table_bytes = n_entries * 9;
     if data.len() < off + table_bytes {
@@ -192,13 +209,7 @@ pub fn parse(data: &[u8]) -> Result<ContainerInfo> {
         )));
     }
     Ok(ContainerInfo {
-        header: ContainerHeader {
-            layout: GroupLayout { elem, exp_group },
-            chunk_size,
-            total_len,
-            n_chunks,
-            checksum,
-        },
+        header: ContainerHeader { layout, chunk_size, total_len, n_chunks, checksum },
         entries,
         offsets,
         payload_start,

@@ -1,65 +1,67 @@
-//! Decompression side of the ZipNN codec: table-driven, chunk-parallel.
+//! Decompression side of the ZipNN codec: a thin wrapper over the shared
+//! chunk-decode core in [`crate::codec::stream`]. Accepts both the
+//! one-shot `ZNN1` container (table-driven, chunk-parallel) and the
+//! streaming `ZNS1` container (decoded through [`crate::codec::ZnnReader`]).
 
-use crate::codec::auto::Method;
-use crate::codec::container::{parse, ContainerInfo};
-use crate::codec::parallel::{run_tasks, SUPER_CHUNK};
 use crate::codec::checksum64;
+use crate::codec::container::{parse, ContainerInfo};
+use crate::codec::parallel::{run_tasks_with, SUPER_CHUNK};
+use crate::codec::stream::{decode_chunk_into, decompress_reader, STREAM_MAGIC};
 use crate::error::{Error, Result};
-use crate::fp::merge_groups_into;
-use crate::huffman;
-use crate::lz;
 
 /// Decompress a `.znn` container (single-threaded).
 pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
     decompress_with(data, 1)
 }
 
-/// Parse a container's metadata without touching the payload.
+/// Parse a one-shot container's metadata without touching the payload.
 pub fn inspect(data: &[u8]) -> Result<ContainerInfo> {
     parse(data)
 }
 
-/// Decompress with `threads` workers. The metadata table gives every
-/// stream's payload offset and every chunk's output placement up front, so
-/// chunks decode independently (paper §5.1).
+/// Decompress with `threads` workers. For `ZNN1`, the metadata table gives
+/// every stream's payload offset and every chunk's output placement up
+/// front, so chunks decode independently (paper §5.1). `ZNS1` containers
+/// are decoded frame by frame.
 pub fn decompress_with(data: &[u8], threads: usize) -> Result<Vec<u8>> {
+    if data.len() >= 4 && data[0..4] == STREAM_MAGIC {
+        return decompress_reader(data, threads);
+    }
     let info = parse(data)?;
     let h = &info.header;
     let groups = info.groups();
+    let layout = h.layout;
     let payload = &data[info.payload_start..];
     let n_chunks = h.n_chunks as usize;
 
     let n_super = n_chunks.div_ceil(SUPER_CHUNK);
-    let pieces: Vec<Result<Vec<u8>>> = run_tasks(n_super, threads.max(1), |si| {
-        let lo = si * SUPER_CHUNK;
-        let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
-        let piece_len: usize = (lo..hi)
-            .map(|c| {
-                (0..groups)
-                    .map(|g| info.entry(c, g).raw_len as usize)
-                    .sum::<usize>()
-            })
-            .sum();
-        let mut out = vec![0u8; piece_len];
-        // group scratch buffers are reused across the super-chunk
-        let mut scratch: Vec<Vec<u8>> = vec![Vec::new(); groups];
-        let mut at = 0usize;
-        for c in lo..hi {
-            let mut chunk_raw = 0usize;
-            for (g, buf) in scratch.iter_mut().enumerate() {
-                let e = info.entry(c, g);
-                let off = info.offsets[c * groups + g] as usize;
-                let stream = &payload[off..off + e.comp_len as usize];
-                buf.resize(e.raw_len as usize, 0);
-                decode_stream_into(e.method, stream, buf)?;
-                chunk_raw += e.raw_len as usize;
+    let pieces: Vec<Result<Vec<u8>>> = run_tasks_with(
+        n_super,
+        threads.max(1),
+        Vec::new,
+        |scratch: &mut Vec<Vec<u8>>, si| {
+            let lo = si * SUPER_CHUNK;
+            let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
+            let piece_len: usize = info.entries[lo * groups..hi * groups]
+                .iter()
+                .map(|e| e.raw_len as usize)
+                .sum();
+            let mut out = vec![0u8; piece_len];
+            let mut at = 0usize;
+            for c in lo..hi {
+                let es = &info.entries[c * groups..(c + 1) * groups];
+                let chunk_raw: usize = es.iter().map(|e| e.raw_len as usize).sum();
+                let chunk_comp: usize = es.iter().map(|e| e.comp_len as usize).sum();
+                let off = info.offsets[c * groups] as usize;
+                let comp = payload
+                    .get(off..off + chunk_comp)
+                    .ok_or_else(|| Error::Corrupt("payload shorter than table".into()))?;
+                decode_chunk_into(layout, es, comp, scratch, &mut out[at..at + chunk_raw])?;
+                at += chunk_raw;
             }
-            let refs: Vec<&[u8]> = scratch.iter().map(|b| b.as_slice()).collect();
-            merge_groups_into(&refs, h.layout, &mut out[at..at + chunk_raw])?;
-            at += chunk_raw;
-        }
-        Ok(out)
-    });
+            Ok(out)
+        },
+    );
 
     let mut out = Vec::with_capacity(h.total_len as usize);
     for p in pieces {
@@ -83,34 +85,10 @@ pub fn decompress_with(data: &[u8], threads: usize) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-fn decode_stream_into(method: Method, stream: &[u8], out: &mut [u8]) -> Result<()> {
-    match method {
-        Method::Raw => {
-            if stream.len() != out.len() {
-                return Err(Error::Corrupt("raw stream length mismatch".into()));
-            }
-            out.copy_from_slice(stream);
-            Ok(())
-        }
-        Method::Zero => {
-            out.fill(0);
-            Ok(())
-        }
-        Method::Huffman => huffman::decompress_into(stream, out),
-        Method::Zstd => {
-            let dec = lz::zstd_decompress(stream, out.len())?;
-            if dec.len() != out.len() {
-                return Err(Error::Corrupt("zstd stream length mismatch".into()));
-            }
-            out.copy_from_slice(&dec);
-            Ok(())
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::auto::Method;
     use crate::codec::{CodecConfig, Compressor};
     use crate::fp::DType;
 

@@ -9,17 +9,26 @@
 //! with a probe-and-skip heuristic so we stop *trying* on streams that
 //! repeatedly fail, §3.2). Fixed raw chunk sizes plus a per-stream metadata
 //! table make both directions embarrassingly parallel (§5.1).
+//!
+//! Both directions are also **streamable**: [`stream::ZnnWriter`] /
+//! [`stream::ZnnReader`] compress and decompress chunk-incrementally over
+//! `std::io` adapters without materializing either side, backed by a
+//! reusable per-worker [`stream::ScratchArena`]. The one-shot
+//! [`Compressor`] / [`decompress`] entry points are thin wrappers over the
+//! same super-chunk core.
 
 pub mod auto;
 pub mod compress;
 pub mod container;
 pub mod decompress;
 pub mod parallel;
+pub mod stream;
 
 pub use auto::{AutoPolicy, Method};
 pub use compress::{compress_with_report, Compressor, GroupReport};
 pub use container::{ContainerHeader, ContainerInfo, StreamEntry};
 pub use decompress::{decompress, decompress_with, inspect};
+pub use stream::{decompress_reader, ScratchArena, ZnnReader, ZnnWriter, STREAM_MAGIC};
 
 use crate::fp::{DType, GroupLayout};
 

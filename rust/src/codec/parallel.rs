@@ -5,9 +5,15 @@
 //! every super-chunk boundary, in serial and parallel mode alike, so the
 //! compressed output is byte-identical regardless of thread count — a
 //! property the integration tests assert.
+//!
+//! Results are collected through an indexed channel: each worker sends
+//! `(task_index, result)` and the caller slots results into a pre-sized
+//! output vector after the scope joins. Workers never contend on a shared
+//! lock per task (the previous `Mutex<Vec<Option<T>>>` serialized every
+//! task completion).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc;
 
 /// Chunks per super-chunk (auto-policy reset interval / work unit).
 pub const SUPER_CHUNK: usize = 16;
@@ -19,28 +25,53 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    run_tasks_with(n_tasks, threads, || (), |_state, i| f(i))
+}
+
+/// [`run_tasks`] with per-worker state: `init()` runs once on each worker
+/// (and once for the inline path) and the resulting value is threaded
+/// through every task that worker executes. This is how the codec reuses a
+/// [`crate::codec::stream::ScratchArena`] across the tasks of one worker —
+/// O(workers) arenas instead of O(tasks) scratch allocations.
+pub fn run_tasks_with<S, T, I, F>(n_tasks: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if threads <= 1 || n_tasks <= 1 {
-        return (0..n_tasks).map(f).collect();
+        let mut state = init();
+        return (0..n_tasks).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> =
-        Mutex::new((0..n_tasks).map(|_| None).collect());
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
     std::thread::scope(|s| {
+        let next = &next;
+        let init = &init;
+        let f = &f;
         for _ in 0..threads.min(n_tasks) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_tasks {
-                    break;
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    let r = f(&mut state, i);
+                    if tx.send((i, r)).is_err() {
+                        break; // receiver gone (caller panicked)
+                    }
                 }
-                let r = f(i);
-                results.lock().unwrap()[i] = Some(r);
             });
         }
+        drop(tx);
     });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
+    let mut out: Vec<Option<T>> = (0..n_tasks).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter()
         .map(|o| o.expect("task completed"))
         .collect()
 }
@@ -65,5 +96,47 @@ mod tests {
     fn zero_tasks() {
         let out: Vec<u32> = run_tasks(0, 4, |_| 1);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_state_reused_across_tasks() {
+        // Each worker counts the tasks it ran; the per-task results must
+        // still come back complete and in order.
+        let out = run_tasks_with(
+            64,
+            4,
+            || 0usize,
+            |seen, i| {
+                *seen += 1;
+                (i, *seen)
+            },
+        );
+        assert_eq!(out.len(), 64);
+        for (slot, (i, seen)) in out.iter().enumerate() {
+            assert_eq!(*i, slot);
+            assert!(*seen >= 1);
+        }
+        // Per-worker counters rise 1..=k, so across workers the number of
+        // tasks observing counter value v (= workers that ran >= v tasks)
+        // must be non-increasing in v — a structural check that state
+        // really persisted within each worker.
+        let mut hist = std::collections::BTreeMap::new();
+        for (_, seen) in &out {
+            *hist.entry(*seen).or_insert(0usize) += 1;
+        }
+        let mut prev = usize::MAX;
+        for (&v, &c) in &hist {
+            assert!(c <= prev, "counter value {v} seen {c} times, more than {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn inline_path_shares_one_state() {
+        let out = run_tasks_with(10, 1, || 0usize, |acc, _| {
+            *acc += 1;
+            *acc
+        });
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
     }
 }

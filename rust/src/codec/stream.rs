@@ -1,0 +1,1249 @@
+//! Chunk-incremental streaming codec core (paper §5.1).
+//!
+//! ZipNN's fixed raw chunk sizes and per-stream metadata make both
+//! directions streamable: a writer can emit each **super-chunk**'s
+//! compressed streams as soon as that super-chunk's raw bytes have
+//! arrived, and a reader can yield raw bytes as soon as one super-chunk's
+//! compressed streams have been read. Neither side ever materializes the
+//! whole payload.
+//!
+//! This module provides that core:
+//!
+//! - [`ZnnWriter`] — a [`std::io::Write`] adapter that accepts raw bytes
+//!   incrementally and emits a framed streaming container (`ZNS1`) to an
+//!   inner sink, one frame per super-chunk;
+//! - [`ZnnReader`] — a [`std::io::Read`] adapter that pulls from any
+//!   reader holding either container format (`ZNN1` one-shot or `ZNS1`
+//!   streaming) and yields decompressed bytes;
+//! - [`ScratchArena`] — the per-worker reusable scratch buffers that make
+//!   steady-state compression perform O(workers) allocations instead of
+//!   O(chunks × groups).
+//!
+//! The one-shot [`crate::codec::Compressor`] and
+//! [`crate::codec::decompress`] are thin wrappers over the same
+//! super-chunk core, so the `.znn` (`ZNN1`) bytes they produce are
+//! unchanged.
+//!
+//! ## Formats
+//!
+//! `ZNN1` (one-shot): header, full stream table, payload — random access,
+//! but the table's size depends on the total length, so it can only be
+//! written once the whole input has been seen.
+//!
+//! `ZNS1` (streaming), emitted by [`ZnnWriter`]:
+//!
+//! ```text
+//! header:  "ZNS1" [version u8] [flags u8] [elem u8] [exp_group u8] [chunk_size u32]
+//! frame:   0xF5 [n_streams u32] [entries: n_streams × (method u8, comp u32, raw u32)]
+//!          [payload: concatenated streams]
+//! trailer: 0xF6 [tail_len u8] [tail bytes] [total_len u64] [checksum u64 if flagged]
+//! ```
+//!
+//! One frame holds one super-chunk ([`SUPER_CHUNK`] chunks), so the frame
+//! boundaries — and therefore the emitted bytes — are identical for any
+//! split of the incoming writes and any thread count. A non-element-aligned
+//! tail (< `elem` ≤ 16 bytes) rides in the trailer verbatim, so every chunk
+//! keeps the full byte-group layout.
+//!
+//! ## Worked example
+//!
+//! ```
+//! use std::io::{Read, Write};
+//! use zipnn::codec::{CodecConfig, ZnnReader, ZnnWriter};
+//! use zipnn::fp::DType;
+//!
+//! // Compress incrementally: feed whatever slices arrive.
+//! let cfg = CodecConfig::for_dtype(DType::BF16);
+//! let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+//! for part in [&[1u8, 2][..], &[3, 4, 5, 6][..], &[7, 8][..]] {
+//!     w.write_all(part).unwrap();
+//! }
+//! let container: Vec<u8> = w.finish().unwrap();
+//!
+//! // Decompress incrementally from any reader.
+//! let mut r = ZnnReader::new(container.as_slice()).unwrap();
+//! let mut back = Vec::new();
+//! r.read_to_end(&mut back).unwrap();
+//! assert_eq!(back, [1, 2, 3, 4, 5, 6, 7, 8]);
+//! ```
+
+use crate::codec::auto::{AutoPolicy, Decision, Method};
+// MAX_CHUNK_SIZE is shared with the ZNN1 parser so the two formats'
+// corruption guards cannot drift.
+use crate::codec::container::{StreamEntry, MAX_CHUNK_SIZE};
+use crate::codec::parallel::SUPER_CHUNK;
+use crate::codec::{CodecConfig, MethodPolicy};
+use crate::error::{Error, Result};
+use crate::fp::{merge_groups_into, split_groups_into, GroupLayout};
+use crate::huffman;
+use crate::lz;
+use crate::stats::{byte_histogram, zero_stats};
+use std::io::{self, Read, Write};
+
+/// Streaming container magic.
+pub const STREAM_MAGIC: [u8; 4] = *b"ZNS1";
+/// Streaming container version.
+pub const STREAM_VERSION: u8 = 1;
+/// Frame marker byte.
+const MARK_FRAME: u8 = 0xF5;
+/// Trailer marker byte.
+const MARK_END: u8 = 0xF6;
+/// Header flag: trailer carries a checksum.
+const SFLAG_CHECKSUM: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Reusable per-worker scratch for the codec hot paths.
+///
+/// One arena serves one worker for its whole lifetime; every buffer is
+/// `clear()`ed and refilled per chunk or per super-chunk, so after a few
+/// super-chunks of warm-up the steady state performs no allocations at all
+/// on the Huffman/Raw/Zero paths (Zstd streams call into the zstd
+/// allocator). [`crate::codec::parallel::run_tasks_with`] threads one arena
+/// through every task a worker executes.
+#[derive(Default)]
+pub struct ScratchArena {
+    /// Per-group split (compress) / decode (decompress) buffers.
+    pub(crate) groups: Vec<Vec<u8>>,
+    /// Stream-table entries of the super-chunk in flight.
+    pub(crate) entries: Vec<StreamEntry>,
+    /// Concatenated compressed streams of the super-chunk in flight.
+    pub(crate) payload: Vec<u8>,
+}
+
+impl ScratchArena {
+    /// New, empty arena (buffers grow on first use and are then reused).
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental checksum
+// ---------------------------------------------------------------------------
+
+const CK_INIT: u64 = 0x9E37_79B9_7F4A_7C15;
+const CK_MUL: u64 = 0xA24B_AED4_963E_E407;
+
+/// Incremental form of [`crate::codec::checksum64`].
+///
+/// `with_total_len` reproduces `checksum64` exactly when the total length
+/// is known up front (the `ZNN1` reading path). `streaming` defers the
+/// length mix to `finalize` for writers that do not know the length yet
+/// (the `ZNS1` trailer checksum) — same word mixing, different whole-stream
+/// value.
+pub(crate) struct Checksummer {
+    acc: u64,
+    pending: [u8; 8],
+    pending_len: usize,
+    total: u64,
+    mix_len_at_end: bool,
+}
+
+impl Checksummer {
+    /// `checksum64`-compatible: the caller knows the total length.
+    pub(crate) fn with_total_len(len: u64) -> Checksummer {
+        Checksummer {
+            acc: CK_INIT ^ len,
+            pending: [0; 8],
+            pending_len: 0,
+            total: 0,
+            mix_len_at_end: false,
+        }
+    }
+
+    /// Length mixed at the end (the `ZNS1` trailer variant).
+    pub(crate) fn streaming() -> Checksummer {
+        Checksummer {
+            acc: CK_INIT,
+            pending: [0; 8],
+            pending_len: 0,
+            total: 0,
+            mix_len_at_end: true,
+        }
+    }
+
+    /// Fold more bytes in. Word boundaries are absolute stream offsets, so
+    /// any split of the input produces the same result.
+    pub(crate) fn update(&mut self, mut data: &[u8]) {
+        self.total += data.len() as u64;
+        if self.pending_len > 0 {
+            while self.pending_len < 8 && !data.is_empty() {
+                self.pending[self.pending_len] = data[0];
+                self.pending_len += 1;
+                data = &data[1..];
+            }
+            if self.pending_len < 8 {
+                return;
+            }
+            let w = u64::from_le_bytes(self.pending);
+            self.acc = self.acc.wrapping_add(w).rotate_left(17).wrapping_mul(CK_MUL);
+            self.pending_len = 0;
+        }
+        let mut chunks = data.chunks_exact(8);
+        for c in &mut chunks {
+            let w = u64::from_le_bytes(c.try_into().unwrap());
+            self.acc = self.acc.wrapping_add(w).rotate_left(17).wrapping_mul(CK_MUL);
+        }
+        let rem = chunks.remainder();
+        self.pending[..rem.len()].copy_from_slice(rem);
+        self.pending_len = rem.len();
+    }
+
+    /// Finish and return the checksum.
+    pub(crate) fn finalize(self) -> u64 {
+        let mut acc = self.acc;
+        if self.pending_len > 0 {
+            let mut b = [0u8; 8];
+            b[..self.pending_len].copy_from_slice(&self.pending[..self.pending_len]);
+            acc = acc.wrapping_add(u64::from_le_bytes(b)).rotate_left(17);
+        }
+        if self.mix_len_at_end {
+            acc = (acc ^ self.total).rotate_left(29).wrapping_mul(CK_MUL);
+        }
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared compression core
+// ---------------------------------------------------------------------------
+
+/// Compress one super-chunk's raw bytes, appending table entries to
+/// `entries` and the concatenated streams to `payload`.
+///
+/// `data` must be the super-chunk's exact raw bytes (1..=[`SUPER_CHUNK`]
+/// chunks; the last may be short) and a multiple of `layout.elem`. The
+/// probe-and-skip state resets here, at the super-chunk boundary, which is
+/// what makes the output independent of thread count and write splits.
+pub(crate) fn compress_super_chunk(
+    cfg: &CodecConfig,
+    layout: GroupLayout,
+    chunk_size: usize,
+    data: &[u8],
+    group_scratch: &mut Vec<Vec<u8>>,
+    entries: &mut Vec<StreamEntry>,
+    payload: &mut Vec<u8>,
+) {
+    let groups = layout.groups();
+    let mut policy = AutoPolicy::new(groups, cfg.skip_window);
+    for chunk in data.chunks(chunk_size) {
+        split_groups_into(chunk, layout, group_scratch).expect("aligned by construction");
+        for (gi, g) in group_scratch.iter().enumerate() {
+            entries.push(compress_stream_into(cfg, gi, g, &mut policy, payload));
+        }
+    }
+}
+
+/// Compress one group stream according to the configured policy, appending
+/// its bytes to `payload`. Decision logic is shared verbatim with the
+/// historical one-shot path, so containers stay byte-identical.
+fn compress_stream_into(
+    cfg: &CodecConfig,
+    group: usize,
+    data: &[u8],
+    policy: &mut AutoPolicy,
+    payload: &mut Vec<u8>,
+) -> StreamEntry {
+    let raw_len = data.len() as u32;
+    let store_raw = |payload: &mut Vec<u8>| {
+        payload.extend_from_slice(data);
+        StreamEntry { method: Method::Raw, comp_len: raw_len, raw_len }
+    };
+    match cfg.policy {
+        MethodPolicy::Raw => store_raw(payload),
+        MethodPolicy::Huffman => huffman_or_raw_into(data, None, group, policy, false, payload),
+        MethodPolicy::Zstd => zstd_or_raw_into(cfg.zstd_level, data, payload),
+        MethodPolicy::Auto => {
+            if policy.take_skip(group) {
+                return store_raw(payload);
+            }
+            // One histogram pass feeds both the decision and Huffman.
+            let hist = byte_histogram(data);
+            match policy.decide_with_hist(data, &hist) {
+                Decision::SkipRaw => store_raw(payload),
+                Decision::Zero => StreamEntry { method: Method::Zero, comp_len: 0, raw_len },
+                Decision::TryZstd => zstd_or_raw_into(cfg.zstd_level, data, payload),
+                Decision::TryHuffman => {
+                    huffman_or_raw_into(data, Some(&hist), group, policy, true, payload)
+                }
+            }
+        }
+    }
+}
+
+fn huffman_or_raw_into(
+    data: &[u8],
+    hist: Option<&[u64; 256]>,
+    group: usize,
+    policy: &mut AutoPolicy,
+    report: bool,
+    payload: &mut Vec<u8>,
+) -> StreamEntry {
+    let base = payload.len();
+    let enc_len = match hist {
+        Some(h) => huffman::compress_into(data, h, payload),
+        None => {
+            let h = byte_histogram(data);
+            huffman::compress_into(data, &h, payload)
+        }
+    };
+    if report {
+        policy.report(group, data.len(), enc_len);
+    }
+    if enc_len < data.len() {
+        StreamEntry {
+            method: Method::Huffman,
+            comp_len: enc_len as u32,
+            raw_len: data.len() as u32,
+        }
+    } else {
+        payload.truncate(base);
+        payload.extend_from_slice(data);
+        StreamEntry {
+            method: Method::Raw,
+            comp_len: data.len() as u32,
+            raw_len: data.len() as u32,
+        }
+    }
+}
+
+fn zstd_or_raw_into(level: i32, data: &[u8], payload: &mut Vec<u8>) -> StreamEntry {
+    // An all-zero stream is cheaper as Zero even under forced-Zstd.
+    if !data.is_empty() && zero_stats(data).zero_frac >= 1.0 {
+        return StreamEntry {
+            method: Method::Zero,
+            comp_len: 0,
+            raw_len: data.len() as u32,
+        };
+    }
+    match lz::zstd_compress(data, level) {
+        Ok(enc) if enc.len() < data.len() => {
+            payload.extend_from_slice(&enc);
+            StreamEntry {
+                method: Method::Zstd,
+                comp_len: enc.len() as u32,
+                raw_len: data.len() as u32,
+            }
+        }
+        _ => {
+            payload.extend_from_slice(data);
+            StreamEntry {
+                method: Method::Raw,
+                comp_len: data.len() as u32,
+                raw_len: data.len() as u32,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared decompression core
+// ---------------------------------------------------------------------------
+
+/// Decode one compressed stream into an exactly-sized output buffer.
+pub(crate) fn decode_stream_into(method: Method, stream: &[u8], out: &mut [u8]) -> Result<()> {
+    match method {
+        Method::Raw => {
+            if stream.len() != out.len() {
+                return Err(Error::Corrupt("raw stream length mismatch".into()));
+            }
+            out.copy_from_slice(stream);
+            Ok(())
+        }
+        Method::Zero => {
+            out.fill(0);
+            Ok(())
+        }
+        Method::Huffman => huffman::decompress_into(stream, out),
+        Method::Zstd => {
+            let dec = lz::zstd_decompress(stream, out.len())?;
+            if dec.len() != out.len() {
+                return Err(Error::Corrupt("zstd stream length mismatch".into()));
+            }
+            out.copy_from_slice(&dec);
+            Ok(())
+        }
+    }
+}
+
+/// Decode one chunk: its `groups` streams (concatenated in `comp`) into
+/// `out`, which must be exactly the chunk's raw size. `scratch` is the
+/// arena's per-group buffers.
+pub(crate) fn decode_chunk_into(
+    layout: GroupLayout,
+    entries: &[StreamEntry],
+    comp: &[u8],
+    scratch: &mut Vec<Vec<u8>>,
+    out: &mut [u8],
+) -> Result<()> {
+    let groups = layout.groups();
+    if entries.len() != groups {
+        return Err(Error::Corrupt("chunk entry count mismatch".into()));
+    }
+    scratch.resize_with(groups, Vec::new);
+    let mut off = 0usize;
+    for (g, e) in entries.iter().enumerate() {
+        let end = off + e.comp_len as usize;
+        let stream = comp
+            .get(off..end)
+            .ok_or_else(|| Error::Corrupt("stream extends past payload".into()))?;
+        off = end;
+        let buf = &mut scratch[g];
+        buf.clear();
+        buf.resize(e.raw_len as usize, 0);
+        decode_stream_into(e.method, stream, buf)?;
+    }
+    if off != comp.len() {
+        return Err(Error::Corrupt("chunk payload length mismatch".into()));
+    }
+    // group refs on the stack: elem ≤ 16 by container validation
+    let mut refs: [&[u8]; 16] = [&[]; 16];
+    for (g, b) in scratch.iter().enumerate().take(groups) {
+        refs[g] = b.as_slice();
+    }
+    merge_groups_into(&refs[..groups], layout, out)
+}
+
+/// Decode a run of chunks (entries chunk-major, streams concatenated in
+/// `comp`), appending raw bytes to `out`. `threads > 1` decodes chunks in
+/// parallel (each chunk's placement is known up front — paper §5.1).
+fn decode_chunk_run(
+    layout: GroupLayout,
+    entries: &[StreamEntry],
+    comp: &[u8],
+    threads: usize,
+    scratch: &mut Vec<Vec<u8>>,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let groups = layout.groups();
+    if groups == 0 || entries.len() % groups != 0 {
+        return Err(Error::Corrupt("stream count not a multiple of groups".into()));
+    }
+    let n_chunks = entries.len() / groups;
+    if threads <= 1 || n_chunks <= 1 {
+        let mut comp_off = 0usize;
+        for c in 0..n_chunks {
+            let es = &entries[c * groups..(c + 1) * groups];
+            let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
+            let raw_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
+            let comp_chunk = comp
+                .get(comp_off..comp_off + comp_len)
+                .ok_or_else(|| Error::Corrupt("payload shorter than stream table".into()))?;
+            comp_off += comp_len;
+            let at = out.len();
+            out.resize(at + raw_len, 0);
+            decode_chunk_into(layout, es, comp_chunk, scratch, &mut out[at..at + raw_len])?;
+        }
+        return Ok(());
+    }
+    // Parallel: precompute each chunk's payload placement, decode into
+    // per-chunk buffers, then stitch in order.
+    let mut spans = Vec::with_capacity(n_chunks);
+    let mut comp_off = 0usize;
+    for c in 0..n_chunks {
+        let es = &entries[c * groups..(c + 1) * groups];
+        let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
+        let raw_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
+        if comp.len() < comp_off + comp_len {
+            return Err(Error::Corrupt("payload shorter than stream table".into()));
+        }
+        spans.push((comp_off, comp_len, raw_len));
+        comp_off += comp_len;
+    }
+    let pieces: Vec<Result<Vec<u8>>> = crate::codec::parallel::run_tasks_with(
+        n_chunks,
+        threads,
+        Vec::new,
+        |worker_scratch: &mut Vec<Vec<u8>>, c| {
+            let (off, len, raw_len) = spans[c];
+            let es = &entries[c * groups..(c + 1) * groups];
+            let mut piece = vec![0u8; raw_len];
+            decode_chunk_into(layout, es, &comp[off..off + len], worker_scratch, &mut piece)?;
+            Ok(piece)
+        },
+    );
+    for p in pieces {
+        out.extend_from_slice(&p?);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ZnnWriter
+// ---------------------------------------------------------------------------
+
+/// Streaming compressor: a [`Write`] adapter that emits a `ZNS1` container
+/// to an inner sink, one frame per completed super-chunk.
+///
+/// Buffering is bounded: at most `threads × SUPER_CHUNK × chunk_size` raw
+/// bytes are held (the compression batch), independent of the total input
+/// size. Call [`ZnnWriter::finish`] to compress the final partial chunk and
+/// write the trailer — dropping the writer without finishing produces a
+/// truncated container that readers reject.
+pub struct ZnnWriter<W: Write> {
+    inner: W,
+    cfg: CodecConfig,
+    layout: GroupLayout,
+    chunk_size: usize,
+    buf: Vec<u8>,
+    batch_bytes: usize,
+    arena: ScratchArena,
+    /// Recycled (entries, payload) pairs for the multi-threaded batch
+    /// path, so steady-state frame buffers are reused across batches.
+    spare: Vec<(Vec<StreamEntry>, Vec<u8>)>,
+    head_buf: Vec<u8>,
+    ck: Option<Checksummer>,
+    total: u64,
+}
+
+impl<W: Write> ZnnWriter<W> {
+    /// Start a streaming container on `inner` (writes the header
+    /// immediately).
+    pub fn new(mut inner: W, cfg: CodecConfig) -> Result<ZnnWriter<W>> {
+        let layout = cfg.layout;
+        let elem = layout.elem;
+        if elem == 0 || elem > 16 || layout.exp_group >= elem {
+            return Err(Error::Invalid(format!(
+                "bad layout elem={elem} exp_group={}",
+                layout.exp_group
+            )));
+        }
+        let chunk_size = cfg.chunk_size.max(elem) / elem * elem;
+        let threads = cfg.threads.max(1);
+        let batch_bytes = threads * SUPER_CHUNK * chunk_size;
+        let mut header = [0u8; 12];
+        header[0..4].copy_from_slice(&STREAM_MAGIC);
+        header[4] = STREAM_VERSION;
+        header[5] = if cfg.checksum { SFLAG_CHECKSUM } else { 0 };
+        header[6] = elem as u8;
+        header[7] = layout.exp_group as u8;
+        header[8..12].copy_from_slice(&(chunk_size as u32).to_le_bytes());
+        inner.write_all(&header)?;
+        Ok(ZnnWriter {
+            inner,
+            ck: cfg.checksum.then(Checksummer::streaming),
+            cfg,
+            layout,
+            chunk_size,
+            buf: Vec::with_capacity(batch_bytes),
+            batch_bytes,
+            arena: ScratchArena::new(),
+            spare: Vec::new(),
+            head_buf: Vec::new(),
+            total: 0,
+        })
+    }
+
+    /// Raw bytes accepted so far.
+    pub fn raw_len(&self) -> u64 {
+        self.total
+    }
+
+    /// Compress and emit every super-chunk in `buf[..len]`.
+    fn flush_compressible(&mut self, len: usize) -> Result<()> {
+        if len == 0 {
+            return Ok(());
+        }
+        let n_chunks = len.div_ceil(self.chunk_size);
+        let n_super = n_chunks.div_ceil(SUPER_CHUNK);
+        let super_bytes = SUPER_CHUNK * self.chunk_size;
+        if self.cfg.threads.max(1) <= 1 || n_super <= 1 {
+            for si in 0..n_super {
+                let lo = si * super_bytes;
+                let hi = ((si + 1) * super_bytes).min(len);
+                let ScratchArena { groups, entries, payload } = &mut self.arena;
+                entries.clear();
+                payload.clear();
+                compress_super_chunk(
+                    &self.cfg,
+                    self.layout,
+                    self.chunk_size,
+                    &self.buf[lo..hi],
+                    groups,
+                    entries,
+                    payload,
+                );
+                emit_frame(&mut self.inner, &mut self.head_buf, entries, payload)?;
+            }
+        } else {
+            let cfg = &self.cfg;
+            let layout = self.layout;
+            let chunk_size = self.chunk_size;
+            let buf = &self.buf[..len];
+            // Frame buffers are recycled across batches through a shared
+            // pool (the pairs outlive the workers: each must be returned
+            // for in-order emission, so a pure per-worker arena can't
+            // hold them).
+            let pool = std::sync::Mutex::new(std::mem::take(&mut self.spare));
+            let frames: Vec<(Vec<StreamEntry>, Vec<u8>)> =
+                crate::codec::parallel::run_tasks_with(
+                    n_super,
+                    cfg.threads,
+                    Vec::new,
+                    |group_scratch, si| {
+                        let lo = si * super_bytes;
+                        let hi = ((si + 1) * super_bytes).min(len);
+                        let (mut entries, mut payload) =
+                            pool.lock().unwrap().pop().unwrap_or_default();
+                        entries.clear();
+                        payload.clear();
+                        compress_super_chunk(
+                            cfg,
+                            layout,
+                            chunk_size,
+                            &buf[lo..hi],
+                            group_scratch,
+                            &mut entries,
+                            &mut payload,
+                        );
+                        (entries, payload)
+                    },
+                );
+            let mut spare = pool.into_inner().unwrap();
+            for (entries, payload) in frames {
+                emit_frame(&mut self.inner, &mut self.head_buf, &entries, &payload)?;
+                spare.push((entries, payload));
+            }
+            self.spare = spare;
+        }
+        Ok(())
+    }
+
+    /// Compress the final partial chunk, write the trailer, flush, and
+    /// return the inner sink.
+    pub fn finish(mut self) -> Result<W> {
+        let tail_len = self.buf.len() % self.layout.elem;
+        let comp_len = self.buf.len() - tail_len;
+        self.flush_compressible(comp_len)?;
+        let mut trailer = Vec::with_capacity(2 + tail_len + 16);
+        trailer.push(MARK_END);
+        trailer.push(tail_len as u8);
+        trailer.extend_from_slice(&self.buf[comp_len..comp_len + tail_len]);
+        trailer.extend_from_slice(&self.total.to_le_bytes());
+        if let Some(ck) = self.ck.take() {
+            trailer.extend_from_slice(&ck.finalize().to_le_bytes());
+        }
+        self.inner.write_all(&trailer)?;
+        self.inner.flush()?;
+        Ok(self.inner)
+    }
+}
+
+/// Serialize and write one frame (`entries` + `payload` of one
+/// super-chunk). `head_buf` is recycled scratch for the entry table.
+fn emit_frame<W: Write>(
+    inner: &mut W,
+    head_buf: &mut Vec<u8>,
+    entries: &[StreamEntry],
+    payload: &[u8],
+) -> Result<()> {
+    head_buf.clear();
+    head_buf.push(MARK_FRAME);
+    head_buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        head_buf.push(e.method.tag());
+        head_buf.extend_from_slice(&e.comp_len.to_le_bytes());
+        head_buf.extend_from_slice(&e.raw_len.to_le_bytes());
+    }
+    inner.write_all(head_buf)?;
+    inner.write_all(payload)?;
+    Ok(())
+}
+
+impl<W: Write> Write for ZnnWriter<W> {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        if let Some(ck) = self.ck.as_mut() {
+            ck.update(data);
+        }
+        self.total += data.len() as u64;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let space = self.batch_bytes - self.buf.len();
+            let take = space.min(rest.len());
+            self.buf.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if self.buf.len() == self.batch_bytes {
+                self.flush_compressible(self.batch_bytes)
+                    .map_err(to_io_err)?;
+                self.buf.clear();
+            }
+        }
+        Ok(data.len())
+    }
+
+    /// Flushes the inner sink. Completed frames have already been emitted;
+    /// a partial chunk stays buffered until [`ZnnWriter::finish`].
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+fn to_io_err(e: Error) -> io::Error {
+    match e {
+        Error::Io(io) => io,
+        other => io::Error::new(io::ErrorKind::InvalidData, other.to_string()),
+    }
+}
+
+fn from_io_err(e: io::Error) -> Error {
+    if e.kind() == io::ErrorKind::InvalidData {
+        Error::Corrupt(e.to_string())
+    } else {
+        Error::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ZnnReader
+// ---------------------------------------------------------------------------
+
+enum ReaderState {
+    /// One-shot `ZNN1` container: table read up front, payload streamed.
+    V1 {
+        layout: GroupLayout,
+        total_len: u64,
+        checksum: Option<u64>,
+        entries: Vec<StreamEntry>,
+        groups: usize,
+        next_chunk: usize,
+        n_chunks: usize,
+    },
+    /// Streaming `ZNS1` container: frame by frame.
+    V2 {
+        layout: GroupLayout,
+        chunk_size: u32,
+        has_checksum: bool,
+        groups: usize,
+    },
+    Done,
+}
+
+/// Streaming decompressor: a [`Read`] adapter over either container
+/// format. Holds at most one decode batch (a few super-chunks) in memory,
+/// never the whole payload — this is how the hub client and the runtime
+/// decompress straight off a socket or a file.
+pub struct ZnnReader<R: Read> {
+    inner: R,
+    threads: usize,
+    state: ReaderState,
+    out: Vec<u8>,
+    pos: usize,
+    scratch: Vec<Vec<u8>>,
+    comp_buf: Vec<u8>,
+    entry_buf: Vec<StreamEntry>,
+    ck: Option<Checksummer>,
+    produced: u64,
+}
+
+impl<R: Read> ZnnReader<R> {
+    /// Open a container: reads and validates the header (and, for `ZNN1`,
+    /// the stream table).
+    pub fn new(mut inner: R) -> Result<ZnnReader<R>> {
+        let mut magic = [0u8; 4];
+        inner.read_exact(&mut magic)?;
+        let (state, ck) = if magic == crate::codec::container::MAGIC {
+            Self::open_v1(&mut inner)?
+        } else if magic == STREAM_MAGIC {
+            Self::open_v2(&mut inner)?
+        } else {
+            return Err(Error::Corrupt("bad magic".into()));
+        };
+        Ok(ZnnReader {
+            inner,
+            threads: 1,
+            state,
+            out: Vec::new(),
+            pos: 0,
+            scratch: Vec::new(),
+            comp_buf: Vec::new(),
+            entry_buf: Vec::new(),
+            ck,
+            produced: 0,
+        })
+    }
+
+    /// Worker threads for chunk-parallel decoding of each batch.
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Raw bytes yielded so far.
+    pub fn raw_len(&self) -> u64 {
+        self.produced
+    }
+
+    fn open_v1(inner: &mut R) -> Result<(ReaderState, Option<Checksummer>)> {
+        let mut head = [0u8; 20];
+        inner.read_exact(&mut head)?;
+        // head[i] corresponds to container byte 4 + i; validation is
+        // shared with the buffer parser.
+        let (flags, layout, _chunk_size, total_len, n_chunks) =
+            crate::codec::container::parse_fixed_header(&head)?;
+        let n_chunks = n_chunks as usize;
+        let checksum = if flags & crate::codec::container::FLAG_CHECKSUM != 0 {
+            let mut c = [0u8; 8];
+            inner.read_exact(&mut c)?;
+            Some(u64::from_le_bytes(c))
+        } else {
+            None
+        };
+        let groups = layout.groups();
+        let n_entries = n_chunks * groups;
+        // Grow incrementally (capped pre-allocation): a corrupt header
+        // must not trigger a huge allocation before its table bytes —
+        // which would have to actually exist — are read.
+        let mut entries = Vec::with_capacity(n_entries.min(1 << 16));
+        let mut raw_sum = 0u64;
+        let mut row = [0u8; 9];
+        for _ in 0..n_entries {
+            inner.read_exact(&mut row)?;
+            let e = parse_entry(&row)?;
+            // The compressor never stores a stream larger than raw (it
+            // falls back to Raw); enforcing that bounds the payload
+            // buffers the reader sizes from the table.
+            if e.comp_len > e.raw_len {
+                return Err(Error::Corrupt("implausible stream entry".into()));
+            }
+            raw_sum += e.raw_len as u64;
+            entries.push(e);
+        }
+        if raw_sum != total_len {
+            return Err(Error::Corrupt(format!(
+                "stream raw lengths sum {raw_sum} != total {total_len}"
+            )));
+        }
+        let ck = checksum.map(|_| Checksummer::with_total_len(total_len));
+        let state = if n_chunks == 0 {
+            // Verify the (empty-input) checksum immediately.
+            if let (Some(expect), Some(c)) = (checksum, ck) {
+                let got = c.finalize();
+                if got != expect {
+                    return Err(Error::Corrupt(format!(
+                        "checksum mismatch: {got:#018x} != {expect:#018x}"
+                    )));
+                }
+            }
+            (ReaderState::Done, None)
+        } else {
+            (
+                ReaderState::V1 {
+                    layout,
+                    total_len,
+                    checksum,
+                    entries,
+                    groups,
+                    next_chunk: 0,
+                    n_chunks,
+                },
+                ck,
+            )
+        };
+        Ok(state)
+    }
+
+    fn open_v2(inner: &mut R) -> Result<(ReaderState, Option<Checksummer>)> {
+        let mut head = [0u8; 8];
+        inner.read_exact(&mut head)?;
+        let version = head[0];
+        if version != STREAM_VERSION {
+            return Err(Error::Corrupt(format!(
+                "unsupported stream version {version}"
+            )));
+        }
+        let flags = head[1];
+        let elem = head[2] as usize;
+        let exp_group = head[3] as usize;
+        if elem == 0 || elem > 16 || exp_group >= elem {
+            return Err(Error::Corrupt(format!(
+                "bad layout elem={elem} exp_group={exp_group}"
+            )));
+        }
+        let chunk_size = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if chunk_size == 0 || chunk_size > MAX_CHUNK_SIZE {
+            return Err(Error::Corrupt("bad chunk size".into()));
+        }
+        let has_checksum = flags & SFLAG_CHECKSUM != 0;
+        Ok((
+            ReaderState::V2 {
+                layout: GroupLayout { elem, exp_group },
+                chunk_size,
+                has_checksum,
+                groups: elem,
+            },
+            has_checksum.then(Checksummer::streaming),
+        ))
+    }
+
+    /// Decode the next batch into `out`; `Done` leaves `out` empty.
+    fn refill(&mut self) -> Result<()> {
+        self.out.clear();
+        self.pos = 0;
+        match &mut self.state {
+            ReaderState::Done => Ok(()),
+            ReaderState::V1 {
+                layout,
+                total_len,
+                checksum,
+                entries,
+                groups,
+                next_chunk,
+                n_chunks,
+            } => {
+                // Copy the scalars out so `self.state` can be replaced below.
+                let layout = *layout;
+                let groups = *groups;
+                let total_len = *total_len;
+                let checksum = *checksum;
+                let n_chunks = *n_chunks;
+                let batch = self.threads.max(1) * SUPER_CHUNK;
+                let lo = *next_chunk;
+                let hi = (lo + batch).min(n_chunks);
+                *next_chunk = hi;
+                let es = &entries[lo * groups..hi * groups];
+                let comp_total: usize = es.iter().map(|e| e.comp_len as usize).sum();
+                self.comp_buf.clear();
+                self.comp_buf.resize(comp_total, 0);
+                self.inner.read_exact(&mut self.comp_buf)?;
+                decode_chunk_run(
+                    layout,
+                    es,
+                    &self.comp_buf,
+                    self.threads,
+                    &mut self.scratch,
+                    &mut self.out,
+                )?;
+                if let Some(ck) = self.ck.as_mut() {
+                    ck.update(&self.out);
+                }
+                self.produced += self.out.len() as u64;
+                if hi == n_chunks {
+                    if self.produced != total_len {
+                        return Err(Error::Corrupt(format!(
+                            "decompressed {} bytes, expected {total_len}",
+                            self.produced
+                        )));
+                    }
+                    if let (Some(expect), Some(ck)) = (checksum, self.ck.take()) {
+                        let got = ck.finalize();
+                        if got != expect {
+                            return Err(Error::Corrupt(format!(
+                                "checksum mismatch: {got:#018x} != {expect:#018x}"
+                            )));
+                        }
+                    }
+                    self.state = ReaderState::Done;
+                }
+                Ok(())
+            }
+            ReaderState::V2 { layout, chunk_size, has_checksum, groups } => {
+                let layout = *layout;
+                let chunk_size = *chunk_size;
+                let has_checksum = *has_checksum;
+                let groups = *groups;
+                let mut marker = [0u8; 1];
+                self.inner.read_exact(&mut marker)?;
+                match marker[0] {
+                    MARK_FRAME => {
+                        let mut n4 = [0u8; 4];
+                        self.inner.read_exact(&mut n4)?;
+                        let n_streams = u32::from_le_bytes(n4) as usize;
+                        if n_streams == 0
+                            || n_streams > SUPER_CHUNK * 16
+                            || n_streams % groups != 0
+                        {
+                            return Err(Error::Corrupt(format!(
+                                "bad frame stream count {n_streams}"
+                            )));
+                        }
+                        self.entry_buf.clear();
+                        let mut row = [0u8; 9];
+                        let mut comp_total = 0usize;
+                        for _ in 0..n_streams {
+                            self.inner.read_exact(&mut row)?;
+                            let e = parse_entry(&row)?;
+                            if e.comp_len > e.raw_len || e.raw_len > chunk_size {
+                                return Err(Error::Corrupt("implausible stream entry".into()));
+                            }
+                            comp_total += e.comp_len as usize;
+                            self.entry_buf.push(e);
+                        }
+                        self.comp_buf.clear();
+                        self.comp_buf.resize(comp_total, 0);
+                        self.inner.read_exact(&mut self.comp_buf)?;
+                        decode_chunk_run(
+                            layout,
+                            &self.entry_buf,
+                            &self.comp_buf,
+                            self.threads,
+                            &mut self.scratch,
+                            &mut self.out,
+                        )?;
+                        if let Some(ck) = self.ck.as_mut() {
+                            ck.update(&self.out);
+                        }
+                        self.produced += self.out.len() as u64;
+                        Ok(())
+                    }
+                    MARK_END => {
+                        let mut t = [0u8; 1];
+                        self.inner.read_exact(&mut t)?;
+                        let tail_len = t[0] as usize;
+                        if tail_len >= layout.elem {
+                            return Err(Error::Corrupt(format!("bad tail length {tail_len}")));
+                        }
+                        let mut tail = [0u8; 16];
+                        self.inner.read_exact(&mut tail[..tail_len])?;
+                        self.out.extend_from_slice(&tail[..tail_len]);
+                        let mut n8 = [0u8; 8];
+                        self.inner.read_exact(&mut n8)?;
+                        let total_len = u64::from_le_bytes(n8);
+                        if let Some(ck) = self.ck.as_mut() {
+                            ck.update(&tail[..tail_len]);
+                        }
+                        self.produced += tail_len as u64;
+                        if self.produced != total_len {
+                            return Err(Error::Corrupt(format!(
+                                "decompressed {} bytes, expected {total_len}",
+                                self.produced
+                            )));
+                        }
+                        if has_checksum {
+                            self.inner.read_exact(&mut n8)?;
+                            let expect = u64::from_le_bytes(n8);
+                            if let Some(ck) = self.ck.take() {
+                                let got = ck.finalize();
+                                if got != expect {
+                                    return Err(Error::Corrupt(format!(
+                                        "checksum mismatch: {got:#018x} != {expect:#018x}"
+                                    )));
+                                }
+                            }
+                        }
+                        self.state = ReaderState::Done;
+                        Ok(())
+                    }
+                    other => Err(Error::Corrupt(format!("bad frame marker {other:#x}"))),
+                }
+            }
+        }
+    }
+}
+
+fn parse_entry(row: &[u8; 9]) -> Result<StreamEntry> {
+    let method = Method::from_tag(row[0])
+        .ok_or_else(|| Error::Corrupt(format!("bad method tag {}", row[0])))?;
+    let comp_len = u32::from_le_bytes(row[1..5].try_into().unwrap());
+    let raw_len = u32::from_le_bytes(row[5..9].try_into().unwrap());
+    if method == Method::Zero && comp_len != 0 {
+        return Err(Error::Corrupt("zero stream with payload".into()));
+    }
+    Ok(StreamEntry { method, comp_len, raw_len })
+}
+
+impl<R: Read> Read for ZnnReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        loop {
+            if self.pos < self.out.len() {
+                let n = (self.out.len() - self.pos).min(buf.len());
+                buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+                self.pos += n;
+                return Ok(n);
+            }
+            if matches!(self.state, ReaderState::Done) {
+                return Ok(0);
+            }
+            self.refill().map_err(to_io_err)?;
+            if self.out.is_empty() && matches!(self.state, ReaderState::Done) {
+                return Ok(0);
+            }
+        }
+    }
+}
+
+/// Convenience: fully decompress a container through [`ZnnReader`].
+pub fn decompress_reader(r: impl Read, threads: usize) -> Result<Vec<u8>> {
+    let mut zr = ZnnReader::new(r)?.with_threads(threads);
+    let mut out = Vec::new();
+    zr.read_to_end(&mut out).map_err(from_io_err)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{checksum64, decompress, CodecConfig, Compressor};
+    use crate::fp::DType;
+    use crate::util::Xoshiro256;
+
+    fn gaussian_bf16(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            let w = (rng.normal() * 0.02) as f32;
+            out.extend_from_slice(&crate::fp::dtype::f32_to_bf16_bits(w).to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn incremental_checksum_matches_one_shot() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 1000, 4097] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let expect = checksum64(&data);
+            // whole-buffer update
+            let mut c = Checksummer::with_total_len(len as u64);
+            c.update(&data);
+            assert_eq!(c.finalize(), expect, "len={len}");
+            // byte-at-a-time
+            let mut c = Checksummer::with_total_len(len as u64);
+            for b in &data {
+                c.update(std::slice::from_ref(b));
+            }
+            assert_eq!(c.finalize(), expect, "len={len} bytewise");
+            // random splits
+            let mut c = Checksummer::with_total_len(len as u64);
+            let mut at = 0;
+            while at < len {
+                let take = (1 + rng.below(13)).min(len - at);
+                c.update(&data[at..at + take]);
+                at += take;
+            }
+            assert_eq!(c.finalize(), expect, "len={len} random splits");
+        }
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_bf16() {
+        let raw = gaussian_bf16(400_000, 2);
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        assert!(container.len() < raw.len(), "must compress");
+        let back = decompress_reader(container.as_slice(), 1).unwrap();
+        assert_eq!(back, raw);
+    }
+
+    #[test]
+    fn writer_output_independent_of_split_and_threads() {
+        let raw = gaussian_bf16(300_000, 3);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(16 * 1024);
+        let mut one = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap();
+        one.write_all(&raw).unwrap();
+        let one = one.finish().unwrap();
+
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut many = ZnnWriter::new(Vec::new(), cfg.clone().with_threads(4)).unwrap();
+        let mut at = 0;
+        while at < raw.len() {
+            let take = (1 + rng.below(50_000)).min(raw.len() - at);
+            many.write_all(&raw[at..at + take]).unwrap();
+            at += take;
+        }
+        let many = many.finish().unwrap();
+        assert_eq!(one, many, "split pattern and threads must not change bytes");
+    }
+
+    #[test]
+    fn unaligned_tail_rides_in_trailer() {
+        let mut raw = gaussian_bf16(10_000, 5);
+        raw.push(0xAB); // odd byte: not elem-aligned for BF16
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        assert_eq!(decompress_reader(container.as_slice(), 1).unwrap(), raw);
+    }
+
+    #[test]
+    fn empty_input_roundtrips() {
+        let cfg = CodecConfig::for_dtype(DType::F32);
+        let w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        let container = w.finish().unwrap();
+        assert_eq!(decompress_reader(container.as_slice(), 1).unwrap(), b"");
+    }
+
+    #[test]
+    fn reader_decodes_one_shot_containers() {
+        for n in [0usize, 1, 100, 200_000] {
+            let raw = gaussian_bf16(n, 6);
+            let comp = Compressor::new(CodecConfig::for_dtype(DType::BF16))
+                .compress(&raw)
+                .unwrap();
+            assert_eq!(decompress_reader(comp.as_slice(), 1).unwrap(), raw, "n={n}");
+            assert_eq!(decompress_reader(comp.as_slice(), 4).unwrap(), raw, "n={n} mt");
+            assert_eq!(decompress(&comp).unwrap(), raw);
+        }
+    }
+
+    #[test]
+    fn reader_small_read_calls() {
+        let raw = gaussian_bf16(50_000, 7);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        let mut r = ZnnReader::new(container.as_slice()).unwrap();
+        let mut back = Vec::new();
+        let mut buf = [0u8; 997];
+        loop {
+            let n = r.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            back.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(back, raw);
+    }
+
+    #[test]
+    fn truncated_stream_container_rejected() {
+        let raw = gaussian_bf16(100_000, 8);
+        let mut w = ZnnWriter::new(Vec::new(), CodecConfig::for_dtype(DType::BF16)).unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        for cut in [0, 3, 11, container.len() / 2, container.len() - 1] {
+            assert!(
+                decompress_reader(&container[..cut], 1).is_err(),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_payload_detected() {
+        let raw = gaussian_bf16(150_000, 9);
+        let mut w = ZnnWriter::new(Vec::new(), CodecConfig::for_dtype(DType::BF16)).unwrap();
+        w.write_all(&raw).unwrap();
+        let mut container = w.finish().unwrap();
+        let n = container.len();
+        container[n - 20] ^= 0x10;
+        match decompress_reader(container.as_slice(), 1) {
+            Err(_) => {}
+            Ok(back) => assert_ne!(back, raw, "corruption must not roundtrip silently"),
+        }
+    }
+
+    #[test]
+    fn flush_does_not_finalize() {
+        let cfg = CodecConfig::for_dtype(DType::BF16);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&[1, 2, 3, 4]).unwrap();
+        w.flush().unwrap(); // flush must not end the container
+        w.write_all(&[5, 6]).unwrap();
+        let container = w.finish().unwrap();
+        assert_eq!(
+            decompress_reader(container.as_slice(), 1).unwrap(),
+            [1, 2, 3, 4, 5, 6]
+        );
+    }
+}

@@ -1,4 +1,8 @@
 //! Bounded-queue worker pipeline with in-order delivery.
+//!
+//! Work items hold their bytes behind `Arc<[u8]>`, so producers that keep
+//! (or fan out) a buffer share it with the pipeline instead of cloning a
+//! `Vec<u8>` per item — submission is a pointer move end to end.
 
 use crate::codec::{CodecConfig, Compressor};
 use crate::coordinator::metrics::Metrics;
@@ -9,13 +13,23 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// One unit of work: a named buffer to compress.
+/// One unit of work: a named buffer to compress. `data` is shared, not
+/// owned: cloning a `WorkItem` (or keeping the buffer on the producer
+/// side) never copies the bytes.
 #[derive(Debug, Clone)]
 pub struct WorkItem {
     /// Item name (tensor/file/checkpoint id).
     pub name: String,
-    /// Raw bytes.
-    pub data: Vec<u8>,
+    /// Raw bytes (shared; cheap to clone).
+    pub data: Arc<[u8]>,
+}
+
+impl WorkItem {
+    /// New work item; accepts `Vec<u8>`, `Box<[u8]>` or an existing
+    /// `Arc<[u8]>` without copying.
+    pub fn new(name: impl Into<String>, data: impl Into<Arc<[u8]>>) -> WorkItem {
+        WorkItem { name: name.into(), data: data.into() }
+    }
 }
 
 /// A finished item, delivered in submission order.
@@ -216,7 +230,7 @@ mod tests {
                         &crate::fp::dtype::f32_to_bf16_bits(w).to_le_bytes(),
                     );
                 }
-                WorkItem { name: format!("t{i}"), data }
+                WorkItem::new(format!("t{i}"), data)
             })
             .collect()
     }
@@ -224,7 +238,7 @@ mod tests {
     #[test]
     fn in_order_delivery_multi_worker() {
         let its = items(24, 40_000, 1);
-        let originals: Vec<Vec<u8>> = its.iter().map(|i| i.data.clone()).collect();
+        let originals: Vec<Arc<[u8]>> = its.iter().map(|i| Arc::clone(&i.data)).collect();
         let mut p = PipelineBuilder::new(CodecConfig::for_dtype(DType::BF16))
             .workers(4)
             .queue_depth(2)
@@ -236,7 +250,7 @@ mod tests {
         assert_eq!(results.len(), 24);
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.name, format!("t{i}"), "order preserved");
-            assert_eq!(decompress(&r.compressed).unwrap(), originals[i]);
+            assert_eq!(decompress(&r.compressed).unwrap()[..], originals[i][..]);
         }
         assert_eq!(
             metrics.items_out.load(std::sync::atomic::Ordering::Relaxed),
@@ -274,8 +288,6 @@ mod tests {
     fn submit_after_close_errors() {
         let mut p = PipelineBuilder::new(CodecConfig::for_dtype(DType::F32)).start();
         p.close();
-        assert!(p
-            .submit(WorkItem { name: "x".into(), data: vec![1, 2, 3, 4] })
-            .is_err());
+        assert!(p.submit(WorkItem::new("x", vec![1, 2, 3, 4])).is_err());
     }
 }

@@ -70,6 +70,12 @@ impl CheckpointStore {
     }
 
     /// Append a checkpoint; returns a reference to its stored entry.
+    ///
+    /// Bases are compressed one-shot (`ZNN1`, byte-identical to a direct
+    /// [`Compressor::compress`]); deltas are **streamed** — XORed against
+    /// the reference one chunk at a time through a
+    /// [`crate::codec::ZnnWriter`], so the full delta buffer is never
+    /// materialized.
     pub fn push(&mut self, raw: &[u8]) -> Result<&StoredDelta> {
         let idx = self.entries.len();
         let is_base = match self.strategy {
@@ -90,12 +96,20 @@ impl CheckpointStore {
                 BaseStrategy::Standalone => unreachable!(),
             }
             .ok_or_else(|| Error::Invalid("no reference checkpoint".into()))?;
-            self.delta.encode(reference, raw)?
+            let mut sink = Vec::new();
+            self.delta.encode_to(reference, raw, &mut sink)?;
+            sink
         };
-        if is_base {
-            self.base_raw = Some(raw.to_vec());
+        // Keep only the raw bytes the strategy will actually reference.
+        match self.strategy {
+            BaseStrategy::Standalone => {}
+            BaseStrategy::Chain(_) => self.prev_raw = Some(raw.to_vec()),
+            BaseStrategy::FixedBase(_) => {
+                if is_base {
+                    self.base_raw = Some(raw.to_vec());
+                }
+            }
         }
-        self.prev_raw = Some(raw.to_vec());
         self.entries.push(StoredDelta {
             index: idx,
             bytes,
@@ -106,7 +120,9 @@ impl CheckpointStore {
     }
 
     /// Recover checkpoint `index` by decompressing its base and applying
-    /// the delta chain.
+    /// the delta chain. Deltas are decoded streaming: each step reads the
+    /// stored container incrementally and XORs in place against the
+    /// running base.
     pub fn recover(&self, index: usize) -> Result<Vec<u8>> {
         let e = self
             .entries
@@ -120,13 +136,13 @@ impl CheckpointStore {
             BaseStrategy::FixedBase(k) => {
                 let base_idx = (index / k) * k;
                 let base = decompress(&self.entries[base_idx].bytes)?;
-                self.delta.decode(&base, &e.bytes)
+                self.delta.decode_from(&base, e.bytes.as_slice())
             }
             BaseStrategy::Chain(k) => {
                 let base_idx = (index / k) * k;
                 let mut cur = decompress(&self.entries[base_idx].bytes)?;
                 for i in base_idx + 1..=index {
-                    cur = self.delta.decode(&cur, &self.entries[i].bytes)?;
+                    cur = self.delta.decode_from(&cur, self.entries[i].bytes.as_slice())?;
                 }
                 Ok(cur)
             }

@@ -10,4 +10,4 @@ pub mod checkpoint_store;
 pub mod xor;
 
 pub use checkpoint_store::{BaseStrategy, CheckpointStore, StoredDelta};
-pub use xor::{xor_delta, xor_delta_model, DeltaCodec};
+pub use xor::{xor_delta, xor_delta_model, xor_into, DeltaCodec};

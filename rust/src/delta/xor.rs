@@ -1,9 +1,10 @@
 //! XOR deltas and their compression.
 
-use crate::codec::{decompress, CodecConfig, Compressor, MethodPolicy};
+use crate::codec::{decompress, CodecConfig, Compressor, MethodPolicy, ZnnReader, ZnnWriter};
 use crate::error::{Error, Result};
 use crate::fp::DType;
 use crate::model::tensor::Model;
+use std::io::{Read, Write};
 
 /// XOR two equal-length byte buffers (`a ^ b`); self-inverse.
 pub fn xor_delta(a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
@@ -15,6 +16,15 @@ pub fn xor_delta(a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
         )));
     }
     let mut out = vec![0u8; a.len()];
+    xor_into(a, b, &mut out);
+    Ok(out)
+}
+
+/// `out = a ^ b` into a caller-provided buffer of the same length — the
+/// chunk-at-a-time building block of the streaming delta paths (no
+/// full-buffer delta is ever materialized).
+pub fn xor_into(a: &[u8], b: &[u8], out: &mut [u8]) {
+    assert!(a.len() == b.len() && a.len() == out.len(), "xor_into size mismatch");
     // word-at-a-time
     let mut i = 0;
     while i + 8 <= a.len() {
@@ -26,7 +36,6 @@ pub fn xor_delta(a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
     for k in i..a.len() {
         out[k] = a[k] ^ b[k];
     }
-    Ok(out)
 }
 
 /// XOR the raw bytes of two models (shapes/dtypes/order must match).
@@ -65,17 +74,94 @@ impl DeltaCodec {
         self
     }
 
-    /// Compress `next` against `base`: XOR then codec.
+    /// Compress `next` against `base`: XOR then codec (one-shot `ZNN1`
+    /// container; the full delta buffer is materialized).
     pub fn encode(&self, base: &[u8], next: &[u8]) -> Result<Vec<u8>> {
         let delta = xor_delta(base, next)?;
         Compressor::new(self.cfg.clone()).compress(&delta)
     }
 
-    /// Recover `next` from `base` + compressed delta.
+    /// Recover `next` from `base` + compressed delta (either container
+    /// format).
     pub fn decode(&self, base: &[u8], compressed_delta: &[u8]) -> Result<Vec<u8>> {
         let delta = decompress(compressed_delta)?;
         xor_delta(base, &delta)
     }
+
+    /// Streaming [`DeltaCodec::encode`]: XOR one scratch chunk at a time
+    /// into a [`crate::codec::ZnnWriter`] on `sink`. Peak extra memory is
+    /// one chunk, not the whole delta — this is the checkpoint-store hot
+    /// path for multi-GB checkpoints. Emits a `ZNS1` streaming container.
+    pub fn encode_to(&self, base: &[u8], next: &[u8], sink: impl Write) -> Result<()> {
+        if base.len() != next.len() {
+            return Err(Error::Invalid(format!(
+                "delta requires equal sizes: {} vs {}",
+                base.len(),
+                next.len()
+            )));
+        }
+        let chunk = self.cfg.chunk_size.max(1);
+        let mut scratch = vec![0u8; chunk.min(next.len())];
+        let mut w = ZnnWriter::new(sink, self.cfg.clone())?;
+        let mut at = 0usize;
+        while at < next.len() {
+            let hi = (at + chunk).min(next.len());
+            let s = &mut scratch[..hi - at];
+            xor_into(&base[at..hi], &next[at..hi], s);
+            w.write_all(s)?;
+            at = hi;
+        }
+        w.finish()?;
+        Ok(())
+    }
+
+    /// Streaming [`DeltaCodec::decode`]: read the compressed delta from
+    /// any reader (either container format), XOR against `base` chunk by
+    /// chunk, and return `next`. The decompressed delta is never held
+    /// whole.
+    pub fn decode_from(&self, base: &[u8], compressed_delta: impl Read) -> Result<Vec<u8>> {
+        let mut r = ZnnReader::new(compressed_delta)?;
+        let mut next = Vec::with_capacity(base.len());
+        let mut scratch = vec![0u8; self.cfg.chunk_size.max(1).min(base.len().max(1))];
+        loop {
+            let n = read_full(&mut r, &mut scratch)?;
+            if n == 0 {
+                break;
+            }
+            let at = next.len();
+            if at + n > base.len() {
+                return Err(Error::Invalid(format!(
+                    "delta longer than base ({} vs {})",
+                    at + n,
+                    base.len()
+                )));
+            }
+            next.resize(at + n, 0);
+            let (s, out) = (&scratch[..n], &mut next[at..at + n]);
+            xor_into(&base[at..at + n], s, out);
+        }
+        if next.len() != base.len() {
+            return Err(Error::Invalid(format!(
+                "delta shorter than base ({} vs {})",
+                next.len(),
+                base.len()
+            )));
+        }
+        Ok(next)
+    }
+}
+
+/// Read until `buf` is full or EOF; returns bytes read.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize> {
+    let mut at = 0usize;
+    while at < buf.len() {
+        let n = r.read(&mut buf[at..])?;
+        if n == 0 {
+            break;
+        }
+        at += n;
+    }
+    Ok(at)
 }
 
 #[cfg(test)]
@@ -143,6 +229,38 @@ mod tests {
         assert!(xor_delta_model(&a, &b).is_ok());
         let c = generate(&SyntheticSpec::new("c", Category::RegularBF16, 3 << 20, 3));
         assert!(xor_delta_model(&a, &c).is_err());
+    }
+
+    #[test]
+    fn streaming_encode_decode_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for n in [0usize, 1, 100, 300_000] {
+            let mut base = vec![0u8; n];
+            rng.fill_bytes(&mut base);
+            let mut next = base.clone();
+            for i in (0..n).step_by(7) {
+                next[i] = next[i].wrapping_add(1);
+            }
+            let dc = DeltaCodec::new(DType::BF16);
+            let mut sink = Vec::new();
+            dc.encode_to(&base, &next, &mut sink).unwrap();
+            // streaming decode matches, and the one-shot decode path also
+            // accepts the streaming container
+            assert_eq!(dc.decode_from(&base, sink.as_slice()).unwrap(), next, "n={n}");
+            assert_eq!(dc.decode(&base, &sink).unwrap(), next, "n={n} one-shot");
+        }
+    }
+
+    #[test]
+    fn streaming_decode_rejects_length_mismatch() {
+        let dc = DeltaCodec::new(DType::BF16);
+        let base = vec![1u8; 1000];
+        let next = vec![2u8; 1000];
+        let mut sink = Vec::new();
+        dc.encode_to(&base, &next, &mut sink).unwrap();
+        let longer = vec![1u8; 1001];
+        assert!(dc.decode_from(&base[..999], sink.as_slice()).is_err());
+        assert!(dc.decode_from(&longer, sink.as_slice()).is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub enum Error {
     Io(#[from] std::io::Error),
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

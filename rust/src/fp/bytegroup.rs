@@ -42,23 +42,39 @@ impl GroupLayout {
 /// output is **exponent group first**, then the remaining byte positions in
 /// ascending little-endian order — the on-disk stream order of `.znn`.
 pub fn split_groups(data: &[u8], layout: GroupLayout) -> Result<Vec<Vec<u8>>> {
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    split_groups_into(data, layout, &mut out)?;
+    Ok(out)
+}
+
+/// [`split_groups`] into caller-provided buffers — the allocation-free
+/// compression path. `out` is resized to `layout.groups()` vectors of
+/// `data.len() / elem` bytes each; existing capacity is reused, so a
+/// steady-state caller (the streaming codec's scratch arena) performs no
+/// allocations after warm-up.
+pub fn split_groups_into(data: &[u8], layout: GroupLayout, out: &mut Vec<Vec<u8>>) -> Result<()> {
     let k = layout.elem;
-    if k == 1 {
-        return Ok(vec![data.to_vec()]);
-    }
     if data.len() % k != 0 {
         return Err(Error::Invalid(format!(
             "buffer of {} bytes is not a multiple of element size {k}",
             data.len()
         )));
     }
+    out.resize_with(k, Vec::new);
     let n = data.len() / k;
-    let order = group_order(layout);
-    let mut out: Vec<Vec<u8>> = order.iter().map(|_| vec![0u8; n]).collect();
+    for g in out.iter_mut() {
+        g.clear();
+        g.resize(n, 0);
+    }
+    if k == 1 {
+        out[0].copy_from_slice(data);
+        return Ok(());
+    }
     match k {
-        2 => split2(data, layout, &mut out),
-        4 => split4(data, layout, &mut out),
+        2 => split2(data, layout, out),
+        4 => split4(data, layout, out),
         _ => {
+            let order = group_order(layout);
             for (gi, &pos) in order.iter().enumerate() {
                 let dst = &mut out[gi];
                 for (i, chunk) in data.chunks_exact(k).enumerate() {
@@ -67,7 +83,7 @@ pub fn split_groups(data: &[u8], layout: GroupLayout) -> Result<Vec<Vec<u8>>> {
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Inverse of [`split_groups`]: interleave the streams back into elements.
@@ -105,11 +121,12 @@ pub fn merge_groups_into(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) 
     if out.len() != n * k {
         return Err(Error::Corrupt("merge output size mismatch".into()));
     }
-    let order = group_order(layout);
     match k {
         2 => merge2(groups, layout, out),
         4 => merge4(groups, layout, out),
         _ => {
+            // cold path: elem outside {1,2,4}; the allocation is fine here
+            let order = group_order(layout);
             for (gi, &pos) in order.iter().enumerate() {
                 let src = &groups[gi];
                 for (i, chunk) in out.chunks_exact_mut(k).enumerate() {
@@ -128,6 +145,22 @@ pub fn group_order(layout: GroupLayout) -> Vec<usize> {
     let mut order = vec![layout.exp_group];
     order.extend((0..layout.elem).rev().filter(|&p| p != layout.exp_group));
     order
+}
+
+/// Inverse of [`group_order`] as a fixed-size map (`elem` is validated to
+/// be ≤ 16 by the container): `map[byte_position] = stream_index`. Stack
+/// only — the per-chunk hot paths must not allocate.
+fn pos_to_stream(layout: GroupLayout) -> [usize; 16] {
+    let mut map = [0usize; 16];
+    map[layout.exp_group] = 0;
+    let mut gi = 1;
+    for pos in (0..layout.elem).rev() {
+        if pos != layout.exp_group {
+            map[pos] = gi;
+            gi += 1;
+        }
+    }
+    map
 }
 
 // --- specialized fast paths -------------------------------------------------
@@ -163,37 +196,28 @@ fn merge2(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
 }
 
 fn split4(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
-    let order = group_order(layout);
+    let map = pos_to_stream(layout);
     // Split the output vector to get simultaneous &mut to all four streams.
     let (o0, rest) = out.split_at_mut(1);
     let (o1, rest) = rest.split_at_mut(1);
     let (o2, o3) = rest.split_at_mut(1);
     let dsts = [&mut o0[0][..], &mut o1[0][..], &mut o2[0][..], &mut o3[0][..]];
-    // dsts[gi] receives byte position order[gi]; build position->stream map.
-    let mut pos_to_stream = [0usize; 4];
-    for (gi, &pos) in order.iter().enumerate() {
-        pos_to_stream[pos] = gi;
-    }
     for (i, ch) in data.chunks_exact(4).enumerate() {
-        dsts[pos_to_stream[0]][i] = ch[0];
-        dsts[pos_to_stream[1]][i] = ch[1];
-        dsts[pos_to_stream[2]][i] = ch[2];
-        dsts[pos_to_stream[3]][i] = ch[3];
+        dsts[map[0]][i] = ch[0];
+        dsts[map[1]][i] = ch[1];
+        dsts[map[2]][i] = ch[2];
+        dsts[map[3]][i] = ch[3];
     }
 }
 
 fn merge4(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
-    let order = group_order(layout);
-    let mut pos_to_stream = [0usize; 4];
-    for (gi, &pos) in order.iter().enumerate() {
-        pos_to_stream[pos] = gi;
-    }
+    let map = pos_to_stream(layout);
     let srcs = [groups[0], groups[1], groups[2], groups[3]];
     for (i, ch) in out.chunks_exact_mut(4).enumerate() {
-        ch[0] = srcs[pos_to_stream[0]][i];
-        ch[1] = srcs[pos_to_stream[1]][i];
-        ch[2] = srcs[pos_to_stream[2]][i];
-        ch[3] = srcs[pos_to_stream[3]][i];
+        ch[0] = srcs[map[0]][i];
+        ch[1] = srcs[map[1]][i];
+        ch[2] = srcs[map[2]][i];
+        ch[3] = srcs[map[3]][i];
     }
 }
 

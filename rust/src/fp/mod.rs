@@ -10,5 +10,5 @@ pub mod bytegroup;
 pub mod dtype;
 pub mod stats;
 
-pub use bytegroup::{merge_groups, merge_groups_into, split_groups, GroupLayout};
+pub use bytegroup::{merge_groups, merge_groups_into, split_groups, split_groups_into, GroupLayout};
 pub use dtype::DType;

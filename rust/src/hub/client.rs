@@ -1,11 +1,20 @@
 //! The hub client: upload/download with optional ZipNN compression and
 //! Fig.-10-style end-to-end timing.
+//!
+//! Transfers are streamed: an upload pipes raw bytes through a
+//! [`ZnnWriter`] straight onto the socket (the compressed blob is never
+//! materialized client-side), and a compressed download decompresses
+//! through a [`ZnnReader`] as frames arrive off the wire.
 
-use crate::codec::{decompress_with, CodecConfig, Compressor};
-use crate::error::Result;
+use crate::codec::{CodecConfig, ZnnReader, ZnnWriter};
+use crate::error::{Error, Result};
 use crate::hub::netsim::NetSim;
-use crate::hub::protocol::{read_response, write_request, Op};
+use crate::hub::protocol::{
+    read_response, read_response_header, write_request, write_request_header, ChunkedReader,
+    ChunkedWriter, Op,
+};
 use crate::util::Timer;
+use std::io::{Read, Write};
 use std::net::TcpStream;
 
 /// End-to-end timing of one transfer (Fig. 10 bars).
@@ -17,7 +26,8 @@ pub struct TransferReport {
     pub raw_len: usize,
     /// Bytes on the wire (= raw when uncompressed).
     pub wire_len: usize,
-    /// Measured compression or decompression seconds (0 when off).
+    /// Measured codec wall seconds, overlapping the loopback send/receive
+    /// (0 when compression is off).
     pub codec_secs: f64,
     /// Simulated WAN transfer seconds for `wire_len`.
     pub transfer_secs: f64,
@@ -53,8 +63,10 @@ impl HubClient {
         self
     }
 
-    /// Upload raw bytes, optionally compressing with `cfg`. The simulated
-    /// WAN time is charged on the wire bytes via `sim`.
+    /// Upload raw bytes, optionally compressing with `cfg`. The body is
+    /// streamed: compression output goes straight onto the socket in
+    /// bounded frames. The simulated WAN time is charged on the wire bytes
+    /// via `sim`.
     pub fn upload(
         &mut self,
         name: &str,
@@ -62,26 +74,39 @@ impl HubClient {
         cfg: Option<CodecConfig>,
         sim: &mut NetSim,
     ) -> Result<TransferReport> {
-        let (wire, codec_secs, stored_name) = match cfg {
+        let (wire_len, codec_secs) = match cfg {
             Some(cfg) => {
+                write_request_header(&mut self.stream, Op::Put, &format!("{name}.znn"))?;
                 let t = Timer::start();
-                let comp = Compressor::new(cfg.with_threads(self.threads)).compress(raw)?;
-                (comp, t.secs(), format!("{name}.znn"))
+                let body = ChunkedWriter::new(&mut self.stream);
+                let mut zw = ZnnWriter::new(body, cfg.with_threads(self.threads))?;
+                zw.write_all(raw)?;
+                let body = zw.finish()?;
+                let wire_len = body.payload_len() as usize;
+                body.finish()?;
+                (wire_len, t.secs())
             }
-            None => (raw.to_vec(), 0.0, name.to_string()),
+            None => {
+                write_request_header(&mut self.stream, Op::Put, name)?;
+                let mut body = ChunkedWriter::new(&mut self.stream);
+                body.write_all(raw)?;
+                body.finish()?;
+                (raw.len(), 0.0)
+            }
         };
-        write_request(&mut self.stream, Op::Put, &stored_name, &wire)?;
         read_response(&mut self.stream)?;
         Ok(TransferReport {
             name: name.to_string(),
             raw_len: raw.len(),
-            wire_len: wire.len(),
+            wire_len,
             codec_secs,
-            transfer_secs: sim.transfer_secs(wire.len() as u64),
+            transfer_secs: sim.transfer_secs(wire_len as u64),
         })
     }
 
-    /// Download a blob; decompresses when it was stored as `.znn`.
+    /// Download a blob; decompresses when it was stored as `.znn`. The
+    /// compressed body is decoded as it arrives — only the raw result is
+    /// materialized.
     pub fn download(
         &mut self,
         name: &str,
@@ -90,26 +115,38 @@ impl HubClient {
     ) -> Result<(Vec<u8>, TransferReport)> {
         let stored_name = if compressed { format!("{name}.znn") } else { name.to_string() };
         write_request(&mut self.stream, Op::Get, &stored_name, b"")?;
-        let wire = read_response(&mut self.stream)?;
-        let transfer_secs = sim.transfer_secs(wire.len() as u64);
-        let (raw, codec_secs) = if compressed {
+        let ok = read_response_header(&mut self.stream)?;
+        let mut body = ChunkedReader::new(&mut self.stream);
+        if !ok {
+            let mut msg = Vec::new();
+            body.read_to_end(&mut msg)?;
+            return Err(Error::Format(format!(
+                "hub error: {}",
+                String::from_utf8_lossy(&msg)
+            )));
+        }
+        let mut raw = Vec::new();
+        let codec_secs = if compressed {
             let t = Timer::start();
-            let raw = decompress_with(&wire, self.threads)?;
-            let s = t.secs();
-            (raw, s)
+            let mut zr = ZnnReader::new(&mut body)?.with_threads(self.threads);
+            zr.read_to_end(&mut raw)?;
+            drop(zr);
+            t.secs()
         } else {
-            (wire.clone(), 0.0)
+            body.read_to_end(&mut raw)?;
+            0.0
         };
-        Ok((
-            raw.clone(),
-            TransferReport {
-                name: name.to_string(),
-                raw_len: raw.len(),
-                wire_len: wire.len(),
-                codec_secs,
-                transfer_secs,
-            },
-        ))
+        body.drain()?; // stay in sync on the keep-alive connection
+        let wire_len = body.payload_len() as usize;
+        let transfer_secs = sim.transfer_secs(wire_len as u64);
+        let report = TransferReport {
+            name: name.to_string(),
+            raw_len: raw.len(),
+            wire_len,
+            codec_secs,
+            transfer_secs,
+        };
+        Ok((raw, report))
     }
 
     /// List stored blob names.
@@ -118,5 +155,20 @@ impl HubClient {
         let payload = read_response(&mut self.stream)?;
         let s = String::from_utf8_lossy(&payload);
         Ok(s.split('\n').filter(|x| !x.is_empty()).map(String::from).collect())
+    }
+
+    /// Storage stats of a blob: `(total_bytes, n_frames, max_frame)` —
+    /// how the server actually holds it (bounded frames, never one
+    /// allocation).
+    pub fn stat(&mut self, name: &str) -> Result<(u64, usize, usize)> {
+        write_request(&mut self.stream, Op::Stat, name, b"")?;
+        let payload = read_response(&mut self.stream)?;
+        let s = String::from_utf8_lossy(&payload);
+        let mut it = s.split_whitespace();
+        let parse_err = || Error::Format(format!("bad stat response '{s}'"));
+        let total = it.next().and_then(|v| v.parse().ok()).ok_or_else(parse_err)?;
+        let frames = it.next().and_then(|v| v.parse().ok()).ok_or_else(parse_err)?;
+        let max = it.next().and_then(|v| v.parse().ok()).ok_or_else(parse_err)?;
+        Ok((total, frames, max))
     }
 }

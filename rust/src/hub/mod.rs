@@ -14,4 +14,5 @@ pub mod server;
 
 pub use client::{HubClient, TransferReport};
 pub use netsim::{NetProfile, NetSim};
+pub use protocol::FRAME_MAX;
 pub use server::HubServer;

@@ -1,14 +1,24 @@
 //! Length-prefixed binary protocol between hub client and server.
 //!
+//! Bodies are **chunked**: a sequence of `[len u32][bytes]` wire frames
+//! terminated by a zero length, each frame at most [`FRAME_MAX`] bytes.
+//! That lets both sides stream arbitrarily large blobs while bounding the
+//! memory either side must hold per connection to one frame.
+//!
 //! ```text
-//! request:  [op u8][name_len u32][name bytes][payload_len u64][payload]
-//! response: [status u8][payload_len u64][payload]
+//! request:  [op u8][name_len u32][name bytes][chunked body]
+//! response: [status u8][chunked body]
+//! body:     ([len u32 in 1..=FRAME_MAX][bytes])* [0 u32]
 //! ```
-//! ops: 0 = PUT, 1 = GET, 2 = LIST, 3 = SHUTDOWN. status: 0 = OK, 1 = err
-//! (payload is a UTF-8 message).
+//! ops: 0 = PUT, 1 = GET, 2 = LIST, 3 = SHUTDOWN, 4 = STAT.
+//! status: 0 = OK, 1 = err (body is a UTF-8 message).
 
 use crate::error::{Error, Result};
-use std::io::{Read, Write};
+use std::io::{self, Read, Write};
+
+/// Maximum payload bytes in one wire frame — the server's per-connection
+/// buffering bound.
+pub const FRAME_MAX: usize = 64 * 1024;
 
 /// Request opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +32,8 @@ pub enum Op {
     List = 2,
     /// Stop the server (tests / clean shutdown).
     Shutdown = 3,
+    /// Blob storage stats: "total_len n_frames max_frame" (UTF-8).
+    Stat = 4,
 }
 
 impl Op {
@@ -32,28 +44,191 @@ impl Op {
             1 => Some(Op::Get),
             2 => Some(Op::List),
             3 => Some(Op::Shutdown),
+            4 => Some(Op::Stat),
             _ => None,
         }
     }
 }
 
-/// Write a request frame.
-pub fn write_request(w: &mut impl Write, op: Op, name: &str, payload: &[u8]) -> Result<()> {
+// ---------------------------------------------------------------------------
+// Chunked body adapters
+// ---------------------------------------------------------------------------
+
+/// [`Write`] adapter that emits a chunked body to the inner writer.
+/// Small writes coalesce into [`FRAME_MAX`]-sized wire frames; call
+/// [`ChunkedWriter::finish`] to flush the final frame and the terminator.
+pub struct ChunkedWriter<W: Write> {
+    inner: W,
+    buf: Vec<u8>,
+    written: u64,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// New chunked body on `inner`.
+    pub fn new(inner: W) -> ChunkedWriter<W> {
+        ChunkedWriter { inner, buf: Vec::with_capacity(FRAME_MAX), written: 0 }
+    }
+
+    /// Payload bytes accepted so far (excluding framing overhead).
+    pub fn payload_len(&self) -> u64 {
+        self.written
+    }
+
+    fn emit_buf(&mut self) -> io::Result<()> {
+        if !self.buf.is_empty() {
+            self.inner.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            self.inner.write_all(&self.buf)?;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Flush pending bytes, write the terminator, flush the inner writer,
+    /// and return it.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.emit_buf()?;
+        self.inner.write_all(&0u32.to_le_bytes())?;
+        self.inner.flush()?;
+        Ok(self.inner)
+    }
+}
+
+impl<W: Write> Write for ChunkedWriter<W> {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        self.written += data.len() as u64;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let space = FRAME_MAX - self.buf.len();
+            let take = space.min(rest.len());
+            self.buf.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if self.buf.len() == FRAME_MAX {
+                self.emit_buf()?;
+            }
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.emit_buf()?;
+        self.inner.flush()
+    }
+}
+
+/// [`Read`] adapter over a chunked body. Yields the concatenated payload
+/// and stops at the terminator; [`ChunkedReader::drain`] consumes any
+/// unread remainder so a keep-alive connection stays in sync.
+pub struct ChunkedReader<R: Read> {
+    inner: R,
+    remaining: usize,
+    done: bool,
+    consumed: u64,
+}
+
+impl<R: Read> ChunkedReader<R> {
+    /// New chunked body from `inner`.
+    pub fn new(inner: R) -> ChunkedReader<R> {
+        ChunkedReader { inner, remaining: 0, done: false, consumed: 0 }
+    }
+
+    /// Payload bytes read so far (excluding framing overhead).
+    pub fn payload_len(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Advance to the next wire frame; `false` at the terminator.
+    fn next_frame(&mut self) -> io::Result<bool> {
+        if self.done {
+            return Ok(false);
+        }
+        let mut len4 = [0u8; 4];
+        self.inner.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len == 0 {
+            self.done = true;
+            return Ok(false);
+        }
+        if len > FRAME_MAX {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("wire frame of {len} bytes exceeds FRAME_MAX"),
+            ));
+        }
+        self.remaining = len;
+        Ok(true)
+    }
+
+    /// Read one whole wire frame into `buf` (replacing its contents).
+    /// Returns `false` (and leaves `buf` empty) at the terminator. This is
+    /// the server's PUT path: each stored frame is one bounded allocation.
+    pub fn read_frame(&mut self, buf: &mut Vec<u8>) -> io::Result<bool> {
+        buf.clear();
+        if self.remaining == 0 && !self.next_frame()? {
+            return Ok(false);
+        }
+        buf.resize(self.remaining, 0);
+        self.inner.read_exact(buf)?;
+        self.consumed += self.remaining as u64;
+        self.remaining = 0;
+        Ok(true)
+    }
+
+    /// Consume (and discard) everything up to the terminator.
+    pub fn drain(&mut self) -> io::Result<()> {
+        let mut scratch = [0u8; 4096];
+        loop {
+            let n = self.read(&mut scratch)?;
+            if n == 0 {
+                return Ok(());
+            }
+        }
+    }
+}
+
+impl<R: Read> Read for ChunkedReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        while self.remaining == 0 {
+            if !self.next_frame()? {
+                return Ok(0);
+            }
+        }
+        let take = self.remaining.min(buf.len());
+        self.inner.read_exact(&mut buf[..take])?;
+        self.remaining -= take;
+        self.consumed += take as u64;
+        Ok(take)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request / response framing
+// ---------------------------------------------------------------------------
+
+/// Write a request's fixed header (opcode + name); the caller streams the
+/// body through a [`ChunkedWriter`].
+pub fn write_request_header(w: &mut impl Write, op: Op, name: &str) -> Result<()> {
     w.write_all(&[op as u8])?;
     w.write_all(&(name.len() as u32).to_le_bytes())?;
     w.write_all(name.as_bytes())?;
-    w.write_all(&(payload.len() as u64).to_le_bytes())?;
-    w.write_all(payload)?;
-    w.flush()?;
     Ok(())
 }
 
-/// Read a request frame. Returns `(op, name, payload)`.
-pub fn read_request(r: &mut impl Read) -> Result<(Op, String, Vec<u8>)> {
+/// Read a request's fixed header. Returns `(op, name)`; the body follows
+/// as a chunked stream.
+pub fn read_request_header(r: &mut impl Read) -> Result<(Op, String)> {
     let mut op_b = [0u8; 1];
     r.read_exact(&mut op_b)?;
     let op = Op::from_u8(op_b[0])
         .ok_or_else(|| Error::Format(format!("bad opcode {}", op_b[0])))?;
+    Ok((op, read_name(r)?))
+}
+
+/// Read the length-prefixed request name (the header minus the opcode —
+/// for servers that read the opcode byte separately while polling).
+pub fn read_name(r: &mut impl Read) -> Result<String> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4)?;
     let name_len = u32::from_le_bytes(len4) as usize;
@@ -62,37 +237,63 @@ pub fn read_request(r: &mut impl Read) -> Result<(Op, String, Vec<u8>)> {
     }
     let mut name = vec![0u8; name_len];
     r.read_exact(&mut name)?;
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let payload_len = u64::from_le_bytes(len8) as usize;
-    let mut payload = vec![0u8; payload_len];
-    r.read_exact(&mut payload)?;
-    Ok((
-        op,
-        String::from_utf8(name).map_err(|_| Error::Format("name not utf8".into()))?,
-        payload,
-    ))
+    String::from_utf8(name).map_err(|_| Error::Format("name not utf8".into()))
 }
 
-/// Write a response frame.
-pub fn write_response(w: &mut impl Write, ok: bool, payload: &[u8]) -> Result<()> {
-    w.write_all(&[if ok { 0 } else { 1 }])?;
-    w.write_all(&(payload.len() as u64).to_le_bytes())?;
-    w.write_all(payload)?;
+/// Write a complete request with an in-memory payload (convenience for
+/// small bodies; the streaming paths use [`write_request_header`] +
+/// [`ChunkedWriter`] directly).
+pub fn write_request(w: &mut impl Write, op: Op, name: &str, payload: &[u8]) -> Result<()> {
+    write_request_header(w, op, name)?;
+    let mut cw = ChunkedWriter::new(&mut *w);
+    cw.write_all(payload)?;
+    cw.finish()?;
     w.flush()?;
     Ok(())
 }
 
-/// Read a response frame; error status becomes `Error::Format`.
-pub fn read_response(r: &mut impl Read) -> Result<Vec<u8>> {
+/// Read a complete request, buffering the body. Returns `(op, name,
+/// payload)`.
+pub fn read_request(r: &mut impl Read) -> Result<(Op, String, Vec<u8>)> {
+    let (op, name) = read_request_header(r)?;
+    let mut body = ChunkedReader::new(&mut *r);
+    let mut payload = Vec::new();
+    body.read_to_end(&mut payload)?;
+    Ok((op, name, payload))
+}
+
+/// Write a response's status byte; the caller streams the body through a
+/// [`ChunkedWriter`].
+pub fn write_response_header(w: &mut impl Write, ok: bool) -> Result<()> {
+    w.write_all(&[if ok { 0 } else { 1 }])?;
+    Ok(())
+}
+
+/// Read a response's status byte.
+pub fn read_response_header(r: &mut impl Read) -> Result<bool> {
     let mut status = [0u8; 1];
     r.read_exact(&mut status)?;
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let payload_len = u64::from_le_bytes(len8) as usize;
-    let mut payload = vec![0u8; payload_len];
-    r.read_exact(&mut payload)?;
-    if status[0] != 0 {
+    Ok(status[0] == 0)
+}
+
+/// Write a complete response with an in-memory payload.
+pub fn write_response(w: &mut impl Write, ok: bool, payload: &[u8]) -> Result<()> {
+    write_response_header(w, ok)?;
+    let mut cw = ChunkedWriter::new(&mut *w);
+    cw.write_all(payload)?;
+    cw.finish()?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a complete response, buffering the body; error status becomes
+/// `Error::Format`.
+pub fn read_response(r: &mut impl Read) -> Result<Vec<u8>> {
+    let ok = read_response_header(r)?;
+    let mut body = ChunkedReader::new(&mut *r);
+    let mut payload = Vec::new();
+    body.read_to_end(&mut payload)?;
+    if !ok {
         return Err(Error::Format(format!(
             "hub error: {}",
             String::from_utf8_lossy(&payload)
@@ -131,5 +332,63 @@ mod tests {
         let mut buf = Vec::new();
         write_request(&mut buf, Op::Get, "x", b"abc").unwrap();
         assert!(read_request(&mut buf[..buf.len() - 1].as_ref()).is_err());
+    }
+
+    #[test]
+    fn large_bodies_split_into_bounded_frames() {
+        let payload = vec![7u8; FRAME_MAX * 3 + 123];
+        let mut buf = Vec::new();
+        write_request(&mut buf, Op::Put, "big", &payload).unwrap();
+        // wire frames after the 6+3 byte header: 3 full + 1 partial + end
+        let (_, _, got) = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, payload);
+        // frame-by-frame read sees bounded frames only
+        let mut r = buf.as_slice();
+        let (_, name) = read_request_header(&mut r).unwrap();
+        assert_eq!(name, "big");
+        let mut body = ChunkedReader::new(&mut r);
+        let mut frame = Vec::new();
+        let mut sizes = Vec::new();
+        while body.read_frame(&mut frame).unwrap() {
+            sizes.push(frame.len());
+        }
+        assert_eq!(sizes, vec![FRAME_MAX, FRAME_MAX, FRAME_MAX, 123]);
+        assert_eq!(body.payload_len(), payload.len() as u64);
+    }
+
+    #[test]
+    fn empty_body_is_just_a_terminator() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, Op::List, "", b"").unwrap();
+        let (op, name, payload) = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(op, Op::List);
+        assert!(name.is_empty());
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.push(Op::Put as u8);
+        buf.extend_from_slice(&0u32.to_le_bytes()); // empty name
+        buf.extend_from_slice(&((FRAME_MAX + 1) as u32).to_le_bytes());
+        buf.extend_from_slice(&vec![0u8; FRAME_MAX + 1]);
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn drain_skips_unread_body() {
+        let mut buf = Vec::new();
+        let mut cw = ChunkedWriter::new(&mut buf);
+        cw.write_all(&vec![1u8; FRAME_MAX + 10]).unwrap();
+        cw.finish().unwrap();
+        buf.push(0xEE); // next message after the body
+        let mut r = buf.as_slice();
+        let mut body = ChunkedReader::new(&mut r);
+        let mut first = [0u8; 10];
+        body.read_exact(&mut first).unwrap();
+        body.drain().unwrap();
+        assert_eq!(r, [0xEE]); // positioned exactly after the terminator
     }
 }

@@ -1,18 +1,50 @@
 //! The hub server: a threaded TCP blob store.
+//!
+//! Blobs are stored as the bounded wire frames they arrived in (≤
+//! [`FRAME_MAX`] bytes each), never reassembled: a PUT of an N-byte blob
+//! costs the server one frame-sized buffer at a time, and a GET streams
+//! the stored frames back out. Peak per-connection memory is therefore
+//! O(FRAME_MAX) regardless of blob size.
 
 use crate::error::Result;
-use crate::hub::protocol::{read_request, write_response, Op};
+use crate::hub::protocol::{
+    read_name, write_response, write_response_header, ChunkedReader, ChunkedWriter, Op, FRAME_MAX,
+};
 use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Poll interval while a keep-alive connection is idle: how quickly a
+/// handler notices the stop flag.
+const IDLE_POLL: Duration = Duration::from_millis(100);
+/// Timeout for reads inside an in-flight request (a stalled client gets
+/// its connection dropped instead of pinning a handler thread forever).
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One stored blob: the wire frames of its PUT body.
+struct StoredBlob {
+    frames: Vec<Vec<u8>>,
+    total: u64,
+}
+
+impl StoredBlob {
+    fn max_frame(&self) -> usize {
+        self.frames.iter().map(|f| f.len()).max().unwrap_or(0)
+    }
+}
+
+type Store = Arc<Mutex<HashMap<String, Arc<StoredBlob>>>>;
 
 /// In-process model hub listening on loopback.
 pub struct HubServer {
     addr: String,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl HubServer {
@@ -21,8 +53,10 @@ impl HubServer {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
-        let store: Arc<Mutex<HashMap<String, Vec<u8>>>> = Arc::new(Mutex::new(HashMap::new()));
+        let store: Store = Arc::new(Mutex::new(HashMap::new()));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let stop2 = Arc::clone(&stop);
+        let conns2 = Arc::clone(&conns);
         let handle = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop2.load(Ordering::Relaxed) {
@@ -31,13 +65,17 @@ impl HubServer {
                 let Ok(stream) = conn else { continue };
                 let store = Arc::clone(&store);
                 let stop3 = Arc::clone(&stop2);
-                // one thread per connection; connections are short-lived
-                std::thread::spawn(move || {
+                let h = std::thread::spawn(move || {
                     let _ = handle_conn(stream, store, stop3);
                 });
+                // reap finished handlers so a long-lived server doesn't
+                // accumulate handles without bound
+                let mut conns = conns2.lock().unwrap();
+                conns.retain(|c| !c.is_finished());
+                conns.push(h);
             }
         });
-        Ok(HubServer { addr, stop, handle: Some(handle) })
+        Ok(HubServer { addr, stop, handle: Some(handle), conns })
     }
 
     /// Address to connect to.
@@ -45,12 +83,23 @@ impl HubServer {
         &self.addr
     }
 
-    /// Request shutdown and join the accept loop.
+    /// Request shutdown and join the accept loop plus every connection
+    /// handler. Handlers poll the stop flag between requests (and time out
+    /// stalled requests), so this returns even with live keep-alive
+    /// connections.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // poke the accept loop awake
         let _ = TcpStream::connect(&self.addr);
         if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
             let _ = h.join();
         }
     }
@@ -58,43 +107,107 @@ impl HubServer {
 
 impl Drop for HubServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        let _ = TcpStream::connect(&self.addr);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
-    store: Arc<Mutex<HashMap<String, Vec<u8>>>>,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
+/// Serve one connection until the peer closes, a request stalls past
+/// [`IO_TIMEOUT`], or the stop flag is raised.
+fn handle_conn(mut stream: TcpStream, store: Store, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(IDLE_POLL))?;
+    // A peer that stops reading its response must not pin this handler
+    // (shutdown joins every handler thread).
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
     loop {
-        let (op, name, payload) = match read_request(&mut stream) {
-            Ok(r) => r,
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        // Wait for the next request's opcode, polling the stop flag.
+        let mut op_b = [0u8; 1];
+        match stream.read_exact(&mut op_b) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
             Err(_) => return Ok(()), // client closed
-        };
-        match op {
-            Op::Put => {
-                store.lock().unwrap().insert(name, payload);
-                write_response(&mut stream, true, b"")?;
+        }
+        // A request is in flight: allow slower reads, but not forever.
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        let done = handle_request(op_b[0], &mut stream, &store, &stop)?;
+        if done {
+            return Ok(());
+        }
+        stream.set_read_timeout(Some(IDLE_POLL))?;
+    }
+}
+
+/// Handle one request whose opcode byte has been read. Returns `true` when
+/// the connection should close (shutdown request).
+fn handle_request(
+    op_byte: u8,
+    stream: &mut TcpStream,
+    store: &Store,
+    stop: &AtomicBool,
+) -> Result<bool> {
+    let op = Op::from_u8(op_byte)
+        .ok_or_else(|| crate::error::Error::Format(format!("bad opcode {op_byte}")))?;
+    let name = read_name(&mut *stream)?;
+    // Every request carries a chunked body (usually just the terminator);
+    // ops that don't use it must still consume it to keep the keep-alive
+    // connection in sync.
+    if op != Op::Put {
+        ChunkedReader::new(&mut *stream).drain()?;
+    }
+    match op {
+        Op::Put => {
+            let mut body = ChunkedReader::new(&mut *stream);
+            let mut frames = Vec::new();
+            let mut frame = Vec::new();
+            while body.read_frame(&mut frame)? {
+                debug_assert!(frame.len() <= FRAME_MAX);
+                frames.push(std::mem::take(&mut frame));
             }
-            Op::Get => match store.lock().unwrap().get(&name) {
-                Some(data) => write_response(&mut stream, true, data)?,
-                None => write_response(&mut stream, false, b"not found")?,
-            },
-            Op::List => {
-                let names: Vec<String> =
-                    store.lock().unwrap().keys().cloned().collect();
-                write_response(&mut stream, true, names.join("\n").as_bytes())?;
-            }
-            Op::Shutdown => {
-                stop.store(true, Ordering::Relaxed);
-                write_response(&mut stream, true, b"")?;
-                return Ok(());
+            let blob = StoredBlob { total: body.payload_len(), frames };
+            store.lock().unwrap().insert(name, Arc::new(blob));
+            write_response(stream, true, b"")?;
+        }
+        Op::Get => {
+            let blob = store.lock().unwrap().get(&name).cloned();
+            match blob {
+                Some(blob) => {
+                    write_response_header(stream, true)?;
+                    let mut cw = ChunkedWriter::new(&mut *stream);
+                    for f in &blob.frames {
+                        cw.write_all(f)?;
+                    }
+                    cw.finish()?;
+                }
+                None => write_response(stream, false, b"not found")?,
             }
         }
+        Op::List => {
+            let names: Vec<String> = store.lock().unwrap().keys().cloned().collect();
+            write_response(stream, true, names.join("\n").as_bytes())?;
+        }
+        Op::Stat => {
+            let blob = store.lock().unwrap().get(&name).cloned();
+            match blob {
+                Some(blob) => {
+                    let msg =
+                        format!("{} {} {}", blob.total, blob.frames.len(), blob.max_frame());
+                    write_response(stream, true, msg.as_bytes())?;
+                }
+                None => write_response(stream, false, b"not found")?,
+            }
+        }
+        Op::Shutdown => {
+            stop.store(true, Ordering::Relaxed);
+            write_response(stream, true, b"")?;
+            return Ok(true);
+        }
     }
+    Ok(false)
 }

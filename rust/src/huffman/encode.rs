@@ -96,16 +96,27 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
 /// [`compress`] with a precomputed histogram (the codec's auto-selector
 /// already has one — saves a full pass over the data).
 pub fn compress_with_hist(data: &[u8], hist: &[u64; 256]) -> Vec<u8> {
+    let mut out = Vec::new();
+    compress_into(data, hist, &mut out);
+    out
+}
+
+/// [`compress_with_hist`] appending into `out`, returning the number of
+/// bytes written. The encoded bytes are identical to [`compress`]; the
+/// difference is that a caller recycling `out` (the streaming codec's
+/// scratch arena) performs no allocations once the buffer has warmed up.
+pub fn compress_into(data: &[u8], hist: &[u64; 256], out: &mut Vec<u8>) -> usize {
+    let base = out.len();
     if data.is_empty() {
-        return vec![MODE_RAW, 0, 0, 0, 0];
+        out.extend_from_slice(&[MODE_RAW, 0, 0, 0, 0]);
+        return out.len() - base;
     }
     let Some(lens) = build_lengths(hist) else {
         // exactly one distinct symbol
-        let mut out = Vec::with_capacity(6);
         out.push(MODE_SINGLE);
         out.push(data[0]);
-        push_u32_le(&mut out, data.len() as u32);
-        return out;
+        push_u32_le(out, data.len() as u32);
+        return out.len() - base;
     };
     let table = EncodeTable::from_lengths(&lens);
     let payload_bits = table.cost_bits(hist);
@@ -113,11 +124,10 @@ pub fn compress_with_hist(data: &[u8], hist: &[u64; 256]) -> Vec<u8> {
     let payload_bound = payload_bits.div_ceil(8) as usize + 4;
     const HDR: usize = 1 + 128 + 4 + 12 + 4;
     if HDR + payload_bound >= compressed_bound(data.len()) {
-        let mut out = Vec::with_capacity(5 + data.len());
         out.push(MODE_RAW);
-        push_u32_le(&mut out, data.len() as u32);
+        push_u32_le(out, data.len() as u32);
         out.extend_from_slice(data);
-        return out;
+        return out.len() - base;
     }
 
     // Split into 4 lanes: lanes 0..2 hold q bytes, lane 3 the remainder.
@@ -129,11 +139,8 @@ pub fn compress_with_hist(data: &[u8], hist: &[u64; 256]) -> Vec<u8> {
     // Worst case per lane: MAX_CODE_LEN bits/symbol + flush slack.
     let lane_bound =
         |len: usize| len * super::lengths::MAX_CODE_LEN as usize / 8 + 16;
-    let mut out = vec![
-        0u8;
-        HDR + lane_bound(d0.len()) * 3 + lane_bound(d3.len())
-    ];
-    let mut at = HDR;
+    out.resize(base + HDR + lane_bound(d0.len()) * 3 + lane_bound(d3.len()), 0);
+    let mut at = base + HDR;
     let mut lane_lens = [0usize; 4];
     for (li, d) in [d0, d1, d2, d3].into_iter().enumerate() {
         let written = encode_lane(&table, d, &mut out[at..]);
@@ -141,15 +148,16 @@ pub fn compress_with_hist(data: &[u8], hist: &[u64; 256]) -> Vec<u8> {
         at += written;
     }
     let paylen: usize = lane_lens.iter().sum();
-    out.truncate(HDR + paylen);
-    out[0] = MODE_HUFF;
-    out[1..129].copy_from_slice(&pack_lens(&lens));
-    out[129..133].copy_from_slice(&(n as u32).to_le_bytes());
-    out[133..137].copy_from_slice(&(lane_lens[0] as u32).to_le_bytes());
-    out[137..141].copy_from_slice(&(lane_lens[1] as u32).to_le_bytes());
-    out[141..145].copy_from_slice(&(lane_lens[2] as u32).to_le_bytes());
-    out[145..149].copy_from_slice(&(paylen as u32).to_le_bytes());
-    out
+    out.truncate(base + HDR + paylen);
+    let hdr = &mut out[base..base + HDR];
+    hdr[0] = MODE_HUFF;
+    hdr[1..129].copy_from_slice(&pack_lens(&lens));
+    hdr[129..133].copy_from_slice(&(n as u32).to_le_bytes());
+    hdr[133..137].copy_from_slice(&(lane_lens[0] as u32).to_le_bytes());
+    hdr[137..141].copy_from_slice(&(lane_lens[1] as u32).to_le_bytes());
+    hdr[141..145].copy_from_slice(&(lane_lens[2] as u32).to_le_bytes());
+    hdr[145..149].copy_from_slice(&(paylen as u32).to_le_bytes());
+    out.len() - base
 }
 
 #[cfg(test)]
@@ -189,5 +197,27 @@ mod tests {
         let data: Vec<u8> = (0..10_000).map(|i| (i % 23) as u8).collect();
         let hist = byte_histogram(&data);
         assert_eq!(compress(&data), compress_with_hist(&data, &hist));
+    }
+
+    #[test]
+    fn compress_into_appends_identical_bytes() {
+        for data in [
+            Vec::new(),
+            vec![7u8; 100],
+            (0..4096u32).map(|i| (i % 7) as u8).collect::<Vec<u8>>(),
+            {
+                let mut d = vec![0u8; 4096];
+                crate::util::Xoshiro256::seed_from_u64(3).fill_bytes(&mut d);
+                d // RAW fallback path
+            },
+        ] {
+            let hist = byte_histogram(&data);
+            let one_shot = compress(&data);
+            let mut out = b"prefix".to_vec();
+            let written = compress_into(&data, &hist, &mut out);
+            assert_eq!(written, one_shot.len());
+            assert_eq!(&out[..6], b"prefix");
+            assert_eq!(&out[6..], &one_shot[..]);
+        }
     }
 }

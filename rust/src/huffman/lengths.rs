@@ -12,53 +12,67 @@ pub const MAX_CODE_LEN: u32 = 12;
 /// `1..=MAX_CODE_LEN`, and always satisfy Kraft: `Σ 2^-len ≤ 1`.
 pub fn build_lengths(hist: &[u64; 256]) -> Option<[u8; 256]> {
     // Gather present symbols sorted by ascending count (stable by symbol).
-    let mut syms: Vec<(u64, u16)> = (0..256u16)
-        .filter(|&s| hist[s as usize] > 0)
-        .map(|s| (hist[s as usize], s))
-        .collect();
-    let m = syms.len();
+    // Everything below lives on the stack: this runs once per compressed
+    // stream, and the streaming codec's steady state must not allocate.
+    let mut syms = [(0u64, 0u16); 256];
+    let mut m = 0usize;
+    for s in 0..256u16 {
+        if hist[s as usize] > 0 {
+            syms[m] = (hist[s as usize], s);
+            m += 1;
+        }
+    }
     if m < 2 {
         return None;
     }
+    let syms = &mut syms[..m];
     syms.sort_unstable();
 
     // Two-queue Huffman: leaves (sorted) + internal nodes (created in
     // non-decreasing weight order). parent[] links let us derive depths.
+    // total nodes = 2m-1 ≤ 511; the internal-node queue holds ≤ m-1
+    // entries and is a fixed ring buffer.
     let total_nodes = 2 * m - 1;
-    let mut weight = vec![0u64; total_nodes];
-    let mut parent = vec![usize::MAX; total_nodes];
+    let mut weight = [0u64; 511];
+    let mut parent = [usize::MAX; 511];
     for (i, &(c, _)) in syms.iter().enumerate() {
         weight[i] = c;
     }
     let mut leaf = 0usize; // next unconsumed leaf
     let mut inode = m; // next internal node slot
-    let mut iq = std::collections::VecDeque::with_capacity(m);
+    let mut ring = [0usize; 256];
+    let (mut head, mut tail) = (0usize, 0usize); // ring[head..tail] pending
     for _ in 0..m - 1 {
-        let mut pick = |weight: &[u64], iq: &mut std::collections::VecDeque<usize>| -> usize {
-            let take_leaf = match iq.front() {
-                None => true,
-                Some(&i) => leaf < m && weight[leaf] <= weight[i],
+        let mut pick =
+            |weight: &[u64], ring: &[usize; 256], head: &mut usize, tail: &usize| -> usize {
+                let take_leaf = if *head == *tail {
+                    true
+                } else {
+                    leaf < m && weight[leaf] <= weight[ring[*head % 256]]
+                };
+                if take_leaf {
+                    leaf += 1;
+                    leaf - 1
+                } else {
+                    let i = ring[*head % 256];
+                    *head += 1;
+                    i
+                }
             };
-            if take_leaf {
-                leaf += 1;
-                leaf - 1
-            } else {
-                iq.pop_front().unwrap()
-            }
-        };
-        let a = pick(&weight, &mut iq);
-        let b = pick(&weight, &mut iq);
+        let a = pick(&weight, &ring, &mut head, &tail);
+        let b = pick(&weight, &ring, &mut head, &tail);
         weight[inode] = weight[a] + weight[b];
         parent[a] = inode;
         parent[b] = inode;
-        iq.push_back(inode);
+        ring[tail % 256] = inode;
+        tail += 1;
         inode += 1;
     }
 
     // Depth of each leaf: root (last node) has depth 0; children depth+1.
     // Nodes were created in increasing index order with parent > child, so
     // a reverse sweep computes depths in one pass.
-    let mut depth = vec![0u32; total_nodes];
+    let mut depth = [0u32; 511];
     for i in (0..total_nodes - 1).rev() {
         depth[i] = depth[parent[i]] + 1;
     }

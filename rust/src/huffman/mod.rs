@@ -35,7 +35,7 @@ mod encode;
 mod lengths;
 
 pub use decode::{decompress, decompress_into, DecodeTable};
-pub use encode::{compress, compress_with_hist, compressed_bound, EncodeTable};
+pub use encode::{compress, compress_into, compress_with_hist, compressed_bound, EncodeTable};
 pub use lengths::{build_lengths, MAX_CODE_LEN};
 
 /// Stream mode tags.

@@ -269,6 +269,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             std::fs::write(&out, &next)?;
             println!("restored {} -> {}", human_bytes(next.len() as u64), out);
         }
+        #[cfg(feature = "pjrt")]
         "train" => {
             let dir = args.flag("artifacts", "artifacts");
             let rt = zipnn::runtime::Runtime::open(&dir)?;
@@ -292,6 +293,10 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     }
                 }
             }
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "train" => {
+            anyhow::bail!("'train' needs the PJRT runtime: rebuild with --features pjrt");
         }
         "serve" => {
             let server = zipnn::hub::HubServer::start()?;

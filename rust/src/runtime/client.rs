@@ -35,7 +35,11 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Compile (cached) the named artifact.
+    /// Compile (cached) the named artifact. Artifacts may be stored
+    /// ZipNN-compressed (`<file>.znn`, either container format); those are
+    /// streamed through a [`crate::codec::ZnnReader`] straight off the
+    /// disk reader — the decompressed HLO text is spooled to a temp file
+    /// for the PJRT text parser, never held in memory alongside it.
     fn executable(&self, name: &str) -> Result<()> {
         let mut cache = self.cache.lock().unwrap();
         if cache.contains_key(name) {
@@ -43,13 +47,51 @@ impl Runtime {
         }
         let spec = self.manifest.artifact(name)?;
         let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
-        )?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        cache.insert(name.to_string(), exe);
+        let (text_path, cleanup) = if path.exists() {
+            (path, None)
+        } else {
+            let znn = self.dir.join(format!("{}.znn", spec.file));
+            if !znn.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact '{}' not found (neither {:?} nor {:?})",
+                    name, path, znn
+                )));
+            }
+            let file = std::fs::File::open(&znn)?;
+            let mut reader = crate::codec::ZnnReader::new(std::io::BufReader::new(file))?;
+            // Unique, sanitized spool path: artifact names may contain
+            // path separators, and two Runtimes in one process may
+            // compile the same artifact concurrently.
+            static SPOOL_SEQ: std::sync::atomic::AtomicU64 =
+                std::sync::atomic::AtomicU64::new(0);
+            let safe: String = name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect();
+            let tmp = std::env::temp_dir().join(format!(
+                "zipnn-artifact-{}-{}-{}.hlo.txt",
+                std::process::id(),
+                SPOOL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+                safe
+            ));
+            let mut out = std::fs::File::create(&tmp)?;
+            std::io::copy(&mut reader, &mut out)?;
+            (tmp.clone(), Some(tmp))
+        };
+        let compile = || -> Result<PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                text_path
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )?;
+            let comp = XlaComputation::from_proto(&proto);
+            Ok(self.client.compile(&comp)?)
+        };
+        let exe = compile();
+        if let Some(tmp) = cleanup {
+            let _ = std::fs::remove_file(tmp);
+        }
+        cache.insert(name.to_string(), exe?);
         Ok(())
     }
 

@@ -4,11 +4,20 @@
 //! bridge to the compiled computations. HLO **text** is the interchange
 //! format (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids — see /opt/xla-example/README.md).
+//!
+//! The PJRT pieces ([`client`], [`literal`]) need the `xla` crate, which
+//! is not on the offline registry: they are gated behind the `pjrt` cargo
+//! feature (vendor the crate and enable the feature to use them). The
+//! manifest parser is dependency-free and always available.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use literal::{literal_to_bytes, make_literal, make_scalar_f32, make_scalar_u32};
 pub use manifest::{ArtifactSpec, Manifest, ModelMeta, TensorSpec};

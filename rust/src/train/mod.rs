@@ -4,7 +4,9 @@
 //! lowered L2 graphs (which embed the L1 Pallas kernels).
 
 pub mod data;
+#[cfg(feature = "pjrt")]
 pub mod driver;
 
 pub use data::{CnnBatchGen, TokenGen};
+#[cfg(feature = "pjrt")]
 pub use driver::{CnnTrainer, LmTrainer};

@@ -1,0 +1,71 @@
+//! Steady-state allocation test: once the streaming writer's scratch
+//! arena has warmed up, compressing more input must not allocate — the
+//! allocation count is O(workers), independent of input size (the
+//! acceptance criterion of the streaming-codec refactor).
+//!
+//! This binary installs the counting global allocator; it holds exactly
+//! one test so no concurrent test pollutes the counter.
+
+use std::io::Write;
+use zipnn::bench_support::{alloc_count, CountingAlloc};
+use zipnn::codec::{CodecConfig, ZnnWriter};
+use zipnn::fp::DType;
+use zipnn::util::Xoshiro256;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// BF16-shaped data with **no zero bytes**: a skewed exponent-like byte
+/// and a uniform nonzero mantissa-like byte. Keeps the auto-selector on
+/// the Huffman/Raw paths deterministically (the Zstd path calls into the
+/// zstd allocator, which is outside the arena's control).
+fn nonzero_bf16ish(n_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(n_bytes);
+    while out.len() < n_bytes {
+        let mantissa = 1 + (rng.next_u32() % 255) as u8; // uniform 1..=255
+        let exp = 120 + (rng.uniform().powi(2) * 12.0) as u8; // skewed 120..132
+        out.push(mantissa);
+        out.push(exp);
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+#[test]
+fn steady_state_compression_does_not_allocate() {
+    const MIB: usize = 1 << 20;
+    // 64 KiB chunks -> 1 MiB super-chunks: plenty of frames per window.
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(64 * 1024);
+    let data = nonzero_bf16ish(16 * MIB, 42);
+
+    let mut w = ZnnWriter::new(std::io::sink(), cfg).unwrap();
+
+    // Warm-up: first 4 MiB sizes every arena buffer.
+    w.write_all(&data[..4 * MIB]).unwrap();
+
+    // Window A: 4 MiB (64 chunks, 4 super-chunk frames).
+    let before_a = alloc_count();
+    w.write_all(&data[4 * MIB..8 * MIB]).unwrap();
+    let allocs_a = alloc_count() - before_a;
+
+    // Window B: 8 MiB — twice the work of window A.
+    let before_b = alloc_count();
+    w.write_all(&data[8 * MIB..16 * MIB]).unwrap();
+    let allocs_b = alloc_count() - before_b;
+
+    w.finish().unwrap();
+
+    // If compression allocated per (chunk, group) stream, window B (128
+    // chunks x 2 groups) would show hundreds of allocations and double
+    // window A. Steady state must be flat and near zero.
+    assert!(
+        allocs_b <= allocs_a + 16,
+        "allocations scale with input: window A (4 MiB) = {allocs_a}, window B (8 MiB) = {allocs_b}"
+    );
+    assert!(
+        allocs_b <= 48,
+        "steady-state window B performed {allocs_b} allocations; expected ~0 \
+         (arena warm, Huffman/Raw paths only)"
+    );
+}

@@ -1,0 +1,262 @@
+//! Golden-bytes pin: the streaming-core rewrite of the one-shot
+//! compressor must emit **byte-identical** `.znn` containers to the
+//! historical monolithic implementation, for every `MethodPolicy`, layout
+//! and thread count.
+//!
+//! The reference below is a frozen copy of the pre-refactor
+//! `codec/compress.rs` algorithm (whole-buffer, per-stream `Vec`s),
+//! re-expressed over the crate's public primitives. If the streaming core
+//! ever drifts — method selection, probe/skip cadence, stream order,
+//! header layout — this test catches it at the byte level.
+
+use zipnn::codec::container::write_header;
+use zipnn::codec::parallel::SUPER_CHUNK;
+use zipnn::codec::{
+    checksum64, decompress_with, AutoPolicy, CodecConfig, Compressor, Method, MethodPolicy,
+    StreamEntry,
+};
+use zipnn::fp::{split_groups, DType, GroupLayout};
+use zipnn::stats::{byte_histogram, zero_stats};
+use zipnn::util::Xoshiro256;
+
+/// Frozen seed-era compressor.
+mod reference {
+    use super::*;
+    use zipnn::codec::auto::Decision;
+    use zipnn::codec::ContainerHeader;
+
+    struct StreamOut {
+        entry: StreamEntry,
+        bytes: Vec<u8>,
+    }
+
+    pub fn compress(cfg: &CodecConfig, data: &[u8]) -> Vec<u8> {
+        let layout = if data.len() % cfg.layout.elem == 0 {
+            cfg.layout
+        } else {
+            GroupLayout::flat()
+        };
+        let chunk_size = cfg.chunk_size.max(layout.elem) / layout.elem * layout.elem;
+        let n_chunks = data.len().div_ceil(chunk_size);
+        let groups = layout.groups();
+
+        let n_super = n_chunks.div_ceil(SUPER_CHUNK);
+        let mut outs: Vec<Vec<StreamOut>> = Vec::with_capacity(n_super);
+        for si in 0..n_super {
+            let mut policy = AutoPolicy::new(groups, cfg.skip_window);
+            let lo = si * SUPER_CHUNK;
+            let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
+            let mut streams = Vec::with_capacity((hi - lo) * groups);
+            for c in lo..hi {
+                let start = c * chunk_size;
+                let end = (start + chunk_size).min(data.len());
+                let gs = split_groups(&data[start..end], layout).expect("aligned");
+                for (gi, g) in gs.iter().enumerate() {
+                    streams.push(compress_stream(cfg, gi, g, &mut policy));
+                }
+            }
+            outs.push(streams);
+        }
+
+        let mut entries = Vec::with_capacity(n_chunks * groups);
+        let mut payload_len = 0usize;
+        for s in outs.iter().flatten() {
+            entries.push(s.entry);
+            payload_len += s.bytes.len();
+        }
+        let header = ContainerHeader {
+            layout,
+            chunk_size: chunk_size as u32,
+            total_len: data.len() as u64,
+            n_chunks: n_chunks as u32,
+            checksum: cfg.checksum.then(|| checksum64(data)),
+        };
+        let mut out = write_header(&header, &entries);
+        out.reserve(payload_len);
+        for s in outs.iter().flatten() {
+            out.extend_from_slice(&s.bytes);
+        }
+        out
+    }
+
+    fn compress_stream(
+        cfg: &CodecConfig,
+        group: usize,
+        data: &[u8],
+        policy: &mut AutoPolicy,
+    ) -> StreamOut {
+        let raw_len = data.len() as u32;
+        let raw = |data: &[u8]| StreamOut {
+            entry: StreamEntry { method: Method::Raw, comp_len: raw_len, raw_len },
+            bytes: data.to_vec(),
+        };
+        match cfg.policy {
+            MethodPolicy::Raw => raw(data),
+            MethodPolicy::Huffman => huffman_or_raw(data, None, group, policy, false),
+            MethodPolicy::Zstd => zstd_or_raw(cfg, data),
+            MethodPolicy::Auto => {
+                if policy.take_skip(group) {
+                    return raw(data);
+                }
+                let hist = byte_histogram(data);
+                match policy.decide_with_hist(data, &hist) {
+                    Decision::SkipRaw => raw(data),
+                    Decision::Zero => StreamOut {
+                        entry: StreamEntry { method: Method::Zero, comp_len: 0, raw_len },
+                        bytes: Vec::new(),
+                    },
+                    Decision::TryZstd => zstd_or_raw(cfg, data),
+                    Decision::TryHuffman => huffman_or_raw(data, Some(&hist), group, policy, true),
+                }
+            }
+        }
+    }
+
+    fn huffman_or_raw(
+        data: &[u8],
+        hist: Option<&[u64; 256]>,
+        group: usize,
+        policy: &mut AutoPolicy,
+        report: bool,
+    ) -> StreamOut {
+        let enc = match hist {
+            Some(h) => zipnn::huffman::compress_with_hist(data, h),
+            None => zipnn::huffman::compress(data),
+        };
+        if report {
+            policy.report(group, data.len(), enc.len());
+        }
+        if enc.len() < data.len() {
+            StreamOut {
+                entry: StreamEntry {
+                    method: Method::Huffman,
+                    comp_len: enc.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: enc,
+            }
+        } else {
+            StreamOut {
+                entry: StreamEntry {
+                    method: Method::Raw,
+                    comp_len: data.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: data.to_vec(),
+            }
+        }
+    }
+
+    fn zstd_or_raw(cfg: &CodecConfig, data: &[u8]) -> StreamOut {
+        if !data.is_empty() && zero_stats(data).zero_frac >= 1.0 {
+            return StreamOut {
+                entry: StreamEntry {
+                    method: Method::Zero,
+                    comp_len: 0,
+                    raw_len: data.len() as u32,
+                },
+                bytes: Vec::new(),
+            };
+        }
+        match zipnn::lz::zstd_compress(data, cfg.zstd_level) {
+            Ok(enc) if enc.len() < data.len() => StreamOut {
+                entry: StreamEntry {
+                    method: Method::Zstd,
+                    comp_len: enc.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: enc,
+            },
+            _ => StreamOut {
+                entry: StreamEntry {
+                    method: Method::Raw,
+                    comp_len: data.len() as u32,
+                    raw_len: data.len() as u32,
+                },
+                bytes: data.to_vec(),
+            },
+        }
+    }
+}
+
+/// Buffers spanning the method selector's regimes: gaussian bf16 (huffman
+/// exp + raw mantissa + skip windows), zero-heavy (zero/zstd), random
+/// (raw fallback), structured (zstd-or-huffman crossover).
+fn corpus(seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::new();
+    // gaussian bf16 spanning several super-chunks at small chunk sizes
+    let mut g = Vec::new();
+    for _ in 0..150_000 {
+        let w = (rng.normal() * 0.02) as f32;
+        g.extend_from_slice(&zipnn::fp::dtype::f32_to_bf16_bits(w).to_le_bytes());
+    }
+    out.push(g);
+    // zero-heavy with bursts
+    let mut z = vec![0u8; 200_000];
+    for _ in 0..200 {
+        let i = rng.below(z.len());
+        z[i] = rng.next_u32() as u8;
+    }
+    out.push(z);
+    // uniform random (incompressible; exercises probe-and-skip)
+    let mut r = vec![0u8; 180_000];
+    rng.fill_bytes(&mut r);
+    out.push(r);
+    // structured / repeating
+    out.push((0..160_000).map(|i| (i % 37) as u8).collect());
+    // tiny + empty + unaligned
+    out.push(Vec::new());
+    out.push(vec![42u8; 5]);
+    out.push((0..100_001).map(|i| (i * 7 % 251) as u8).collect());
+    out
+}
+
+#[test]
+fn streaming_core_compressor_is_byte_identical_to_reference() {
+    for (bi, data) in corpus(1).iter().enumerate() {
+        for policy in [
+            MethodPolicy::Auto,
+            MethodPolicy::Huffman,
+            MethodPolicy::Zstd,
+            MethodPolicy::Raw,
+        ] {
+            for dtype in [DType::BF16, DType::F32] {
+                let base = CodecConfig::for_dtype(dtype)
+                    .with_policy(policy)
+                    .with_chunk_size(4096);
+                let golden = reference::compress(&base, data);
+                for threads in [1usize, 2, 4] {
+                    let cfg = base.clone().with_threads(threads);
+                    let got = Compressor::new(cfg).compress(data).unwrap();
+                    assert_eq!(
+                        got, golden,
+                        "buffer {bi} policy {policy:?} dtype {dtype:?} threads {threads}"
+                    );
+                }
+                // and the container actually decodes back
+                assert_eq!(&decompress_with(&golden, 2).unwrap(), data);
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_layout_matches_reference() {
+    let data: Vec<u8> = corpus(2).remove(0);
+    let mut cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(8192);
+    cfg.layout = GroupLayout::flat();
+    let golden = reference::compress(&cfg, &data);
+    let got = Compressor::new(cfg).compress(&data).unwrap();
+    assert_eq!(got, golden);
+}
+
+#[test]
+fn default_chunk_size_matches_reference() {
+    // The default 256 KiB chunks: several chunks, one partial.
+    let data = corpus(3).remove(0);
+    let cfg = CodecConfig::for_dtype(DType::BF16);
+    let golden = reference::compress(&cfg, &data);
+    let got = Compressor::new(cfg.with_threads(3)).compress(&data).unwrap();
+    assert_eq!(got, golden);
+}

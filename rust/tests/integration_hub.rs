@@ -2,7 +2,7 @@
 
 use zipnn::codec::CodecConfig;
 use zipnn::fp::DType;
-use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
+use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim, FRAME_MAX};
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
 
 #[test]
@@ -77,6 +77,80 @@ fn many_clients_concurrent() {
         h.join().unwrap();
     }
     server.shutdown();
+}
+
+/// The server must never hold a blob in one allocation: a PUT ≥ 8× the
+/// wire-frame bound round-trips while the server stores bounded frames.
+#[test]
+fn large_blob_streams_in_bounded_frames() {
+    let server = HubServer::start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+    let n = FRAME_MAX * 8 + 12_345; // > 8x the per-connection frame buffer
+    let raw: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 9);
+
+    // raw path
+    client.upload("big", &raw, None, &mut sim).unwrap();
+    let (total, frames, max_frame) = client.stat("big").unwrap();
+    assert_eq!(total as usize, raw.len());
+    assert!(frames >= 8, "expected >= 8 stored frames, got {frames}");
+    assert!(max_frame <= FRAME_MAX, "frame {max_frame} exceeds bound {FRAME_MAX}");
+    let (back, _) = client.download("big", false, &mut sim).unwrap();
+    assert_eq!(back, raw);
+
+    // compressed path: the wire carries a ZNS1 stream, still framed
+    let raw_model = generate(&SyntheticSpec::new(
+        "big2",
+        Category::RegularBF16,
+        FRAME_MAX * 16,
+        10,
+    ))
+    .to_bytes();
+    client
+        .upload("big2", &raw_model, Some(CodecConfig::for_dtype(DType::BF16)), &mut sim)
+        .unwrap();
+    let (_, frames_c, max_frame_c) = client.stat("big2.znn").unwrap();
+    assert!(frames_c >= 8, "compressed blob stored in {frames_c} frames");
+    assert!(max_frame_c <= FRAME_MAX);
+    let (back, rep) = client.download("big2", true, &mut sim).unwrap();
+    assert_eq!(back, raw_model);
+    assert!(rep.wire_len < raw_model.len());
+    server.shutdown();
+}
+
+/// `shutdown()` must return promptly even with live keep-alive
+/// connections mid-traffic (handlers poll the stop flag between
+/// requests).
+#[test]
+fn shutdown_under_load_returns() {
+    let server = HubServer::start().unwrap();
+    let addr = server.addr().to_string();
+
+    // An idle keep-alive connection that never sends another request.
+    let _idle = HubClient::connect(&addr).unwrap();
+
+    // A busy client hammering requests until the server goes away.
+    let busy = std::thread::spawn(move || {
+        let Ok(mut c) = HubClient::connect(&addr) else { return };
+        let data = vec![7u8; 200_000];
+        let mut sim = NetSim::new(NetProfile::UPLOAD, 11);
+        for i in 0.. {
+            if c.upload(&format!("x{i}"), &data, None, &mut sim).is_err() {
+                break; // server stopped mid-stream
+            }
+        }
+    });
+
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(std::time::Duration::from_secs(10))
+        .expect("shutdown hung on live connections");
+    let _ = busy.join();
 }
 
 /// The paper's end-to-end claim (Fig. 10): when bandwidth is low, the

@@ -1,6 +1,8 @@
 //! Integration: PJRT runtime executing the AOT artifacts, and the training
 //! drivers on top. Requires `make artifacts` (tests no-op with a notice if
-//! the directory is missing so `cargo test` stays green pre-build).
+//! the directory is missing so `cargo test` stays green pre-build), plus a
+//! build with the `pjrt` feature (the `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use zipnn::codec::{decompress, CodecConfig, Compressor};
 use zipnn::fp::{split_groups, GroupLayout};

@@ -1,0 +1,194 @@
+//! Property tests: the streaming writer/reader are equivalent to the
+//! one-shot paths for arbitrary write-split patterns, layouts and thread
+//! counts (home-grown harness; proptest is not available offline).
+
+use std::io::{Read, Write};
+use zipnn::codec::{
+    decompress, decompress_with, CodecConfig, Compressor, MethodPolicy, ZnnReader, ZnnWriter,
+};
+use zipnn::fp::{DType, GroupLayout};
+use zipnn::util::Xoshiro256;
+
+/// Run `prop` over `cases` seeded inputs, reporting the failing seed.
+fn forall(cases: u64, prop: impl Fn(&mut Xoshiro256)) {
+    for seed in 0..cases {
+        let mut rng = Xoshiro256::seed_from_u64(seed * 6271 + 5);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed for seed {seed}: {e:?}");
+        }
+    }
+}
+
+/// Arbitrary buffer with a random texture (zero-heavy, skewed, uniform,
+/// structured) so the method selector's every branch gets exercised.
+fn arbitrary_buffer(rng: &mut Xoshiro256) -> Vec<u8> {
+    let len = rng.below(300_000);
+    let mut data = vec![0u8; len];
+    match rng.below(5) {
+        0 => {}
+        1 => rng.fill_bytes(&mut data),
+        2 => {
+            let k = 1 + rng.below(16) as u8;
+            for b in &mut data {
+                *b = (rng.uniform().powi(3) * k as f64) as u8;
+            }
+        }
+        3 => {
+            for _ in 0..len / 50 {
+                let i = rng.below(len.max(1));
+                data[i] = rng.next_u32() as u8;
+            }
+        }
+        _ => {
+            let period = 1 + rng.below(64);
+            for (i, b) in data.iter_mut().enumerate() {
+                *b = (i % period) as u8;
+            }
+        }
+    }
+    data
+}
+
+fn arbitrary_cfg(rng: &mut Xoshiro256) -> CodecConfig {
+    let dtype = [DType::BF16, DType::F32, DType::F16, DType::I8][rng.below(4)];
+    let mut cfg = CodecConfig::for_dtype(dtype)
+        .with_policy(
+            [
+                MethodPolicy::Auto,
+                MethodPolicy::Huffman,
+                MethodPolicy::Zstd,
+                MethodPolicy::Raw,
+            ][rng.below(4)],
+        )
+        .with_chunk_size([2048usize, 4096, 65536][rng.below(3)]);
+    if rng.below(4) == 0 {
+        cfg.layout = GroupLayout::flat();
+    }
+    cfg
+}
+
+/// Feed `data` to a `ZnnWriter` in the given split pattern and return the
+/// emitted container.
+fn write_split(data: &[u8], cfg: CodecConfig, splits: &[usize]) -> Vec<u8> {
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+    let mut at = 0usize;
+    let mut si = 0usize;
+    while at < data.len() {
+        let take = splits[si % splits.len()].clamp(1, data.len() - at);
+        w.write_all(&data[at..at + take]).unwrap();
+        at += take;
+        si += 1;
+    }
+    w.finish().unwrap()
+}
+
+#[test]
+fn prop_writer_bytes_invariant_under_splits_and_threads() {
+    forall(30, |rng| {
+        let data = arbitrary_buffer(rng);
+        let cfg = arbitrary_cfg(rng);
+
+        // one giant write, single-threaded: the baseline container
+        let baseline = write_split(&data, cfg.clone(), &[data.len().max(1)]);
+
+        // 1-byte writes would take forever on big buffers; use them on a
+        // prefix-sized buffer, chunk-misaligned splits on the full one.
+        if data.len() <= 20_000 {
+            let bytewise = write_split(&data, cfg.clone(), &[1]);
+            assert_eq!(bytewise, baseline, "1-byte writes changed the container");
+        }
+        let misaligned = write_split(&data, cfg.clone(), &[3, 1023, 77, 4097]);
+        assert_eq!(misaligned, baseline, "misaligned writes changed the container");
+
+        for threads in [2usize, 4] {
+            let mt = write_split(&data, cfg.clone().with_threads(threads), &[10_000]);
+            assert_eq!(mt, baseline, "threads={threads} changed the container");
+        }
+
+        // and it decodes back to the input through both reader paths
+        let back = decompress(&baseline).unwrap();
+        assert_eq!(back, data);
+    });
+}
+
+#[test]
+fn prop_reader_equivalent_to_one_shot_decompress() {
+    forall(30, |rng| {
+        let data = arbitrary_buffer(rng);
+        let cfg = arbitrary_cfg(rng);
+        let threads = 1 + rng.below(4);
+
+        // one-shot ZNN1 container read back through the streaming reader
+        let znn = Compressor::new(cfg.clone()).compress(&data).unwrap();
+        let via_reader = {
+            let mut r = ZnnReader::new(znn.as_slice()).unwrap().with_threads(threads);
+            let mut out = Vec::new();
+            r.read_to_end(&mut out).unwrap();
+            out
+        };
+        assert_eq!(via_reader, decompress(&znn).unwrap());
+        assert_eq!(via_reader, data);
+
+        // streaming ZNS1 container read through both entry points
+        let zns = write_split(&data, cfg, &[8192]);
+        let via_reader = {
+            let mut r = ZnnReader::new(zns.as_slice()).unwrap().with_threads(threads);
+            let mut out = Vec::new();
+            r.read_to_end(&mut out).unwrap();
+            out
+        };
+        assert_eq!(via_reader, data);
+        assert_eq!(decompress_with(&zns, threads).unwrap(), data);
+    });
+}
+
+#[test]
+fn prop_streamed_frames_match_one_shot_streams() {
+    // For element-aligned inputs the ZNS1 frames must carry exactly the
+    // same (entries, payload) the one-shot container holds — the two
+    // formats differ only in framing.
+    forall(20, |rng| {
+        let mut data = arbitrary_buffer(rng);
+        let cfg = arbitrary_cfg(rng);
+        data.truncate(data.len() / cfg.layout.elem * cfg.layout.elem);
+
+        let znn = Compressor::new(cfg.clone()).compress(&data).unwrap();
+        let info = zipnn::codec::inspect(&znn).unwrap();
+        let zns = write_split(&data, cfg, &[30_000]);
+
+        // parse the ZNS1 frames manually: header(12) then frames
+        let mut entries = Vec::new();
+        let mut payload = Vec::new();
+        let mut at = 12usize;
+        loop {
+            match zns[at] {
+                0xF5 => {
+                    let n = u32::from_le_bytes(zns[at + 1..at + 5].try_into().unwrap()) as usize;
+                    at += 5;
+                    let mut comp_total = 0usize;
+                    for _ in 0..n {
+                        let comp =
+                            u32::from_le_bytes(zns[at + 1..at + 5].try_into().unwrap());
+                        let raw = u32::from_le_bytes(zns[at + 5..at + 9].try_into().unwrap());
+                        entries.push((zns[at], comp, raw));
+                        comp_total += comp as usize;
+                        at += 9;
+                    }
+                    payload.extend_from_slice(&zns[at..at + comp_total]);
+                    at += comp_total;
+                }
+                0xF6 => break,
+                other => panic!("unexpected marker {other:#x}"),
+            }
+        }
+        let one_shot_entries: Vec<(u8, u32, u32)> = info
+            .entries
+            .iter()
+            .map(|e| (e.method.tag(), e.comp_len, e.raw_len))
+            .collect();
+        assert_eq!(entries, one_shot_entries, "stream tables differ");
+        assert_eq!(payload, znn[info.payload_start..], "payloads differ");
+    });
+}
