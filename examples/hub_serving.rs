@@ -5,6 +5,18 @@
 //! ```bash
 //! cargo run --release --example hub_serving
 //! ```
+//!
+//! ## The async hub
+//!
+//! `HubServer` is readiness-driven: one reactor thread multiplexes every
+//! connection over epoll (poll(2) off Linux) and a fixed worker pool —
+//! sized here via `builder().workers(..)`, defaulting to ncpu or the
+//! `ZIPNN_HUB_WORKERS` env var — executes ready requests. Idle
+//! keep-alive connections cost no threads, so a serving deployment sizes
+//! the pool to cores, not to its connection count; `max_conns` (env
+//! `ZIPNN_HUB_MAX_CONNS`, default 4096) caps acceptance. CI scales the
+//! bench workloads with `ZIPNN_BENCH_MB` / `ZIPNN_BENCH_REPS` (see the
+//! bench-regression job in `.github/workflows/ci.yml`).
 
 use zipnn::bench_support::Table;
 use zipnn::codec::CodecConfig;
@@ -41,7 +53,9 @@ fn main() -> anyhow::Result<()> {
         metrics.stalls.load(std::sync::atomic::Ordering::Relaxed));
 
     // -- 2. Serve them over the hub, timing each regime (Fig. 10) --
-    let server = HubServer::start()?;
+    // Reactor + fixed worker pool: `workers` bounds request-execution
+    // threads no matter how many clients connect.
+    let server = HubServer::builder().workers(2).max_conns(256).start()?;
     println!("hub listening on {}", server.addr());
     let mut client = HubClient::connect(server.addr())?.with_threads(2);
 

@@ -76,6 +76,20 @@ fn main() {
             format!("{:+.0}%", (1.0 - um_c / um_r) * 100.0),
         ]);
 
+        // decompress throughput (the CI regression gate's decode metric):
+        // one timed compressed download, decoded as frames arrive
+        let mut dsim = NetSim::new(NetProfile::CLOUD_CACHED, seed);
+        let (_, drep) = client.download(name, true, &mut dsim).unwrap();
+        json_line(
+            "fig10_download",
+            &[
+                ("model_seed", seed as f64),
+                ("raw_mb", mb),
+                ("decomp_mb_s", mb / drep.codec_secs.max(1e-9)),
+                ("wire_pct", drep.pct()),
+            ],
+        );
+
         // downloads across regimes (10 cached / 5 first, like the paper)
         for (profile, reps) in [
             (NetProfile::CLOUD_FIRST, 5),

@@ -6,7 +6,7 @@
 use crate::codec::checksum64;
 use crate::codec::container::{parse, ContainerInfo};
 use crate::codec::parallel::{run_tasks_with, SUPER_CHUNK};
-use crate::codec::stream::{decode_chunk_into, decompress_reader, STREAM_MAGIC};
+use crate::codec::stream::{decode_chunk_into, decompress_reader, ScratchArena, STREAM_MAGIC};
 use crate::error::{Error, Result};
 
 /// Decompress a `.znn` container (single-threaded).
@@ -38,8 +38,8 @@ pub fn decompress_with(data: &[u8], threads: usize) -> Result<Vec<u8>> {
     let pieces: Vec<Result<Vec<u8>>> = run_tasks_with(
         n_super,
         threads.max(1),
-        Vec::new,
-        |scratch: &mut Vec<Vec<u8>>, si| {
+        ScratchArena::new,
+        |arena: &mut ScratchArena, si| {
             let lo = si * SUPER_CHUNK;
             let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
             let piece_len: usize = info.entries[lo * groups..hi * groups]
@@ -56,7 +56,7 @@ pub fn decompress_with(data: &[u8], threads: usize) -> Result<Vec<u8>> {
                 let comp = payload
                     .get(off..off + chunk_comp)
                     .ok_or_else(|| Error::Corrupt("payload shorter than table".into()))?;
-                decode_chunk_into(layout, es, comp, scratch, &mut out[at..at + chunk_raw])?;
+                decode_chunk_into(layout, es, comp, arena, &mut out[at..at + chunk_raw])?;
                 at += chunk_raw;
             }
             Ok(out)

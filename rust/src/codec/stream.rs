@@ -103,6 +103,10 @@ const SFLAG_CHECKSUM: u8 = 1;
 /// on the Huffman/Raw/Zero paths (Zstd streams call into the zstd
 /// allocator). [`crate::codec::parallel::run_tasks_with`] threads one arena
 /// through every task a worker executes.
+///
+/// The decode side additionally caches built Huffman decode tables per
+/// `(worker, table-bytes)` in [`huffman::DecodeTableCache`]: repeated
+/// tables skip the 8 KiB build entirely, and evictions recycle the box.
 #[derive(Default)]
 pub struct ScratchArena {
     /// Per-group split (compress) / decode (decompress) buffers.
@@ -111,6 +115,8 @@ pub struct ScratchArena {
     pub(crate) entries: Vec<StreamEntry>,
     /// Concatenated compressed streams of the super-chunk in flight.
     pub(crate) payload: Vec<u8>,
+    /// Decode-table cache (decompress only; empty on the compress side).
+    pub(crate) tables: huffman::DecodeTableCache,
 }
 
 impl ScratchArena {
@@ -344,7 +350,13 @@ fn zstd_or_raw_into(level: i32, data: &[u8], payload: &mut Vec<u8>) -> StreamEnt
 // ---------------------------------------------------------------------------
 
 /// Decode one compressed stream into an exactly-sized output buffer.
-pub(crate) fn decode_stream_into(method: Method, stream: &[u8], out: &mut [u8]) -> Result<()> {
+/// `tables` is the worker's decode-table cache.
+pub(crate) fn decode_stream_into(
+    method: Method,
+    stream: &[u8],
+    out: &mut [u8],
+    tables: &mut huffman::DecodeTableCache,
+) -> Result<()> {
     match method {
         Method::Raw => {
             if stream.len() != out.len() {
@@ -357,7 +369,7 @@ pub(crate) fn decode_stream_into(method: Method, stream: &[u8], out: &mut [u8]) 
             out.fill(0);
             Ok(())
         }
-        Method::Huffman => huffman::decompress_into(stream, out),
+        Method::Huffman => huffman::decompress_into_cached(stream, out, tables),
         Method::Zstd => {
             let dec = lz::zstd_decompress(stream, out.len())?;
             if dec.len() != out.len() {
@@ -370,19 +382,20 @@ pub(crate) fn decode_stream_into(method: Method, stream: &[u8], out: &mut [u8]) 
 }
 
 /// Decode one chunk: its `groups` streams (concatenated in `comp`) into
-/// `out`, which must be exactly the chunk's raw size. `scratch` is the
-/// arena's per-group buffers.
+/// `out`, which must be exactly the chunk's raw size. `arena` supplies
+/// the per-group buffers and the worker's decode-table cache.
 pub(crate) fn decode_chunk_into(
     layout: GroupLayout,
     entries: &[StreamEntry],
     comp: &[u8],
-    scratch: &mut Vec<Vec<u8>>,
+    arena: &mut ScratchArena,
     out: &mut [u8],
 ) -> Result<()> {
     let groups = layout.groups();
     if entries.len() != groups {
         return Err(Error::Corrupt("chunk entry count mismatch".into()));
     }
+    let ScratchArena { groups: scratch, tables, .. } = arena;
     scratch.resize_with(groups, Vec::new);
     let mut off = 0usize;
     for (g, e) in entries.iter().enumerate() {
@@ -394,7 +407,7 @@ pub(crate) fn decode_chunk_into(
         let buf = &mut scratch[g];
         buf.clear();
         buf.resize(e.raw_len as usize, 0);
-        decode_stream_into(e.method, stream, buf)?;
+        decode_stream_into(e.method, stream, buf, tables)?;
     }
     if off != comp.len() {
         return Err(Error::Corrupt("chunk payload length mismatch".into()));
@@ -415,7 +428,7 @@ fn decode_chunk_run(
     entries: &[StreamEntry],
     comp: &[u8],
     threads: usize,
-    scratch: &mut Vec<Vec<u8>>,
+    arena: &mut ScratchArena,
     out: &mut Vec<u8>,
 ) -> Result<()> {
     let groups = layout.groups();
@@ -435,7 +448,7 @@ fn decode_chunk_run(
             comp_off += comp_len;
             let at = out.len();
             out.resize(at + raw_len, 0);
-            decode_chunk_into(layout, es, comp_chunk, scratch, &mut out[at..at + raw_len])?;
+            decode_chunk_into(layout, es, comp_chunk, arena, &mut out[at..at + raw_len])?;
         }
         return Ok(());
     }
@@ -456,12 +469,12 @@ fn decode_chunk_run(
     let pieces: Vec<Result<Vec<u8>>> = crate::codec::parallel::run_tasks_with(
         n_chunks,
         threads,
-        Vec::new,
-        |worker_scratch: &mut Vec<Vec<u8>>, c| {
+        ScratchArena::new,
+        |worker_arena: &mut ScratchArena, c| {
             let (off, len, raw_len) = spans[c];
             let es = &entries[c * groups..(c + 1) * groups];
             let mut piece = vec![0u8; raw_len];
-            decode_chunk_into(layout, es, &comp[off..off + len], worker_scratch, &mut piece)?;
+            decode_chunk_into(layout, es, &comp[off..off + len], worker_arena, &mut piece)?;
             Ok(piece)
         },
     );
@@ -554,7 +567,7 @@ impl<W: Write> ZnnWriter<W> {
             for si in 0..n_super {
                 let lo = si * super_bytes;
                 let hi = ((si + 1) * super_bytes).min(len);
-                let ScratchArena { groups, entries, payload } = &mut self.arena;
+                let ScratchArena { groups, entries, payload, .. } = &mut self.arena;
                 entries.clear();
                 payload.clear();
                 compress_super_chunk(
@@ -731,7 +744,7 @@ pub struct ZnnReader<R: Read> {
     state: ReaderState,
     out: Vec<u8>,
     pos: usize,
-    scratch: Vec<Vec<u8>>,
+    arena: ScratchArena,
     comp_buf: Vec<u8>,
     entry_buf: Vec<StreamEntry>,
     ck: Option<Checksummer>,
@@ -757,7 +770,7 @@ impl<R: Read> ZnnReader<R> {
             state,
             out: Vec::new(),
             pos: 0,
-            scratch: Vec::new(),
+            arena: ScratchArena::new(),
             comp_buf: Vec::new(),
             entry_buf: Vec::new(),
             ck,
@@ -913,7 +926,7 @@ impl<R: Read> ZnnReader<R> {
                     es,
                     &self.comp_buf,
                     self.threads,
-                    &mut self.scratch,
+                    &mut self.arena,
                     &mut self.out,
                 )?;
                 if let Some(ck) = self.ck.as_mut() {
@@ -979,7 +992,7 @@ impl<R: Read> ZnnReader<R> {
                             &self.entry_buf,
                             &self.comp_buf,
                             self.threads,
-                            &mut self.scratch,
+                            &mut self.arena,
                             &mut self.out,
                         )?;
                         if let Some(ck) = self.ck.as_mut() {

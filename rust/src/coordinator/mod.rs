@@ -10,6 +10,8 @@
 
 pub mod metrics;
 pub mod pipeline;
+pub mod pool;
 
 pub use metrics::Metrics;
-pub use pipeline::{PipelineBuilder, PipelineResult, WorkItem};
+pub use pipeline::{Pipeline, PipelineBuilder, PipelineResult, WorkItem};
+pub use pool::WorkerPool;

@@ -6,11 +6,11 @@
 
 use crate::codec::{CodecConfig, Compressor};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// One unit of work: a named buffer to compress. `data` is shared, not
@@ -70,8 +70,28 @@ impl PipelineBuilder {
         self
     }
 
-    /// Start the pipeline.
+    /// Start the pipeline on its own private [`WorkerPool`].
     pub fn start(self) -> Pipeline {
+        let pool = WorkerPool::new(self.workers);
+        let mut p = self.start_on(&pool);
+        p.own_pool = Some(pool);
+        p
+    }
+
+    /// Start the pipeline on a shared [`WorkerPool`]: one worker loop per
+    /// pipeline worker (capped at the pool size) is submitted as a
+    /// long-running job. The loops exit — freeing the pool threads — once
+    /// the pipeline is closed and the job queue drains. The caller keeps
+    /// ownership of the pool; [`Pipeline::finish`] does not join it.
+    ///
+    /// **Sizing caveat:** each loop occupies a pool thread for the
+    /// pipeline's whole lifetime. Jobs submitted behind them (including a
+    /// second pipeline's loops) wait until this pipeline closes, so a
+    /// pool must keep at least one thread free per *concurrently live*
+    /// pipeline or a producer blocked in [`Pipeline::submit`] can
+    /// deadlock against loops that never get to run. On a closed pool no
+    /// loops start and `submit` fails cleanly instead of blocking.
+    pub fn start_on(self, pool: &WorkerPool) -> Pipeline {
         let metrics = Arc::new(Metrics::new());
         let (job_tx, job_rx) = sync_channel::<(u64, WorkItem)>(self.queue_depth);
         // The done channel is unbounded on purpose: results wait in the
@@ -80,39 +100,16 @@ impl PipelineBuilder {
         // (workers stuck sending, job queue full, submit blocked).
         let (done_tx, done_rx) = channel::<(u64, PipelineResult)>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let mut handles = Vec::with_capacity(self.workers);
-        for _ in 0..self.workers {
+        for _ in 0..self.workers.min(pool.threads()) {
             let rx = Arc::clone(&job_rx);
             let tx = done_tx.clone();
             let cfg = self.cfg.clone();
             let metrics = Arc::clone(&metrics);
-            handles.push(std::thread::spawn(move || {
-                let comp = Compressor::new(cfg);
-                loop {
-                    let job = rx.lock().unwrap().recv();
-                    let (seq, item) = match job {
-                        Ok(j) => j,
-                        Err(_) => break, // producers gone
-                    };
-                    let t = Instant::now();
-                    let compressed = comp.compress(&item.data).expect("compress");
-                    let secs = t.elapsed().as_secs_f64();
-                    metrics.record(
-                        item.data.len() as u64,
-                        compressed.len() as u64,
-                        (secs * 1e9) as u64,
-                    );
-                    let res = PipelineResult {
-                        name: item.name,
-                        raw_len: item.data.len(),
-                        compressed,
-                        secs,
-                    };
-                    if tx.send((seq, res)).is_err() {
-                        break; // consumer gone
-                    }
-                }
-            }));
+            if pool.execute(move || worker_loop(&rx, &tx, &cfg, &metrics)).is_err() {
+                // Closed pool: with zero loops the job receiver drops and
+                // `submit` errors cleanly instead of blocking forever.
+                break;
+            }
         }
         drop(done_tx);
         Pipeline {
@@ -122,7 +119,45 @@ impl PipelineBuilder {
             next_deliver: 0,
             next_seq: 0,
             metrics,
-            handles,
+            own_pool: None,
+        }
+    }
+}
+
+/// One pipeline worker: pull jobs until the queue closes, compress, send
+/// `(seq, result)` to the consumer.
+fn worker_loop(
+    rx: &Mutex<Receiver<(u64, WorkItem)>>,
+    tx: &Sender<(u64, PipelineResult)>,
+    cfg: &CodecConfig,
+    metrics: &Metrics,
+) {
+    let comp = Compressor::new(cfg.clone());
+    loop {
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break, // a sibling worker panicked mid-dequeue
+        };
+        let (seq, item) = match job {
+            Ok(j) => j,
+            Err(_) => break, // producers gone
+        };
+        let t = Instant::now();
+        let compressed = comp.compress(&item.data).expect("compress");
+        let secs = t.elapsed().as_secs_f64();
+        metrics.record(
+            item.data.len() as u64,
+            compressed.len() as u64,
+            (secs * 1e9) as u64,
+        );
+        let res = PipelineResult {
+            name: item.name,
+            raw_len: item.data.len(),
+            compressed,
+            secs,
+        };
+        if tx.send((seq, res)).is_err() {
+            break; // consumer gone
         }
     }
 }
@@ -137,7 +172,9 @@ pub struct Pipeline {
     next_deliver: u64,
     next_seq: u64,
     metrics: Arc<Metrics>,
-    handles: Vec<JoinHandle<()>>,
+    /// The private pool when started via [`PipelineBuilder::start`];
+    /// `None` when running on a caller-owned shared pool.
+    own_pool: Option<WorkerPool>,
 }
 
 impl Pipeline {
@@ -193,16 +230,16 @@ impl Pipeline {
         self.job_tx = None;
     }
 
-    /// Close, drain all remaining results in order, and join workers.
+    /// Close, drain all remaining results in order, and join the private
+    /// pool (a shared pool is left to its owner — the worker loops have
+    /// already exited by the time the done channel disconnects).
     pub fn finish(mut self) -> (Vec<PipelineResult>, Arc<Metrics>) {
         self.close();
         let mut out = Vec::new();
         while let Some(r) = self.recv() {
             out.push(r);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        drop(self.own_pool.take());
         (out, self.metrics)
     }
 
@@ -282,6 +319,32 @@ mod tests {
         let p = PipelineBuilder::new(CodecConfig::for_dtype(DType::F32)).start();
         let (results, _) = p.finish();
         assert!(results.is_empty());
+    }
+
+    #[test]
+    fn shared_pool_runs_pipeline_and_outlives_it() {
+        let pool = WorkerPool::new(2);
+        let its = items(12, 30_000, 3);
+        let originals: Vec<Arc<[u8]>> = its.iter().map(|i| Arc::clone(&i.data)).collect();
+        let mut p = PipelineBuilder::new(CodecConfig::for_dtype(DType::BF16))
+            .workers(2)
+            .start_on(&pool);
+        for it in its {
+            p.submit(it).unwrap();
+        }
+        let (results, _) = p.finish();
+        assert_eq!(results.len(), 12);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(decompress(&r.compressed).unwrap()[..], originals[i][..]);
+        }
+        // The pool is still usable after the pipeline released its loops.
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.execute(move || tx.send(42).unwrap()).unwrap();
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            42
+        );
+        pool.join();
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Fixed-size shared worker pool.
+//!
+//! One pool serves many producers: the compression [`crate::coordinator::Pipeline`]
+//! runs its worker loops on it, and the hub's readiness reactor
+//! ([`crate::hub`]) executes ready PUT/GET/Stat work on it. Threads are
+//! spawned once at construction — submitting work never spawns a thread,
+//! which is what keeps the hub's thread count flat under thousands of
+//! connections.
+
+use crate::error::{Error, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing submitted closures.
+///
+/// Dropping the pool closes the job queue and joins every worker, so all
+/// submitted jobs run to completion before `drop` returns (graceful
+/// drain). Panics inside a job kill only that worker's thread.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers (at least one).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(&rx))
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles, threads }
+    }
+
+    /// Pool size chosen from the machine: `ncpu`, clamped to `1..=max`.
+    pub fn with_default_threads(max: usize) -> WorkerPool {
+        let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        WorkerPool::new(ncpu.min(max.max(1)))
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submit a job. Errors only after [`WorkerPool::close`] (or during
+    /// teardown).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| Error::Invalid("worker pool closed".into()))?;
+        tx.send(Box::new(job))
+            .map_err(|_| Error::Invalid("worker pool threads exited".into()))
+    }
+
+    /// Stop accepting jobs; queued jobs still run. Workers exit once the
+    /// queue drains.
+    pub fn close(&mut self) {
+        self.tx = None;
+    }
+
+    /// Close and join every worker (all queued jobs have run on return).
+    pub fn join(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only while dequeuing, never while running a job.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break, // a job panicked while dequeuing; bail out
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // queue closed and drained
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_before_join() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn execute_after_close_errors() {
+        let mut pool = WorkerPool::new(1);
+        pool.close();
+        assert!(pool.execute(|| {}).is_err());
+    }
+
+    #[test]
+    fn jobs_run_concurrently_on_many_threads() {
+        // Two jobs that must overlap: each waits for the other's signal.
+        let pool = WorkerPool::new(2);
+        let (tx_a, rx_a) = channel::<()>();
+        let (tx_b, rx_b) = channel::<()>();
+        pool.execute(move || {
+            tx_a.send(()).unwrap();
+            rx_b.recv().unwrap();
+        })
+        .unwrap();
+        pool.execute(move || {
+            rx_a.recv().unwrap();
+            tx_b.send(()).unwrap();
+        })
+        .unwrap();
+        pool.join(); // deadlocks (test timeout) if jobs were serialized
+    }
+
+    #[test]
+    fn default_threads_bounded() {
+        let pool = WorkerPool::with_default_threads(3);
+        assert!((1..=3).contains(&pool.threads()));
+    }
+}

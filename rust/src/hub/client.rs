@@ -16,6 +16,17 @@ use crate::hub::protocol::{
 use crate::util::Timer;
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
+
+/// Default per-operation socket timeout: generous enough for multi-GB
+/// streamed transfers (each read/write must make *some* progress within
+/// it), small enough that a dead server fails the client promptly.
+const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Connect retry budget: the reactor accepts in batches, so a connect
+/// issued in a burst can land on a momentarily full backlog.
+const CONNECT_ATTEMPTS: usize = 8;
+const CONNECT_BACKOFF: Duration = Duration::from_millis(10);
 
 /// End-to-end timing of one transfer (Fig. 10 bars).
 #[derive(Debug, Clone)]
@@ -52,15 +63,53 @@ pub struct HubClient {
 }
 
 impl HubClient {
-    /// Connect to `addr`.
+    /// Connect to `addr`, retrying briefly on refusal (the readiness
+    /// reactor accepts in batches; a connect burst can momentarily fill
+    /// the backlog). Per-operation socket timeouts default to 30 s — tune
+    /// with [`HubClient::with_timeout`].
     pub fn connect(addr: &str) -> Result<HubClient> {
-        Ok(HubClient { stream: TcpStream::connect(addr)?, threads: 1 })
+        let mut backoff = CONNECT_BACKOFF;
+        let mut last_err = None;
+        for attempt in 0..CONNECT_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    let client = HubClient { stream, threads: 1 };
+                    return client.with_timeout(DEFAULT_IO_TIMEOUT);
+                }
+                // Only backlog-pressure shapes are worth retrying; a bad
+                // address or unreachable host fails immediately.
+                Err(e) if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionRefused
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+                {
+                    last_err = Some(e);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Err(last_err.expect("at least one connect attempt").into())
     }
 
     /// Worker threads for codec work during transfers.
     pub fn with_threads(mut self, n: usize) -> Self {
         self.threads = n.max(1);
         self
+    }
+
+    /// Per-operation read/write timeout: a transfer erroring instead of
+    /// hanging when the server stops making progress for this long.
+    pub fn with_timeout(self, timeout: Duration) -> Result<Self> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        self.stream.set_write_timeout(Some(timeout))?;
+        Ok(self)
     }
 
     /// Upload raw bytes, optionally compressing with `cfg`. The body is

@@ -1,0 +1,306 @@
+//! Per-connection state machine for the readiness-driven hub server.
+//!
+//! A [`Conn`] owns one non-blocking socket and resumes from partial reads
+//! and partial writes:
+//!
+//! - the **read side** feeds whatever bytes `read(2)` returns into the
+//!   resumable [`RequestParser`], accumulating PUT body frames until a
+//!   request completes (bounded: one wire frame plus one read buffer);
+//! - the **write side** walks a small phase machine over the response —
+//!   head bytes, then (for GET) each stored frame's length prefix and
+//!   payload, then the terminator — picking up mid-slice after
+//!   `WouldBlock`.
+//!
+//! Connections are half-duplex by design, matching the client: while a
+//! request executes on the worker pool or a response drains, the reactor
+//! keeps read interest off, so pipelined bytes simply wait in the kernel
+//! buffer (and in already-parsed events) until the response completes.
+
+use crate::hub::protocol::{Op, ReqEvent, RequestParser};
+use crate::hub::server::StoredBlob;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Read budget per readiness notification: how many buffer-fulls one
+/// connection may consume before the reactor moves on (level-triggered
+/// polling re-reports the fd if bytes remain, so this only bounds
+/// per-wakeup latency for the other connections, never loses data).
+const READS_PER_WAKE: usize = 4;
+
+/// One complete parsed request, ready for the worker pool.
+#[derive(Debug)]
+pub(crate) struct Request {
+    /// Opcode.
+    pub(crate) op: Op,
+    /// Blob name.
+    pub(crate) name: String,
+    /// Body wire frames (PUT only; other ops drain their body).
+    pub(crate) frames: Vec<Vec<u8>>,
+    /// Total body payload bytes.
+    pub(crate) total: u64,
+}
+
+/// A response produced by a worker.
+pub(crate) enum Response {
+    /// Fully serialized response bytes (status + chunked body).
+    Small(Vec<u8>),
+    /// Head bytes (status), then the blob's stored frames streamed as
+    /// wire frames, then the terminator.
+    Blob(Vec<u8>, Arc<StoredBlob>),
+}
+
+/// Outcome of driving the read side.
+pub(crate) enum ReadOutcome {
+    /// No complete request yet; wait for more bytes.
+    NeedMore,
+    /// A request completed and should be dispatched.
+    Dispatch(Request),
+    /// Peer closed or the stream errored; drop the connection.
+    Closed,
+}
+
+/// Outcome of driving the write side.
+pub(crate) enum WriteOutcome {
+    /// The socket is full; wait for writability.
+    Blocked,
+    /// The whole response is out.
+    Done,
+    /// The stream errored; drop the connection.
+    Closed,
+}
+
+enum WritePhase {
+    /// Writing `head` bytes.
+    Head,
+    /// Writing the 4-byte length prefix of frame `idx`.
+    FrameHeader,
+    /// Writing the payload of frame `idx`.
+    FrameBody,
+    /// Writing the 4-byte zero terminator.
+    Terminator,
+    /// Response fully written.
+    Finished,
+}
+
+/// Resumable serializer of one response.
+struct WriteState {
+    head: Vec<u8>,
+    blob: Option<Arc<StoredBlob>>,
+    idx: usize,
+    pos: usize,
+    len4: [u8; 4],
+    phase: WritePhase,
+}
+
+impl WriteState {
+    fn new(resp: Response) -> WriteState {
+        let (head, blob) = match resp {
+            Response::Small(bytes) => (bytes, None),
+            Response::Blob(head, blob) => (head, Some(blob)),
+        };
+        WriteState { head, blob, idx: 0, pos: 0, len4: [0; 4], phase: WritePhase::Head }
+    }
+}
+
+/// One hub connection owned by the reactor.
+pub(crate) struct Conn {
+    pub(crate) stream: TcpStream,
+    parser: RequestParser,
+    /// Request being assembled (header seen, body incoming).
+    cur: Option<Request>,
+    write: Option<WriteState>,
+    /// A request is executing on the worker pool.
+    pub(crate) busy: bool,
+    /// Close once the current response finishes (shutdown request).
+    pub(crate) close_after_write: bool,
+    /// Guards against completions for a previous occupant of this slot.
+    pub(crate) gen: u64,
+    /// Readiness interest currently registered with the poller.
+    pub(crate) interest: crate::hub::sys::Interest,
+    last_activity: Instant,
+}
+
+impl Conn {
+    /// Wrap an accepted (already non-blocking) stream.
+    pub(crate) fn new(stream: TcpStream, gen: u64) -> Conn {
+        Conn {
+            stream,
+            parser: RequestParser::new(),
+            cur: None,
+            write: None,
+            busy: false,
+            close_after_write: false,
+            gen,
+            interest: crate::hub::sys::Interest::READ,
+            last_activity: Instant::now(),
+        }
+    }
+
+    /// True when a response is pending (partially) written.
+    pub(crate) fn writing(&self) -> bool {
+        self.write.is_some()
+    }
+
+    /// A request is in flight (any direction) — used by the stall sweep.
+    /// Idle keep-alive connections (between requests) return `false`.
+    pub(crate) fn in_flight(&self) -> bool {
+        self.busy || self.write.is_some() || self.cur.is_some() || self.parser.mid_request()
+    }
+
+    /// Seconds since the connection last made progress.
+    pub(crate) fn idle_for(&self, now: Instant) -> std::time::Duration {
+        now.duration_since(self.last_activity)
+    }
+
+    /// Drain already-parsed events; `Some` when they complete a request
+    /// (used to resume pipelined requests after a response finishes).
+    pub(crate) fn take_buffered_request(&mut self) -> Option<Request> {
+        while let Some(ev) = self.parser.take() {
+            match ev {
+                ReqEvent::Header { op, name } => {
+                    self.cur = Some(Request { op, name, frames: Vec::new(), total: 0 });
+                }
+                ReqEvent::Frame(frame) => {
+                    if let Some(req) = self.cur.as_mut() {
+                        req.total += frame.len() as u64;
+                        if req.op == Op::Put {
+                            req.frames.push(frame);
+                        }
+                    }
+                }
+                ReqEvent::End => {
+                    if let Some(req) = self.cur.take() {
+                        return Some(req);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Read until `WouldBlock`, the per-wake budget, or a complete
+    /// request. `buf` is the reactor's shared read scratch.
+    pub(crate) fn drive_read(&mut self, buf: &mut [u8]) -> ReadOutcome {
+        if let Some(req) = self.take_buffered_request() {
+            return ReadOutcome::Dispatch(req);
+        }
+        let mut reads = 0;
+        loop {
+            if reads >= READS_PER_WAKE {
+                // Level-triggered polling re-reports remaining bytes.
+                return ReadOutcome::NeedMore;
+            }
+            match self.stream.read(buf) {
+                Ok(0) => return ReadOutcome::Closed,
+                Ok(n) => {
+                    reads += 1;
+                    self.last_activity = Instant::now();
+                    if self.parser.feed(&buf[..n]).is_err() {
+                        // Protocol violation: drop the connection (the
+                        // blocking server did the same).
+                        return ReadOutcome::Closed;
+                    }
+                    if let Some(req) = self.take_buffered_request() {
+                        return ReadOutcome::Dispatch(req);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return ReadOutcome::NeedMore,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return ReadOutcome::Closed,
+            }
+        }
+    }
+
+    /// Attach a response (the request's execution finished).
+    pub(crate) fn start_response(&mut self, resp: Response, close_after: bool) {
+        self.busy = false;
+        self.close_after_write = close_after;
+        self.write = Some(WriteState::new(resp));
+        self.last_activity = Instant::now();
+    }
+
+    /// Write until done or `WouldBlock`.
+    pub(crate) fn drive_write(&mut self) -> WriteOutcome {
+        const ZERO4: [u8; 4] = [0; 4];
+        let Some(w) = self.write.as_mut() else {
+            return WriteOutcome::Done;
+        };
+        let mut progressed = false;
+        let out = loop {
+            // Phase transitions first, so every phase below has bytes.
+            match w.phase {
+                WritePhase::Head => {
+                    if w.pos >= w.head.len() {
+                        w.pos = 0;
+                        w.phase = match &w.blob {
+                            Some(_) => WritePhase::FrameHeader,
+                            None => WritePhase::Finished,
+                        };
+                        continue;
+                    }
+                }
+                WritePhase::FrameHeader => {
+                    let blob = w.blob.as_ref().expect("blob in frame phase");
+                    if w.idx >= blob.frames.len() {
+                        w.pos = 0;
+                        w.phase = WritePhase::Terminator;
+                        continue;
+                    }
+                    if w.pos == 0 {
+                        w.len4 = (blob.frames[w.idx].len() as u32).to_le_bytes();
+                    }
+                    if w.pos >= 4 {
+                        w.pos = 0;
+                        w.phase = WritePhase::FrameBody;
+                        continue;
+                    }
+                }
+                WritePhase::FrameBody => {
+                    let blob = w.blob.as_ref().expect("blob in frame phase");
+                    if w.pos >= blob.frames[w.idx].len() {
+                        w.pos = 0;
+                        w.idx += 1;
+                        w.phase = WritePhase::FrameHeader;
+                        continue;
+                    }
+                }
+                WritePhase::Terminator => {
+                    if w.pos >= 4 {
+                        w.phase = WritePhase::Finished;
+                        continue;
+                    }
+                }
+                WritePhase::Finished => break WriteOutcome::Done,
+            }
+            let src: &[u8] = match w.phase {
+                WritePhase::Head => &w.head[w.pos..],
+                WritePhase::FrameHeader => &w.len4[w.pos..],
+                WritePhase::FrameBody => {
+                    let blob = w.blob.as_ref().expect("blob in frame phase");
+                    &blob.frames[w.idx][w.pos..]
+                }
+                WritePhase::Terminator => &ZERO4[w.pos..],
+                WritePhase::Finished => unreachable!("handled above"),
+            };
+            match self.stream.write(src) {
+                Ok(0) => break WriteOutcome::Closed,
+                Ok(n) => {
+                    w.pos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break WriteOutcome::Blocked,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break WriteOutcome::Closed,
+            }
+        };
+        if progressed {
+            self.last_activity = Instant::now();
+        }
+        if matches!(out, WriteOutcome::Done) {
+            self.write = None;
+        }
+        out
+    }
+}

@@ -6,13 +6,22 @@
 //! compression/decompression time with *simulated* WAN transfer time from
 //! the paper's measured bandwidth regimes (Hugging Face is not reachable
 //! from this environment; see DESIGN.md §2 Substitutions).
+//!
+//! The server is readiness-driven: a single reactor thread multiplexes
+//! every connection over epoll ([`sys`]), per-connection state machines
+//! resume the chunked frame codec from partial reads/writes via the
+//! [`RequestParser`], and a fixed ≈ncpu worker pool executes ready
+//! requests — idle keep-alive connections cost no threads.
 
 pub mod client;
+pub(crate) mod conn;
 pub mod netsim;
 pub mod protocol;
+pub(crate) mod reactor;
 pub mod server;
+pub mod sys;
 
 pub use client::{HubClient, TransferReport};
 pub use netsim::{NetProfile, NetSim};
-pub use protocol::FRAME_MAX;
-pub use server::HubServer;
+pub use protocol::{ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
+pub use server::{HubServer, HubServerBuilder};

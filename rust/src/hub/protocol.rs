@@ -14,6 +14,7 @@
 //! status: 0 = OK, 1 = err (body is a UTF-8 message).
 
 use crate::error::{Error, Result};
+use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 
 /// Maximum payload bytes in one wire frame — the server's per-connection
@@ -204,6 +205,207 @@ impl<R: Read> Read for ChunkedReader<R> {
 }
 
 // ---------------------------------------------------------------------------
+// Resumable request parser
+// ---------------------------------------------------------------------------
+
+/// Maximum request-name length on the wire.
+pub const NAME_MAX: usize = 4096;
+
+/// One parsed unit of a request stream (see [`RequestParser`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReqEvent {
+    /// Opcode and name parsed; a chunked body follows.
+    Header {
+        /// Request opcode.
+        op: Op,
+        /// Blob name (may be empty).
+        name: String,
+    },
+    /// One body wire frame (1..=[`FRAME_MAX`] payload bytes).
+    Frame(Vec<u8>),
+    /// Body terminator: the request is complete. The next byte fed starts
+    /// a new request.
+    End,
+}
+
+enum ParseState {
+    /// Waiting for the opcode byte (also the between-requests state).
+    Op,
+    /// Collecting the 4-byte name length.
+    NameLen,
+    /// Collecting `len` name bytes.
+    Name { len: usize },
+    /// Collecting the 4-byte frame length.
+    FrameLen,
+    /// Collecting `len` frame payload bytes.
+    Frame { len: usize },
+    /// A previous feed errored; the connection must be dropped.
+    Failed,
+}
+
+/// Incremental, non-blocking request parser: feed whatever bytes arrived,
+/// take the completed [`ReqEvent`]s.
+///
+/// This is the readiness-driven twin of [`read_request_header`] +
+/// [`ChunkedReader`]: instead of pulling from a blocking [`Read`], the
+/// caller pushes arbitrary splits of the byte stream with
+/// [`RequestParser::feed`] and drains events with
+/// [`RequestParser::take`]. Internal buffering is bounded by the largest
+/// single wire unit (one frame, [`FRAME_MAX`] bytes) plus the event queue,
+/// which holds at most the frames completed by the bytes of one feed —
+/// the reactor feeds one socket read (≤ 64 KiB) at a time and drains
+/// events before reading again, so per-connection memory stays
+/// O([`FRAME_MAX`]).
+///
+/// Errors (bad opcode, oversized name or frame length, non-UTF-8 name)
+/// are sticky: every later `feed` fails too, and the connection should be
+/// closed. Truncation is not an error — the parser simply waits for more
+/// bytes; use [`RequestParser::mid_request`] to detect a stream that
+/// stopped mid-message.
+pub struct RequestParser {
+    state: ParseState,
+    /// Partial fixed-width field or frame payload being collected.
+    buf: Vec<u8>,
+    /// Opcode of the request being parsed (valid from NameLen onward).
+    op: Op,
+    events: VecDeque<ReqEvent>,
+}
+
+impl Default for RequestParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestParser {
+    /// New parser positioned at a request boundary.
+    pub fn new() -> RequestParser {
+        RequestParser {
+            state: ParseState::Op,
+            buf: Vec::new(),
+            op: Op::List,
+            events: VecDeque::new(),
+        }
+    }
+
+    /// Push bytes; completed events become available via
+    /// [`RequestParser::take`]. Consumes all of `data` or fails.
+    pub fn feed(&mut self, mut data: &[u8]) -> Result<()> {
+        while !data.is_empty() {
+            match self.state {
+                ParseState::Op => {
+                    let b = data[0];
+                    data = &data[1..];
+                    self.op = Op::from_u8(b).ok_or_else(|| {
+                        self.state = ParseState::Failed;
+                        Error::Format(format!("bad opcode {b}"))
+                    })?;
+                    self.state = ParseState::NameLen;
+                }
+                ParseState::NameLen => {
+                    if !self.collect(&mut data, 4) {
+                        break;
+                    }
+                    let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+                    self.buf.clear();
+                    if len > NAME_MAX {
+                        self.state = ParseState::Failed;
+                        return Err(Error::Format("name too long".into()));
+                    }
+                    if len == 0 {
+                        self.emit_header(String::new());
+                    } else {
+                        self.state = ParseState::Name { len };
+                    }
+                }
+                ParseState::Name { len } => {
+                    if !self.collect(&mut data, len) {
+                        break;
+                    }
+                    let name = String::from_utf8(std::mem::take(&mut self.buf))
+                        .map_err(|_| {
+                            self.state = ParseState::Failed;
+                            Error::Format("name not utf8".into())
+                        })?;
+                    self.emit_header(name);
+                }
+                ParseState::FrameLen => {
+                    if !self.collect(&mut data, 4) {
+                        break;
+                    }
+                    let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+                    self.buf.clear();
+                    if len == 0 {
+                        self.events.push_back(ReqEvent::End);
+                        self.state = ParseState::Op;
+                    } else if len > FRAME_MAX {
+                        self.state = ParseState::Failed;
+                        return Err(Error::Format(format!(
+                            "wire frame of {len} bytes exceeds FRAME_MAX"
+                        )));
+                    } else {
+                        self.state = ParseState::Frame { len };
+                    }
+                }
+                ParseState::Frame { len } => {
+                    if !self.collect(&mut data, len) {
+                        break;
+                    }
+                    let frame = std::mem::take(&mut self.buf);
+                    self.events.push_back(ReqEvent::Frame(frame));
+                    self.state = ParseState::FrameLen;
+                }
+                ParseState::Failed => {
+                    return Err(Error::Format("request stream previously errored".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_header(&mut self, name: String) {
+        self.events.push_back(ReqEvent::Header { op: self.op, name });
+        self.state = ParseState::FrameLen;
+    }
+
+    /// Move up to `want - buf.len()` bytes from `data` into the partial
+    /// buffer; `true` once the buffer holds `want` bytes.
+    fn collect(&mut self, data: &mut &[u8], want: usize) -> bool {
+        let need = want - self.buf.len();
+        let take = need.min(data.len());
+        self.buf.extend_from_slice(&data[..take]);
+        *data = &data[take..];
+        self.buf.len() == want
+    }
+
+    /// Next completed event, if any.
+    pub fn take(&mut self) -> Option<ReqEvent> {
+        self.events.pop_front()
+    }
+
+    /// True while the stream is inside a request (a truncated peer left a
+    /// partial message) or undrained events remain. Between requests —
+    /// idle keep-alive — this is `false`.
+    pub fn mid_request(&self) -> bool {
+        !matches!(self.state, ParseState::Op) || !self.buf.is_empty() || !self.events.is_empty()
+    }
+
+    /// Bytes currently buffered inside the parser (partial field/frame
+    /// plus queued frame payloads) — bounded, asserted by tests.
+    pub fn buffered(&self) -> usize {
+        let queued: usize = self
+            .events
+            .iter()
+            .map(|e| match e {
+                ReqEvent::Frame(f) => f.len(),
+                _ => 0,
+            })
+            .sum();
+        self.buf.len() + queued
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Request / response framing
 // ---------------------------------------------------------------------------
 
@@ -232,7 +434,7 @@ pub fn read_name(r: &mut impl Read) -> Result<String> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4)?;
     let name_len = u32::from_le_bytes(len4) as usize;
-    if name_len > 4096 {
+    if name_len > NAME_MAX {
         return Err(Error::Format("name too long".into()));
     }
     let mut name = vec![0u8; name_len];
@@ -375,6 +577,101 @@ mod tests {
         buf.extend_from_slice(&vec![0u8; FRAME_MAX + 1]);
         buf.extend_from_slice(&0u32.to_le_bytes());
         assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+
+    /// Collect all events of a fully-fed parser into (op, name, body,
+    /// ended) for comparison across feed splits.
+    fn collect_events(p: &mut RequestParser) -> (Vec<(Op, String)>, Vec<u8>, usize) {
+        let mut headers = Vec::new();
+        let mut body = Vec::new();
+        let mut ends = 0;
+        while let Some(ev) = p.take() {
+            match ev {
+                ReqEvent::Header { op, name } => headers.push((op, name)),
+                ReqEvent::Frame(f) => body.extend_from_slice(&f),
+                ReqEvent::End => ends += 1,
+            }
+        }
+        (headers, body, ends)
+    }
+
+    #[test]
+    fn resumable_parser_matches_blocking_reader() {
+        let payload = vec![9u8; FRAME_MAX + 500];
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Put, "blob-x", &payload).unwrap();
+
+        // One-shot feed.
+        let mut p = RequestParser::new();
+        p.feed(&wire).unwrap();
+        let (headers, body, ends) = collect_events(&mut p);
+        assert_eq!(headers, vec![(Op::Put, "blob-x".to_string())]);
+        assert_eq!(body, payload);
+        assert_eq!(ends, 1);
+        assert!(!p.mid_request());
+
+        // Byte-at-a-time feed produces identical events.
+        let mut p = RequestParser::new();
+        for b in &wire {
+            p.feed(std::slice::from_ref(b)).unwrap();
+        }
+        let (headers, body, ends) = collect_events(&mut p);
+        assert_eq!(headers, vec![(Op::Put, "blob-x".to_string())]);
+        assert_eq!(body, payload);
+        assert_eq!(ends, 1);
+    }
+
+    #[test]
+    fn resumable_parser_handles_back_to_back_requests() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Get, "a", b"").unwrap();
+        write_request(&mut wire, Op::Stat, "b", b"").unwrap();
+        let mut p = RequestParser::new();
+        p.feed(&wire).unwrap();
+        let (headers, body, ends) = collect_events(&mut p);
+        assert_eq!(
+            headers,
+            vec![(Op::Get, "a".to_string()), (Op::Stat, "b".to_string())]
+        );
+        assert!(body.is_empty());
+        assert_eq!(ends, 2);
+    }
+
+    #[test]
+    fn resumable_parser_rejects_bad_input_sticky() {
+        // Bad opcode.
+        let mut p = RequestParser::new();
+        assert!(p.feed(&[9u8]).is_err());
+        assert!(p.feed(&[0u8]).is_err(), "errors are sticky");
+
+        // Oversized frame length.
+        let mut p = RequestParser::new();
+        let mut wire = vec![Op::Put as u8];
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&((FRAME_MAX + 1) as u32).to_le_bytes());
+        assert!(p.feed(&wire).is_err());
+
+        // Oversized name length.
+        let mut p = RequestParser::new();
+        let mut wire = vec![Op::Get as u8];
+        wire.extend_from_slice(&((NAME_MAX + 1) as u32).to_le_bytes());
+        assert!(p.feed(&wire).is_err());
+    }
+
+    #[test]
+    fn resumable_parser_truncation_is_not_an_error() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Put, "t", b"abcdef").unwrap();
+        let mut p = RequestParser::new();
+        p.feed(&wire[..wire.len() - 1]).unwrap();
+        // Header + frame may be out, but no End: the request is incomplete.
+        let (_, _, ends) = collect_events(&mut p);
+        assert_eq!(ends, 0);
+        assert!(p.mid_request());
+        // The missing byte completes it.
+        p.feed(&wire[wire.len() - 1..]).unwrap();
+        assert_eq!(p.take(), Some(ReqEvent::End));
+        assert!(!p.mid_request());
     }
 
     #[test]

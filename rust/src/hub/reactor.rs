@@ -1,0 +1,401 @@
+//! The hub's readiness-driven reactor: one thread multiplexing every
+//! connection over an epoll/poll [`Poller`], with request execution on a
+//! fixed [`WorkerPool`].
+//!
+//! ## Shape
+//!
+//! - The **reactor thread** owns all sockets. It accepts, reads, parses
+//!   (via the resumable [`crate::hub::protocol::RequestParser`]) and
+//!   writes — all non-blocking. Thousands of idle keep-alive connections
+//!   cost one registered fd each and zero threads.
+//! - Complete requests are handed to the **worker pool** (≈ncpu threads,
+//!   shared [`crate::coordinator::WorkerPool`] primitive). Workers touch
+//!   only the blob store, never sockets; they push a completion and wake
+//!   the reactor through a self-pipe.
+//! - **Shutdown** drains the readiness loop: the stop flag (plus a wake —
+//!   a connect from [`crate::hub::HubServer::shutdown`] or the self-pipe)
+//!   ends the loop at the end of the current iteration, after pending
+//!   completions were flushed to the sockets; dropping the pool then joins
+//!   every worker, and dropping the slot table closes every connection.
+//!
+//! In-flight requests keep the blocking server's stall bound: a
+//! connection mid-request (either direction) that makes no progress for
+//! [`IO_TIMEOUT`] is dropped by the periodic sweep; idle between-requests
+//! connections are never timed out.
+
+use crate::coordinator::pool::WorkerPool;
+use crate::hub::conn::{Conn, ReadOutcome, Request, Response, WriteOutcome};
+use crate::hub::server::{execute_request, Store};
+use crate::hub::sys::{Event, Interest, Poller};
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poller token of the accept socket.
+const TOKEN_LISTENER: u64 = 0;
+/// Poller token of the self-pipe wake socket.
+const TOKEN_WAKER: u64 = 1;
+/// First connection token; token = slot index + `TOKEN_BASE`.
+const TOKEN_BASE: u64 = 2;
+/// Poll tick: upper bound on stop-flag / stall-sweep latency.
+const TICK_MS: i32 = 100;
+/// A connection mid-request with no progress for this long is dropped
+/// (same bound the thread-per-connection server enforced per read).
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+/// After the stop flag: how long in-flight executions/responses may take
+/// to flush before connections are closed anyway.
+const DRAIN_GRACE: Duration = Duration::from_millis(500);
+
+/// Reactor tuning, fixed at server start.
+pub(crate) struct ReactorConfig {
+    /// Worker threads executing ready requests.
+    pub(crate) workers: usize,
+    /// Connection cap; excess accepts are dropped immediately.
+    pub(crate) max_conns: usize,
+}
+
+/// A finished request execution, routed back to its connection.
+struct Completion {
+    slot: usize,
+    gen: u64,
+    resp: Response,
+    close_after: bool,
+}
+
+/// The readiness loop state. Constructed on the caller's thread (so
+/// setup errors — poller, self-pipe — surface from
+/// [`crate::hub::HubServer::start`]) and then moved into the reactor
+/// thread to run.
+pub(crate) struct Reactor {
+    poller: Poller,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    wake_tx: Arc<UnixStream>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    pool: WorkerPool,
+    store: Store,
+    stop: Arc<AtomicBool>,
+    cfg: ReactorConfig,
+    /// Connection table; token = index + `TOKEN_BASE`.
+    slots: Vec<Option<Conn>>,
+    /// Reusable slot indices (merged from `freed` between poll rounds so
+    /// a token freed mid-round is never reused within that round).
+    free: Vec<usize>,
+    freed: Vec<usize>,
+    n_conns: usize,
+    next_gen: u64,
+    read_buf: Vec<u8>,
+    last_sweep: Instant,
+}
+
+impl Reactor {
+    pub(crate) fn new(
+        listener: TcpListener,
+        store: Store,
+        stop: Arc<AtomicBool>,
+        cfg: ReactorConfig,
+    ) -> std::io::Result<Reactor> {
+        listener.set_nonblocking(true)?;
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        poller.register(wake_rx.as_raw_fd(), TOKEN_WAKER, Interest::READ)?;
+        let pool = WorkerPool::new(cfg.workers);
+        Ok(Reactor {
+            poller,
+            listener,
+            wake_rx,
+            wake_tx: Arc::new(wake_tx),
+            completions: Arc::new(Mutex::new(Vec::new())),
+            pool,
+            store,
+            stop,
+            cfg,
+            slots: Vec::new(),
+            free: Vec::new(),
+            freed: Vec::new(),
+            n_conns: 0,
+            next_gen: 0,
+            read_buf: vec![0u8; 64 * 1024],
+            last_sweep: Instant::now(),
+        })
+    }
+
+    /// Run until the stop flag is raised or the poller fails, then drain:
+    /// in-flight responses get a bounded grace to flush, every connection
+    /// closes, and the worker pool joins (via drop after this returns).
+    pub(crate) fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if self.poller.wait(&mut events, TICK_MS).is_err() {
+                break;
+            }
+            // `events` is a local buffer: iterating it does not borrow
+            // `self`, so handlers may mutate the reactor freely.
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_all(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    token => self.drive_slot((token - TOKEN_BASE) as usize, ev),
+                }
+            }
+            self.process_completions();
+            self.sweep_stalled();
+            self.free.append(&mut self.freed);
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        self.drain_in_flight();
+        // Close every connection, then join the workers (dropping the
+        // pool runs queued jobs to completion first).
+        self.slots.clear();
+        self.pool.close();
+    }
+
+    /// Post-stop grace: requests already executing (or responses already
+    /// draining) get up to [`DRAIN_GRACE`] to reach the socket, so a
+    /// client that asked for shutdown still reads its acknowledgement.
+    /// New connections and fresh reads are not served.
+    fn drain_in_flight(&mut self) {
+        let deadline = Instant::now() + DRAIN_GRACE;
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            self.process_completions();
+            self.free.append(&mut self.freed);
+            let pending = self.slots.iter().flatten().any(|c| c.busy || c.writing());
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            if self.poller.wait(&mut events, 20).is_err() {
+                break;
+            }
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => {} // no new connections after stop
+                    TOKEN_WAKER => self.drain_waker(),
+                    token => {
+                        // Only flush writes; don't start new request reads.
+                        let slot = (token - TOKEN_BASE) as usize;
+                        let writing = matches!(
+                            self.slots.get(slot),
+                            Some(Some(c)) if c.writing()
+                        );
+                        if writing {
+                            self.drive_slot(slot, ev);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accept until `WouldBlock`; over-cap connections are dropped.
+    fn accept_all(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.n_conns >= self.cfg.max_conns {
+                        drop(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let slot = self.free.pop().unwrap_or_else(|| {
+                        self.slots.push(None);
+                        self.slots.len() - 1
+                    });
+                    self.next_gen += 1;
+                    let conn = Conn::new(stream, self.next_gen);
+                    let token = TOKEN_BASE + slot as u64;
+                    if self
+                        .poller
+                        .register(conn.stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.slots[slot] = Some(conn);
+                    self.n_conns += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        while let Ok(n) = self.wake_rx.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Drive one connection for a readiness event.
+    fn drive_slot(&mut self, slot: usize, ev: Event) {
+        let Some(mut conn) = self.slots.get_mut(slot).and_then(Option::take) else {
+            return;
+        };
+        let mut close = false;
+        if ev.error && conn.busy {
+            // The peer vanished while its request executes; the pending
+            // completion is discarded by the generation check.
+            close = true;
+        } else if conn.writing() {
+            if ev.writable || ev.error {
+                close = self.continue_write(&mut conn);
+            }
+        } else if !conn.busy && (ev.readable || ev.error) {
+            close = self.continue_read(&mut conn, slot);
+        }
+        self.finish_slot(slot, conn, close);
+    }
+
+    /// Read side: parse, and dispatch a completed request.
+    fn continue_read(&mut self, conn: &mut Conn, slot: usize) -> bool {
+        match conn.drive_read(&mut self.read_buf) {
+            ReadOutcome::NeedMore => self.sync_interest(conn, slot),
+            ReadOutcome::Closed => true,
+            ReadOutcome::Dispatch(req) => self.dispatch(conn, slot, req),
+        }
+    }
+
+    /// Write side: on completion, close or resume pipelined requests.
+    fn continue_write(&mut self, conn: &mut Conn) -> bool {
+        match conn.drive_write() {
+            WriteOutcome::Blocked => false,
+            WriteOutcome::Closed => true,
+            WriteOutcome::Done => conn.close_after_write,
+        }
+    }
+
+    /// Post-drive bookkeeping shared by all paths: either close the slot
+    /// or put the connection back with its interest synced (resuming a
+    /// buffered pipelined request first).
+    fn finish_slot(&mut self, slot: usize, mut conn: Conn, mut close: bool) {
+        // After a response fully drained, a pipelined request may already
+        // be parsed and waiting.
+        while !close && !conn.busy && !conn.writing() {
+            match conn.take_buffered_request() {
+                Some(req) => close = self.dispatch(&mut conn, slot, req),
+                None => break,
+            }
+        }
+        if !close {
+            close = self.sync_interest(&mut conn, slot);
+        }
+        if close {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.n_conns -= 1;
+            self.freed.push(slot);
+            // conn drops here, closing the socket
+        } else {
+            self.slots[slot] = Some(conn);
+        }
+    }
+
+    /// Hand a request to the worker pool. Returns `true` when the
+    /// connection must close (pool unavailable during teardown).
+    fn dispatch(&mut self, conn: &mut Conn, slot: usize, req: Request) -> bool {
+        conn.busy = true;
+        let gen = conn.gen;
+        let store = Arc::clone(&self.store);
+        let stop = Arc::clone(&self.stop);
+        let completions = Arc::clone(&self.completions);
+        let wake = Arc::clone(&self.wake_tx);
+        let job = move || {
+            let (resp, close_after) = execute_request(req, &store, &stop);
+            completions
+                .lock()
+                .unwrap()
+                .push(Completion { slot, gen, resp, close_after });
+            // Failure means the pipe is full (a wake is already pending)
+            // or the reactor is gone; both are fine to ignore.
+            let _ = (&*wake).write_all(&[1u8]);
+        };
+        self.pool.execute(job).is_err()
+    }
+
+    /// Route finished executions back to their connections and start
+    /// writing the responses.
+    fn process_completions(&mut self) {
+        let done: Vec<Completion> = {
+            let mut q = self.completions.lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        for c in done {
+            let Some(mut conn) = self.slots.get_mut(c.slot).and_then(Option::take) else {
+                continue; // connection closed while the request executed
+            };
+            if conn.gen != c.gen || !conn.busy {
+                self.slots[c.slot] = Some(conn);
+                continue;
+            }
+            conn.start_response(c.resp, c.close_after);
+            let close = self.continue_write(&mut conn);
+            self.finish_slot(c.slot, conn, close);
+        }
+    }
+
+    /// Drop connections stalled mid-request (either direction) past
+    /// [`IO_TIMEOUT`]. Idle keep-alive connections are left alone.
+    fn sweep_stalled(&mut self) {
+        let now = Instant::now();
+        if now.duration_since(self.last_sweep) < Duration::from_millis(500) {
+            return;
+        }
+        self.last_sweep = now;
+        for slot in 0..self.slots.len() {
+            let stalled = match &self.slots[slot] {
+                Some(c) => c.in_flight() && !c.busy && c.idle_for(now) > IO_TIMEOUT,
+                None => false,
+            };
+            if stalled {
+                if let Some(conn) = self.slots[slot].take() {
+                    let _ = self.poller.deregister(conn.stream.as_raw_fd());
+                    self.n_conns -= 1;
+                    self.freed.push(slot);
+                }
+            }
+        }
+    }
+
+    /// Keep the poller's interest for this connection in sync with its
+    /// state: write interest while a response drains, no interest while a
+    /// request executes, read interest otherwise. Returns `true` when the
+    /// poller rejects the fd (close the connection).
+    fn sync_interest(&mut self, conn: &mut Conn, slot: usize) -> bool {
+        let want = if conn.writing() {
+            Interest::WRITE
+        } else if conn.busy {
+            Interest::NONE
+        } else {
+            Interest::READ
+        };
+        if want == conn.interest {
+            return false;
+        }
+        let token = TOKEN_BASE + slot as u64;
+        if self
+            .poller
+            .reregister(conn.stream.as_raw_fd(), token, want)
+            .is_err()
+        {
+            return true;
+        }
+        conn.interest = want;
+        false
+    }
+}

@@ -1,34 +1,32 @@
-//! The hub server: a threaded TCP blob store.
+//! The hub server: a readiness-driven TCP blob store.
 //!
 //! Blobs are stored as the bounded wire frames they arrived in (≤
 //! [`FRAME_MAX`] bytes each), never reassembled: a PUT of an N-byte blob
 //! costs the server one frame-sized buffer at a time, and a GET streams
 //! the stored frames back out. Peak per-connection memory is therefore
 //! O(FRAME_MAX) regardless of blob size.
+//!
+//! Since PR 2 the server is **reactor-based** ([`crate::hub::reactor`]):
+//! one thread multiplexes every connection over epoll (poll(2) off
+//! Linux), and a fixed worker pool of ≈ncpu threads executes ready
+//! PUT/GET/List/Stat work — thousands of idle keep-alive connections cost
+//! zero threads. Tune with [`HubServer::builder`] or the `ZIPNN_HUB_WORKERS`
+//! / `ZIPNN_HUB_MAX_CONNS` environment variables.
 
 use crate::error::Result;
-use crate::hub::protocol::{
-    read_name, write_response, write_response_header, ChunkedReader, ChunkedWriter, Op, FRAME_MAX,
-};
+use crate::hub::conn::{Request, Response};
+use crate::hub::protocol::{write_response, write_response_header, Op, FRAME_MAX};
+use crate::hub::reactor::{Reactor, ReactorConfig};
 use std::collections::HashMap;
-use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
-
-/// Poll interval while a keep-alive connection is idle: how quickly a
-/// handler notices the stop flag.
-const IDLE_POLL: Duration = Duration::from_millis(100);
-/// Timeout for reads inside an in-flight request (a stalled client gets
-/// its connection dropped instead of pinning a handler thread forever).
-const IO_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// One stored blob: the wire frames of its PUT body.
-struct StoredBlob {
-    frames: Vec<Vec<u8>>,
-    total: u64,
+pub(crate) struct StoredBlob {
+    pub(crate) frames: Vec<Vec<u8>>,
+    pub(crate) total: u64,
 }
 
 impl StoredBlob {
@@ -37,45 +35,81 @@ impl StoredBlob {
     }
 }
 
-type Store = Arc<Mutex<HashMap<String, Arc<StoredBlob>>>>;
+/// Shared blob store (name → frames).
+pub(crate) type Store = Arc<Mutex<HashMap<String, Arc<StoredBlob>>>>;
+
+/// Configuration for a [`HubServer`]; construct via [`HubServer::builder`].
+pub struct HubServerBuilder {
+    workers: Option<usize>,
+    max_conns: Option<usize>,
+}
+
+impl HubServerBuilder {
+    /// Worker threads executing ready requests. Default: the
+    /// `ZIPNN_HUB_WORKERS` env var, else `ncpu` (capped at 16).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n.max(1));
+        self
+    }
+
+    /// Maximum concurrent connections; excess accepts are dropped.
+    /// Default: the `ZIPNN_HUB_MAX_CONNS` env var, else 4096.
+    pub fn max_conns(mut self, n: usize) -> Self {
+        self.max_conns = Some(n.max(1));
+        self
+    }
+
+    /// Bind an ephemeral loopback port and start the reactor.
+    pub fn start(self) -> Result<HubServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let store: Store = Arc::new(Mutex::new(HashMap::new()));
+        let cfg = ReactorConfig {
+            workers: self.workers.unwrap_or_else(default_workers),
+            max_conns: self.max_conns.unwrap_or_else(default_max_conns),
+        };
+        // Built here so setup failures (poller, self-pipe) surface as an
+        // error instead of a silently dead server.
+        let reactor = Reactor::new(listener, store, Arc::clone(&stop), cfg)?;
+        let handle = std::thread::spawn(move || reactor.run());
+        Ok(HubServer { addr, stop, handle: Some(handle) })
+    }
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn default_workers() -> usize {
+    env_usize("ZIPNN_HUB_WORKERS").unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .min(16)
+    })
+}
+
+fn default_max_conns() -> usize {
+    env_usize("ZIPNN_HUB_MAX_CONNS").unwrap_or(4096).max(1)
+}
 
 /// In-process model hub listening on loopback.
 pub struct HubServer {
     addr: String,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl HubServer {
-    /// Start on an ephemeral loopback port.
+    /// Start on an ephemeral loopback port with default tuning.
     pub fn start() -> Result<HubServer> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
-        let addr = listener.local_addr()?.to_string();
-        let stop = Arc::new(AtomicBool::new(false));
-        let store: Store = Arc::new(Mutex::new(HashMap::new()));
-        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        let stop2 = Arc::clone(&stop);
-        let conns2 = Arc::clone(&conns);
-        let handle = std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if stop2.load(Ordering::Relaxed) {
-                    break;
-                }
-                let Ok(stream) = conn else { continue };
-                let store = Arc::clone(&store);
-                let stop3 = Arc::clone(&stop2);
-                let h = std::thread::spawn(move || {
-                    let _ = handle_conn(stream, store, stop3);
-                });
-                // reap finished handlers so a long-lived server doesn't
-                // accumulate handles without bound
-                let mut conns = conns2.lock().unwrap();
-                conns.retain(|c| !c.is_finished());
-                conns.push(h);
-            }
-        });
-        Ok(HubServer { addr, stop, handle: Some(handle), conns })
+        HubServer::builder().start()
+    }
+
+    /// Tune workers / connection cap before starting.
+    pub fn builder() -> HubServerBuilder {
+        HubServerBuilder { workers: None, max_conns: None }
     }
 
     /// Address to connect to.
@@ -83,23 +117,19 @@ impl HubServer {
         &self.addr
     }
 
-    /// Request shutdown and join the accept loop plus every connection
-    /// handler. Handlers poll the stop flag between requests (and time out
-    /// stalled requests), so this returns even with live keep-alive
-    /// connections.
+    /// Request shutdown and join the reactor (which joins every worker).
+    /// The readiness loop drains — pending completions are flushed to
+    /// their sockets — then every connection closes, so this returns even
+    /// with live keep-alive connections.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        // poke the accept loop awake
+        // poke the readiness loop awake
         let _ = TcpStream::connect(&self.addr);
         if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
-        for h in conns {
             let _ = h.join();
         }
     }
@@ -111,103 +141,58 @@ impl Drop for HubServer {
     }
 }
 
-/// Serve one connection until the peer closes, a request stalls past
-/// [`IO_TIMEOUT`], or the stop flag is raised.
-fn handle_conn(mut stream: TcpStream, store: Store, stop: Arc<AtomicBool>) -> Result<()> {
-    stream.set_read_timeout(Some(IDLE_POLL))?;
-    // A peer that stops reading its response must not pin this handler
-    // (shutdown joins every handler thread).
-    stream.set_write_timeout(Some(IO_TIMEOUT))?;
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        // Wait for the next request's opcode, polling the stop flag.
-        let mut op_b = [0u8; 1];
-        match stream.read_exact(&mut op_b) {
-            Ok(()) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(_) => return Ok(()), // client closed
-        }
-        // A request is in flight: allow slower reads, but not forever.
-        stream.set_read_timeout(Some(IO_TIMEOUT))?;
-        let done = handle_request(op_b[0], &mut stream, &store, &stop)?;
-        if done {
-            return Ok(());
-        }
-        stream.set_read_timeout(Some(IDLE_POLL))?;
-    }
-}
-
-/// Handle one request whose opcode byte has been read. Returns `true` when
-/// the connection should close (shutdown request).
-fn handle_request(
-    op_byte: u8,
-    stream: &mut TcpStream,
-    store: &Store,
-    stop: &AtomicBool,
-) -> Result<bool> {
-    let op = Op::from_u8(op_byte)
-        .ok_or_else(|| crate::error::Error::Format(format!("bad opcode {op_byte}")))?;
-    let name = read_name(&mut *stream)?;
-    // Every request carries a chunked body (usually just the terminator);
-    // ops that don't use it must still consume it to keep the keep-alive
-    // connection in sync.
-    if op != Op::Put {
-        ChunkedReader::new(&mut *stream).drain()?;
-    }
-    match op {
+/// Execute one complete request against the store (runs on a worker
+/// thread; touches no sockets). Returns the response plus whether the
+/// connection should close once it is written.
+pub(crate) fn execute_request(req: Request, store: &Store, stop: &AtomicBool) -> (Response, bool) {
+    match req.op {
         Op::Put => {
-            let mut body = ChunkedReader::new(&mut *stream);
-            let mut frames = Vec::new();
-            let mut frame = Vec::new();
-            while body.read_frame(&mut frame)? {
-                debug_assert!(frame.len() <= FRAME_MAX);
-                frames.push(std::mem::take(&mut frame));
-            }
-            let blob = StoredBlob { total: body.payload_len(), frames };
-            store.lock().unwrap().insert(name, Arc::new(blob));
-            write_response(stream, true, b"")?;
+            debug_assert!(req.frames.iter().all(|f| f.len() <= FRAME_MAX));
+            let blob = StoredBlob { total: req.total, frames: req.frames };
+            store.lock().unwrap().insert(req.name, Arc::new(blob));
+            (Response::Small(small_response(true, b"")), false)
         }
         Op::Get => {
-            let blob = store.lock().unwrap().get(&name).cloned();
+            let blob = store.lock().unwrap().get(&req.name).cloned();
             match blob {
                 Some(blob) => {
-                    write_response_header(stream, true)?;
-                    let mut cw = ChunkedWriter::new(&mut *stream);
-                    for f in &blob.frames {
-                        cw.write_all(f)?;
-                    }
-                    cw.finish()?;
+                    // Status byte via the shared protocol encoder; the
+                    // frames + terminator stream from the write machine.
+                    let mut head = Vec::with_capacity(1);
+                    write_response_header(&mut head, true).expect("infallible write to Vec");
+                    (Response::Blob(head, blob), false)
                 }
-                None => write_response(stream, false, b"not found")?,
+                None => (Response::Small(small_response(false, b"not found")), false),
             }
         }
         Op::List => {
             let names: Vec<String> = store.lock().unwrap().keys().cloned().collect();
-            write_response(stream, true, names.join("\n").as_bytes())?;
+            (
+                Response::Small(small_response(true, names.join("\n").as_bytes())),
+                false,
+            )
         }
         Op::Stat => {
-            let blob = store.lock().unwrap().get(&name).cloned();
+            let blob = store.lock().unwrap().get(&req.name).cloned();
             match blob {
                 Some(blob) => {
                     let msg =
                         format!("{} {} {}", blob.total, blob.frames.len(), blob.max_frame());
-                    write_response(stream, true, msg.as_bytes())?;
+                    (Response::Small(small_response(true, msg.as_bytes())), false)
                 }
-                None => write_response(stream, false, b"not found")?,
+                None => (Response::Small(small_response(false, b"not found")), false),
             }
         }
         Op::Shutdown => {
             stop.store(true, Ordering::Relaxed);
-            write_response(stream, true, b"")?;
-            return Ok(true);
+            (Response::Small(small_response(true, b"")), true)
         }
     }
-    Ok(false)
+}
+
+/// Serialize a complete small response (status byte + chunked body).
+fn small_response(ok: bool, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 16);
+    write_response(&mut out, ok, payload).expect("infallible write to Vec");
+    out
 }

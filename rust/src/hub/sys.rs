@@ -1,0 +1,375 @@
+//! Thin readiness-polling shim over the platform's C library.
+//!
+//! The hub reactor needs exactly four operations — register, modify,
+//! deregister, wait — so instead of pulling in a dependency this module
+//! declares the handful of `libc` symbols it needs directly (the C
+//! library is already linked by `std`). Linux gets an **epoll** backend
+//! (O(ready) wakeups, the production path); every other Unix gets a
+//! portable **poll(2)** backend with the same interface.
+//!
+//! Both backends are **level-triggered**: an fd keeps reporting ready
+//! until the condition is consumed, so the reactor never misses an edge
+//! after a partial read/write.
+
+/// One readiness notification.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The token the fd was registered with.
+    pub token: u64,
+    /// Readable (or a peer hang-up, which reads as EOF).
+    pub readable: bool,
+    /// Writable.
+    pub writable: bool,
+    /// Error/hang-up condition; the owner should drive the fd and let the
+    /// resulting `Err`/EOF close it.
+    pub error: bool,
+}
+
+/// Readiness interest for a registered fd.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    /// Wake when readable.
+    pub read: bool,
+    /// Wake when writable.
+    pub write: bool,
+}
+
+impl Interest {
+    /// Read-only interest.
+    pub const READ: Interest = Interest { read: true, write: false };
+    /// Write-only interest.
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    /// No wakeups (the fd stays registered; errors still surface).
+    pub const NONE: Interest = Interest { read: false, write: false };
+}
+
+#[cfg(target_os = "linux")]
+pub use epoll::Poller;
+
+#[cfg(all(unix, not(target_os = "linux")))]
+pub use pollfd::Poller;
+
+#[cfg(not(unix))]
+compile_error!("the hub reactor needs a Unix readiness API (epoll/poll)");
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// Mirror of the kernel's `struct epoll_event`. x86-64 packs it to
+    /// match the 32-bit layout; other architectures use natural alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// epoll-backed readiness poller.
+    pub struct Poller {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        /// Create the epoll instance.
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 1024],
+            })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent { events: events_of(interest), data: token };
+            let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register `fd` under `token`.
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        /// Change a registered fd's interest.
+        pub fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        /// Remove a registered fd.
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+        }
+
+        /// Wait up to `timeout_ms` for readiness; fills `out` (cleared
+        /// first). A signal interruption returns with `out` empty.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for ev in &self.buf[..n as usize] {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    error: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+
+    fn events_of(interest: Interest) -> u32 {
+        let mut bits = 0;
+        if interest.read {
+            bits |= EPOLLIN;
+        }
+        if interest.write {
+            bits |= EPOLLOUT;
+        }
+        bits
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod pollfd {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    /// Mirror of the portable `struct pollfd`.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
+    }
+
+    /// poll(2)-backed fallback: keeps the registration list in user space
+    /// and rebuilds the pollfd array per wait. O(registered) per call, but
+    /// portable everywhere.
+    pub struct Poller {
+        regs: Vec<(RawFd, u64, Interest)>,
+        fds: Vec<PollFd>,
+    }
+
+    impl Poller {
+        /// Create the poller.
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { regs: Vec::new(), fds: Vec::new() })
+        }
+
+        /// Register `fd` under `token`.
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            if self.regs.iter().any(|(f, _, _)| *f == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd registered"));
+            }
+            self.regs.push((fd, token, interest));
+            Ok(())
+        }
+
+        /// Change a registered fd's interest.
+        pub fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            for r in &mut self.regs {
+                if r.0 == fd {
+                    r.1 = token;
+                    r.2 = interest;
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        /// Remove a registered fd.
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let before = self.regs.len();
+            self.regs.retain(|(f, _, _)| *f != fd);
+            if self.regs.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        /// Wait up to `timeout_ms` for readiness; fills `out` (cleared
+        /// first). A signal interruption returns with `out` empty.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            self.fds.clear();
+            for (fd, _, interest) in &self.regs {
+                let mut events = 0;
+                if interest.read {
+                    events |= POLLIN;
+                }
+                if interest.write {
+                    events |= POLLOUT;
+                }
+                self.fds.push(PollFd { fd: *fd, events, revents: 0 });
+            }
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len(), timeout_ms) };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for (pfd, (_, token, _)) in self.fds.iter().zip(&self.regs) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token: *token,
+                    readable: r & (POLLIN | POLLHUP) != 0,
+                    writable: r & POLLOUT != 0,
+                    error: r & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Best-effort raise of the process's open-file soft limit toward `want`
+/// (capped at the hard limit). Returns the (possibly unchanged) soft
+/// limit. Used by stress tests that hold thousands of sockets; failure is
+/// not an error — callers scale their connection count to the result.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    // RLIMIT_NOFILE is 7 on Linux and 8 on the BSDs/macOS.
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(all(unix, not(target_os = "linux")))]
+    const RLIMIT_NOFILE: i32 = 8;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024;
+    }
+    if lim.cur >= want {
+        return lim.cur;
+    }
+    let new = RLimit { cur: want.min(lim.max), max: lim.max };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+        new.cur
+    } else {
+        lim.cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn poller_reports_readable_and_writable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut a = TcpStream::connect(addr).unwrap();
+        let (mut b, _) = listener.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        poller.register(b.as_raw_fd(), 7, Interest::READ).unwrap();
+
+        // Nothing to read yet: a short wait times out empty.
+        let mut events = Vec::new();
+        poller.wait(&mut events, 10).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+
+        // Peer writes -> readable fires with our token.
+        a.write_all(b"ping").unwrap();
+        let mut got = false;
+        for _ in 0..100 {
+            poller.wait(&mut events, 100).unwrap();
+            if events.iter().any(|e| e.token == 7 && e.readable) {
+                got = true;
+                break;
+            }
+        }
+        assert!(got, "readable event never arrived");
+        let mut buf = [0u8; 8];
+        let n = b.read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+
+        // Write interest on an idle socket is immediately ready.
+        poller.reregister(b.as_raw_fd(), 7, Interest::WRITE).unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.writable));
+
+        poller.deregister(b.as_raw_fd()).unwrap();
+        poller.wait(&mut events, 10).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn raise_nofile_returns_plausible_limit() {
+        let lim = raise_nofile_limit(256);
+        assert!(lim >= 256 || lim > 0);
+    }
+}

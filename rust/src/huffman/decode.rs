@@ -23,6 +23,25 @@ impl DecodeTable {
         let size = 1usize << MAX_CODE_LEN;
         let mut entries: Box<[u16; 1 << MAX_CODE_LEN]> =
             vec![0u16; size].into_boxed_slice().try_into().unwrap();
+        Self::fill(&mut entries, lens);
+        Ok(DecodeTable { entries })
+    }
+
+    /// Rebuild in place from new code lengths — no allocation. This is
+    /// the steady-state eviction path of [`DecodeTableCache`]: the 8 KiB
+    /// box is recycled instead of re-boxed per stream.
+    pub fn rebuild(&mut self, lens: &[u8; 256]) -> Result<()> {
+        if !kraft_ok(lens) {
+            return Err(Error::Corrupt("code lengths violate Kraft inequality".into()));
+        }
+        self.entries.fill(0);
+        Self::fill(&mut self.entries, lens);
+        Ok(())
+    }
+
+    /// Populate a zeroed table from (Kraft-valid) code lengths.
+    fn fill(entries: &mut [u16; 1 << MAX_CODE_LEN], lens: &[u8; 256]) {
+        let size = 1usize << MAX_CODE_LEN;
         let codes = canonical_codes(lens);
         for s in 0..256u16 {
             let l = lens[s as usize];
@@ -39,7 +58,6 @@ impl DecodeTable {
                 idx += step;
             }
         }
-        Ok(DecodeTable { entries })
     }
 
     /// Decode one symbol from the peeked bits; returns `(symbol, len)`.
@@ -50,6 +68,55 @@ impl DecodeTable {
         // peek is masked to MAX_CODE_LEN bits -> always in bounds
         let e = self.entries[(peek & ((1 << MAX_CODE_LEN) - 1)) as usize];
         ((e >> 4) as u8, (e & 0xF) as u32)
+    }
+}
+
+/// Bytes of the packed on-wire code-length table (256 nibbles).
+const PACKED_LENS: usize = 128;
+/// Cached tables per worker. Model byte-group streams cycle through a
+/// handful of length tables (one shape per group), so a small
+/// fully-associative cache hits in practice; a miss with a full cache
+/// recycles a slot's box via [`DecodeTable::rebuild`], so steady state
+/// allocates nothing either way.
+const CACHE_SLOTS: usize = 8;
+
+/// Per-worker cache of built [`DecodeTable`]s keyed by the stream's
+/// 128-byte packed length table. Lives in the codec's
+/// [`crate::codec::ScratchArena`] so each decode worker reuses tables
+/// across the chunks it touches instead of rebuilding (and re-boxing
+/// 8 KiB) per stream.
+#[derive(Default)]
+pub struct DecodeTableCache {
+    slots: Vec<([u8; PACKED_LENS], DecodeTable)>,
+    clock: usize,
+}
+
+impl DecodeTableCache {
+    /// New, empty cache (tables build on first use).
+    pub fn new() -> DecodeTableCache {
+        DecodeTableCache::default()
+    }
+
+    /// The decode table for a packed length table, built (or rebuilt into
+    /// a recycled slot) on miss.
+    pub fn get(&mut self, packed: &[u8; PACKED_LENS]) -> Result<&DecodeTable> {
+        if let Some(i) = self.slots.iter().position(|(k, _)| k == packed) {
+            return Ok(&self.slots[i].1);
+        }
+        let lens = unpack_lens(packed);
+        if self.slots.len() < CACHE_SLOTS {
+            let table = DecodeTable::from_lengths(&lens)?;
+            self.slots.push((*packed, table));
+            return Ok(&self.slots.last().expect("just pushed").1);
+        }
+        let i = self.clock;
+        self.clock = (self.clock + 1) % CACHE_SLOTS;
+        // Validate-then-fill: a corrupt table leaves the slot's key/table
+        // pair untouched.
+        let slot = &mut self.slots[i];
+        slot.1.rebuild(&lens)?;
+        slot.0 = *packed;
+        Ok(&self.slots[i].1)
     }
 }
 
@@ -190,6 +257,25 @@ pub fn decompress(data: &[u8], expected_len: usize) -> Result<Vec<u8>> {
 /// Decompress directly into `out` (its length is the expected raw size).
 /// The allocation-free path the chunk pipeline uses.
 pub fn decompress_into(data: &[u8], out: &mut [u8]) -> Result<()> {
+    decompress_into_inner(data, out, None)
+}
+
+/// [`decompress_into`] with a per-worker [`DecodeTableCache`]: repeated
+/// length tables skip the build, and misses recycle a cached 8 KiB box —
+/// the decode side's steady state performs no allocations.
+pub fn decompress_into_cached(
+    data: &[u8],
+    out: &mut [u8],
+    cache: &mut DecodeTableCache,
+) -> Result<()> {
+    decompress_into_inner(data, out, Some(cache))
+}
+
+fn decompress_into_inner(
+    data: &[u8],
+    out: &mut [u8],
+    cache: Option<&mut DecodeTableCache>,
+) -> Result<()> {
     let expected_len = out.len();
     let mode = *data.first().ok_or_else(|| Error::Corrupt("empty stream".into()))?;
     match mode {
@@ -223,18 +309,18 @@ pub fn decompress_into(data: &[u8], out: &mut [u8]) -> Result<()> {
             out.fill(sym);
             Ok(())
         }
-        MODE_HUFF => decode_huff(data, out),
+        MODE_HUFF => decode_huff(data, out, cache),
         other => Err(Error::Corrupt(format!("bad stream mode {other}"))),
     }
 }
 
-fn decode_huff(data: &[u8], out: &mut [u8]) -> Result<()> {
+fn decode_huff(data: &[u8], out: &mut [u8], cache: Option<&mut DecodeTableCache>) -> Result<()> {
     const HDR: usize = 1 + 128 + 4 + 12 + 4;
     let expected_len = out.len();
     if data.len() < HDR {
         return Err(Error::Corrupt("huffman header truncated".into()));
     }
-    let lens = unpack_lens(&data[1..129]);
+    let packed: &[u8; PACKED_LENS] = data[1..129].try_into().expect("slice of 128");
     let count = read_u32_le(data, 129) as usize;
     let s0len = read_u32_le(data, 133) as usize;
     let s1len = read_u32_le(data, 137) as usize;
@@ -248,7 +334,14 @@ fn decode_huff(data: &[u8], out: &mut [u8]) -> Result<()> {
     if data.len() < HDR + paylen || s0len + s1len + s2len > paylen {
         return Err(Error::Corrupt("huffman payload truncated".into()));
     }
-    let table = DecodeTable::from_lengths(&lens)?;
+    let owned;
+    let table: &DecodeTable = match cache {
+        Some(c) => c.get(packed)?,
+        None => {
+            owned = DecodeTable::from_lengths(&unpack_lens(packed))?;
+            &owned
+        }
+    };
     let payload = &data[HDR..HDR + paylen];
     let (p0, rest) = payload.split_at(s0len);
     let (p1, rest) = rest.split_at(s1len);
@@ -259,8 +352,8 @@ fn decode_huff(data: &[u8], out: &mut [u8]) -> Result<()> {
     let (o1, rest) = rest.split_at_mut(q);
     let (o2, o3) = rest.split_at_mut(q);
 
-    let ok = decode_lane2(&table, p0, p1, o0, o1)
-        & decode_lane2(&table, p2, p3, o2, o3);
+    let ok = decode_lane2(table, p0, p1, o0, o1)
+        & decode_lane2(table, p2, p3, o2, o3);
     if !ok {
         return Err(Error::Corrupt("invalid code in huffman stream".into()));
     }
@@ -315,6 +408,49 @@ mod tests {
         let data = vec![1u8, 2, 3, 4, 1, 2, 3, 4];
         let enc = compress(&data);
         assert!(decompress(&enc, 7).is_err());
+    }
+
+    #[test]
+    fn cached_decode_matches_uncached_across_tables() {
+        // More distinct length tables than cache slots: exercises insert,
+        // hit and rebuild-eviction paths.
+        let mut cache = DecodeTableCache::new();
+        let streams: Vec<Vec<u8>> = (0..(CACHE_SLOTS + 5))
+            .map(|t| (0..4096usize).map(|i| (i % (3 + t)) as u8).collect())
+            .collect();
+        for _round in 0..3 {
+            for data in &streams {
+                let enc = compress(data);
+                let mut out = vec![0u8; data.len()];
+                decompress_into_cached(&enc, &mut out, &mut cache).unwrap();
+                assert_eq!(&out, data);
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_matches_fresh_build() {
+        let mut lens_a = [0u8; 256];
+        lens_a[0] = 1;
+        lens_a[1] = 2;
+        lens_a[2] = 2;
+        let mut lens_b = [0u8; 256];
+        for l in lens_b.iter_mut().take(4) {
+            *l = 2;
+        }
+        let fresh = DecodeTable::from_lengths(&lens_b).unwrap();
+        let mut recycled = DecodeTable::from_lengths(&lens_a).unwrap();
+        recycled.rebuild(&lens_b).unwrap();
+        for p in 0..(1usize << MAX_CODE_LEN) {
+            assert_eq!(fresh.lookup(p as u32), recycled.lookup(p as u32));
+        }
+        // A Kraft-violating rebuild fails and leaves the table usable.
+        let mut bad = [0u8; 256];
+        for l in bad.iter_mut().take(5) {
+            *l = 1;
+        }
+        assert!(recycled.rebuild(&bad).is_err());
+        assert_eq!(fresh.lookup(0), recycled.lookup(0));
     }
 
     #[test]

@@ -34,7 +34,9 @@ mod decode;
 mod encode;
 mod lengths;
 
-pub use decode::{decompress, decompress_into, DecodeTable};
+pub use decode::{
+    decompress, decompress_into, decompress_into_cached, DecodeTable, DecodeTableCache,
+};
 pub use encode::{compress, compress_into, compress_with_hist, compressed_bound, EncodeTable};
 pub use lengths::{build_lengths, MAX_CODE_LEN};
 

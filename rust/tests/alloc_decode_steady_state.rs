@@ -1,0 +1,86 @@
+//! Steady-state allocation test for the **decode** path: once the
+//! streaming reader's arena (group buffers + the per-worker Huffman
+//! decode-table cache) has warmed up, decompressing more input must not
+//! allocate — historically every Huffman stream re-boxed an 8 KiB
+//! `DecodeTable`, which made decode allocations O(streams).
+//!
+//! This binary installs the counting global allocator; it holds exactly
+//! one test so no concurrent test pollutes the counter.
+
+use std::io::{Read, Write};
+use zipnn::bench_support::{alloc_count, CountingAlloc};
+use zipnn::codec::{CodecConfig, ZnnReader, ZnnWriter};
+use zipnn::fp::DType;
+use zipnn::util::Xoshiro256;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// BF16-shaped data with **no zero bytes** (see `alloc_steady_state.rs`):
+/// keeps the auto-selector on the Huffman/Raw paths deterministically, so
+/// the measurement never enters the zstd allocator.
+fn nonzero_bf16ish(n_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(n_bytes);
+    while out.len() < n_bytes {
+        let mantissa = 1 + (rng.next_u32() % 255) as u8; // uniform 1..=255
+        let exp = 120 + (rng.uniform().powi(2) * 12.0) as u8; // skewed 120..132
+        out.push(mantissa);
+        out.push(exp);
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+#[test]
+fn steady_state_decompression_does_not_allocate() {
+    const MIB: usize = 1 << 20;
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(64 * 1024);
+    let data = nonzero_bf16ish(16 * MIB, 43);
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+    w.write_all(&data).unwrap();
+    let container = w.finish().unwrap();
+
+    fn read_exactly(r: &mut ZnnReader<&[u8]>, buf: &mut [u8], want: usize) {
+        let mut got = 0usize;
+        while got < want {
+            let n = r.read(buf).unwrap();
+            assert!(n > 0, "container ended early at {got} of {want}");
+            got += n;
+        }
+        // `want` is a multiple of the refill batch, so reads land exactly.
+        assert_eq!(got, want);
+    }
+
+    let mut r = ZnnReader::new(container.as_slice()).unwrap();
+    let mut buf = vec![0u8; 64 * 1024];
+
+    // Warm-up: the first 4 MiB sizes every arena buffer and fills the
+    // decode-table cache.
+    read_exactly(&mut r, &mut buf, 4 * MIB);
+
+    // Window A: 4 MiB.
+    let before_a = alloc_count();
+    read_exactly(&mut r, &mut buf, 4 * MIB);
+    let allocs_a = alloc_count() - before_a;
+
+    // Window B: 8 MiB — twice the work of window A.
+    let before_b = alloc_count();
+    read_exactly(&mut r, &mut buf, 8 * MIB);
+    let allocs_b = alloc_count() - before_b;
+
+    // If decoding allocated per stream (one DecodeTable box per Huffman
+    // stream), window B (128 chunks x 2 groups) would show hundreds of
+    // allocations and double window A. Steady state must be flat and
+    // near zero.
+    assert!(
+        allocs_b <= allocs_a + 16,
+        "decode allocations scale with input: window A (4 MiB) = {allocs_a}, \
+         window B (8 MiB) = {allocs_b}"
+    );
+    assert!(
+        allocs_b <= 48,
+        "steady-state decode window B performed {allocs_b} allocations; expected ~0 \
+         (arena warm, Huffman/Raw paths only)"
+    );
+}

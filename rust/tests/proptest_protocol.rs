@@ -1,0 +1,203 @@
+//! Property tests for the resumable hub request parser (home-grown
+//! harness, matching `proptest_invariants.rs`): any split of a valid
+//! byte stream yields identical events; malformed streams (truncated
+//! headers, oversized lengths, garbage) produce clean errors or wait for
+//! more bytes — never a panic, never unbounded buffering.
+
+use zipnn::hub::{ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
+use zipnn::util::Xoshiro256;
+
+/// Run `prop` over `cases` seeded inputs, reporting the failing seed.
+fn forall(cases: u64, prop: impl Fn(&mut Xoshiro256)) {
+    for seed in 0..cases {
+        let mut rng = Xoshiro256::seed_from_u64(seed * 6151 + 17);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed for seed {seed}: {e:?}");
+        }
+    }
+}
+
+/// Serialize one request (op, name, chunked body) by hand, with
+/// adversarially chosen frame splits (the writer normally coalesces to
+/// FRAME_MAX; the parser must accept any frame sizes in 1..=FRAME_MAX).
+fn encode_request(rng: &mut Xoshiro256, op: u8, name: &str, body: &[u8]) -> Vec<u8> {
+    let mut wire = vec![op];
+    wire.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    wire.extend_from_slice(name.as_bytes());
+    let mut at = 0;
+    while at < body.len() {
+        let take = (1 + rng.below(FRAME_MAX)).min(body.len() - at);
+        wire.extend_from_slice(&(take as u32).to_le_bytes());
+        wire.extend_from_slice(&body[at..at + take]);
+        at += take;
+    }
+    wire.extend_from_slice(&0u32.to_le_bytes());
+    wire
+}
+
+/// Feed `wire` to a fresh parser in random splits; collect events.
+fn feed_in_splits(
+    rng: &mut Xoshiro256,
+    wire: &[u8],
+    max_split: usize,
+) -> (RequestParser, Vec<ReqEvent>, usize) {
+    let mut p = RequestParser::new();
+    let mut events = Vec::new();
+    let mut peak_buffered = 0;
+    let mut at = 0;
+    while at < wire.len() {
+        let take = (1 + rng.below(max_split)).min(wire.len() - at);
+        p.feed(&wire[at..at + take]).unwrap();
+        at += take;
+        peak_buffered = peak_buffered.max(p.buffered());
+        while let Some(ev) = p.take() {
+            events.push(ev);
+        }
+    }
+    (p, events, peak_buffered)
+}
+
+/// Flatten events to a comparable form: (headers, body bytes, end count).
+fn summarize(events: &[ReqEvent]) -> (Vec<(u8, String)>, Vec<u8>, usize) {
+    let mut headers = Vec::new();
+    let mut body = Vec::new();
+    let mut ends = 0;
+    for ev in events {
+        match ev {
+            ReqEvent::Header { op, name } => headers.push((*op as u8, name.clone())),
+            ReqEvent::Frame(f) => body.extend_from_slice(f),
+            ReqEvent::End => ends += 1,
+        }
+    }
+    (headers, body, ends)
+}
+
+#[test]
+fn any_split_yields_identical_events() {
+    forall(40, |rng| {
+        let op = rng.below(5) as u8; // all valid opcodes
+        let name: String = (0..rng.below(40))
+            .map(|_| (b'a' + (rng.below(26) as u8)) as char)
+            .collect();
+        let mut body = vec![0u8; rng.below(3 * FRAME_MAX)];
+        rng.fill_bytes(&mut body);
+        let wire = encode_request(rng, op, &name, &body);
+
+        let (mut p1, whole, _) = {
+            let mut p = RequestParser::new();
+            p.feed(&wire).unwrap();
+            let mut events = Vec::new();
+            while let Some(ev) = p.take() {
+                events.push(ev);
+            }
+            (p, events, 0usize)
+        };
+        assert!(!p1.mid_request());
+        assert!(p1.take().is_none());
+
+        for max_split in [1usize, 3, 4096] {
+            let (mut p, split_events, _) = feed_in_splits(rng, &wire, max_split);
+            assert_eq!(
+                summarize(&split_events),
+                summarize(&whole),
+                "split size {max_split} changed events"
+            );
+            assert!(!p.mid_request());
+            assert!(p.take().is_none());
+        }
+        let (headers, got_body, ends) = summarize(&whole);
+        assert_eq!(headers, vec![(op, name)]);
+        assert_eq!(got_body, body);
+        assert_eq!(ends, 1);
+    });
+}
+
+#[test]
+fn truncation_at_every_boundary_never_errors_or_completes() {
+    forall(15, |rng| {
+        let mut body = vec![0u8; rng.below(FRAME_MAX / 2)];
+        rng.fill_bytes(&mut body);
+        let wire = encode_request(rng, 0, "blob", &body);
+        // Every strict prefix: no End event, no error, and buffering stays
+        // bounded by one frame plus fixed overhead.
+        let step = 1 + wire.len() / 97; // sample cuts densely but O(100)
+        let mut cut = 0;
+        while cut < wire.len() {
+            let mut p = RequestParser::new();
+            p.feed(&wire[..cut]).unwrap();
+            let mut ends = 0;
+            while let Some(ev) = p.take() {
+                if matches!(ev, ReqEvent::End) {
+                    ends += 1;
+                }
+            }
+            assert_eq!(ends, 0, "prefix of {cut} bytes completed a request");
+            assert!(cut == 0 || p.mid_request());
+            assert!(p.buffered() <= FRAME_MAX + 8);
+            cut += step;
+        }
+    });
+}
+
+#[test]
+fn buffering_is_bounded_for_any_feed_pattern() {
+    forall(10, |rng| {
+        let mut body = vec![0u8; FRAME_MAX * 2 + rng.below(FRAME_MAX)];
+        rng.fill_bytes(&mut body);
+        let wire = encode_request(rng, 0, "big", &body);
+        // Draining events after every feed bounds parser memory to one
+        // partial frame plus the frames completed by that feed.
+        let (_, _, peak) = feed_in_splits(rng, &wire, 1500);
+        assert!(
+            peak <= FRAME_MAX + 1500 + 8,
+            "peak buffered {peak} exceeds one frame + one feed"
+        );
+    });
+}
+
+#[test]
+fn oversized_lengths_rejected_cleanly() {
+    // Frame length beyond FRAME_MAX.
+    let mut wire = vec![0u8]; // PUT
+    wire.extend_from_slice(&0u32.to_le_bytes());
+    wire.extend_from_slice(&((FRAME_MAX + 1) as u32).to_le_bytes());
+    let mut p = RequestParser::new();
+    assert!(p.feed(&wire).is_err());
+    assert!(p.feed(b"x").is_err(), "parser errors are sticky");
+
+    // Name length beyond NAME_MAX, fed byte by byte: the error must fire
+    // at the length field, before any name bytes are buffered.
+    let mut wire = vec![1u8]; // GET
+    wire.extend_from_slice(&((NAME_MAX + 1) as u32).to_le_bytes());
+    let mut p = RequestParser::new();
+    let mut failed = false;
+    for b in &wire {
+        if p.feed(std::slice::from_ref(b)).is_err() {
+            failed = true;
+            break;
+        }
+    }
+    assert!(failed, "oversized name length accepted");
+    assert!(p.buffered() <= 8);
+}
+
+#[test]
+fn garbage_never_panics_and_stays_bounded() {
+    forall(60, |rng| {
+        let mut junk = vec![0u8; rng.below(20_000)];
+        rng.fill_bytes(&mut junk);
+        let mut p = RequestParser::new();
+        let mut at = 0;
+        while at < junk.len() {
+            let take = (1 + rng.below(997)).min(junk.len() - at);
+            if p.feed(&junk[at..at + take]).is_err() {
+                return; // clean rejection
+            }
+            at += take;
+            while p.take().is_some() {}
+            assert!(p.buffered() <= FRAME_MAX + 4);
+        }
+    });
+}

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Reads bench output (the ``{"bench": ...}`` JSON lines emitted by
+``bench_support::json_line``, mixed freely with human-readable tables),
+aggregates each gated metric as the mean over matching lines, and fails
+(exit 1) when a metric drops more than ``tolerance_pct`` below its
+committed baseline in ``BENCH_BASELINE.json``.
+
+Metrics are keyed ``<bench>.<field>`` (e.g. ``fig6.throughput_mb_s``).
+A baseline of 0/null records the metric without gating it. The current
+means are always written to ``--out`` so a CI artifact of a healthy run
+can be copied over the baseline to re-calibrate:
+
+    python3 scripts/check_bench_regression.py bench.out \
+        --baseline BENCH_BASELINE.json --out bench-results.json
+"""
+
+import argparse
+import json
+import sys
+
+
+def parse_bench_lines(paths):
+    """Collect {metric_key: [values]} from bench output files."""
+    values = {}
+    for path in paths:
+        with open(path, "r", encoding="utf-8", errors="replace") as f:
+            for line in f:
+                line = line.strip()
+                if not line.startswith('{"bench"'):
+                    continue
+                try:
+                    obj = json.loads(line)
+                except json.JSONDecodeError:
+                    print(f"warning: unparseable bench line: {line[:120]}")
+                    continue
+                bench = obj.get("bench")
+                if not bench:
+                    continue
+                for field, val in obj.items():
+                    if field == "bench" or not isinstance(val, (int, float)):
+                        continue
+                    values.setdefault(f"{bench}.{field}", []).append(float(val))
+    return values
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_out", nargs="+", help="bench output file(s)")
+    ap.add_argument("--baseline", default="BENCH_BASELINE.json")
+    ap.add_argument("--out", default="bench-results.json",
+                    help="write current metric means here (artifact)")
+    args = ap.parse_args()
+
+    with open(args.baseline, "r", encoding="utf-8") as f:
+        baseline = json.load(f)
+    tolerance = float(baseline.get("tolerance_pct", 15))
+    gated = baseline.get("metrics", {})
+
+    values = parse_bench_lines(args.bench_out)
+    means = {k: sum(v) / len(v) for k, v in values.items()}
+
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(
+            {
+                "_comment": "mean per metric over one CI bench run; copy the "
+                            "gated keys into BENCH_BASELINE.json to re-baseline",
+                "tolerance_pct": tolerance,
+                "metrics": {k: round(v, 3) for k, v in sorted(means.items())},
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+
+    failures = []
+    width = max((len(k) for k in gated), default=10)
+    print(f"bench regression gate (tolerance {tolerance:.0f}%):")
+    for key, base in sorted(gated.items()):
+        cur = means.get(key)
+        if cur is None:
+            failures.append(f"{key}: gated metric missing from bench output")
+            print(f"  {key:<{width}}  MISSING (baseline {base})")
+            continue
+        if not base:
+            print(f"  {key:<{width}}  {cur:10.2f}  (record-only)")
+            continue
+        floor = base * (1.0 - tolerance / 100.0)
+        delta = (cur - base) / base * 100.0
+        status = "ok" if cur >= floor else "FAIL"
+        print(f"  {key:<{width}}  {cur:10.2f}  vs baseline {base:10.2f} "
+              f"({delta:+6.1f}%)  {status}")
+        if cur < floor:
+            failures.append(
+                f"{key}: {cur:.2f} is {-delta:.1f}% below baseline {base:.2f} "
+                f"(allowed drop {tolerance:.0f}%)"
+            )
+
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        sys.exit(1)
+    print("bench regression gate passed.")
+
+
+if __name__ == "__main__":
+    main()
