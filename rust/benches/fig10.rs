@@ -6,11 +6,12 @@
 //! seconds are *measured* on this machine. Error bars come from repeated
 //! simulated transfers (the paper: variance was almost entirely network).
 
+use std::io::Read;
 use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, BenchEnv, Table};
-use zipnn::codec::CodecConfig;
+use zipnn::codec::{CodecConfig, Compressor, ZnnReader};
 use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
-use zipnn::util::human_bytes;
+use zipnn::util::{human_bytes, Timer};
 
 #[global_allocator]
 static ALLOC: zipnn::bench_support::CountingAlloc = zipnn::bench_support::CountingAlloc;
@@ -88,6 +89,56 @@ fn main() {
                 ("decomp_mb_s", mb / drep.codec_secs.max(1e-9)),
                 ("wire_pct", drep.pct()),
             ],
+        );
+
+        // mmap-vs-read decode (the zero-copy fast path's gate metric):
+        // compress the model to a file once, then decode it through the
+        // buffered io::Read path and through the memory-mapped zero-copy
+        // path on a warm page cache. Both run on the persistent decode
+        // pool; the first pass of each warms cache, pool, and arenas.
+        let decode_threads = 2usize;
+        let comp_path = std::env::temp_dir()
+            .join(format!("zipnn-fig10-{}-{seed}.znn", std::process::id()));
+        std::fs::write(
+            &comp_path,
+            Compressor::new(CodecConfig::for_dtype(dtype)).compress(&raw).unwrap(),
+        )
+        .unwrap();
+        let time_read_path = |path: &std::path::Path| {
+            let t = Timer::start();
+            let f = std::fs::File::open(path).unwrap();
+            let mut r = ZnnReader::new(std::io::BufReader::new(f))
+                .unwrap()
+                .with_threads(decode_threads);
+            let mut out = Vec::new();
+            r.read_to_end(&mut out).unwrap();
+            assert_eq!(out.len(), raw.len());
+            t.secs()
+        };
+        let time_mmap_path = |path: &std::path::Path| {
+            let t = Timer::start();
+            let mut r = ZnnReader::open(path).unwrap().with_threads(decode_threads);
+            let mut out = Vec::new();
+            r.read_to_end(&mut out).unwrap();
+            assert_eq!(out.len(), raw.len());
+            t.secs()
+        };
+        let _ = time_mmap_path(&comp_path);
+        let _ = time_read_path(&comp_path);
+        let read_mb_s = mb / time_read_path(&comp_path).max(1e-9);
+        let mmap_mb_s = mb / time_mmap_path(&comp_path).max(1e-9);
+        std::fs::remove_file(&comp_path).unwrap();
+        json_line(
+            "fig10_download",
+            &[
+                ("model_seed", seed as f64),
+                ("read_decomp_mb_s", read_mb_s),
+                ("mmap_decomp_mb_s", mmap_mb_s),
+            ],
+        );
+        println!(
+            "{name}: warm-cache decode {mmap_mb_s:.0} MB/s mmap vs {read_mb_s:.0} MB/s read \
+             ({decode_threads} threads, persistent pool)"
         );
 
         // downloads across regimes (10 cached / 5 first, like the paper)

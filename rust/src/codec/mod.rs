@@ -28,7 +28,10 @@ pub use auto::{AutoPolicy, Method};
 pub use compress::{compress_with_report, Compressor, GroupReport};
 pub use container::{ContainerHeader, ContainerInfo, StreamEntry};
 pub use decompress::{decompress, decompress_with, inspect};
-pub use stream::{decompress_reader, ScratchArena, ZnnReader, ZnnWriter, STREAM_MAGIC};
+pub use stream::{
+    decompress_path, decompress_reader, ByteSource, MappedBytes, ScratchArena, ZnnReader,
+    ZnnWriter, STREAM_MAGIC,
+};
 
 use crate::fp::{DType, GroupLayout};
 

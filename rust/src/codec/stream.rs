@@ -12,12 +12,24 @@
 //! - [`ZnnWriter`] — a [`std::io::Write`] adapter that accepts raw bytes
 //!   incrementally and emits a framed streaming container (`ZNS1`) to an
 //!   inner sink, one frame per super-chunk;
-//! - [`ZnnReader`] — a [`std::io::Read`] adapter that pulls from any
-//!   reader holding either container format (`ZNN1` one-shot or `ZNS1`
-//!   streaming) and yields decompressed bytes;
+//! - [`ZnnReader`] — a [`std::io::Read`] adapter that pulls from a
+//!   [`ByteSource`] holding either container format (`ZNN1` one-shot or
+//!   `ZNS1` streaming) and yields decompressed bytes;
+//! - [`ByteSource`] / [`MappedBytes`] — where the compressed bytes come
+//!   from: any `io::Read` (sockets, pipes), or a memory-mapped file whose
+//!   payload slices the decoder borrows **zero-copy** straight out of the
+//!   OS page cache ([`ZnnReader::open`] is the mmap fast path; see the
+//!   README's "mmap fast path" section for the knobs);
 //! - [`ScratchArena`] — the per-worker reusable scratch buffers that make
 //!   steady-state compression perform O(workers) allocations instead of
 //!   O(chunks × groups).
+//!
+//! With `with_threads(n > 1)` the reader decodes each batch on the
+//! process-wide [`crate::coordinator::shared_pool`] — workers are spawned
+//! once per process, their arenas and Huffman decode tables stay warm in
+//! per-worker sticky state, and the refill is **double-buffered**: the
+//! compressed bytes (or mapped pages) of batch N+1 are fetched while
+//! batch N is still decoding.
 //!
 //! The one-shot [`crate::codec::Compressor`] and
 //! [`crate::codec::decompress`] are thin wrappers over the same
@@ -73,12 +85,17 @@ use crate::codec::auto::{AutoPolicy, Decision, Method};
 use crate::codec::container::{StreamEntry, MAX_CHUNK_SIZE};
 use crate::codec::parallel::SUPER_CHUNK;
 use crate::codec::{CodecConfig, MethodPolicy};
+use crate::coordinator::{shared_pool, StickyMap, WorkerPool};
 use crate::error::{Error, Result};
 use crate::fp::{merge_groups_into, split_groups_into, GroupLayout};
 use crate::huffman;
 use crate::lz;
 use crate::stats::{byte_histogram, zero_stats};
+use crate::util::mmap::Mmap;
 use std::io::{self, Read, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Streaming container magic.
 pub const STREAM_MAGIC: [u8; 4] = *b"ZNS1";
@@ -420,68 +437,136 @@ pub(crate) fn decode_chunk_into(
     merge_groups_into(&refs[..groups], layout, out)
 }
 
-/// Decode a run of chunks (entries chunk-major, streams concatenated in
-/// `comp`), appending raw bytes to `out`. `threads > 1` decodes chunks in
-/// parallel (each chunk's placement is known up front — paper §5.1).
-fn decode_chunk_run(
-    layout: GroupLayout,
-    entries: &[StreamEntry],
-    comp: &[u8],
-    threads: usize,
-    arena: &mut ScratchArena,
-    out: &mut Vec<u8>,
-) -> Result<()> {
-    let groups = layout.groups();
-    if groups == 0 || entries.len() % groups != 0 {
-        return Err(Error::Corrupt("stream count not a multiple of groups".into()));
+// ---------------------------------------------------------------------------
+// Byte sources: streamed or memory-mapped
+// ---------------------------------------------------------------------------
+
+/// Owned in-memory container bytes — a memory mapping or an
+/// already-materialized buffer. Either way the decoder borrows payload
+/// slices out of it without copying.
+pub struct MappedBytes(MapInner);
+
+enum MapInner {
+    Map(Mmap),
+    Owned(Vec<u8>),
+}
+
+impl MappedBytes {
+    /// Wrap a memory mapping.
+    pub fn from_mmap(map: Mmap) -> MappedBytes {
+        MappedBytes(MapInner::Map(map))
     }
-    let n_chunks = entries.len() / groups;
-    if threads <= 1 || n_chunks <= 1 {
-        let mut comp_off = 0usize;
-        for c in 0..n_chunks {
-            let es = &entries[c * groups..(c + 1) * groups];
-            let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
-            let raw_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
-            let comp_chunk = comp
-                .get(comp_off..comp_off + comp_len)
-                .ok_or_else(|| Error::Corrupt("payload shorter than stream table".into()))?;
-            comp_off += comp_len;
-            let at = out.len();
-            out.resize(at + raw_len, 0);
-            decode_chunk_into(layout, es, comp_chunk, arena, &mut out[at..at + raw_len])?;
+
+    /// Wrap an already-materialized buffer (the decoder borrows from it
+    /// exactly like from a mapping).
+    pub fn from_vec(bytes: Vec<u8>) -> MappedBytes {
+        MappedBytes(MapInner::Owned(bytes))
+    }
+
+    /// True when backed by an actual memory mapping (page-cache served).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, MapInner::Map(_))
+    }
+
+    /// Best-effort prefetch hint for an upcoming byte range.
+    fn prefetch(&self, off: usize, len: usize) {
+        if let MapInner::Map(m) = &self.0 {
+            m.advise_willneed(off, len);
         }
-        return Ok(());
     }
-    // Parallel: precompute each chunk's payload placement, decode into
-    // per-chunk buffers, then stitch in order.
-    let mut spans = Vec::with_capacity(n_chunks);
-    let mut comp_off = 0usize;
-    for c in 0..n_chunks {
-        let es = &entries[c * groups..(c + 1) * groups];
-        let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
-        let raw_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
-        if comp.len() < comp_off + comp_len {
-            return Err(Error::Corrupt("payload shorter than stream table".into()));
+}
+
+impl std::ops::Deref for MappedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.0 {
+            MapInner::Map(m) => m.as_slice(),
+            MapInner::Owned(v) => v.as_slice(),
         }
-        spans.push((comp_off, comp_len, raw_len));
-        comp_off += comp_len;
     }
-    let pieces: Vec<Result<Vec<u8>>> = crate::codec::parallel::run_tasks_with(
-        n_chunks,
-        threads,
-        ScratchArena::new,
-        |worker_arena: &mut ScratchArena, c| {
-            let (off, len, raw_len) = spans[c];
-            let es = &entries[c * groups..(c + 1) * groups];
-            let mut piece = vec![0u8; raw_len];
-            decode_chunk_into(layout, es, &comp[off..off + len], worker_arena, &mut piece)?;
-            Ok(piece)
-        },
-    );
-    for p in pieces {
-        out.extend_from_slice(&p?);
+}
+
+/// Where a [`ZnnReader`] pulls compressed bytes from: any [`Read`]
+/// (sockets, pipes, buffered files), or [`MappedBytes`] whose payload the
+/// decoder borrows without copying.
+pub struct ByteSource<R>(SourceInner<R>);
+
+enum SourceInner<R> {
+    Stream(R),
+    Mapped { bytes: MappedBytes, pos: usize },
+}
+
+impl<R: Read> ByteSource<R> {
+    /// A sequential `io::Read` source (bytes are copied into the reader's
+    /// batch buffer).
+    pub fn stream(inner: R) -> ByteSource<R> {
+        ByteSource(SourceInner::Stream(inner))
     }
-    Ok(())
+
+    /// Read exactly `out.len()` bytes (headers and small fields).
+    fn read_exact(&mut self, out: &mut [u8]) -> io::Result<()> {
+        match &mut self.0 {
+            SourceInner::Stream(r) => r.read_exact(out),
+            SourceInner::Mapped { bytes, pos } => {
+                let data: &[u8] = bytes;
+                let end = pos
+                    .checked_add(out.len())
+                    .filter(|&e| e <= data.len())
+                    .ok_or_else(|| {
+                        io::Error::new(io::ErrorKind::UnexpectedEof, "mapped container truncated")
+                    })?;
+                out.copy_from_slice(&data[*pos..end]);
+                *pos = end;
+                Ok(())
+            }
+        }
+    }
+
+    /// A payload slice previously recorded by `fetch_batch` (mapped
+    /// sources only; the range was bounds-checked when recorded).
+    fn mapped_slice(&self, off: usize, len: usize) -> &[u8] {
+        match &self.0 {
+            SourceInner::Mapped { bytes, .. } => &bytes[off..off + len],
+            SourceInner::Stream(_) => unreachable!("payload recorded as mapped on a stream source"),
+        }
+    }
+}
+
+impl ByteSource<std::io::Empty> {
+    /// A zero-copy source over owned bytes or a memory mapping.
+    pub fn mapped(bytes: MappedBytes) -> ByteSource<std::io::Empty> {
+        ByteSource(SourceInner::Mapped { bytes, pos: 0 })
+    }
+}
+
+impl ByteSource<std::io::BufReader<std::fs::File>> {
+    /// Open a file: memory-mapped zero-copy when the platform allows it
+    /// (and `ZIPNN_NO_MMAP` is unset), otherwise a **streaming** buffered
+    /// read — never a whole-file heap buffer, so multi-GB containers keep
+    /// bounded memory on the fallback too.
+    pub fn open(path: &Path) -> io::Result<ByteSource<std::io::BufReader<std::fs::File>>> {
+        let file = std::fs::File::open(path)?;
+        if std::env::var_os("ZIPNN_NO_MMAP").is_none() {
+            if let Ok(map) = Mmap::map(&file) {
+                map.advise_sequential();
+                return Ok(ByteSource(SourceInner::Mapped {
+                    bytes: MappedBytes::from_mmap(map),
+                    pos: 0,
+                }));
+            }
+        }
+        Ok(ByteSource(SourceInner::Stream(std::io::BufReader::new(file))))
+    }
+}
+
+/// Grow `v` to at least `len` initialized bytes. The length only ever
+/// rises to the high-water mark, so steady-state refills never memset:
+/// callers overwrite `v[..len]` and slice by their own length.
+fn ensure_len(v: &mut Vec<u8>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -734,51 +819,546 @@ enum ReaderState {
     Done,
 }
 
+/// One decode batch's staging and output buffers. Two of these
+/// double-buffer the pipelined refill; every vector keeps its high-water
+/// capacity (and the byte buffers their high-water *length*) across
+/// batches, so steady-state refills neither allocate nor memset.
+struct BatchBuf {
+    /// Stream entries of the batch, chunk-major (copied from the table
+    /// for `ZNN1`, parsed from the frame for `ZNS1`).
+    entries: Vec<StreamEntry>,
+    /// Compressed payload copy (stream sources; unused when mapped).
+    comp: Vec<u8>,
+    /// Per-chunk placement within the payload and the output.
+    spans: Vec<ChunkSpan>,
+    /// Decoded raw bytes; only `out[..out_len]` is meaningful.
+    out: Vec<u8>,
+    /// Where the batch's payload bytes live.
+    payload: PayloadAt,
+    comp_len: usize,
+    out_len: usize,
+    n_chunks: usize,
+    layout: GroupLayout,
+    groups: usize,
+}
+
+impl BatchBuf {
+    fn new() -> BatchBuf {
+        BatchBuf {
+            entries: Vec::new(),
+            comp: Vec::new(),
+            spans: Vec::new(),
+            out: Vec::new(),
+            payload: PayloadAt::Buf,
+            comp_len: 0,
+            out_len: 0,
+            n_chunks: 0,
+            layout: GroupLayout::flat(),
+            groups: 0,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum PayloadAt {
+    /// In the batch's own `comp` buffer.
+    Buf,
+    /// Borrowed zero-copy from the mapped source at this offset.
+    Mapped(usize),
+}
+
+#[derive(Clone, Copy)]
+struct ChunkSpan {
+    comp_off: usize,
+    comp_len: usize,
+    out_off: usize,
+    out_len: usize,
+}
+
+/// Outcome of fetching the next decode batch from the source.
+enum Fetch {
+    /// One batch's entries + compressed bytes are staged in the buffer.
+    Batch,
+    /// Container exhausted (`ZNS1` trailer or `ZNN1` table end).
+    End(EndInfo),
+}
+
+/// Everything needed to finalize a container once all batches decoded.
+#[derive(Clone, Copy)]
+struct EndInfo {
+    /// Non-element-aligned trailing bytes (`ZNS1` trailer; empty for `ZNN1`).
+    tail: [u8; 16],
+    tail_len: usize,
+    total_len: u64,
+    checksum: Option<u64>,
+}
+
+// ---------------------------------------------------------------------------
+// Persistent-pool batch decode engine
+// ---------------------------------------------------------------------------
+
+/// Raw view of one submitted batch, captured by pool helper jobs.
+///
+/// Plain pointers and scalars (`Copy`), so a queued helper holds no
+/// borrow; it only dereferences the pointers after claiming a chunk under
+/// the frame's epoch, which guarantees the buffers are still alive.
+#[derive(Clone, Copy)]
+struct TaskFrame {
+    epoch: u64,
+    layout: GroupLayout,
+    groups: usize,
+    n_chunks: usize,
+    entries: *const StreamEntry,
+    comp: *const u8,
+    spans: *const ChunkSpan,
+    out: *mut u8,
+}
+
+// SAFETY: the pointers reference buffers owned by the submitting
+// `ZnnReader`, which blocks (`Engine::wait`, also on drop) until every
+// claimed chunk completes; chunk output spans are disjoint, and stale
+// helpers are fenced off by the epoch check before any dereference.
+unsafe impl Send for TaskFrame {}
+
+/// Shared progress of the (single) in-flight batch; one per reader,
+/// reused across batches — allocated once.
+#[derive(Default)]
+struct BatchCtl {
+    prog: Mutex<Progress>,
+    cv: Condvar,
+    /// Helper jobs currently queued or running on the pool; bounds the
+    /// per-batch submission top-up.
+    queued: AtomicUsize,
+}
+
+#[derive(Default)]
+struct Progress {
+    /// Epoch of the batch these counters describe; claims under any other
+    /// epoch are refused (fences off stale queued helpers).
+    epoch: u64,
+    /// Next unclaimed chunk index.
+    next: usize,
+    /// Chunk count of the batch.
+    n: usize,
+    /// Claimed-but-unfinished chunks.
+    active: usize,
+    /// Finished chunks (success or failure).
+    done: usize,
+    /// First decode error, if any (seals the batch).
+    error: Option<Error>,
+}
+
+/// Decrements `active` (and seals on error/panic) even when a decode
+/// unwinds, so [`Engine::wait`] can never hang on a lost chunk.
+struct ChunkDone<'a> {
+    ctl: &'a BatchCtl,
+    err: Option<Error>,
+}
+
+impl Drop for ChunkDone<'_> {
+    fn drop(&mut self) {
+        let mut p = self.ctl.prog.lock().unwrap();
+        p.active -= 1;
+        p.done += 1;
+        if std::thread::panicking() && self.err.is_none() {
+            self.err = Some(Error::Invalid("decode worker panicked".into()));
+        }
+        if let Some(e) = self.err.take() {
+            if p.error.is_none() {
+                p.error = Some(e);
+            }
+            p.next = p.n; // seal: no further chunks are claimed
+        }
+        let finished = p.active == 0 && p.next >= p.n;
+        drop(p);
+        if finished {
+            self.ctl.cv.notify_all();
+        }
+    }
+}
+
+/// Claim-and-decode loop shared by pool helpers and the calling thread.
+fn run_chunks(ctl: &BatchCtl, frame: TaskFrame, arena: &mut ScratchArena) {
+    loop {
+        let c = {
+            let mut p = ctl.prog.lock().unwrap();
+            // A claim is only valid under the frame's epoch: a helper left
+            // over from a previous batch must never touch the current
+            // batch's pointers.
+            if p.epoch != frame.epoch || p.next >= p.n {
+                return;
+            }
+            let c = p.next;
+            p.next += 1;
+            p.active += 1;
+            c
+        };
+        let mut done = ChunkDone { ctl, err: None };
+        // SAFETY: chunk `c` was claimed under the live epoch, so the batch
+        // buffers behind the frame's pointers stay alive until the waiter
+        // observes this chunk's completion, and no other task touches this
+        // chunk's output span.
+        done.err = unsafe { decode_chunk_raw(&frame, c, arena) }.err();
+        drop(done);
+    }
+}
+
+/// Decode one claimed chunk through the frame's raw slices.
+///
+/// # Safety
+///
+/// The frame's pointers must reference live batch buffers whose spans
+/// were validated against the payload and output sizes at staging time
+/// (upheld by `stage_payload` + `submit_back`), and `c` must be a
+/// uniquely claimed index `< n_chunks`.
+unsafe fn decode_chunk_raw(frame: &TaskFrame, c: usize, arena: &mut ScratchArena) -> Result<()> {
+    let span = *frame.spans.add(c);
+    let es = std::slice::from_raw_parts(frame.entries.add(c * frame.groups), frame.groups);
+    let comp = std::slice::from_raw_parts(frame.comp.add(span.comp_off), span.comp_len);
+    let out = std::slice::from_raw_parts_mut(frame.out.add(span.out_off), span.out_len);
+    decode_chunk_into(frame.layout, es, comp, arena, out)
+}
+
+/// Persistent decode executor: helper jobs on the process-shared
+/// [`WorkerPool`] plus the calling thread decode each batch's chunks.
+/// No thread is ever spawned per batch; pool workers keep their sticky
+/// [`ScratchArena`] (group buffers + Huffman decode-table cache) warm
+/// across batches, readers, and files.
+struct Engine {
+    pool: &'static WorkerPool,
+    ctl: Arc<BatchCtl>,
+    runners: usize,
+    epoch: u64,
+}
+
+impl Engine {
+    fn new(threads: usize) -> Engine {
+        let pool = shared_pool();
+        Engine {
+            pool,
+            ctl: Arc::new(BatchCtl::default()),
+            runners: threads.saturating_sub(1).clamp(1, pool.threads()),
+            epoch: 0,
+        }
+    }
+
+    /// Publish a batch and top the pool up to `runners` helper jobs.
+    /// Non-blocking: decode proceeds while the caller fetches the next
+    /// batch's bytes; [`Engine::wait`] joins (and helps finish) it.
+    fn submit(&self, frame: TaskFrame) {
+        {
+            let mut p = self.ctl.prog.lock().unwrap();
+            p.epoch = frame.epoch;
+            p.n = frame.n_chunks;
+            p.next = 0;
+            p.active = 0;
+            p.done = 0;
+            p.error = None;
+        }
+        // Helpers still queued from earlier batches exit on the epoch
+        // check without helping, so top up only to the configured bound —
+        // the queue cannot grow past `runners` outstanding jobs.
+        while self.ctl.queued.load(Ordering::Acquire) < self.runners {
+            self.ctl.queued.fetch_add(1, Ordering::AcqRel);
+            let ctl = Arc::clone(&self.ctl);
+            let submitted = self.pool.execute_with_state(move |sticky: &mut StickyMap| {
+                // Decrement on every exit, unwinds included: a leaked
+                // count would permanently stop helper top-up for this
+                // reader (the `ChunkDone` guard already reports the
+                // panicked chunk itself).
+                struct QueuedGuard(Arc<BatchCtl>);
+                impl Drop for QueuedGuard {
+                    fn drop(&mut self) {
+                        self.0.queued.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+                let guard = QueuedGuard(ctl);
+                run_chunks(&guard.0, frame, sticky.slot::<ScratchArena>());
+            });
+            if submitted.is_err() {
+                self.ctl.queued.fetch_sub(1, Ordering::AcqRel);
+                break; // pool unavailable: the caller decodes inline in wait()
+            }
+        }
+    }
+
+    /// Help decode the in-flight batch on the calling thread, then block
+    /// until every claimed chunk has finished. On return (even `Err`) no
+    /// task references the batch buffers any more.
+    fn wait(&self, frame: TaskFrame, arena: &mut ScratchArena) -> Result<()> {
+        // The caller's claims race with the pool helpers', so a busy (or
+        // absent) pool can never deadlock a batch — worst case the caller
+        // decodes every chunk itself.
+        run_chunks(&self.ctl, frame, arena);
+        let mut p = self.ctl.prog.lock().unwrap();
+        while p.active > 0 || p.next < p.n {
+            p = self.ctl.cv.wait(p).unwrap();
+        }
+        if let Some(e) = p.error.take() {
+            return Err(e);
+        }
+        if p.done != p.n {
+            return Err(Error::Invalid("decode batch lost chunks to a worker failure".into()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch fetch + serial decode
+// ---------------------------------------------------------------------------
+
+/// Read the next batch's metadata and payload from the source into `buf`
+/// (no decoding), or report the container's end.
+fn fetch_batch<R: Read>(
+    state: &mut ReaderState,
+    src: &mut ByteSource<R>,
+    buf: &mut BatchBuf,
+    threads: usize,
+) -> Result<Fetch> {
+    match state {
+        ReaderState::Done => Err(Error::Invalid("read past container end".into())),
+        ReaderState::V1 { layout, total_len, checksum, entries, groups, next_chunk, n_chunks } => {
+            let (layout, groups) = (*layout, *groups);
+            if *next_chunk >= *n_chunks {
+                return Ok(Fetch::End(EndInfo {
+                    tail: [0; 16],
+                    tail_len: 0,
+                    total_len: *total_len,
+                    checksum: *checksum,
+                }));
+            }
+            let batch = threads.max(1) * SUPER_CHUNK;
+            let lo = *next_chunk;
+            let hi = (lo + batch).min(*n_chunks);
+            *next_chunk = hi;
+            buf.entries.clear();
+            buf.entries.extend_from_slice(&entries[lo * groups..hi * groups]);
+            stage_payload(src, buf, layout, groups)?;
+            Ok(Fetch::Batch)
+        }
+        ReaderState::V2 { layout, chunk_size, has_checksum, groups } => {
+            let (layout, groups) = (*layout, *groups);
+            let (chunk_size, has_checksum) = (*chunk_size, *has_checksum);
+            let mut marker = [0u8; 1];
+            src.read_exact(&mut marker)?;
+            match marker[0] {
+                MARK_FRAME => {
+                    let mut n4 = [0u8; 4];
+                    src.read_exact(&mut n4)?;
+                    let n_streams = u32::from_le_bytes(n4) as usize;
+                    if n_streams == 0 || n_streams > SUPER_CHUNK * 16 || n_streams % groups != 0 {
+                        return Err(Error::Corrupt(format!("bad frame stream count {n_streams}")));
+                    }
+                    buf.entries.clear();
+                    let mut row = [0u8; 9];
+                    for _ in 0..n_streams {
+                        src.read_exact(&mut row)?;
+                        let e = parse_entry(&row)?;
+                        if e.comp_len > e.raw_len || e.raw_len > chunk_size {
+                            return Err(Error::Corrupt("implausible stream entry".into()));
+                        }
+                        buf.entries.push(e);
+                    }
+                    stage_payload(src, buf, layout, groups)?;
+                    Ok(Fetch::Batch)
+                }
+                MARK_END => {
+                    let mut t = [0u8; 1];
+                    src.read_exact(&mut t)?;
+                    let tail_len = t[0] as usize;
+                    if tail_len >= layout.elem {
+                        return Err(Error::Corrupt(format!("bad tail length {tail_len}")));
+                    }
+                    let mut tail = [0u8; 16];
+                    src.read_exact(&mut tail[..tail_len])?;
+                    let mut n8 = [0u8; 8];
+                    src.read_exact(&mut n8)?;
+                    let total_len = u64::from_le_bytes(n8);
+                    let checksum = if has_checksum {
+                        src.read_exact(&mut n8)?;
+                        Some(u64::from_le_bytes(n8))
+                    } else {
+                        None
+                    };
+                    Ok(Fetch::End(EndInfo { tail, tail_len, total_len, checksum }))
+                }
+                other => Err(Error::Corrupt(format!("bad frame marker {other:#x}"))),
+            }
+        }
+    }
+}
+
+/// Build the batch's chunk spans from its staged entries, then stage the
+/// compressed payload: copied into the batch buffer for stream sources
+/// (into high-water-length storage — no per-refill zero-fill), recorded
+/// as a borrowed range plus a prefetch hint for mapped sources.
+fn stage_payload<R: Read>(
+    src: &mut ByteSource<R>,
+    buf: &mut BatchBuf,
+    layout: GroupLayout,
+    groups: usize,
+) -> Result<()> {
+    buf.layout = layout;
+    buf.groups = groups;
+    if groups == 0 || buf.entries.len() % groups != 0 {
+        return Err(Error::Corrupt("stream count not a multiple of groups".into()));
+    }
+    buf.n_chunks = buf.entries.len() / groups;
+    buf.spans.clear();
+    let (mut comp_off, mut out_off) = (0usize, 0usize);
+    for es in buf.entries.chunks_exact(groups) {
+        let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
+        let out_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
+        buf.spans.push(ChunkSpan { comp_off, comp_len, out_off, out_len });
+        comp_off += comp_len;
+        out_off += out_len;
+    }
+    buf.comp_len = comp_off;
+    buf.out_len = out_off;
+    ensure_len(&mut buf.out, out_off);
+    match &mut src.0 {
+        SourceInner::Stream(r) => {
+            ensure_len(&mut buf.comp, comp_off);
+            r.read_exact(&mut buf.comp[..comp_off])?;
+            buf.payload = PayloadAt::Buf;
+        }
+        SourceInner::Mapped { bytes, pos } => {
+            let end = pos
+                .checked_add(comp_off)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| {
+                    Error::Io(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "mapped container truncated",
+                    ))
+                })?;
+            buf.payload = PayloadAt::Mapped(*pos);
+            *pos = end;
+            // Page-fault overlap: start paging in roughly the next batch
+            // while this one decodes.
+            bytes.prefetch(end, comp_off.max(1));
+        }
+    }
+    Ok(())
+}
+
+/// Decode every chunk of a staged batch inline on the calling thread.
+fn decode_batch_serial<R: Read>(
+    src: &ByteSource<R>,
+    buf: &mut BatchBuf,
+    arena: &mut ScratchArena,
+) -> Result<()> {
+    let BatchBuf { entries, comp, spans, out, layout, groups, comp_len, payload, .. } = buf;
+    let (layout, groups) = (*layout, *groups);
+    let comp_all: &[u8] = match payload {
+        PayloadAt::Buf => &comp[..*comp_len],
+        PayloadAt::Mapped(off) => src.mapped_slice(*off, *comp_len),
+    };
+    for (c, s) in spans.iter().enumerate() {
+        let es = &entries[c * groups..(c + 1) * groups];
+        let comp_chunk = &comp_all[s.comp_off..s.comp_off + s.comp_len];
+        decode_chunk_into(
+            layout,
+            es,
+            comp_chunk,
+            arena,
+            &mut out[s.out_off..s.out_off + s.out_len],
+        )?;
+    }
+    Ok(())
+}
+
+/// Fold a freshly decoded batch into the running checksum/length.
+fn note_decoded(ck: &mut Option<Checksummer>, produced: &mut u64, buf: &BatchBuf) {
+    if let Some(ck) = ck.as_mut() {
+        ck.update(&buf.out[..buf.out_len]);
+    }
+    *produced += buf.out_len as u64;
+}
+
 /// Streaming decompressor: a [`Read`] adapter over either container
 /// format. Holds at most one decode batch (a few super-chunks) in memory,
 /// never the whole payload — this is how the hub client and the runtime
-/// decompress straight off a socket or a file.
+/// decompress straight off a socket or a file. Over a [`MappedBytes`]
+/// source ([`ZnnReader::open`]) the compressed payload is additionally
+/// **zero-copy**: decode reads borrow straight from the mapping.
 pub struct ZnnReader<R: Read> {
-    inner: R,
+    src: ByteSource<R>,
     threads: usize,
     state: ReaderState,
-    out: Vec<u8>,
+    /// Batch being consumed through `pos`.
+    cur: BatchBuf,
+    /// Batch being decoded (pipelined mode) or staged next.
+    back: BatchBuf,
     pos: usize,
+    /// In-flight decode of `back` on the shared pool. While set, `back`'s
+    /// buffers must not be touched; `complete_pending` (or drop) joins it.
+    pending: Option<TaskFrame>,
+    /// Container end seen by fetch, applied once all batches are served.
+    end: Option<EndInfo>,
+    engine: Option<Engine>,
     arena: ScratchArena,
-    comp_buf: Vec<u8>,
-    entry_buf: Vec<StreamEntry>,
     ck: Option<Checksummer>,
     produced: u64,
 }
 
+impl ZnnReader<std::io::Empty> {
+    /// Decode from already-mapped (or owned) container bytes.
+    pub fn from_mapped(bytes: MappedBytes) -> Result<ZnnReader<std::io::Empty>> {
+        Self::with_source(ByteSource::mapped(bytes))
+    }
+}
+
+impl ZnnReader<std::io::BufReader<std::fs::File>> {
+    /// Open a container file on the zero-copy fast path: the file is
+    /// memory-mapped and decode borrows payload bytes straight from the
+    /// OS page cache. Where mapping is unavailable (or `ZIPNN_NO_MMAP=1`)
+    /// this degrades to the plain buffered streaming path — same bounded
+    /// memory as [`ZnnReader::new`] over a file.
+    pub fn open(path: impl AsRef<Path>) -> Result<ZnnReader<std::io::BufReader<std::fs::File>>> {
+        Self::with_source(ByteSource::open(path.as_ref())?)
+    }
+}
+
 impl<R: Read> ZnnReader<R> {
-    /// Open a container: reads and validates the header (and, for `ZNN1`,
-    /// the stream table).
-    pub fn new(mut inner: R) -> Result<ZnnReader<R>> {
+    /// Open a container over a sequential reader: reads and validates the
+    /// header (and, for `ZNN1`, the stream table).
+    pub fn new(inner: R) -> Result<ZnnReader<R>> {
+        Self::with_source(ByteSource::stream(inner))
+    }
+
+    /// Open a container over an explicit [`ByteSource`].
+    pub fn with_source(mut src: ByteSource<R>) -> Result<ZnnReader<R>> {
         let mut magic = [0u8; 4];
-        inner.read_exact(&mut magic)?;
+        src.read_exact(&mut magic)?;
         let (state, ck) = if magic == crate::codec::container::MAGIC {
-            Self::open_v1(&mut inner)?
+            Self::open_v1(&mut src)?
         } else if magic == STREAM_MAGIC {
-            Self::open_v2(&mut inner)?
+            Self::open_v2(&mut src)?
         } else {
             return Err(Error::Corrupt("bad magic".into()));
         };
         Ok(ZnnReader {
-            inner,
+            src,
             threads: 1,
             state,
-            out: Vec::new(),
+            cur: BatchBuf::new(),
+            back: BatchBuf::new(),
             pos: 0,
+            pending: None,
+            end: None,
+            engine: None,
             arena: ScratchArena::new(),
-            comp_buf: Vec::new(),
-            entry_buf: Vec::new(),
             ck,
             produced: 0,
         })
     }
 
-    /// Worker threads for chunk-parallel decoding of each batch.
+    /// Worker threads for chunk-parallel decoding of each batch. With
+    /// `n > 1` batches decode on the process-shared worker pool
+    /// ([`crate::coordinator::shared_pool`]) with a double-buffered,
+    /// pipelined refill; no thread is spawned per batch.
     pub fn with_threads(mut self, n: usize) -> Self {
         self.threads = n.max(1);
         self
@@ -789,7 +1369,13 @@ impl<R: Read> ZnnReader<R> {
         self.produced
     }
 
-    fn open_v1(inner: &mut R) -> Result<(ReaderState, Option<Checksummer>)> {
+    /// True when payload bytes are borrowed from a memory mapping
+    /// (page-cache served, no copy into reader buffers).
+    pub fn is_zero_copy(&self) -> bool {
+        matches!(&self.src.0, SourceInner::Mapped { bytes, .. } if bytes.is_mapped())
+    }
+
+    fn open_v1(inner: &mut ByteSource<R>) -> Result<(ReaderState, Option<Checksummer>)> {
         let mut head = [0u8; 20];
         inner.read_exact(&mut head)?;
         // head[i] corresponds to container byte 4 + i; validation is
@@ -858,7 +1444,7 @@ impl<R: Read> ZnnReader<R> {
         Ok(state)
     }
 
-    fn open_v2(inner: &mut R) -> Result<(ReaderState, Option<Checksummer>)> {
+    fn open_v2(inner: &mut ByteSource<R>) -> Result<(ReaderState, Option<Checksummer>)> {
         let mut head = [0u8; 8];
         inner.read_exact(&mut head)?;
         let version = head[0];
@@ -891,157 +1477,160 @@ impl<R: Read> ZnnReader<R> {
         ))
     }
 
-    /// Decode the next batch into `out`; `Done` leaves `out` empty.
+    /// Make the next decoded bytes available in `cur`; a finished
+    /// container leaves `cur` empty with the state `Done`.
     fn refill(&mut self) -> Result<()> {
-        self.out.clear();
         self.pos = 0;
-        match &mut self.state {
-            ReaderState::Done => Ok(()),
-            ReaderState::V1 {
-                layout,
-                total_len,
-                checksum,
-                entries,
-                groups,
-                next_chunk,
-                n_chunks,
-            } => {
-                // Copy the scalars out so `self.state` can be replaced below.
-                let layout = *layout;
-                let groups = *groups;
-                let total_len = *total_len;
-                let checksum = *checksum;
-                let n_chunks = *n_chunks;
-                let batch = self.threads.max(1) * SUPER_CHUNK;
-                let lo = *next_chunk;
-                let hi = (lo + batch).min(n_chunks);
-                *next_chunk = hi;
-                let es = &entries[lo * groups..hi * groups];
-                let comp_total: usize = es.iter().map(|e| e.comp_len as usize).sum();
-                self.comp_buf.clear();
-                self.comp_buf.resize(comp_total, 0);
-                self.inner.read_exact(&mut self.comp_buf)?;
-                decode_chunk_run(
-                    layout,
-                    es,
-                    &self.comp_buf,
-                    self.threads,
-                    &mut self.arena,
-                    &mut self.out,
-                )?;
-                if let Some(ck) = self.ck.as_mut() {
-                    ck.update(&self.out);
-                }
-                self.produced += self.out.len() as u64;
-                if hi == n_chunks {
-                    if self.produced != total_len {
-                        return Err(Error::Corrupt(format!(
-                            "decompressed {} bytes, expected {total_len}",
-                            self.produced
-                        )));
-                    }
-                    if let (Some(expect), Some(ck)) = (checksum, self.ck.take()) {
-                        let got = ck.finalize();
-                        if got != expect {
-                            return Err(Error::Corrupt(format!(
-                                "checksum mismatch: {got:#018x} != {expect:#018x}"
-                            )));
-                        }
-                    }
-                    self.state = ReaderState::Done;
-                }
+        self.cur.out_len = 0;
+        if self.threads <= 1 {
+            self.refill_serial()
+        } else {
+            self.refill_pipelined()
+        }
+    }
+
+    /// Single-threaded path: fetch one batch and decode it inline.
+    fn refill_serial(&mut self) -> Result<()> {
+        if matches!(self.state, ReaderState::Done) {
+            return Ok(());
+        }
+        match fetch_batch(&mut self.state, &mut self.src, &mut self.cur, 1)? {
+            Fetch::Batch => {
+                decode_batch_serial(&self.src, &mut self.cur, &mut self.arena)?;
+                note_decoded(&mut self.ck, &mut self.produced, &self.cur);
                 Ok(())
             }
-            ReaderState::V2 { layout, chunk_size, has_checksum, groups } => {
-                let layout = *layout;
-                let chunk_size = *chunk_size;
-                let has_checksum = *has_checksum;
-                let groups = *groups;
-                let mut marker = [0u8; 1];
-                self.inner.read_exact(&mut marker)?;
-                match marker[0] {
-                    MARK_FRAME => {
-                        let mut n4 = [0u8; 4];
-                        self.inner.read_exact(&mut n4)?;
-                        let n_streams = u32::from_le_bytes(n4) as usize;
-                        if n_streams == 0
-                            || n_streams > SUPER_CHUNK * 16
-                            || n_streams % groups != 0
-                        {
-                            return Err(Error::Corrupt(format!(
-                                "bad frame stream count {n_streams}"
-                            )));
-                        }
-                        self.entry_buf.clear();
-                        let mut row = [0u8; 9];
-                        let mut comp_total = 0usize;
-                        for _ in 0..n_streams {
-                            self.inner.read_exact(&mut row)?;
-                            let e = parse_entry(&row)?;
-                            if e.comp_len > e.raw_len || e.raw_len > chunk_size {
-                                return Err(Error::Corrupt("implausible stream entry".into()));
-                            }
-                            comp_total += e.comp_len as usize;
-                            self.entry_buf.push(e);
-                        }
-                        self.comp_buf.clear();
-                        self.comp_buf.resize(comp_total, 0);
-                        self.inner.read_exact(&mut self.comp_buf)?;
-                        decode_chunk_run(
-                            layout,
-                            &self.entry_buf,
-                            &self.comp_buf,
-                            self.threads,
-                            &mut self.arena,
-                            &mut self.out,
-                        )?;
-                        if let Some(ck) = self.ck.as_mut() {
-                            ck.update(&self.out);
-                        }
-                        self.produced += self.out.len() as u64;
-                        Ok(())
-                    }
-                    MARK_END => {
-                        let mut t = [0u8; 1];
-                        self.inner.read_exact(&mut t)?;
-                        let tail_len = t[0] as usize;
-                        if tail_len >= layout.elem {
-                            return Err(Error::Corrupt(format!("bad tail length {tail_len}")));
-                        }
-                        let mut tail = [0u8; 16];
-                        self.inner.read_exact(&mut tail[..tail_len])?;
-                        self.out.extend_from_slice(&tail[..tail_len]);
-                        let mut n8 = [0u8; 8];
-                        self.inner.read_exact(&mut n8)?;
-                        let total_len = u64::from_le_bytes(n8);
-                        if let Some(ck) = self.ck.as_mut() {
-                            ck.update(&tail[..tail_len]);
-                        }
-                        self.produced += tail_len as u64;
-                        if self.produced != total_len {
-                            return Err(Error::Corrupt(format!(
-                                "decompressed {} bytes, expected {total_len}",
-                                self.produced
-                            )));
-                        }
-                        if has_checksum {
-                            self.inner.read_exact(&mut n8)?;
-                            let expect = u64::from_le_bytes(n8);
-                            if let Some(ck) = self.ck.take() {
-                                let got = ck.finalize();
-                                if got != expect {
-                                    return Err(Error::Corrupt(format!(
-                                        "checksum mismatch: {got:#018x} != {expect:#018x}"
-                                    )));
-                                }
-                            }
-                        }
-                        self.state = ReaderState::Done;
-                        Ok(())
-                    }
-                    other => Err(Error::Corrupt(format!("bad frame marker {other:#x}"))),
+            Fetch::End(end) => self.finish(end),
+        }
+    }
+
+    /// Pipelined path: while the previous batch decodes on the shared
+    /// pool (into `back`), this thread fetches the next batch's bytes
+    /// into `cur`'s spare buffers — I/O (or mapped page-faults) of batch
+    /// N+1 overlaps the decode of batch N. Then the buffers rotate:
+    /// decoded data is served from `cur`, the fetched bytes are submitted
+    /// from `back`.
+    fn refill_pipelined(&mut self) -> Result<()> {
+        loop {
+            if matches!(self.state, ReaderState::Done) && self.pending.is_none() {
+                return Ok(());
+            }
+            // 1. Fetch the next batch's bytes. `cur` is fully consumed, so
+            //    its buffers are free — the in-flight decode only touches
+            //    `back`.
+            let mut fetched = false;
+            if self.end.is_none() && !matches!(self.state, ReaderState::Done) {
+                let threads = self.threads;
+                match fetch_batch(&mut self.state, &mut self.src, &mut self.cur, threads)? {
+                    Fetch::Batch => fetched = true,
+                    Fetch::End(end) => self.end = Some(end),
                 }
             }
+            // 2. Join the in-flight decode (helping on this thread).
+            self.complete_pending()?;
+            // 3. Rotate: decoded data (if any) moves to `cur` for serving,
+            //    freshly fetched bytes move to `back` for decoding.
+            std::mem::swap(&mut self.cur, &mut self.back);
+            self.pos = 0;
+            // 4. Kick off the fetched batch on the pool.
+            if fetched {
+                self.submit_back();
+            }
+            if self.cur.out_len > 0 {
+                return Ok(());
+            }
+            if self.end.is_some() && self.pending.is_none() {
+                let end = self.end.take().expect("just checked");
+                return self.finish(end);
+            }
+            // Pipeline warm-up (first batch just submitted): go around to
+            // fetch the next batch and join this one.
+        }
+    }
+
+    /// Join the in-flight decode of `back`, folding its output into the
+    /// running checksum. No-op when nothing is pending.
+    fn complete_pending(&mut self) -> Result<()> {
+        match self.pending.take() {
+            Some(frame) => {
+                let engine = self.engine.as_ref().expect("pending implies engine");
+                engine.wait(frame, &mut self.arena)?;
+                note_decoded(&mut self.ck, &mut self.produced, &self.back);
+                Ok(())
+            }
+            None => {
+                self.back.out_len = 0;
+                Ok(())
+            }
+        }
+    }
+
+    /// Submit the staged batch in `back` to the decode engine.
+    fn submit_back(&mut self) {
+        if self.engine.is_none() {
+            self.engine = Some(Engine::new(self.threads));
+        }
+        let comp_ptr: *const u8 = match self.back.payload {
+            PayloadAt::Buf => self.back.comp.as_ptr(),
+            PayloadAt::Mapped(off) => self.src.mapped_slice(off, self.back.comp_len).as_ptr(),
+        };
+        let engine = self.engine.as_mut().expect("just created");
+        engine.epoch += 1;
+        let b = &mut self.back;
+        debug_assert_eq!(b.spans.len(), b.n_chunks);
+        debug_assert_eq!(b.entries.len(), b.n_chunks * b.groups);
+        debug_assert!(b.out.len() >= b.out_len);
+        let frame = TaskFrame {
+            epoch: engine.epoch,
+            layout: b.layout,
+            groups: b.groups,
+            n_chunks: b.n_chunks,
+            entries: b.entries.as_ptr(),
+            comp: comp_ptr,
+            spans: b.spans.as_ptr(),
+            out: b.out.as_mut_ptr(),
+        };
+        engine.submit(frame);
+        self.pending = Some(frame);
+    }
+
+    /// Apply the container end: serve the trailer tail (if any), verify
+    /// totals and checksum, and mark the reader done.
+    fn finish(&mut self, end: EndInfo) -> Result<()> {
+        ensure_len(&mut self.cur.out, end.tail_len);
+        self.cur.out[..end.tail_len].copy_from_slice(&end.tail[..end.tail_len]);
+        self.cur.out_len = end.tail_len;
+        self.pos = 0;
+        if let Some(ck) = self.ck.as_mut() {
+            ck.update(&end.tail[..end.tail_len]);
+        }
+        self.produced += end.tail_len as u64;
+        self.end = None;
+        self.state = ReaderState::Done;
+        if self.produced != end.total_len {
+            return Err(Error::Corrupt(format!(
+                "decompressed {} bytes, expected {}",
+                self.produced, end.total_len
+            )));
+        }
+        if let (Some(expect), Some(ck)) = (end.checksum, self.ck.take()) {
+            let got = ck.finalize();
+            if got != expect {
+                return Err(Error::Corrupt(format!(
+                    "checksum mismatch: {got:#018x} != {expect:#018x}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read> Drop for ZnnReader<R> {
+    /// Join any in-flight decode before the batch buffers are freed (the
+    /// pool helpers hold raw pointers into them while chunks are claimed).
+    fn drop(&mut self) {
+        if let (Some(frame), Some(engine)) = (self.pending.take(), self.engine.as_ref()) {
+            let _ = engine.wait(frame, &mut self.arena);
         }
     }
 }
@@ -1063,17 +1652,20 @@ impl<R: Read> Read for ZnnReader<R> {
             return Ok(0);
         }
         loop {
-            if self.pos < self.out.len() {
-                let n = (self.out.len() - self.pos).min(buf.len());
-                buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            if self.pos < self.cur.out_len {
+                let n = (self.cur.out_len - self.pos).min(buf.len());
+                buf[..n].copy_from_slice(&self.cur.out[self.pos..self.pos + n]);
                 self.pos += n;
                 return Ok(n);
             }
-            if matches!(self.state, ReaderState::Done) {
+            if matches!(self.state, ReaderState::Done) && self.pending.is_none() {
                 return Ok(0);
             }
             self.refill().map_err(to_io_err)?;
-            if self.out.is_empty() && matches!(self.state, ReaderState::Done) {
+            if self.cur.out_len == 0
+                && matches!(self.state, ReaderState::Done)
+                && self.pending.is_none()
+            {
                 return Ok(0);
             }
         }
@@ -1083,6 +1675,15 @@ impl<R: Read> Read for ZnnReader<R> {
 /// Convenience: fully decompress a container through [`ZnnReader`].
 pub fn decompress_reader(r: impl Read, threads: usize) -> Result<Vec<u8>> {
     let mut zr = ZnnReader::new(r)?.with_threads(threads);
+    let mut out = Vec::new();
+    zr.read_to_end(&mut out).map_err(from_io_err)?;
+    Ok(out)
+}
+
+/// Convenience: fully decompress a container file on the zero-copy
+/// mapped fast path (see [`ZnnReader::open`]).
+pub fn decompress_path(path: impl AsRef<Path>, threads: usize) -> Result<Vec<u8>> {
+    let mut zr = ZnnReader::open(path)?.with_threads(threads);
     let mut out = Vec::new();
     zr.read_to_end(&mut out).map_err(from_io_err)?;
     Ok(out)
@@ -1258,5 +1859,104 @@ mod tests {
             decompress_reader(container.as_slice(), 1).unwrap(),
             [1, 2, 3, 4, 5, 6]
         );
+    }
+
+    fn tmp_container(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "zipnn-stream-test-{}-{}-{tag}.znn",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn mapped_reader_matches_stream_reader() {
+        let raw = gaussian_bf16(200_000, 21);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(16 * 1024);
+        let mut w = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap();
+        w.write_all(&raw).unwrap();
+        let zns = w.finish().unwrap();
+        let znn = Compressor::new(cfg).compress(&raw).unwrap();
+        for (tag, container) in [("zns", &zns), ("znn", &znn)] {
+            let path = tmp_container(tag, container);
+            for threads in [1usize, 4] {
+                // mmap'd file (or its read fallback)
+                let mut r = ZnnReader::open(&path).unwrap().with_threads(threads);
+                #[cfg(unix)]
+                assert!(r.is_zero_copy(), "{tag}: expected the mapped fast path");
+                let mut got = Vec::new();
+                r.read_to_end(&mut got).unwrap();
+                assert_eq!(got, raw, "{tag} mapped threads={threads}");
+                // owned bytes through the same zero-copy source machinery
+                let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+                    .unwrap()
+                    .with_threads(threads);
+                assert!(!r.is_zero_copy());
+                let mut got = Vec::new();
+                r.read_to_end(&mut got).unwrap();
+                assert_eq!(got, raw, "{tag} owned threads={threads}");
+            }
+            assert_eq!(decompress_path(&path, 2).unwrap(), raw, "{tag} decompress_path");
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+
+    #[test]
+    fn pipelined_pool_decode_roundtrips() {
+        // Many small frames so the pipelined refill cycles several times.
+        let raw = gaussian_bf16(400_000, 22);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        let mut r = ZnnReader::new(container.as_slice()).unwrap().with_threads(4);
+        let mut back = Vec::new();
+        let mut buf = [0u8; 10_007]; // odd size: crosses batch boundaries
+        loop {
+            let n = r.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            back.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(back, raw);
+        assert_eq!(r.raw_len(), raw.len() as u64);
+    }
+
+    #[test]
+    fn dropping_reader_mid_stream_joins_pending_decode() {
+        let raw = gaussian_bf16(300_000, 23);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        let mut r = ZnnReader::new(container.as_slice()).unwrap().with_threads(4);
+        let mut buf = [0u8; 4096];
+        // One read leaves a batch in flight on the pool; drop must join it
+        // (a dangling-buffer write would corrupt the next test's heap).
+        let n = r.read(&mut buf).unwrap();
+        assert!(n > 0);
+        drop(r);
+    }
+
+    #[test]
+    fn pipelined_decode_detects_corruption() {
+        let raw = gaussian_bf16(300_000, 24);
+        let mut w = ZnnWriter::new(Vec::new(), CodecConfig::for_dtype(DType::BF16)).unwrap();
+        w.write_all(&raw).unwrap();
+        let mut container = w.finish().unwrap();
+        let n = container.len();
+        container[n - 20] ^= 0x10;
+        match decompress_reader(container.as_slice(), 4) {
+            Err(_) => {}
+            Ok(back) => assert_ne!(back, raw, "corruption must not roundtrip silently"),
+        }
+        for cut in [11, container.len() / 2, container.len() - 1] {
+            assert!(decompress_reader(&container[..cut], 4).is_err(), "cut={cut}");
+        }
     }
 }

@@ -7,6 +7,11 @@
 //! that stream layer: items flow through a bounded job queue to a worker
 //! pool and come out in submission order; a full queue blocks the producer
 //! (backpressure) instead of buffering unboundedly.
+//!
+//! It also owns the process-wide [`shared_pool`]: one lazily-spawned
+//! [`WorkerPool`] that long-lived batch work (streaming decode) runs on,
+//! so worker threads — and their sticky per-worker scratch state — are
+//! created once and stay warm across batches, readers, and files.
 
 pub mod metrics;
 pub mod pipeline;
@@ -14,4 +19,34 @@ pub mod pool;
 
 pub use metrics::Metrics;
 pub use pipeline::{Pipeline, PipelineBuilder, PipelineResult, WorkItem};
-pub use pool::WorkerPool;
+pub use pool::{StickyMap, WorkerPool};
+
+use std::sync::OnceLock;
+
+/// Cap on the shared pool's default size; decode batches rarely have more
+/// than this many independent chunks in flight.
+const SHARED_POOL_MAX: usize = 16;
+
+static SHARED_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide shared worker pool, spawned on first use.
+///
+/// Sized from `ZIPNN_DECODE_WORKERS` when set, else `ncpu` capped at 16.
+/// The pool lives for the rest of the process (its threads idle on an
+/// empty queue), which is exactly what keeps per-worker sticky state —
+/// decode arenas, Huffman table caches — warm across files.
+pub fn shared_pool() -> &'static WorkerPool {
+    SHARED_POOL.get_or_init(|| {
+        let threads = std::env::var("ZIPNN_DECODE_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(2)
+                    .min(SHARED_POOL_MAX)
+            });
+        WorkerPool::new(threads)
+    })
+}

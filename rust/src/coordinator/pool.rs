@@ -1,24 +1,62 @@
 //! Fixed-size shared worker pool.
 //!
 //! One pool serves many producers: the compression [`crate::coordinator::Pipeline`]
-//! runs its worker loops on it, and the hub's readiness reactor
-//! ([`crate::hub`]) executes ready PUT/GET/Stat work on it. Threads are
-//! spawned once at construction — submitting work never spawns a thread,
-//! which is what keeps the hub's thread count flat under thousands of
-//! connections.
+//! runs its worker loops on it, the hub's readiness reactor
+//! ([`crate::hub`]) executes ready PUT/GET/Stat work on it, and the
+//! streaming decoder ([`crate::codec::ZnnReader`]) runs its batch decode
+//! on the shared pool. Threads are spawned once at construction —
+//! submitting work never spawns a thread, which is what keeps the hub's
+//! thread count flat under thousands of connections and decode free of
+//! per-batch spawns.
+//!
+//! Every worker additionally owns a **sticky state map** ([`StickyMap`]):
+//! a per-thread, type-keyed store that jobs submitted through
+//! [`WorkerPool::execute_with_state`] can borrow. State lives as long as
+//! the worker, so a decode job's scratch arena (and its Huffman
+//! decode-table cache) stays warm across batches — and across files —
+//! instead of being rebuilt per submission.
 
 use crate::error::{Error, Result};
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type Job = Box<dyn FnOnce(&mut StickyMap) + Send + 'static>;
+
+/// Per-worker sticky state: one slot per Rust type, created on first use
+/// and kept for the worker's lifetime.
+///
+/// Jobs from unrelated subsystems share a worker without coordination —
+/// each subsystem keys its state by its own type, and a job only ever
+/// touches its slot while it runs.
+#[derive(Default)]
+pub struct StickyMap {
+    slots: HashMap<TypeId, Box<dyn Any + Send>>,
+}
+
+impl StickyMap {
+    /// The worker's slot for `T`, default-constructed on first access.
+    pub fn slot<T: Default + Send + 'static>(&mut self) -> &mut T {
+        self.slots
+            .entry(TypeId::of::<T>())
+            .or_insert_with(|| Box::<T>::default())
+            .downcast_mut::<T>()
+            .expect("sticky slot holds the type it was keyed by")
+    }
+}
 
 /// A fixed pool of worker threads executing submitted closures.
 ///
 /// Dropping the pool closes the job queue and joins every worker, so all
 /// submitted jobs run to completion before `drop` returns (graceful
-/// drain). Panics inside a job kill only that worker's thread.
+/// drain). Panics inside a job are caught: the worker survives — a
+/// long-lived shared pool (see [`crate::coordinator::shared_pool`]) must
+/// not shrink permanently because one submission misbehaved. The
+/// worker's sticky state is kept; sticky users must tolerate a value a
+/// panicked job left mid-update (the codec's scratch arenas do: every
+/// buffer is re-sized before use).
 pub struct WorkerPool {
     tx: Option<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
@@ -54,6 +92,15 @@ impl WorkerPool {
     /// Submit a job. Errors only after [`WorkerPool::close`] (or during
     /// teardown).
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        self.execute_with_state(move |_| job())
+    }
+
+    /// Submit a job that borrows the executing worker's [`StickyMap`].
+    /// Errors only after [`WorkerPool::close`] (or during teardown).
+    pub fn execute_with_state(
+        &self,
+        job: impl FnOnce(&mut StickyMap) + Send + 'static,
+    ) -> Result<()> {
         let tx = self
             .tx
             .as_ref()
@@ -88,14 +135,19 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    let mut sticky = StickyMap::default();
     loop {
         // Hold the lock only while dequeuing, never while running a job.
         let job = match rx.lock() {
             Ok(guard) => guard.recv(),
-            Err(_) => break, // a job panicked while dequeuing; bail out
+            Err(_) => break, // lock poisoned; bail out
         };
         match job {
-            Ok(job) => job(),
+            Ok(job) => {
+                // Contain the unwind: one bad job must not cost the pool
+                // a thread for the rest of the process.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&mut sticky)));
+            }
             Err(_) => break, // queue closed and drained
         }
     }
@@ -151,5 +203,53 @@ mod tests {
     fn default_threads_bounded() {
         let pool = WorkerPool::with_default_threads(3);
         assert!((1..=3).contains(&pool.threads()));
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        // One worker: if the panic killed it, the second job would never
+        // run and recv_timeout would fail.
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = channel::<u32>();
+        pool.execute(|| panic!("boom (expected in test output)")).unwrap();
+        pool.execute(move || tx.send(7).unwrap()).unwrap();
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(), 7);
+        pool.join();
+    }
+
+    #[test]
+    fn sticky_state_persists_across_jobs() {
+        // One worker: every job sees the same counter slot, so the values
+        // observed must be exactly 1..=N in submission order.
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = channel::<usize>();
+        for _ in 0..10 {
+            let tx = tx.clone();
+            pool.execute_with_state(move |sticky| {
+                let counter = sticky.slot::<usize>();
+                *counter += 1;
+                tx.send(*counter).unwrap();
+            })
+            .unwrap();
+        }
+        drop(tx);
+        pool.join();
+        let seen: Vec<usize> = rx.iter().collect();
+        assert_eq!(seen, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sticky_slots_are_type_keyed() {
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = channel::<(usize, String)>();
+        pool.execute_with_state(move |sticky| {
+            *sticky.slot::<usize>() = 7;
+            sticky.slot::<String>().push_str("warm");
+            tx.send((*sticky.slot::<usize>(), sticky.slot::<String>().clone()))
+                .unwrap();
+        })
+        .unwrap();
+        pool.join();
+        assert_eq!(rx.recv().unwrap(), (7, "warm".to_string()));
     }
 }

@@ -9,10 +9,11 @@
 //!   (recovery needs exactly one delta, compression degrades with
 //!   distance).
 
-use crate::codec::{decompress, CodecConfig, Compressor};
+use crate::codec::{decompress, decompress_path, CodecConfig, Compressor};
 use crate::delta::xor::DeltaCodec;
 use crate::error::{Error, Result};
 use crate::fp::DType;
+use std::path::PathBuf;
 
 /// Base placement strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,22 +31,29 @@ pub enum BaseStrategy {
 pub struct StoredDelta {
     /// Checkpoint index.
     pub index: usize,
-    /// Compressed bytes on disk.
+    /// Compressed bytes held in memory (empty when spooled to disk).
     pub bytes: Vec<u8>,
+    /// On-disk container of a spooled entry; recovery decodes it over a
+    /// memory mapping (zero-copy payload reads).
+    pub path: Option<PathBuf>,
     /// True if this entry is a full (standalone-compressed) base.
     pub is_base: bool,
     /// Raw checkpoint size.
     pub raw_len: usize,
+    /// Compressed size (in memory or on disk).
+    pub stored_len: usize,
 }
 
 impl StoredDelta {
     /// Compressed size in percent of raw.
     pub fn pct(&self) -> f64 {
-        self.bytes.len() as f64 / self.raw_len as f64 * 100.0
+        self.stored_len as f64 / self.raw_len as f64 * 100.0
     }
 }
 
-/// An in-memory checkpoint store applying one [`BaseStrategy`].
+/// A checkpoint store applying one [`BaseStrategy`]. Entries live in
+/// memory by default; with [`CheckpointStore::with_spool_dir`] they are
+/// written to disk and recovered through the mmap-backed decode path.
 pub struct CheckpointStore {
     strategy: BaseStrategy,
     codec_cfg: CodecConfig,
@@ -54,11 +62,17 @@ pub struct CheckpointStore {
     prev_raw: Option<Vec<u8>>,
     base_raw: Option<Vec<u8>>,
     entries: Vec<StoredDelta>,
+    spool_dir: Option<PathBuf>,
+    /// Unique per-store spool-file prefix: stores sharing a directory
+    /// (or successive runs in one process) must never collide.
+    spool_tag: String,
 }
 
 impl CheckpointStore {
     /// New store for checkpoints of `dtype` using `strategy`.
     pub fn new(dtype: DType, strategy: BaseStrategy) -> CheckpointStore {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
         CheckpointStore {
             strategy,
             codec_cfg: CodecConfig::for_dtype(dtype),
@@ -66,7 +80,24 @@ impl CheckpointStore {
             prev_raw: None,
             base_raw: None,
             entries: Vec::new(),
+            spool_dir: None,
+            spool_tag: format!(
+                "{}-{}",
+                std::process::id(),
+                STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+            ),
         }
+    }
+
+    /// Spool compressed entries to `<dir>/ckpt-<index>.znn` instead of
+    /// holding them in memory. [`CheckpointStore::recover`] then opens
+    /// each container on the zero-copy mapped fast path, so recovery
+    /// reads compressed bytes straight from the page cache.
+    pub fn with_spool_dir(mut self, dir: impl Into<PathBuf>) -> Result<CheckpointStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        self.spool_dir = Some(dir);
+        Ok(self)
     }
 
     /// Append a checkpoint; returns a reference to its stored entry.
@@ -110,39 +141,66 @@ impl CheckpointStore {
                 }
             }
         }
+        let stored_len = bytes.len();
+        let (bytes, path) = match &self.spool_dir {
+            Some(dir) => {
+                let p = dir.join(format!("ckpt-{}-{idx}.znn", self.spool_tag));
+                std::fs::write(&p, &bytes)?;
+                (Vec::new(), Some(p))
+            }
+            None => (bytes, None),
+        };
         self.entries.push(StoredDelta {
             index: idx,
             bytes,
+            path,
             is_base,
             raw_len: raw.len(),
+            stored_len,
         });
         Ok(self.entries.last().unwrap())
+    }
+
+    /// Decompress a base entry (over a memory mapping when spooled).
+    fn load_base(&self, e: &StoredDelta) -> Result<Vec<u8>> {
+        match &e.path {
+            Some(p) => decompress_path(p, 1),
+            None => decompress(&e.bytes),
+        }
+    }
+
+    /// Apply one stored delta to `base` (mapped zero-copy when spooled).
+    fn apply_delta(&self, base: &[u8], e: &StoredDelta) -> Result<Vec<u8>> {
+        match &e.path {
+            Some(p) => self.delta.decode_from_path(base, p),
+            None => self.delta.decode_from(base, e.bytes.as_slice()),
+        }
     }
 
     /// Recover checkpoint `index` by decompressing its base and applying
     /// the delta chain. Deltas are decoded streaming: each step reads the
     /// stored container incrementally and XORs in place against the
-    /// running base.
+    /// running base. Spooled entries are opened on the mmap fast path.
     pub fn recover(&self, index: usize) -> Result<Vec<u8>> {
         let e = self
             .entries
             .get(index)
             .ok_or_else(|| Error::Invalid(format!("no checkpoint {index}")))?;
         if e.is_base {
-            return decompress(&e.bytes);
+            return self.load_base(e);
         }
         match self.strategy {
             BaseStrategy::Standalone => unreachable!("non-base under standalone"),
             BaseStrategy::FixedBase(k) => {
                 let base_idx = (index / k) * k;
-                let base = decompress(&self.entries[base_idx].bytes)?;
-                self.delta.decode_from(&base, e.bytes.as_slice())
+                let base = self.load_base(&self.entries[base_idx])?;
+                self.apply_delta(&base, e)
             }
             BaseStrategy::Chain(k) => {
                 let base_idx = (index / k) * k;
-                let mut cur = decompress(&self.entries[base_idx].bytes)?;
+                let mut cur = self.load_base(&self.entries[base_idx])?;
                 for i in base_idx + 1..=index {
-                    cur = self.delta.decode_from(&cur, self.entries[i].bytes.as_slice())?;
+                    cur = self.apply_delta(&cur, &self.entries[i])?;
                 }
                 Ok(cur)
             }
@@ -164,9 +222,22 @@ impl CheckpointStore {
         deltas.iter().map(|e| e.pct()).sum::<f64>() / deltas.len() as f64
     }
 
-    /// Total stored bytes (bases + deltas).
+    /// Total stored bytes (bases + deltas, in memory or spooled).
     pub fn total_bytes(&self) -> usize {
-        self.entries.iter().map(|e| e.bytes.len()).sum()
+        self.entries.iter().map(|e| e.stored_len).sum()
+    }
+}
+
+impl Drop for CheckpointStore {
+    /// Spooled entry files are only reachable through this store's
+    /// entries, so they go with it (best-effort; the directory itself is
+    /// the caller's).
+    fn drop(&mut self) {
+        for e in &self.entries {
+            if let Some(p) = &e.path {
+                let _ = std::fs::remove_file(p);
+            }
+        }
     }
 }
 
@@ -268,5 +339,53 @@ mod tests {
     fn recover_out_of_range_errors() {
         let store = CheckpointStore::new(DType::BF16, BaseStrategy::Standalone);
         assert!(store.recover(0).is_err());
+    }
+
+    #[test]
+    fn spooled_store_recovers_via_mapped_containers() {
+        let dir = std::env::temp_dir().join(format!("zipnn-ckpt-spool-{}", std::process::id()));
+        let ckpts = trajectory(6, 40_000, 7);
+        for strat in [BaseStrategy::Chain(3), BaseStrategy::FixedBase(3)] {
+            let mut store = CheckpointStore::new(DType::BF16, strat).with_spool_dir(&dir).unwrap();
+            for c in &ckpts {
+                let e = store.push(c).unwrap();
+                // entries live on disk, not in memory
+                assert!(e.bytes.is_empty());
+                let p = e.path.as_ref().expect("spooled entry has a path");
+                assert_eq!(std::fs::metadata(p).unwrap().len() as usize, e.stored_len);
+            }
+            assert!(store.total_bytes() > 0);
+            for (i, c) in ckpts.iter().enumerate() {
+                assert_eq!(&store.recover(i).unwrap(), c, "{strat:?} ckpt {i}");
+            }
+        }
+        // Dropping a store removes its spooled files.
+        let leftover = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(leftover, 0, "{leftover} spooled checkpoint files leaked");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spooled_stores_sharing_a_dir_do_not_collide() {
+        let dir = std::env::temp_dir().join(format!("zipnn-ckpt-shared-{}", std::process::id()));
+        let a_ckpts = trajectory(4, 20_000, 8);
+        let b_ckpts = trajectory(4, 20_000, 9);
+        let mut a = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(2))
+            .with_spool_dir(&dir)
+            .unwrap();
+        let mut b = CheckpointStore::new(DType::BF16, BaseStrategy::Chain(2))
+            .with_spool_dir(&dir)
+            .unwrap();
+        for (ca, cb) in a_ckpts.iter().zip(&b_ckpts) {
+            a.push(ca).unwrap();
+            b.push(cb).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(&a.recover(i).unwrap(), &a_ckpts[i], "store a ckpt {i}");
+            assert_eq!(&b.recover(i).unwrap(), &b_ckpts[i], "store b ckpt {i}");
+        }
+        drop(a);
+        drop(b);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -5,6 +5,7 @@ use crate::error::{Error, Result};
 use crate::fp::DType;
 use crate::model::tensor::Model;
 use std::io::{Read, Write};
+use std::path::Path;
 
 /// XOR two equal-length byte buffers (`a ^ b`); self-inverse.
 pub fn xor_delta(a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
@@ -120,7 +121,18 @@ impl DeltaCodec {
     /// chunk, and return `next`. The decompressed delta is never held
     /// whole.
     pub fn decode_from(&self, base: &[u8], compressed_delta: impl Read) -> Result<Vec<u8>> {
-        let mut r = ZnnReader::new(compressed_delta)?;
+        self.decode_with_reader(base, ZnnReader::new(compressed_delta)?)
+    }
+
+    /// [`DeltaCodec::decode_from`] over a container file on the zero-copy
+    /// mapped fast path: the delta's compressed payload is read straight
+    /// from the page cache (see [`crate::codec::ZnnReader::open`]).
+    pub fn decode_from_path(&self, base: &[u8], path: impl AsRef<Path>) -> Result<Vec<u8>> {
+        self.decode_with_reader(base, ZnnReader::open(path)?)
+    }
+
+    /// Shared streaming-decode body over an already-open reader.
+    fn decode_with_reader<R: Read>(&self, base: &[u8], mut r: ZnnReader<R>) -> Result<Vec<u8>> {
         let mut next = Vec::with_capacity(base.len());
         let mut scratch = vec![0u8; self.cfg.chunk_size.max(1).min(base.len().max(1))];
         loop {
@@ -249,6 +261,25 @@ mod tests {
             assert_eq!(dc.decode_from(&base, sink.as_slice()).unwrap(), next, "n={n}");
             assert_eq!(dc.decode(&base, &sink).unwrap(), next, "n={n} one-shot");
         }
+    }
+
+    #[test]
+    fn decode_from_path_matches_in_memory() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let mut base = vec![0u8; 250_000];
+        rng.fill_bytes(&mut base);
+        let mut next = base.clone();
+        for i in (0..next.len()).step_by(9) {
+            next[i] = next[i].wrapping_add(3);
+        }
+        let dc = DeltaCodec::new(DType::BF16);
+        let mut sink = Vec::new();
+        dc.encode_to(&base, &next, &mut sink).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("zipnn-delta-test-{}.znn", std::process::id()));
+        std::fs::write(&path, &sink).unwrap();
+        assert_eq!(dc.decode_from_path(&base, &path).unwrap(), next);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

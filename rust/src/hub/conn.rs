@@ -243,13 +243,13 @@ impl Conn {
                 }
                 WritePhase::FrameHeader => {
                     let blob = w.blob.as_ref().expect("blob in frame phase");
-                    if w.idx >= blob.frames.len() {
+                    if w.idx >= blob.n_frames() {
                         w.pos = 0;
                         w.phase = WritePhase::Terminator;
                         continue;
                     }
                     if w.pos == 0 {
-                        w.len4 = (blob.frames[w.idx].len() as u32).to_le_bytes();
+                        w.len4 = (blob.frame(w.idx).len() as u32).to_le_bytes();
                     }
                     if w.pos >= 4 {
                         w.pos = 0;
@@ -259,7 +259,7 @@ impl Conn {
                 }
                 WritePhase::FrameBody => {
                     let blob = w.blob.as_ref().expect("blob in frame phase");
-                    if w.pos >= blob.frames[w.idx].len() {
+                    if w.pos >= blob.frame(w.idx).len() {
                         w.pos = 0;
                         w.idx += 1;
                         w.phase = WritePhase::FrameHeader;
@@ -279,7 +279,7 @@ impl Conn {
                 WritePhase::FrameHeader => &w.len4[w.pos..],
                 WritePhase::FrameBody => {
                     let blob = w.blob.as_ref().expect("blob in frame phase");
-                    &blob.frames[w.idx][w.pos..]
+                    &blob.frame(w.idx)[w.pos..]
                 }
                 WritePhase::Terminator => &ZERO4[w.pos..],
                 WritePhase::Finished => unreachable!("handled above"),

@@ -56,6 +56,8 @@ pub(crate) struct ReactorConfig {
     pub(crate) workers: usize,
     /// Connection cap; excess accepts are dropped immediately.
     pub(crate) max_conns: usize,
+    /// Spool directory for PUT bodies (served back from a memory mapping).
+    pub(crate) spool_dir: Option<Arc<std::path::Path>>,
 }
 
 /// A finished request execution, routed back to its connection.
@@ -315,8 +317,9 @@ impl Reactor {
         let stop = Arc::clone(&self.stop);
         let completions = Arc::clone(&self.completions);
         let wake = Arc::clone(&self.wake_tx);
+        let spool = self.cfg.spool_dir.clone();
         let job = move || {
-            let (resp, close_after) = execute_request(req, &store, &stop);
+            let (resp, close_after) = execute_request(req, &store, &stop, spool.as_deref());
             completions
                 .lock()
                 .unwrap()

@@ -12,27 +12,119 @@
 //! PUT/GET/List/Stat work — thousands of idle keep-alive connections cost
 //! zero threads. Tune with [`HubServer::builder`] or the `ZIPNN_HUB_WORKERS`
 //! / `ZIPNN_HUB_MAX_CONNS` environment variables.
+//!
+//! With a **spool directory** (builder [`HubServerBuilder::spool_dir`] or
+//! `ZIPNN_HUB_SPOOL_DIR`), PUT bodies are written to disk and served from
+//! a memory mapping: GET responses stream frames straight out of the OS
+//! page cache instead of long-lived heap buffers, so the server's resident
+//! heap stays flat no matter how many models it holds. The spool file is
+//! unlinked right after mapping (Unix), so crashed servers leak nothing.
 
 use crate::error::Result;
 use crate::hub::conn::{Request, Response};
 use crate::hub::protocol::{write_response, write_response_header, Op, FRAME_MAX};
 use crate::hub::reactor::{Reactor, ReactorConfig};
+use crate::util::mmap::Mmap;
 use std::collections::HashMap;
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// One stored blob: the wire frames of its PUT body.
+/// One stored blob: the wire frames of its PUT body, either owned on the
+/// heap or mapped from an (unlinked) spool file.
 pub(crate) struct StoredBlob {
-    pub(crate) frames: Vec<Vec<u8>>,
+    bytes: BlobBytes,
     pub(crate) total: u64,
 }
 
+enum BlobBytes {
+    /// Heap-resident frames (default).
+    Frames(Vec<Vec<u8>>),
+    /// Page-cache-resident: one mapping, frames as `(offset, len)` spans.
+    Mapped { map: Mmap, spans: Vec<(usize, usize)> },
+}
+
 impl StoredBlob {
-    fn max_frame(&self) -> usize {
-        self.frames.iter().map(|f| f.len()).max().unwrap_or(0)
+    pub(crate) fn in_memory(frames: Vec<Vec<u8>>, total: u64) -> StoredBlob {
+        StoredBlob { bytes: BlobBytes::Frames(frames), total }
     }
+
+    /// Number of stored wire frames.
+    pub(crate) fn n_frames(&self) -> usize {
+        match &self.bytes {
+            BlobBytes::Frames(f) => f.len(),
+            BlobBytes::Mapped { spans, .. } => spans.len(),
+        }
+    }
+
+    /// One stored frame's payload.
+    pub(crate) fn frame(&self, idx: usize) -> &[u8] {
+        match &self.bytes {
+            BlobBytes::Frames(f) => &f[idx],
+            BlobBytes::Mapped { map, spans } => {
+                let (off, len) = spans[idx];
+                &map[off..off + len]
+            }
+        }
+    }
+
+    fn max_frame(&self) -> usize {
+        (0..self.n_frames()).map(|i| self.frame(i).len()).max().unwrap_or(0)
+    }
+}
+
+/// Write a PUT body's frames to one spool file, map it, and unlink the
+/// file — the mapping keeps the pages alive (Unix), so nothing is left to
+/// clean up and GETs are served from the page cache.
+fn spool_blob(dir: &Path, frames: &[Vec<u8>], total: u64) -> std::io::Result<StoredBlob> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let path = dir.join(format!(
+        "blob-{}-{}.spool",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let result = write_and_map(&path, frames, total);
+    // Unlink on every path: on success the mapping holds the pages; on
+    // failure (including a partial write) the file is junk.
+    let _ = std::fs::remove_file(&path);
+    result
+}
+
+fn write_and_map(path: &Path, frames: &[Vec<u8>], total: u64) -> std::io::Result<StoredBlob> {
+    // No point writing a spool file that could never be served from a
+    // mapping: when mmap can't engage, the caller keeps the frames it
+    // already holds and no disk I/O happens at all.
+    if cfg!(not(unix)) || std::env::var_os("ZIPNN_NO_MMAP").is_some() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "mmap unavailable; keep the blob heap-resident",
+        ));
+    }
+    let mut spans = Vec::with_capacity(frames.len());
+    let mut off = 0usize;
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for frame in frames {
+            f.write_all(frame)?;
+            spans.push((off, frame.len()));
+            off += frame.len();
+        }
+        f.flush()?;
+    }
+    // Map directly (no read-back fallback): if the filesystem refuses
+    // mmap the PUT falls back to its heap frames with the spool file
+    // removed — never a second in-memory copy.
+    let map = Mmap::map(&std::fs::File::open(path)?)?;
+    if map.len() != off {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "spool file length mismatch",
+        ));
+    }
+    Ok(StoredBlob { bytes: BlobBytes::Mapped { map, spans }, total })
 }
 
 /// Shared blob store (name → frames).
@@ -42,6 +134,7 @@ pub(crate) type Store = Arc<Mutex<HashMap<String, Arc<StoredBlob>>>>;
 pub struct HubServerBuilder {
     workers: Option<usize>,
     max_conns: Option<usize>,
+    spool_dir: Option<PathBuf>,
 }
 
 impl HubServerBuilder {
@@ -59,15 +152,31 @@ impl HubServerBuilder {
         self
     }
 
+    /// Spool PUT bodies to files under `dir` and serve GETs from a memory
+    /// mapping of them (page-cache resident instead of heap resident).
+    /// Default: the `ZIPNN_HUB_SPOOL_DIR` env var, else off.
+    pub fn spool_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spool_dir = Some(dir.into());
+        self
+    }
+
     /// Bind an ephemeral loopback port and start the reactor.
     pub fn start(self) -> Result<HubServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
         let store: Store = Arc::new(Mutex::new(HashMap::new()));
+        let spool_dir = match self.spool_dir.or_else(default_spool_dir) {
+            Some(dir) => {
+                std::fs::create_dir_all(&dir)?;
+                Some(Arc::<Path>::from(dir.as_path()))
+            }
+            None => None,
+        };
         let cfg = ReactorConfig {
             workers: self.workers.unwrap_or_else(default_workers),
             max_conns: self.max_conns.unwrap_or_else(default_max_conns),
+            spool_dir,
         };
         // Built here so setup failures (poller, self-pipe) surface as an
         // error instead of a silently dead server.
@@ -79,6 +188,10 @@ impl HubServerBuilder {
 
 fn env_usize(key: &str) -> Option<usize> {
     std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn default_spool_dir() -> Option<PathBuf> {
+    std::env::var_os("ZIPNN_HUB_SPOOL_DIR").map(PathBuf::from)
 }
 
 fn default_workers() -> usize {
@@ -109,7 +222,7 @@ impl HubServer {
 
     /// Tune workers / connection cap before starting.
     pub fn builder() -> HubServerBuilder {
-        HubServerBuilder { workers: None, max_conns: None }
+        HubServerBuilder { workers: None, max_conns: None, spool_dir: None }
     }
 
     /// Address to connect to.
@@ -144,11 +257,23 @@ impl Drop for HubServer {
 /// Execute one complete request against the store (runs on a worker
 /// thread; touches no sockets). Returns the response plus whether the
 /// connection should close once it is written.
-pub(crate) fn execute_request(req: Request, store: &Store, stop: &AtomicBool) -> (Response, bool) {
+pub(crate) fn execute_request(
+    req: Request,
+    store: &Store,
+    stop: &AtomicBool,
+    spool: Option<&Path>,
+) -> (Response, bool) {
     match req.op {
         Op::Put => {
             debug_assert!(req.frames.iter().all(|f| f.len() <= FRAME_MAX));
-            let blob = StoredBlob { total: req.total, frames: req.frames };
+            // Spool to disk + mmap when configured; any spool failure
+            // (full disk, bad dir) falls back to heap frames, so a PUT
+            // never fails on account of the optimization.
+            let blob = match spool {
+                Some(dir) => spool_blob(dir, &req.frames, req.total)
+                    .unwrap_or_else(|_| StoredBlob::in_memory(req.frames, req.total)),
+                None => StoredBlob::in_memory(req.frames, req.total),
+            };
             store.lock().unwrap().insert(req.name, Arc::new(blob));
             (Response::Small(small_response(true, b"")), false)
         }
@@ -177,7 +302,7 @@ pub(crate) fn execute_request(req: Request, store: &Store, stop: &AtomicBool) ->
             match blob {
                 Some(blob) => {
                     let msg =
-                        format!("{} {} {}", blob.total, blob.frames.len(), blob.max_frame());
+                        format!("{} {} {}", blob.total, blob.n_frames(), blob.max_frame());
                     (Response::Small(small_response(true, msg.as_bytes())), false)
                 }
                 None => (Response::Small(small_response(false, b"not found")), false),

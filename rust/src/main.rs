@@ -15,7 +15,7 @@
 
 use std::collections::HashMap;
 use std::process::ExitCode;
-use zipnn::codec::{compress_with_report, decompress_with, inspect, CodecConfig, MethodPolicy};
+use zipnn::codec::{compress_with_report, decompress_path, inspect, CodecConfig, MethodPolicy};
 use zipnn::delta::DeltaCodec;
 use zipnn::fp::stats::{exponent_histogram, summarize_exponents};
 use zipnn::fp::{DType, GroupLayout};
@@ -180,9 +180,11 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 .positional
                 .first()
                 .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
-            let data = std::fs::read(input)?;
+            // Zero-copy fast path: the container is memory-mapped and the
+            // decoder reads payload bytes straight from the page cache
+            // (set ZIPNN_NO_MMAP=1 to force the buffered-read fallback).
             let t = Timer::start();
-            let raw = decompress_with(&data, args.usize_flag("threads", 1))?;
+            let raw = decompress_path(input, args.usize_flag("threads", 1))?;
             let out = args.flag("out", &format!("{input}.raw"));
             std::fs::write(&out, &raw)?;
             println!(

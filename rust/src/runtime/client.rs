@@ -37,9 +37,10 @@ impl Runtime {
 
     /// Compile (cached) the named artifact. Artifacts may be stored
     /// ZipNN-compressed (`<file>.znn`, either container format); those are
-    /// streamed through a [`crate::codec::ZnnReader`] straight off the
-    /// disk reader — the decompressed HLO text is spooled to a temp file
-    /// for the PJRT text parser, never held in memory alongside it.
+    /// decoded through a [`crate::codec::ZnnReader`] over a memory-mapped
+    /// container (zero-copy payload reads) — the decompressed HLO text is
+    /// spooled to a temp file for the PJRT text parser, never held in
+    /// memory alongside it.
     fn executable(&self, name: &str) -> Result<()> {
         let mut cache = self.cache.lock().unwrap();
         if cache.contains_key(name) {
@@ -57,8 +58,10 @@ impl Runtime {
                     name, path, znn
                 )));
             }
-            let file = std::fs::File::open(&znn)?;
-            let mut reader = crate::codec::ZnnReader::new(std::io::BufReader::new(file))?;
+            // Zero-copy fast path: map the container so decode reads the
+            // compressed payload straight from the page cache (falls back
+            // to a buffered read off-mmap or under ZIPNN_NO_MMAP=1).
+            let mut reader = crate::codec::ZnnReader::open(&znn)?;
             // Unique, sanitized spool path: artifact names may contain
             // path separators, and two Runtimes in one process may
             // compile the same artifact concurrently.

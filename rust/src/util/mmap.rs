@@ -1,0 +1,300 @@
+//! Dependency-free read-only memory mapping.
+//!
+//! Like [`crate::hub::sys`], this module declares the handful of libc
+//! symbols it needs directly (the C library is already linked by `std`)
+//! instead of pulling in a crate. It provides exactly what the zero-copy
+//! decode path needs: map a file read-only, hand out a `&[u8]`, drop the
+//! mapping, and issue best-effort prefetch hints.
+//!
+//! Non-Unix platforms get no mapping support ([`Mmap::map`] returns
+//! `Unsupported`); callers such as [`crate::codec::ByteSource::open`]
+//! fall back to plain buffered streaming, so the fast path degrades
+//! instead of failing.
+//!
+//! ## Safety contract
+//!
+//! A mapping is only as stable as its backing file: if another process
+//! truncates the file while it is mapped, touching the vanished pages
+//! raises `SIGBUS`. The callers in this crate map files they own (spool
+//! files are unlinked right after mapping) or that the operator points
+//! them at; `ZIPNN_NO_MMAP=1` disables mapping everywhere for
+//! environments where that contract cannot hold.
+
+use std::fs::File;
+use std::io;
+
+/// A read-only memory mapping of an entire file.
+///
+/// Dereferences to `&[u8]`. The mapping is private (`MAP_PRIVATE`) and
+/// never written through, so sharing it across threads is sound.
+pub struct Mmap {
+    /// Base address (dangling for the empty mapping, which mmap rejects).
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is created PROT_READ and this type exposes no
+// mutation; concurrent reads of immutable pages are safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `file` read-only in its entirety.
+    ///
+    /// Empty files yield an empty mapping without calling `mmap(2)`
+    /// (the syscall rejects zero lengths). On non-Unix platforms this
+    /// returns `ErrorKind::Unsupported`.
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+        }
+        let len = usize::try_from(len).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidInput, "file too large to map")
+        })?;
+        sys::map_file(file, len)
+    }
+
+    /// The mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` is either a live PROT_READ mapping of `len` bytes
+        // (until Drop) or dangling with len == 0.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the mapping is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Best-effort `madvise(MADV_SEQUENTIAL)` over the whole mapping:
+    /// tells the kernel to read ahead aggressively and drop pages behind
+    /// the cursor. Ignored on error or off Unix.
+    pub fn advise_sequential(&self) {
+        if self.len > 0 {
+            sys::advise(self.ptr, 0, self.len, sys::Advice::Sequential);
+        }
+    }
+
+    /// Best-effort `madvise(MADV_WILLNEED)` on `[off, off + len)`: starts
+    /// the page-in of an upcoming range so decode does not stall on
+    /// faults. Out-of-range portions are clamped; errors are ignored.
+    pub fn advise_willneed(&self, off: usize, len: usize) {
+        if off >= self.len || len == 0 {
+            return;
+        }
+        let len = len.min(self.len - off);
+        sys::advise(self.ptr, off, len, sys::Advice::WillNeed);
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            sys::unmap(self.ptr, self.len);
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    use super::Mmap;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+    const MADV_SEQUENTIAL: i32 = 2;
+    const MADV_WILLNEED: i32 = 3;
+    /// Assumed lower bound on the page size for hint alignment; madvise
+    /// needs a page-aligned address, and every supported platform uses
+    /// pages of at least 4 KiB (hints on a coarser grain are still valid).
+    const PAGE: usize = 4096;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+        fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
+    }
+
+    pub(super) enum Advice {
+        Sequential,
+        WillNeed,
+    }
+
+    pub(super) fn map_file(file: &File, len: usize) -> io::Result<Mmap> {
+        // SAFETY: plain mmap of a readable fd; the result is checked
+        // against MAP_FAILED before use.
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == usize::MAX as *mut c_void {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr: ptr as *mut u8, len })
+    }
+
+    pub(super) fn unmap(ptr: *mut u8, len: usize) {
+        // SAFETY: `ptr/len` came from a successful mmap and are unmapped
+        // exactly once (Drop).
+        unsafe {
+            munmap(ptr as *mut c_void, len);
+        }
+    }
+
+    pub(super) fn advise(base: *mut u8, off: usize, len: usize, advice: Advice) {
+        let advice = match advice {
+            Advice::Sequential => MADV_SEQUENTIAL,
+            Advice::WillNeed => MADV_WILLNEED,
+        };
+        // Round the start down to a page boundary (madvise requires an
+        // aligned address); extend the length to cover the original range.
+        let aligned = off & !(PAGE - 1);
+        let len = len + (off - aligned);
+        // SAFETY: the range lies within the live mapping (clamped by the
+        // caller); madvise is a hint and its failure is ignored.
+        unsafe {
+            madvise(base.add(aligned) as *mut c_void, len, advice);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+
+    use super::Mmap;
+
+    pub(super) enum Advice {
+        Sequential,
+        WillNeed,
+    }
+
+    pub(super) fn map_file(_file: &File, _len: usize) -> io::Result<Mmap> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "memory mapping is not supported on this platform",
+        ))
+    }
+
+    pub(super) fn unmap(_ptr: *mut u8, _len: usize) {}
+
+    pub(super) fn advise(_base: *mut u8, _off: usize, _len: usize, _advice: Advice) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_file(tag: &str, contents: &[u8]) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "zipnn-mmap-test-{}-{}-{tag}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let path = tmp_file("contents", &data);
+        {
+            let file = File::open(&path).unwrap();
+            let map = Mmap::map(&file).unwrap();
+            assert_eq!(map.len(), data.len());
+            assert_eq!(&map[..], &data[..]);
+            // hints must be harmless anywhere in (or past) the range
+            map.advise_sequential();
+            map.advise_willneed(0, map.len());
+            map.advise_willneed(4097, 123);
+            map.advise_willneed(map.len(), 1);
+            map.advise_willneed(0, 0);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp_file("empty", b"");
+        {
+            let file = File::open(&path).unwrap();
+            let map = Mmap::map(&file).unwrap();
+            assert!(map.is_empty());
+            assert_eq!(&map[..], b"");
+            map.advise_sequential();
+            map.advise_willneed(0, 1);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mapping_outlives_unlink() {
+        // The spool path relies on this: map, unlink, keep reading.
+        let data = vec![0xA5u8; 64 * 1024];
+        let path = tmp_file("unlink", &data);
+        let file = File::open(&path).unwrap();
+        let map = Mmap::map(&file).unwrap();
+        drop(file);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(&map[..], &data[..]);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let data: Vec<u8> = (0..32_768u32).map(|i| (i * 7 % 256) as u8).collect();
+        let path = tmp_file("threads", &data);
+        let file = File::open(&path).unwrap();
+        let map = std::sync::Arc::new(Mmap::map(&file).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let m = std::sync::Arc::clone(&map);
+            let expect = data.clone();
+            handles.push(std::thread::spawn(move || {
+                let lo = t * 8192;
+                assert_eq!(&m[lo..lo + 8192], &expect[lo..lo + 8192]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

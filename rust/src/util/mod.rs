@@ -1,9 +1,10 @@
 //! Small shared utilities: PRNG, bit I/O, JSON mini-parser, timers,
-//! human-readable sizes.
+//! human-readable sizes, read-only memory mapping.
 
 pub mod bitio;
 pub mod human;
 pub mod json;
+pub mod mmap;
 pub mod prng;
 pub mod timer;
 

@@ -1,11 +1,16 @@
-//! Steady-state allocation test for the **decode** path: once the
+//! Steady-state allocation tests for the **decode** path: once the
 //! streaming reader's arena (group buffers + the per-worker Huffman
 //! decode-table cache) has warmed up, decompressing more input must not
 //! allocate — historically every Huffman stream re-boxed an 8 KiB
 //! `DecodeTable`, which made decode allocations O(streams).
 //!
-//! This binary installs the counting global allocator; it holds exactly
-//! one test so no concurrent test pollutes the counter.
+//! Two scenarios share the one test (the counter is global, so no second
+//! test may run concurrently): the inline single-threaded path, and the
+//! **persistent-pool** path (`with_threads > 1`), which must sustain many
+//! refills without per-batch thread spawns — a spawn costs dozens of
+//! allocations (stack, handle, channel wiring), so the flat-allocation
+//! bound doubles as a no-spawn-per-batch check — and with per-worker
+//! sticky arenas staying warm across batches.
 
 use std::io::{Read, Write};
 use zipnn::bench_support::{alloc_count, CountingAlloc};
@@ -35,8 +40,14 @@ fn nonzero_bf16ish(n_bytes: usize, seed: u64) -> Vec<u8> {
 #[test]
 fn steady_state_decompression_does_not_allocate() {
     const MIB: usize = 1 << 20;
+    // Pin the shared decode pool to 2 workers so the pooled section below
+    // warms every worker's sticky arena during its warm-up reads (a large
+    // pool could route a measured batch to a never-touched worker, whose
+    // first-use arena growth would pollute the steady-state windows).
+    // Must happen before the first parallel decode spins the pool up.
+    std::env::set_var("ZIPNN_DECODE_WORKERS", "2");
     let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(64 * 1024);
-    let data = nonzero_bf16ish(16 * MIB, 43);
+    let data = nonzero_bf16ish(20 * MIB, 43);
     let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
     w.write_all(&data).unwrap();
     let container = w.finish().unwrap();
@@ -82,5 +93,46 @@ fn steady_state_decompression_does_not_allocate() {
         allocs_b <= 48,
         "steady-state decode window B performed {allocs_b} allocations; expected ~0 \
          (arena warm, Huffman/Raw paths only)"
+    );
+
+    // --- persistent-pool path: many refills, threads > 1 ---------------
+    //
+    // Decode workers are created once (the process-shared pool), never
+    // per batch. Steady state per refill is bounded by a handful of
+    // fixed-size submissions (boxed helper job + queue node); everything
+    // else — batch buffers, sticky worker arenas, decode tables — is
+    // reused. A thread spawn per batch (the old scoped-worker refill) or
+    // a per-chunk piece buffer would blow these bounds by an order of
+    // magnitude.
+    let mut r = ZnnReader::new(container.as_slice()).unwrap().with_threads(2);
+
+    // Warm-up: sizes both double buffers, spins up the shared pool (2
+    // workers), and warms the workers' sticky arenas + table caches —
+    // 8 refills at the 1 MiB ZNS1 frame batch.
+    read_exactly(&mut r, &mut buf, 8 * MIB);
+
+    // Window A: 4 refills. Window B: 8 refills — twice the batches.
+    let before_a = alloc_count();
+    read_exactly(&mut r, &mut buf, 4 * MIB);
+    let pool_a = alloc_count() - before_a;
+    let before_b = alloc_count();
+    read_exactly(&mut r, &mut buf, 8 * MIB);
+    let pool_b = alloc_count() - before_b;
+
+    // Bounds are sized to discriminate regimes, with slack for a late
+    // first-touch of a pool worker's arena: the old per-batch scoped
+    // spawn cost ~2 spawns + joins per refill (hundreds of allocations
+    // over 8 refills), and per-chunk piece buffers would cost ≥ 128.
+    // Steady state here is a boxed helper job per refill.
+    assert!(
+        pool_b <= pool_a + 48,
+        "pooled decode allocations scale with refills: window A (4 refills) = {pool_a}, \
+         window B (8 refills) = {pool_b}"
+    );
+    assert!(
+        pool_b <= 96,
+        "steady-state pooled decode window B performed {pool_b} allocations over 8 refills; \
+         expected a few per refill (helper-job submission only — no thread spawns, \
+         no batch buffers)"
     );
 }

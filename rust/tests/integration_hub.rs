@@ -44,6 +44,50 @@ fn upload_download_roundtrip_compressed_and_raw() {
     server.shutdown();
 }
 
+/// With a spool directory, PUT bodies land on disk and GETs are served
+/// from a memory mapping of the (unlinked) spool file — bytes must stay
+/// exact, stat must keep reporting the bounded frames, and the spool dir
+/// must hold no leftover files (mappings outlive the unlink).
+#[test]
+fn spooled_store_serves_gets_from_mapping() {
+    let dir = std::env::temp_dir().join(format!("zipnn-hub-spool-{}", std::process::id()));
+    let server = HubServer::builder().spool_dir(&dir).start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+    let model = generate(&SyntheticSpec::new("m", Category::RegularBF16, 2 << 20, 13));
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 13);
+
+    client
+        .upload("m", &raw, Some(CodecConfig::for_dtype(DType::BF16)), &mut sim)
+        .unwrap();
+    client.upload("m", &raw, None, &mut sim).unwrap();
+
+    let (total, frames, max_frame) = client.stat("m").unwrap();
+    assert_eq!(total as usize, raw.len());
+    assert!(frames >= 1);
+    assert!(max_frame <= FRAME_MAX);
+
+    let (got_c, _) = client.download("m", true, &mut sim).unwrap();
+    assert_eq!(got_c, raw, "compressed spooled path returns exact bytes");
+    let (got_r, _) = client.download("m", false, &mut sim).unwrap();
+    assert_eq!(got_r, raw, "raw spooled path returns exact bytes");
+
+    // Overwrite and re-read: the store swaps to a fresh mapping.
+    let raw2: Vec<u8> = raw.iter().map(|b| b.wrapping_add(1)).collect();
+    client.upload("m", &raw2, None, &mut sim).unwrap();
+    let (got2, _) = client.download("m", false, &mut sim).unwrap();
+    assert_eq!(got2, raw2);
+
+    // Spool files are unlinked right after mapping (Unix).
+    #[cfg(unix)]
+    {
+        let leftover = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(leftover, 0, "{leftover} spool files leaked");
+    }
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn missing_blob_errors() {
     let server = HubServer::start().unwrap();

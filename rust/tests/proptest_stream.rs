@@ -1,0 +1,152 @@
+//! Property test: the zero-copy mapped decode path is byte-identical to
+//! the `io::Read` streaming decode path — across random payload shapes,
+//! chunk sizes, thread counts, and both container formats (`ZNN1`
+//! one-shot and `ZNS1` streaming).
+//!
+//! Hand-rolled randomized cases (no proptest crate offline), in the style
+//! of `proptest_invariants.rs` / `proptest_protocol.rs`: one seeded PRNG
+//! drives payload generation and parameter choice, so failures replay
+//! deterministically from the case number.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use zipnn::codec::{CodecConfig, Compressor, MappedBytes, ZnnReader, ZnnWriter};
+use zipnn::fp::DType;
+use zipnn::util::Xoshiro256;
+
+fn tmp_path(case: usize) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "zipnn-proptest-stream-{}-{case}.znn",
+        std::process::id()
+    ))
+}
+
+/// Random payload with codec-relevant shape: BF16-like gaussians, raw
+/// random bytes, zero runs, or a mix — sized to cross several batches at
+/// small chunk sizes, including the empty and sub-element cases.
+fn random_payload(rng: &mut Xoshiro256) -> Vec<u8> {
+    let kind = rng.below(4);
+    let len = match rng.below(4) {
+        0 => rng.below(3),                 // 0..=2: empty / tail-only
+        1 => 1 + rng.below(4_000),         // sub-chunk
+        _ => 50_000 + rng.below(400_000),  // multi-batch
+    };
+    let mut out = vec![0u8; len];
+    match kind {
+        0 => {
+            // BF16-like: skewed exponent byte, random mantissa
+            for pair in out.chunks_exact_mut(2) {
+                pair[0] = rng.next_u32() as u8;
+                pair[1] = 120 + (rng.uniform().powi(2) * 12.0) as u8;
+            }
+        }
+        1 => rng.fill_bytes(&mut out),
+        2 => {} // all zeros
+        _ => {
+            // mixed: random with zero runs
+            rng.fill_bytes(&mut out);
+            let mut at = 0usize;
+            while at < out.len() {
+                let run = 1 + rng.below(9_000);
+                let hi = (at + run).min(out.len());
+                if rng.below(2) == 0 {
+                    out[at..hi].fill(0);
+                }
+                at = hi;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn mapped_decode_equals_stream_decode() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EED_CA5E);
+    for case in 0..24 {
+        let raw = random_payload(&mut rng);
+        let dtype = if rng.below(2) == 0 { DType::BF16 } else { DType::F32 };
+        let chunk_size = [1024usize, 4096, 64 * 1024, 256 * 1024][rng.below(4)];
+        let write_threads = 1 + rng.below(4);
+        let cfg = CodecConfig::for_dtype(dtype)
+            .with_chunk_size(chunk_size)
+            .with_threads(write_threads);
+
+        // Either container version, randomly.
+        let container = if rng.below(2) == 0 {
+            Compressor::new(cfg).compress(&raw).unwrap()
+        } else {
+            let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+            w.write_all(&raw).unwrap();
+            w.finish().unwrap()
+        };
+        let path = tmp_path(case);
+        std::fs::write(&path, &container).unwrap();
+
+        let ctx = format!(
+            "case {case}: len={} dtype={dtype:?} chunk={chunk_size} wthreads={write_threads}",
+            raw.len()
+        );
+        for decode_threads in [1usize, 2, 4] {
+            // io::Read streaming path (the reference)
+            let file = std::fs::File::open(&path).unwrap();
+            let mut streamed = Vec::new();
+            ZnnReader::new(std::io::BufReader::new(file))
+                .unwrap()
+                .with_threads(decode_threads)
+                .read_to_end(&mut streamed)
+                .unwrap();
+            assert_eq!(streamed, raw, "{ctx} dthreads={decode_threads} stream");
+
+            // mmap'd file path
+            let mut mapped = Vec::new();
+            ZnnReader::open(&path)
+                .unwrap()
+                .with_threads(decode_threads)
+                .read_to_end(&mut mapped)
+                .unwrap();
+            assert_eq!(mapped, raw, "{ctx} dthreads={decode_threads} mapped");
+
+            // owned-buffer zero-copy source (the mmap fallback machinery)
+            let mut owned = Vec::new();
+            ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+                .unwrap()
+                .with_threads(decode_threads)
+                .read_to_end(&mut owned)
+                .unwrap();
+            assert_eq!(owned, raw, "{ctx} dthreads={decode_threads} owned");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// Truncating a mapped container anywhere must error (or at minimum never
+/// silently yield the full payload) on every decode path, exactly like
+/// the streaming reader.
+#[test]
+fn truncated_mapped_containers_rejected() {
+    let mut rng = Xoshiro256::seed_from_u64(0xBAD_F00D);
+    let mut raw = vec![0u8; 150_000];
+    for pair in raw.chunks_exact_mut(2) {
+        pair[0] = rng.next_u32() as u8;
+        pair[1] = 120 + (rng.uniform() * 10.0) as u8;
+    }
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+    w.write_all(&raw).unwrap();
+    let container = w.finish().unwrap();
+    for _ in 0..16 {
+        let cut = rng.below(container.len());
+        for threads in [1usize, 3] {
+            let r = ZnnReader::from_mapped(MappedBytes::from_vec(container[..cut].to_vec()));
+            let outcome = r.and_then(|r| {
+                let mut out = Vec::new();
+                r.with_threads(threads).read_to_end(&mut out)?;
+                Ok(out)
+            });
+            match outcome {
+                Err(_) => {}
+                Ok(out) => assert_ne!(out, raw, "cut={cut} roundtripped silently"),
+            }
+        }
+    }
+}
