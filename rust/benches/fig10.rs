@@ -141,6 +141,43 @@ fn main() {
              ({decode_threads} threads, persistent pool)"
         );
 
+        // Tensor range-GET (the ROADMAP "Range-GET of individual
+        // tensors" metric): upload the model with a tensor index, then
+        // fetch its largest tensor — only the covering frames travel the
+        // wire, decoded client-side as they arrive.
+        let spans = zipnn::model::tensor_spans(&m);
+        let biggest = spans
+            .iter()
+            .max_by_key(|t| t.len)
+            .expect("models have tensors")
+            .clone();
+        let idx_name = format!("idx-{seed}");
+        client
+            .upload_indexed(&idx_name, &raw, spans, CodecConfig::for_dtype(dtype), &mut dsim)
+            .unwrap();
+        let (stored_total, _, _) = client.stat(&format!("{idx_name}.znn")).unwrap();
+        let _ = client.get_tensor(&idx_name, &biggest.name).unwrap(); // warm pools
+        let t = Timer::start();
+        let (tensor_bytes, wire) = client.get_tensor(&idx_name, &biggest.name).unwrap();
+        let range_secs = t.secs();
+        assert_eq!(tensor_bytes.len() as u64, biggest.len);
+        let tensor_mb = biggest.len as f64 / (1024.0 * 1024.0);
+        json_line(
+            "fig10_range",
+            &[
+                ("model_seed", seed as f64),
+                ("tensor_mb", tensor_mb),
+                ("range_get_mb_s", tensor_mb / range_secs.max(1e-9)),
+                ("wire_frac", wire as f64 / stored_total as f64),
+            ],
+        );
+        println!(
+            "{name}: tensor range-GET {:.0} MB/s ({} tensor, {:.0}% of the container on the wire)",
+            tensor_mb / range_secs.max(1e-9),
+            human_bytes(biggest.len),
+            wire as f64 / stored_total as f64 * 100.0
+        );
+
         // downloads across regimes (10 cached / 5 first, like the paper)
         for (profile, reps) in [
             (NetProfile::CLOUD_FIRST, 5),

@@ -16,6 +16,10 @@ pub const MAGIC: [u8; 4] = *b"ZNN1";
 pub const VERSION: u8 = 1;
 /// Header flag: a checksum of the raw buffer is present.
 pub const FLAG_CHECKSUM: u8 = 1;
+/// Header flag: a tensor index section (see [`crate::codec::index`])
+/// follows the payload. Readers that ignore the flag still decode the
+/// payload unchanged — the index is strictly trailing.
+pub const FLAG_INDEX: u8 = 2;
 
 /// Fixed-size part of the container header.
 #[derive(Debug, Clone, PartialEq)]
@@ -202,10 +206,21 @@ pub fn parse(data: &[u8]) -> Result<ContainerInfo> {
         )));
     }
     let payload_start = off + table_bytes;
-    if (data.len() - payload_start) as u64 != payload_off {
+    // An indexed container carries a trailing index section (+ footer)
+    // after the payload; account for it so the strict length check still
+    // catches truncation and padding.
+    let trailing = if flags & FLAG_INDEX != 0 {
+        crate::codec::index::trailing_len(data)
+            .ok_or_else(|| Error::Corrupt("index flag set but no index section".into()))?
+    } else {
+        0
+    };
+    let body = data.len() - payload_start;
+    if body.checked_sub(trailing).map(|p| p as u64) != Some(payload_off) {
         return Err(Error::Corrupt(format!(
-            "payload length {} != table total {payload_off}",
-            data.len() - payload_start
+            "payload length {} (container minus {trailing} index bytes) != table \
+             total {payload_off}",
+            body.saturating_sub(trailing)
         )));
     }
     Ok(ContainerInfo {

@@ -1,0 +1,438 @@
+//! Optional tensor→chunk index section for `.znn` containers (ROADMAP
+//! "Range-GET of individual tensors").
+//!
+//! The index maps tensor names to byte ranges of the *raw* payload and —
+//! for the streaming `ZNS1` format — records the file offset of every
+//! frame, so a random-access reader can decode exactly the chunks covering
+//! one tensor instead of the whole container, and a hub server can slice
+//! the covering frames straight out of a spooled memory mapping.
+//!
+//! The section is appended **after** the container payload (`ZNN1`) or
+//! trailer (`ZNS1`), so readers that do not know about it keep decoding
+//! unchanged: the streaming [`crate::codec::ZnnReader`] stops at the
+//! trailer / table end and never sees the extra bytes. A fixed-size footer
+//! at the very end lets random-access readers locate the section without
+//! scanning:
+//!
+//! ```text
+//! section: "ZIDX" [version u8] [kind u8: 1 = ZNN1, 2 = ZNS1]
+//!          [total_len u64] [chunk_size u32]
+//!          [tail_len u8] [tail bytes]            (ZNS1 trailer tail copy)
+//!          [trailer_off u64]     (ZNS1: offset of the 0xF6 trailer;
+//!                                 ZNN1: payload end = index start)
+//!          [n_frames u32] [frame_off u64 × n]    (ZNS1 frame directory)
+//!          [n_tensors u32]
+//!          tensor: [name_len u16] [name] [dtype u8] [offset u64] [len u64]
+//! footer:  [section_len u64] "ZIDX"
+//! ```
+//!
+//! `ZNN1` containers flag the section with
+//! [`crate::codec::container::FLAG_INDEX`] so the strict one-shot parser
+//! can account for the trailing bytes; `ZNS1` needs no flag (the trailer
+//! delimits the payload).
+
+use crate::error::{Error, Result};
+use crate::fp::DType;
+
+/// Index section (and footer) magic.
+pub const INDEX_MAGIC: [u8; 4] = *b"ZIDX";
+/// Index section version.
+pub const INDEX_VERSION: u8 = 1;
+/// Fixed footer size: section length (u64) + magic.
+pub const INDEX_FOOTER_LEN: usize = 12;
+
+/// Caps guarding against absurd allocations from corrupt sections.
+const NAME_MAX: usize = 4096;
+const COUNT_MAX: u64 = 1 << 24;
+
+/// Which container format the index describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerKind {
+    /// `ZNN1` one-shot: stream table up front, payload offsets derivable.
+    OneShot,
+    /// `ZNS1` streaming: per-frame offsets recorded in the directory.
+    Streaming,
+}
+
+impl ContainerKind {
+    fn tag(self) -> u8 {
+        match self {
+            ContainerKind::OneShot => 1,
+            ContainerKind::Streaming => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Option<ContainerKind> {
+        match t {
+            1 => Some(ContainerKind::OneShot),
+            2 => Some(ContainerKind::Streaming),
+            _ => None,
+        }
+    }
+}
+
+/// One tensor's placement within the raw (decompressed) payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    /// Tensor name (e.g. `"blocks.3.attn.wq"`).
+    pub name: String,
+    /// Element dtype.
+    pub dtype: DType,
+    /// Byte offset within the raw payload.
+    pub offset: u64,
+    /// Byte length within the raw payload.
+    pub len: u64,
+}
+
+/// Parsed tensor→chunk index of a container.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorIndex {
+    /// Container format the index describes.
+    pub kind: ContainerKind,
+    /// Total raw payload length.
+    pub total_len: u64,
+    /// Raw bytes per chunk.
+    pub chunk_size: u32,
+    /// Copy of the `ZNS1` trailer tail (< 16 non-element-aligned bytes;
+    /// empty for `ZNN1`) so range decodes covering the tail need not
+    /// touch the trailer.
+    pub tail: Vec<u8>,
+    /// `ZNS1`: file offset of the `0xF6` trailer marker (= end of the
+    /// last frame). `ZNN1`: offset of the payload end (= index start).
+    pub trailer_off: u64,
+    /// `ZNS1`: file offset of each frame's `0xF5` marker (empty for
+    /// `ZNN1`, whose table makes payload offsets derivable).
+    pub frame_offsets: Vec<u64>,
+    /// Tensor directory, in payload order.
+    pub tensors: Vec<TensorMeta>,
+}
+
+impl TensorIndex {
+    /// Look a tensor up by name.
+    pub fn find(&self, name: &str) -> Option<&TensorMeta> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Raw payload length covered by whole chunks (everything but the
+    /// trailer tail).
+    pub fn aligned_len(&self) -> u64 {
+        self.total_len.saturating_sub(self.tail.len() as u64)
+    }
+
+    /// Serialize section + footer (the bytes appended to a container).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + 8 * self.frame_offsets.len()
+                + self.tensors.iter().map(|t| 27 + t.name.len()).sum::<usize>(),
+        );
+        out.extend_from_slice(&INDEX_MAGIC);
+        out.push(INDEX_VERSION);
+        out.push(self.kind.tag());
+        out.extend_from_slice(&self.total_len.to_le_bytes());
+        out.extend_from_slice(&self.chunk_size.to_le_bytes());
+        out.push(self.tail.len() as u8);
+        out.extend_from_slice(&self.tail);
+        out.extend_from_slice(&self.trailer_off.to_le_bytes());
+        out.extend_from_slice(&(self.frame_offsets.len() as u32).to_le_bytes());
+        for f in &self.frame_offsets {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(t.name.as_bytes());
+            out.push(t.dtype.tag());
+            out.extend_from_slice(&t.offset.to_le_bytes());
+            out.extend_from_slice(&t.len.to_le_bytes());
+        }
+        let section_len = out.len() as u64;
+        out.extend_from_slice(&section_len.to_le_bytes());
+        out.extend_from_slice(&INDEX_MAGIC);
+        out
+    }
+
+    /// Parse a section (without the footer), validating magic and caps.
+    pub fn parse_section(data: &[u8]) -> Result<TensorIndex> {
+        let mut c = Cursor { data, at: 0 };
+        if c.bytes(4)? != INDEX_MAGIC {
+            return Err(Error::Corrupt("bad index section magic".into()));
+        }
+        let version = c.u8()?;
+        if version != INDEX_VERSION {
+            return Err(Error::Corrupt(format!("unsupported index version {version}")));
+        }
+        let kind = ContainerKind::from_tag(c.u8()?)
+            .ok_or_else(|| Error::Corrupt("bad index container kind".into()))?;
+        let total_len = c.u64()?;
+        let chunk_size = c.u32()?;
+        if chunk_size == 0 {
+            return Err(Error::Corrupt("index chunk size zero".into()));
+        }
+        let tail_len = c.u8()? as usize;
+        if tail_len >= 16 {
+            return Err(Error::Corrupt(format!("bad index tail length {tail_len}")));
+        }
+        let tail = c.bytes(tail_len)?.to_vec();
+        if (tail.len() as u64) > total_len {
+            return Err(Error::Corrupt("index tail longer than payload".into()));
+        }
+        let trailer_off = c.u64()?;
+        let n_frames = c.u32()? as u64;
+        if n_frames > COUNT_MAX {
+            return Err(Error::Corrupt(format!("implausible frame count {n_frames}")));
+        }
+        // Capped pre-allocation: a corrupt count must not trigger a huge
+        // allocation before its bytes — which would have to exist — are
+        // read (same guard as the container table parsers).
+        let mut frame_offsets = Vec::with_capacity((n_frames as usize).min(1 << 16));
+        let mut prev = 0u64;
+        for _ in 0..n_frames {
+            let off = c.u64()?;
+            if off < prev || off > trailer_off {
+                return Err(Error::Corrupt("index frame offsets not monotonic".into()));
+            }
+            prev = off;
+            frame_offsets.push(off);
+        }
+        let n_tensors = c.u32()? as u64;
+        if n_tensors > COUNT_MAX {
+            return Err(Error::Corrupt(format!("implausible tensor count {n_tensors}")));
+        }
+        let mut tensors = Vec::with_capacity((n_tensors as usize).min(1 << 16));
+        for _ in 0..n_tensors {
+            let name_len = c.u16()? as usize;
+            if name_len > NAME_MAX {
+                return Err(Error::Corrupt("index tensor name too long".into()));
+            }
+            let name = String::from_utf8(c.bytes(name_len)?.to_vec())
+                .map_err(|_| Error::Corrupt("index tensor name not utf8".into()))?;
+            let dtype = DType::from_tag(c.u8()?)?;
+            let offset = c.u64()?;
+            let len = c.u64()?;
+            let end = offset
+                .checked_add(len)
+                .ok_or_else(|| Error::Corrupt("index tensor range overflows".into()))?;
+            if end > total_len {
+                return Err(Error::Corrupt(format!(
+                    "index tensor '{name}' extends past payload ({end} > {total_len})"
+                )));
+            }
+            tensors.push(TensorMeta { name, dtype, offset, len });
+        }
+        if c.at != data.len() {
+            return Err(Error::Corrupt("trailing bytes after index section".into()));
+        }
+        Ok(TensorIndex { kind, total_len, chunk_size, tail, trailer_off, frame_offsets, tensors })
+    }
+}
+
+/// Given a container's total byte length and its last
+/// [`INDEX_FOOTER_LEN`] bytes, locate the index section. Returns
+/// `(section_offset, section_len)`, or `None` when no index is present
+/// (the footer does not parse as one).
+pub fn section_span(container_len: u64, footer: &[u8]) -> Option<(u64, usize)> {
+    if footer.len() != INDEX_FOOTER_LEN || footer[8..12] != INDEX_MAGIC {
+        return None;
+    }
+    let section_len = u64::from_le_bytes(footer[..8].try_into().unwrap());
+    let budget = container_len.checked_sub(INDEX_FOOTER_LEN as u64)?;
+    if section_len < 6 || section_len > budget {
+        return None;
+    }
+    Some((budget - section_len, section_len as usize))
+}
+
+/// Probe in-memory container bytes for an index. `Ok(None)` when the
+/// container carries no index; `Err` only when a footer *claims* an index
+/// whose section fails to parse.
+pub fn probe_bytes(data: &[u8]) -> Result<Option<TensorIndex>> {
+    if data.len() < INDEX_FOOTER_LEN {
+        return Ok(None);
+    }
+    let footer = &data[data.len() - INDEX_FOOTER_LEN..];
+    let Some((off, len)) = section_span(data.len() as u64, footer) else {
+        return Ok(None);
+    };
+    let section = &data[off as usize..off as usize + len];
+    if section.len() < 4 || section[..4] != INDEX_MAGIC {
+        // The trailing bytes merely *looked* like a footer.
+        return Ok(None);
+    }
+    TensorIndex::parse_section(section).map(Some)
+}
+
+/// Probe a container file's tail for an index without mapping or reading
+/// the body (the `ZIPNN_NO_MMAP` / unmappable-filesystem fallback path).
+pub fn probe_file(path: &std::path::Path) -> Result<Option<TensorIndex>> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path)?;
+    let flen = f.seek(SeekFrom::End(0))?;
+    if flen < INDEX_FOOTER_LEN as u64 {
+        return Ok(None);
+    }
+    let mut footer = [0u8; INDEX_FOOTER_LEN];
+    f.seek(SeekFrom::End(-(INDEX_FOOTER_LEN as i64)))?;
+    f.read_exact(&mut footer)?;
+    let Some((off, len)) = section_span(flen, &footer) else {
+        return Ok(None);
+    };
+    let mut section = vec![0u8; len];
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(&mut section)?;
+    if section.len() < 4 || section[..4] != INDEX_MAGIC {
+        return Ok(None);
+    }
+    TensorIndex::parse_section(&section).map(Some)
+}
+
+/// Byte length of the trailing index (section + footer) of `data`, when
+/// present and plausibly framed. Used by the strict `ZNN1` parser to
+/// account for indexed containers' trailing bytes.
+pub(crate) fn trailing_len(data: &[u8]) -> Option<usize> {
+    if data.len() < INDEX_FOOTER_LEN {
+        return None;
+    }
+    let footer = &data[data.len() - INDEX_FOOTER_LEN..];
+    let (off, len) = section_span(data.len() as u64, footer)?;
+    if data[off as usize..off as usize + 4] != INDEX_MAGIC {
+        return None;
+    }
+    Some(len + INDEX_FOOTER_LEN)
+}
+
+/// Append a tensor index to an existing (index-free) `ZNN1` container and
+/// set [`crate::codec::container::FLAG_INDEX`] in its header. The
+/// container's payload bytes are untouched, so index-unaware streaming
+/// readers keep decoding it.
+pub fn append_to_znn1(container: &mut Vec<u8>, tensors: Vec<TensorMeta>) -> Result<()> {
+    let info = crate::codec::container::parse(container)?;
+    if container[5] & crate::codec::container::FLAG_INDEX != 0 {
+        return Err(Error::Invalid("container already carries an index".into()));
+    }
+    for t in &tensors {
+        let end = t
+            .offset
+            .checked_add(t.len)
+            .ok_or_else(|| Error::Invalid(format!("tensor '{}' range overflows", t.name)))?;
+        if end > info.header.total_len {
+            return Err(Error::Invalid(format!(
+                "tensor '{}' extends past payload ({end} > {})",
+                t.name, info.header.total_len
+            )));
+        }
+    }
+    let idx = TensorIndex {
+        kind: ContainerKind::OneShot,
+        total_len: info.header.total_len,
+        chunk_size: info.header.chunk_size,
+        tail: Vec::new(),
+        trailer_off: container.len() as u64,
+        frame_offsets: Vec::new(),
+        tensors,
+    };
+    container[5] |= crate::codec::container::FLAG_INDEX;
+    container.extend_from_slice(&idx.encode());
+    Ok(())
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| Error::Corrupt("index section truncated".into()))?;
+        let s = &self.data[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TensorIndex {
+        TensorIndex {
+            kind: ContainerKind::Streaming,
+            total_len: 1000,
+            chunk_size: 64,
+            tail: vec![1, 2, 3],
+            trailer_off: 700,
+            frame_offsets: vec![12, 300, 650],
+            tensors: vec![
+                TensorMeta { name: "a".into(), dtype: DType::BF16, offset: 0, len: 600 },
+                TensorMeta { name: "b.c".into(), dtype: DType::F32, offset: 600, len: 400 },
+                TensorMeta { name: "empty".into(), dtype: DType::I8, offset: 600, len: 0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_parse_roundtrip() {
+        let idx = sample();
+        let enc = idx.encode();
+        let (off, len) =
+            section_span(enc.len() as u64, &enc[enc.len() - INDEX_FOOTER_LEN..]).unwrap();
+        assert_eq!(off, 0);
+        let back = TensorIndex::parse_section(&enc[..len]).unwrap();
+        assert_eq!(back, idx);
+        assert_eq!(back.find("b.c").unwrap().offset, 600);
+        assert!(back.find("nope").is_none());
+        assert_eq!(back.aligned_len(), 997);
+    }
+
+    #[test]
+    fn probe_bytes_absent_and_corrupt() {
+        assert!(probe_bytes(b"short").unwrap().is_none());
+        assert!(probe_bytes(&[0u8; 64]).unwrap().is_none());
+        // A present-but-corrupt section must error, not be ignored.
+        let idx = sample();
+        let mut enc = idx.encode();
+        let n = enc.len();
+        enc[n - 20] ^= 0xFF; // corrupt inside the section
+        let mut blob = vec![9u8; 40];
+        blob.extend_from_slice(&enc);
+        assert!(probe_bytes(&blob).is_err());
+    }
+
+    #[test]
+    fn oversized_counts_rejected() {
+        let idx = sample();
+        let mut enc = idx.encode();
+        // Patch n_frames (offset: 4+1+1+8+4+1+tail(3)+8 = 30) to a huge value.
+        enc[30..34].copy_from_slice(&u32::MAX.to_le_bytes());
+        let len = enc.len() - INDEX_FOOTER_LEN;
+        assert!(TensorIndex::parse_section(&enc[..len]).is_err());
+    }
+
+    #[test]
+    fn tensor_past_payload_rejected() {
+        let mut idx = sample();
+        idx.tensors[0].len = 2000;
+        let enc = idx.encode();
+        let len = enc.len() - INDEX_FOOTER_LEN;
+        assert!(TensorIndex::parse_section(&enc[..len]).is_err());
+    }
+}

@@ -21,6 +21,7 @@ pub mod auto;
 pub mod compress;
 pub mod container;
 pub mod decompress;
+pub mod index;
 pub mod parallel;
 pub mod stream;
 
@@ -28,6 +29,7 @@ pub use auto::{AutoPolicy, Method};
 pub use compress::{compress_with_report, Compressor, GroupReport};
 pub use container::{ContainerHeader, ContainerInfo, StreamEntry};
 pub use decompress::{decompress, decompress_with, inspect};
+pub use index::{ContainerKind, TensorIndex, TensorMeta};
 pub use stream::{
     decompress_path, decompress_reader, ByteSource, MappedBytes, ScratchArena, ZnnReader,
     ZnnWriter, STREAM_MAGIC,

@@ -6,12 +6,12 @@
 //! materialized client-side), and a compressed download decompresses
 //! through a [`ZnnReader`] as frames arrive off the wire.
 
-use crate::codec::{CodecConfig, ZnnReader, ZnnWriter};
+use crate::codec::{CodecConfig, TensorMeta, ZnnReader, ZnnWriter};
 use crate::error::{Error, Result};
 use crate::hub::netsim::NetSim;
 use crate::hub::protocol::{
-    read_response, read_response_header, write_request, write_request_header, ChunkedReader,
-    ChunkedWriter, Op,
+    encode_range, read_response, read_response_header, write_request, write_request_header,
+    ChunkedReader, ChunkedWriter, Op,
 };
 use crate::util::Timer;
 use std::io::{Read, Write};
@@ -196,6 +196,82 @@ impl HubClient {
             transfer_secs,
         };
         Ok((raw, report))
+    }
+
+    /// Upload raw bytes compressed **with a tensor index**: `tensors`
+    /// describe byte ranges of `raw` (e.g. from
+    /// [`crate::model::tensor_spans`]), and the resulting `{name}.znn`
+    /// container carries the index section, so single tensors can later
+    /// be fetched with [`HubClient::get_tensor`].
+    pub fn upload_indexed(
+        &mut self,
+        name: &str,
+        raw: &[u8],
+        tensors: Vec<TensorMeta>,
+        cfg: CodecConfig,
+        sim: &mut NetSim,
+    ) -> Result<TransferReport> {
+        write_request_header(&mut self.stream, Op::Put, &format!("{name}.znn"))?;
+        let t = Timer::start();
+        let body = ChunkedWriter::new(&mut self.stream);
+        let mut zw = ZnnWriter::new(body, cfg.with_threads(self.threads))?.with_index(tensors);
+        zw.write_all(raw)?;
+        let body = zw.finish()?;
+        let wire_len = body.payload_len() as usize;
+        body.finish()?;
+        let codec_secs = t.secs();
+        read_response(&mut self.stream)?;
+        Ok(TransferReport {
+            name: name.to_string(),
+            raw_len: raw.len(),
+            wire_len,
+            codec_secs,
+            transfer_secs: sim.transfer_secs(wire_len as u64),
+        })
+    }
+
+    /// Fetch a byte range `[offset, offset + len)` of a stored blob's
+    /// bytes (compressed container bytes for `.znn` blobs). The server
+    /// slices the range straight out of its spooled mapping.
+    pub fn get_range(&mut self, name: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        write_request(&mut self.stream, Op::Range, name, &encode_range(offset, len))?;
+        read_response(&mut self.stream)
+    }
+
+    /// Fetch a single tensor of an indexed `{name}.znn` container. Only
+    /// the frames covering the tensor travel the wire; they are decoded
+    /// as they arrive. Returns the tensor's raw bytes plus the response's
+    /// payload bytes on the wire (the bytes-on-wire measure asserted in
+    /// tests and reported by the fig10 bench).
+    pub fn get_tensor(&mut self, name: &str, tensor: &str) -> Result<(Vec<u8>, u64)> {
+        write_request(
+            &mut self.stream,
+            Op::GetTensor,
+            &format!("{name}.znn"),
+            tensor.as_bytes(),
+        )?;
+        let ok = read_response_header(&mut self.stream)?;
+        let mut body = ChunkedReader::new(&mut self.stream);
+        if !ok {
+            let mut msg = Vec::new();
+            body.read_to_end(&mut msg)?;
+            return Err(Error::Format(format!(
+                "hub error: {}",
+                String::from_utf8_lossy(&msg)
+            )));
+        }
+        // 24-byte placement header, then a self-contained ZNS1
+        // sub-container of the covering frames.
+        let mut meta = [0u8; 24];
+        body.read_exact(&mut meta)?;
+        let _base_raw = u64::from_le_bytes(meta[0..8].try_into().unwrap());
+        let rel = u64::from_le_bytes(meta[8..16].try_into().unwrap());
+        let len = u64::from_le_bytes(meta[16..24].try_into().unwrap());
+        let mut zr = ZnnReader::new(&mut body)?.with_threads(self.threads);
+        let data = zr.decode_range(rel, len)?;
+        drop(zr);
+        body.drain()?; // stay in sync on the keep-alive connection
+        Ok((data, body.payload_len()))
     }
 
     /// List stored blob names.

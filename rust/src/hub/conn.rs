@@ -7,16 +7,18 @@
 //!   resumable [`RequestParser`], accumulating PUT body frames until a
 //!   request completes (bounded: one wire frame plus one read buffer);
 //! - the **write side** walks a small phase machine over the response —
-//!   head bytes, then (for GET) each stored frame's length prefix and
-//!   payload, then the terminator — picking up mid-slice after
-//!   `WouldBlock`.
+//!   head bytes, then (for GET / RANGE / GET_TENSOR) the body's segments
+//!   re-framed as bounded wire frames, then the terminator — picking up
+//!   mid-slice after `WouldBlock`. Segments referencing a stored blob are
+//!   written straight from its storage (for a spooled blob, the memory
+//!   mapping: a range response never copies payload bytes on the server).
 //!
 //! Connections are half-duplex by design, matching the client: while a
 //! request executes on the worker pool or a response drains, the reactor
 //! keeps read interest off, so pipelined bytes simply wait in the kernel
 //! buffer (and in already-parsed events) until the response completes.
 
-use crate::hub::protocol::{Op, ReqEvent, RequestParser};
+use crate::hub::protocol::{Op, ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
 use crate::hub::server::StoredBlob;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
@@ -36,19 +38,63 @@ pub(crate) struct Request {
     pub(crate) op: Op,
     /// Blob name.
     pub(crate) name: String,
-    /// Body wire frames (PUT only; other ops drain their body).
+    /// Body wire frames (PUT / RANGE / GET_TENSOR; other ops drain).
     pub(crate) frames: Vec<Vec<u8>>,
     /// Total body payload bytes.
     pub(crate) total: u64,
+}
+
+/// One piece of a streamed response body.
+pub(crate) enum Segment {
+    /// Worker-built bytes (placement headers, synthesized trailers).
+    Owned(Vec<u8>),
+    /// A byte range of a stored blob, written straight from its storage
+    /// (the spool mapping for spooled blobs — no server-side copy).
+    Blob {
+        /// The blob (kept alive for the duration of the write).
+        blob: Arc<StoredBlob>,
+        /// Byte offset into the blob's payload.
+        off: u64,
+        /// Byte length.
+        len: u64,
+    },
+}
+
+impl Segment {
+    fn len(&self) -> u64 {
+        match self {
+            Segment::Owned(v) => v.len() as u64,
+            Segment::Blob { len, .. } => *len,
+        }
+    }
+
+    /// Longest contiguous slice starting `pos` bytes into the segment
+    /// (`pos < len`). Blob storage may be fragmented into stored frames;
+    /// the write machine emits one wire frame per contiguous run.
+    fn slice_at(&self, pos: u64) -> &[u8] {
+        match self {
+            Segment::Owned(v) => &v[pos as usize..],
+            Segment::Blob { blob, off, len } => {
+                let s = blob.slice_at(off + pos);
+                let cap = ((len - pos).min(s.len() as u64)) as usize;
+                &s[..cap]
+            }
+        }
+    }
 }
 
 /// A response produced by a worker.
 pub(crate) enum Response {
     /// Fully serialized response bytes (status + chunked body).
     Small(Vec<u8>),
-    /// Head bytes (status), then the blob's stored frames streamed as
-    /// wire frames, then the terminator.
-    Blob(Vec<u8>, Arc<StoredBlob>),
+    /// Head bytes (status), then the segments re-framed as bounded wire
+    /// frames, then the terminator.
+    Stream {
+        /// Raw (unchunked) leading bytes — the status byte.
+        head: Vec<u8>,
+        /// Body segments, concatenated on the wire.
+        segs: Vec<Segment>,
+    },
 }
 
 /// Outcome of driving the read side.
@@ -74,9 +120,9 @@ pub(crate) enum WriteOutcome {
 enum WritePhase {
     /// Writing `head` bytes.
     Head,
-    /// Writing the 4-byte length prefix of frame `idx`.
+    /// Writing the 4-byte length prefix of the current wire frame.
     FrameHeader,
-    /// Writing the payload of frame `idx`.
+    /// Writing the current wire frame's payload.
     FrameBody,
     /// Writing the 4-byte zero terminator.
     Terminator,
@@ -84,11 +130,24 @@ enum WritePhase {
     Finished,
 }
 
+/// Streaming-body progress: which segment, how far into it, and the
+/// current wire frame's size.
+struct BodyState {
+    segs: Vec<Segment>,
+    /// Current segment index.
+    seg: usize,
+    /// Bytes of the current segment already framed out.
+    seg_pos: u64,
+    /// Payload length of the wire frame in flight (0 = compute the next).
+    frame_len: usize,
+}
+
 /// Resumable serializer of one response.
 struct WriteState {
     head: Vec<u8>,
-    blob: Option<Arc<StoredBlob>>,
-    idx: usize,
+    /// `None` for `Response::Small` (already fully serialized).
+    body: Option<BodyState>,
+    /// Position within the phase's byte run (head / len4 / frame).
     pos: usize,
     len4: [u8; 4],
     phase: WritePhase,
@@ -96,11 +155,13 @@ struct WriteState {
 
 impl WriteState {
     fn new(resp: Response) -> WriteState {
-        let (head, blob) = match resp {
+        let (head, body) = match resp {
             Response::Small(bytes) => (bytes, None),
-            Response::Blob(head, blob) => (head, Some(blob)),
+            Response::Stream { head, segs } => {
+                (head, Some(BodyState { segs, seg: 0, seg_pos: 0, frame_len: 0 }))
+            }
         };
-        WriteState { head, blob, idx: 0, pos: 0, len4: [0; 4], phase: WritePhase::Head }
+        WriteState { head, body, pos: 0, len4: [0; 4], phase: WritePhase::Head }
     }
 }
 
@@ -165,7 +226,18 @@ impl Conn {
                 ReqEvent::Frame(frame) => {
                     if let Some(req) = self.cur.as_mut() {
                         req.total += frame.len() as u64;
-                        if req.op == Op::Put {
+                        // PUT bodies stream unbounded (that is the op's
+                        // job). Range/GetTensor bodies are tiny by
+                        // contract (16 bytes / a tensor name), so retain
+                        // at most NAME_MAX bytes — `total` keeps the true
+                        // count and the executor rejects oversized
+                        // requests without the server ever buffering them.
+                        let keep = match req.op {
+                            Op::Put => true,
+                            Op::Range | Op::GetTensor => req.total <= NAME_MAX as u64,
+                            _ => false,
+                        };
+                        if keep {
                             req.frames.push(frame);
                         }
                     }
@@ -234,7 +306,7 @@ impl Conn {
                 WritePhase::Head => {
                     if w.pos >= w.head.len() {
                         w.pos = 0;
-                        w.phase = match &w.blob {
+                        w.phase = match &w.body {
                             Some(_) => WritePhase::FrameHeader,
                             None => WritePhase::Finished,
                         };
@@ -242,14 +314,28 @@ impl Conn {
                     }
                 }
                 WritePhase::FrameHeader => {
-                    let blob = w.blob.as_ref().expect("blob in frame phase");
-                    if w.idx >= blob.n_frames() {
-                        w.pos = 0;
-                        w.phase = WritePhase::Terminator;
-                        continue;
-                    }
-                    if w.pos == 0 {
-                        w.len4 = (blob.frame(w.idx).len() as u32).to_le_bytes();
+                    let b = w.body.as_mut().expect("body in frame phase");
+                    if w.pos == 0 && b.frame_len == 0 {
+                        // Compute the next wire frame: skip exhausted (or
+                        // empty) segments, then take the longest
+                        // contiguous run, bounded by FRAME_MAX.
+                        while b.seg < b.segs.len() && b.seg_pos >= b.segs[b.seg].len() {
+                            b.seg += 1;
+                            b.seg_pos = 0;
+                        }
+                        if b.seg >= b.segs.len() {
+                            w.phase = WritePhase::Terminator;
+                            continue;
+                        }
+                        let avail = b.segs[b.seg].slice_at(b.seg_pos).len().min(FRAME_MAX);
+                        if avail == 0 {
+                            // Storage shorter than the segment claims:
+                            // never emit a premature terminator (the
+                            // client would see a short body as success).
+                            break WriteOutcome::Closed;
+                        }
+                        b.frame_len = avail;
+                        w.len4 = (avail as u32).to_le_bytes();
                     }
                     if w.pos >= 4 {
                         w.pos = 0;
@@ -258,10 +344,11 @@ impl Conn {
                     }
                 }
                 WritePhase::FrameBody => {
-                    let blob = w.blob.as_ref().expect("blob in frame phase");
-                    if w.pos >= blob.frame(w.idx).len() {
+                    let b = w.body.as_mut().expect("body in frame phase");
+                    if w.pos >= b.frame_len {
+                        b.seg_pos += b.frame_len as u64;
+                        b.frame_len = 0;
                         w.pos = 0;
-                        w.idx += 1;
                         w.phase = WritePhase::FrameHeader;
                         continue;
                     }
@@ -278,8 +365,8 @@ impl Conn {
                 WritePhase::Head => &w.head[w.pos..],
                 WritePhase::FrameHeader => &w.len4[w.pos..],
                 WritePhase::FrameBody => {
-                    let blob = w.blob.as_ref().expect("blob in frame phase");
-                    &blob.frame(w.idx)[w.pos..]
+                    let b = w.body.as_ref().expect("body in frame phase");
+                    &b.segs[b.seg].slice_at(b.seg_pos)[w.pos..b.frame_len]
                 }
                 WritePhase::Terminator => &ZERO4[w.pos..],
                 WritePhase::Finished => unreachable!("handled above"),

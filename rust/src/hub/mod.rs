@@ -23,5 +23,5 @@ pub mod sys;
 
 pub use client::{HubClient, TransferReport};
 pub use netsim::{NetProfile, NetSim};
-pub use protocol::{ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
+pub use protocol::{encode_range, parse_range, Op, ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
 pub use server::{HubServer, HubServerBuilder};

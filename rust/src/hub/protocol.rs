@@ -10,8 +10,17 @@
 //! response: [status u8][chunked body]
 //! body:     ([len u32 in 1..=FRAME_MAX][bytes])* [0 u32]
 //! ```
-//! ops: 0 = PUT, 1 = GET, 2 = LIST, 3 = SHUTDOWN, 4 = STAT.
+//! ops: 0 = PUT, 1 = GET, 2 = LIST, 3 = SHUTDOWN, 4 = STAT, 5 = RANGE,
+//! 6 = GET_TENSOR.
 //! status: 0 = OK, 1 = err (body is a UTF-8 message).
+//!
+//! RANGE requests a byte range of a stored blob: the body is exactly 16
+//! bytes — `[offset u64][len u64]`, little-endian (see [`encode_range`] /
+//! [`parse_range`]) — and the response body is the requested bytes,
+//! served straight from the server's spooled mapping when available.
+//! GET_TENSOR's body is a tensor name; the server answers with a 24-byte
+//! placement header followed by a self-contained `ZNS1` sub-container of
+//! the covering frames (see `hub::client::HubClient::get_tensor`).
 
 use crate::error::{Error, Result};
 use std::collections::VecDeque;
@@ -35,6 +44,10 @@ pub enum Op {
     Shutdown = 3,
     /// Blob storage stats: "total_len n_frames max_frame" (UTF-8).
     Stat = 4,
+    /// Fetch a byte range of a blob (body: [`encode_range`] payload).
+    Range = 5,
+    /// Fetch one tensor of an indexed container (body: tensor name).
+    GetTensor = 6,
 }
 
 impl Op {
@@ -46,9 +59,37 @@ impl Op {
             2 => Some(Op::List),
             3 => Some(Op::Shutdown),
             4 => Some(Op::Stat),
+            5 => Some(Op::Range),
+            6 => Some(Op::GetTensor),
             _ => None,
         }
     }
+}
+
+/// Serialize a RANGE request body.
+pub fn encode_range(offset: u64, len: u64) -> [u8; 16] {
+    let mut out = [0u8; 16];
+    out[..8].copy_from_slice(&offset.to_le_bytes());
+    out[8..].copy_from_slice(&len.to_le_bytes());
+    out
+}
+
+/// Parse and validate a RANGE request body: exactly 16 bytes, and
+/// `offset + len` must not overflow `u64`. Whether the range fits the
+/// blob is the server's check; this one guards the arithmetic.
+pub fn parse_range(body: &[u8]) -> Result<(u64, u64)> {
+    if body.len() != 16 {
+        return Err(Error::Format(format!(
+            "range body is {} bytes, expected 16",
+            body.len()
+        )));
+    }
+    let offset = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let len = u64::from_le_bytes(body[8..].try_into().unwrap());
+    if offset.checked_add(len).is_none() {
+        return Err(Error::Format(format!("range {offset}+{len} overflows u64")));
+    }
+    Ok((offset, len))
 }
 
 // ---------------------------------------------------------------------------

@@ -19,10 +19,19 @@
 //! page cache instead of long-lived heap buffers, so the server's resident
 //! heap stays flat no matter how many models it holds. The spool file is
 //! unlinked right after mapping (Unix), so crashed servers leak nothing.
+//!
+//! Blobs are also **byte-range addressable**: `Range` returns any span of
+//! the stored bytes, and `GetTensor` uses a container's tensor index (see
+//! [`crate::codec::index`]) to ship only the frames covering one tensor —
+//! both sliced straight from the spooled mapping with zero payload copies.
 
+use crate::codec::index::{self, ContainerKind, TensorIndex, INDEX_FOOTER_LEN};
+use crate::codec::parallel::SUPER_CHUNK;
+use crate::codec::stream::{sub_container_parts, STREAM_HEADER_LEN};
+use crate::codec::STREAM_MAGIC;
 use crate::error::Result;
-use crate::hub::conn::{Request, Response};
-use crate::hub::protocol::{write_response, write_response_header, Op, FRAME_MAX};
+use crate::hub::conn::{Request, Response, Segment};
+use crate::hub::protocol::{parse_range, write_response, write_response_header, Op, FRAME_MAX};
 use crate::hub::reactor::{Reactor, ReactorConfig};
 use crate::util::mmap::Mmap;
 use std::collections::HashMap;
@@ -41,21 +50,28 @@ pub(crate) struct StoredBlob {
 }
 
 enum BlobBytes {
-    /// Heap-resident frames (default).
-    Frames(Vec<Vec<u8>>),
+    /// Heap-resident frames (default), with their cumulative start
+    /// offsets (`starts.len() == frames.len()`) for O(log n) range reads.
+    Frames { frames: Vec<Vec<u8>>, starts: Vec<u64> },
     /// Page-cache-resident: one mapping, frames as `(offset, len)` spans.
     Mapped { map: Mmap, spans: Vec<(usize, usize)> },
 }
 
 impl StoredBlob {
     pub(crate) fn in_memory(frames: Vec<Vec<u8>>, total: u64) -> StoredBlob {
-        StoredBlob { bytes: BlobBytes::Frames(frames), total }
+        let mut starts = Vec::with_capacity(frames.len());
+        let mut at = 0u64;
+        for f in &frames {
+            starts.push(at);
+            at += f.len() as u64;
+        }
+        StoredBlob { bytes: BlobBytes::Frames { frames, starts }, total }
     }
 
     /// Number of stored wire frames.
     pub(crate) fn n_frames(&self) -> usize {
         match &self.bytes {
-            BlobBytes::Frames(f) => f.len(),
+            BlobBytes::Frames { frames, .. } => frames.len(),
             BlobBytes::Mapped { spans, .. } => spans.len(),
         }
     }
@@ -63,7 +79,7 @@ impl StoredBlob {
     /// One stored frame's payload.
     pub(crate) fn frame(&self, idx: usize) -> &[u8] {
         match &self.bytes {
-            BlobBytes::Frames(f) => &f[idx],
+            BlobBytes::Frames { frames, .. } => &frames[idx],
             BlobBytes::Mapped { map, spans } => {
                 let (off, len) = spans[idx];
                 &map[off..off + len]
@@ -73,6 +89,44 @@ impl StoredBlob {
 
     fn max_frame(&self) -> usize {
         (0..self.n_frames()).map(|i| self.frame(i).len()).max().unwrap_or(0)
+    }
+
+    /// Longest contiguous stored slice starting at absolute byte offset
+    /// `off` (`off < total`). For a spooled blob this is the rest of the
+    /// mapping — range responses are written straight from the page
+    /// cache; heap blobs return the remainder of the covering frame.
+    pub(crate) fn slice_at(&self, off: u64) -> &[u8] {
+        match &self.bytes {
+            BlobBytes::Mapped { map, .. } => &map[(off as usize).min(map.len())..],
+            BlobBytes::Frames { frames, starts } => {
+                let i = starts.partition_point(|&s| s <= off).saturating_sub(1);
+                match frames.get(i) {
+                    Some(f) => &f[((off - starts[i]) as usize).min(f.len())..],
+                    None => &[],
+                }
+            }
+        }
+    }
+
+    /// Copy an absolute byte range out of the stored frames (used for
+    /// small metadata reads — the container header and index section).
+    pub(crate) fn read_range(&self, off: u64, len: usize) -> Option<Vec<u8>> {
+        let end = off.checked_add(len as u64)?;
+        if end > self.total {
+            return None;
+        }
+        let mut out = Vec::with_capacity(len);
+        let mut at = off;
+        while out.len() < len {
+            let s = self.slice_at(at);
+            if s.is_empty() {
+                return None; // storage shorter than `total` claims
+            }
+            let take = s.len().min(len - out.len());
+            out.extend_from_slice(&s[..take]);
+            at += take as u64;
+        }
+        Some(out)
     }
 }
 
@@ -281,13 +335,77 @@ pub(crate) fn execute_request(
             let blob = store.lock().unwrap().get(&req.name).cloned();
             match blob {
                 Some(blob) => {
-                    // Status byte via the shared protocol encoder; the
-                    // frames + terminator stream from the write machine.
-                    let mut head = Vec::with_capacity(1);
-                    write_response_header(&mut head, true).expect("infallible write to Vec");
-                    (Response::Blob(head, blob), false)
+                    let len = blob.total;
+                    (
+                        Response::Stream {
+                            head: ok_head(),
+                            segs: vec![Segment::Blob { blob, off: 0, len }],
+                        },
+                        false,
+                    )
                 }
                 None => (Response::Small(small_response(false, b"not found")), false),
+            }
+        }
+        Op::Range => {
+            let blob = store.lock().unwrap().get(&req.name).cloned();
+            let Some(blob) = blob else {
+                return (Response::Small(small_response(false, b"not found")), false);
+            };
+            // Malformed ranges (bad body size, u64 overflow, off the end)
+            // are clean error responses — the connection stays usable.
+            // `total` counts the whole body even where the connection
+            // stopped retaining frames (oversized bodies are never
+            // buffered), so the mismatch is caught here.
+            if req.total != 16 {
+                let msg = format!("range body is {} bytes, expected 16", req.total);
+                return (Response::Small(small_response(false, msg.as_bytes())), false);
+            }
+            let body: Vec<u8> = req.frames.concat();
+            let (off, len) = match parse_range(&body) {
+                Ok(r) => r,
+                Err(e) => {
+                    return (
+                        Response::Small(small_response(false, e.to_string().as_bytes())),
+                        false,
+                    )
+                }
+            };
+            if off + len > blob.total {
+                let msg =
+                    format!("range [{off}, {}) out of bounds (total {})", off + len, blob.total);
+                return (Response::Small(small_response(false, msg.as_bytes())), false);
+            }
+            let segs = if len == 0 {
+                Vec::new()
+            } else {
+                vec![Segment::Blob { blob, off, len }]
+            };
+            (Response::Stream { head: ok_head(), segs }, false)
+        }
+        Op::GetTensor => {
+            let blob = store.lock().unwrap().get(&req.name).cloned();
+            let Some(blob) = blob else {
+                return (Response::Small(small_response(false, b"not found")), false);
+            };
+            if req.total > crate::hub::protocol::NAME_MAX as u64 {
+                return (
+                    Response::Small(small_response(false, b"tensor name too long")),
+                    false,
+                );
+            }
+            let tensor = match String::from_utf8(req.frames.concat()) {
+                Ok(t) => t,
+                Err(_) => {
+                    return (
+                        Response::Small(small_response(false, b"tensor name not utf8")),
+                        false,
+                    )
+                }
+            };
+            match tensor_response(&blob, &tensor) {
+                Ok(segs) => (Response::Stream { head: ok_head(), segs }, false),
+                Err(msg) => (Response::Small(small_response(false, msg.as_bytes())), false),
             }
         }
         Op::List => {
@@ -320,4 +438,114 @@ fn small_response(ok: bool, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 16);
     write_response(&mut out, ok, payload).expect("infallible write to Vec");
     out
+}
+
+/// The raw (unchunked) OK status byte heading a streamed response.
+fn ok_head() -> Vec<u8> {
+    let mut head = Vec::with_capacity(1);
+    write_response_header(&mut head, true).expect("infallible write to Vec");
+    head
+}
+
+/// Parse the tensor index a stored container carries in its tail.
+fn blob_tensor_index(blob: &StoredBlob) -> std::result::Result<TensorIndex, String> {
+    if blob.total < INDEX_FOOTER_LEN as u64 {
+        return Err("container has no tensor index".into());
+    }
+    let footer = blob
+        .read_range(blob.total - INDEX_FOOTER_LEN as u64, INDEX_FOOTER_LEN)
+        .ok_or("blob storage inconsistent")?;
+    let (off, len) = index::section_span(blob.total, &footer)
+        .ok_or("container has no tensor index")?;
+    // A lying footer must not make the server materialize the blob: real
+    // index sections are tiny (tens of bytes per tensor/frame).
+    if len > 1 << 26 {
+        return Err("implausible index section size".into());
+    }
+    let section = blob.read_range(off, len).ok_or("blob storage inconsistent")?;
+    TensorIndex::parse_section(&section).map_err(|e| format!("bad tensor index: {e}"))
+}
+
+/// Build a GET_TENSOR response body: a 24-byte placement header
+/// (`[base_raw u64][tensor_rel u64][tensor_len u64]`) followed by a
+/// self-contained `ZNS1` sub-container — the stored header (checksum flag
+/// stripped), the frames covering the tensor **sliced straight out of the
+/// blob's storage** (the spool mapping when spooled), and a synthesized
+/// trailer. The client decodes it with a plain `ZnnReader` and slices
+/// `[tensor_rel, tensor_rel + tensor_len)`.
+fn tensor_response(
+    blob: &Arc<StoredBlob>,
+    tensor: &str,
+) -> std::result::Result<Vec<Segment>, String> {
+    let idx = blob_tensor_index(blob)?;
+    if idx.kind != ContainerKind::Streaming {
+        return Err("tensor range-GET needs a streaming (ZNS1) container".into());
+    }
+    let t = idx
+        .find(tensor)
+        .ok_or_else(|| format!("no tensor '{tensor}' in index"))?;
+    let chunk = idx.chunk_size as u64;
+    let aligned = idx.aligned_len();
+    let n_chunks = aligned.div_ceil(chunk);
+    let n_frames = n_chunks.div_ceil(SUPER_CHUNK as u64);
+    if idx.frame_offsets.len() as u64 != n_frames {
+        return Err("index frame directory disagrees with container".into());
+    }
+    let header = blob
+        .read_range(0, STREAM_HEADER_LEN)
+        .filter(|h| h[0..4] == STREAM_MAGIC)
+        .ok_or("tensor range-GET needs a streaming (ZNS1) container")?;
+    if t.len == 0 {
+        // Empty tensor: ship an empty sub-container (header + trailer),
+        // no frames, no tail — the client decodes zero bytes.
+        let (patched_header, trailer) =
+            sub_container_parts(&header, 0, &[]).map_err(|e| e.to_string())?;
+        let mut meta = Vec::with_capacity(24 + STREAM_HEADER_LEN);
+        meta.extend_from_slice(&t.offset.to_le_bytes());
+        meta.extend_from_slice(&0u64.to_le_bytes());
+        meta.extend_from_slice(&0u64.to_le_bytes());
+        meta.extend_from_slice(&patched_header);
+        return Ok(vec![Segment::Owned(meta), Segment::Owned(trailer)]);
+    }
+    // Covering frames [f0, f1): tensors entirely in the trailer tail
+    // cover no frame at all.
+    let t_end = t.offset + t.len; // validated against total_len at parse
+    let (f0, f1) = if t.offset >= aligned {
+        (n_frames, n_frames)
+    } else {
+        let c0 = t.offset / chunk;
+        let c1 = t_end.min(aligned).div_ceil(chunk).min(n_chunks);
+        (c0 / SUPER_CHUNK as u64, c1.div_ceil(SUPER_CHUNK as u64))
+    };
+    let frames_start = if f0 < n_frames { idx.frame_offsets[f0 as usize] } else { idx.trailer_off };
+    let frames_end = if f1 < n_frames { idx.frame_offsets[f1 as usize] } else { idx.trailer_off };
+    if frames_end < frames_start || frames_end > blob.total {
+        return Err("index frame offsets out of bounds".into());
+    }
+    // Raw bytes the shipped frames decode to, and whether the trailer
+    // tail rides along (it must whenever the last frame is included, so
+    // the synthesized trailer's total adds up).
+    let base_raw = (f0 * SUPER_CHUNK as u64 * chunk).min(aligned);
+    let frames_raw = (f1 * SUPER_CHUNK as u64 * chunk).min(aligned) - base_raw;
+    let tail: &[u8] = if f1 == n_frames { &idx.tail } else { &[] };
+    if t_end > base_raw + frames_raw + tail.len() as u64 || t.offset < base_raw {
+        return Err("index tensor span disagrees with frame directory".into());
+    }
+    let (patched_header, trailer) = sub_container_parts(&header, frames_raw, tail)
+        .map_err(|e| e.to_string())?;
+    let mut meta = Vec::with_capacity(24 + STREAM_HEADER_LEN);
+    meta.extend_from_slice(&base_raw.to_le_bytes());
+    meta.extend_from_slice(&(t.offset - base_raw).to_le_bytes());
+    meta.extend_from_slice(&t.len.to_le_bytes());
+    meta.extend_from_slice(&patched_header);
+    let mut segs = vec![Segment::Owned(meta)];
+    if frames_end > frames_start {
+        segs.push(Segment::Blob {
+            blob: Arc::clone(blob),
+            off: frames_start,
+            len: frames_end - frames_start,
+        });
+    }
+    segs.push(Segment::Owned(trailer));
+    Ok(segs)
 }

@@ -3,7 +3,11 @@
 //! Subcommands:
 //!   gen         generate a synthetic model (.znnm)
 //!   compress    compress a file/model into a .znn container
+//!               (--index embeds a tensor index for random access)
 //!   decompress  restore the original bytes from a .znn container
+//!   ls          list the tensors of an indexed .znn container
+//!   cat         decode one tensor (--tensor) or byte range (--range)
+//!               of a .znn container without a full decompress
 //!   inspect     print a container's metadata + per-group breakdown
 //!   exphist     exponent histogram of a model (paper Fig. 2)
 //!   delta       XOR-delta-compress one file against a base
@@ -15,7 +19,10 @@
 
 use std::collections::HashMap;
 use std::process::ExitCode;
-use zipnn::codec::{compress_with_report, decompress_path, inspect, CodecConfig, MethodPolicy};
+use zipnn::codec::{
+    compress_with_report, decompress_path, inspect, CodecConfig, MethodPolicy, ZnnReader,
+    ZnnWriter,
+};
 use zipnn::delta::DeltaCodec;
 use zipnn::fp::stats::{exponent_histogram, summarize_exponents};
 use zipnn::fp::{DType, GroupLayout};
@@ -63,8 +70,10 @@ fn usage() -> ExitCode {
     eprintln!(
         "usage: zipnn <gen|compress|decompress|inspect|exphist|delta|apply|train|serve> [args]
   gen        --category <bf16|fp32|fp16|clean-fp32|clean-t5|fp16-from-bf16|gptq|gguf> --mb N --seed S --out M.znnm
-  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group]
+  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group] [--index (.znnm only)]
   decompress <in.znn> --out F [--threads N]
+  ls         <in.znn>
+  cat        <in.znn> (--tensor NAME | --range OFF:LEN) [--out F] [--threads N]
   inspect    <in.znn>
   exphist    <in.znnm>
   delta      --base A --next B --out D.znn [--dtype bf16]
@@ -139,6 +148,40 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 human_bytes(model.size_bytes() as u64)
             );
         }
+        "compress" if args.flags.contains_key("index") => {
+            // Indexed compression: a streaming (ZNS1) container with a
+            // tensor→chunk index section, enabling `zipnn ls` / `zipnn
+            // cat --tensor` and hub tensor range-GETs.
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            if !input.ends_with(".znnm") {
+                anyhow::bail!("--index needs a .znnm model (tensor layout comes from its header)");
+            }
+            let model = read_model(input)?;
+            let spans = zipnn::model::tensor_spans(&model);
+            let raw = model.to_bytes();
+            let cfg = CodecConfig::for_dtype(model.dominant_dtype())
+                .with_threads(args.usize_flag("threads", 1));
+            let out = args.flag("out", &format!("{input}.znn"));
+            let t = Timer::start();
+            let file = std::io::BufWriter::new(std::fs::File::create(&out)?);
+            let mut zw = ZnnWriter::new(file, cfg)?.with_index(spans);
+            std::io::Write::write_all(&mut zw, &raw)?;
+            zw.finish()?;
+            let comp_len = std::fs::metadata(&out)?.len();
+            println!(
+                "{} -> {} (indexed, {} tensors): {} -> {} ({:.1}%), {:.2} GB/s",
+                input,
+                out,
+                model.tensors.len(),
+                human_bytes(raw.len() as u64),
+                human_bytes(comp_len),
+                comp_len as f64 / raw.len() as f64 * 100.0,
+                raw.len() as f64 / t.secs() / 1e9
+            );
+        }
         "compress" => {
             let input = args
                 .positional
@@ -194,6 +237,62 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 human_bytes(raw.len() as u64),
                 raw.len() as f64 / t.secs() / 1e9
             );
+        }
+        "ls" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            let mut r = ZnnReader::open(input)?;
+            let Some(idx) = r.index()? else {
+                anyhow::bail!("'{input}' carries no tensor index (compress with --index)");
+            };
+            let chunk = idx.chunk_size as u64;
+            println!(
+                "{}: {} tensors, {} raw, chunk size {}",
+                input,
+                idx.tensors.len(),
+                human_bytes(idx.total_len),
+                human_bytes(chunk)
+            );
+            for t in &idx.tensors {
+                let c0 = t.offset / chunk;
+                let c1 = (t.offset + t.len).div_ceil(chunk).max(c0 + 1);
+                println!(
+                    "  {:<40} {:>5} {:>12}  @{:<12} chunks {c0}..{c1}",
+                    t.name,
+                    t.dtype.name(),
+                    human_bytes(t.len),
+                    t.offset
+                );
+            }
+        }
+        "cat" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            // Partial decode: only the chunks covering the request are
+            // decompressed (random access on a mapped indexed container).
+            let mut r = ZnnReader::open(input)?.with_threads(args.usize_flag("threads", 1));
+            let bytes = if let Some(tensor) = args.flags.get("tensor") {
+                r.decode_tensor(tensor)?
+            } else if let Some(spec) = args.flags.get("range") {
+                let (off, len) = spec
+                    .split_once(':')
+                    .and_then(|(o, l)| Some((o.parse().ok()?, l.parse().ok()?)))
+                    .ok_or_else(|| anyhow::anyhow!("--range wants OFF:LEN (byte offset:length)"))?;
+                r.decode_range(off, len)?
+            } else {
+                anyhow::bail!("cat needs --tensor NAME or --range OFF:LEN");
+            };
+            match args.flags.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &bytes)?;
+                    println!("wrote {} ({})", path, human_bytes(bytes.len() as u64));
+                }
+                None => std::io::Write::write_all(&mut std::io::stdout().lock(), &bytes)?,
+            }
         }
         "inspect" => {
             let input = args

@@ -16,8 +16,9 @@ use std::path::Path;
 const MAGIC: [u8; 4] = *b"ZNNM";
 const VERSION: u8 = 1;
 
-/// Serialize a model to container bytes.
-pub fn to_bytes(model: &Model) -> Vec<u8> {
+/// Build the JSON header describing a model's tensors (shared by
+/// serialization and [`tensor_spans`], so offsets can never drift).
+fn header_json(model: &Model) -> String {
     let mut header = String::from("{");
     header.push_str(&format!("\"name\":\"{}\",\"tensors\":[", escape(&model.name)));
     let mut off = 0usize;
@@ -40,9 +41,15 @@ pub fn to_bytes(model: &Model) -> Vec<u8> {
         off += t.data.len();
     }
     header.push_str("]}");
+    header
+}
 
+/// Serialize a model to container bytes.
+pub fn to_bytes(model: &Model) -> Vec<u8> {
+    let header = header_json(model);
     let hbytes = header.as_bytes();
-    let mut out = Vec::with_capacity(9 + hbytes.len() + off);
+    let data_len: usize = model.tensors.iter().map(|t| t.data.len()).sum();
+    let mut out = Vec::with_capacity(9 + hbytes.len() + data_len);
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
     push_u32_le(&mut out, hbytes.len() as u32);
@@ -53,15 +60,116 @@ pub fn to_bytes(model: &Model) -> Vec<u8> {
     out
 }
 
-/// Parse container bytes back into a model.
-pub fn from_bytes(data: &[u8]) -> Result<Model> {
+/// Byte spans of each tensor **within [`to_bytes`]' output** (the 9-byte
+/// preamble and JSON header included in the offsets). Feed these to
+/// [`crate::codec::ZnnWriter::with_index`] /
+/// [`crate::hub::HubClient::upload_indexed`] so the compressed container
+/// becomes tensor-addressable.
+pub fn tensor_spans(model: &Model) -> Vec<crate::codec::TensorMeta> {
+    let base = 9 + header_json(model).len() as u64;
+    let mut off = base;
+    model
+        .tensors
+        .iter()
+        .map(|t| {
+            let meta = crate::codec::TensorMeta {
+                name: t.name.clone(),
+                dtype: t.dtype,
+                offset: off,
+                len: t.data.len() as u64,
+            };
+            off += t.data.len() as u64;
+            meta
+        })
+        .collect()
+}
+
+/// Lazily load **one tensor** from a ZipNN-compressed `.znnm` model
+/// (`model.znnm.znn`): three [`crate::codec::ZnnReader::decode_range`]
+/// calls — preamble, JSON header, tensor bytes — decode only the chunks
+/// they cover on a mapped indexed container, and the full model bytes are
+/// never materialized. Works on the `ZIPNN_NO_MMAP` buffered fallback too
+/// (the ranges are requested in ascending order, which is all the
+/// sequential path needs).
+pub fn read_tensor_znn(path: impl AsRef<Path>, name: &str) -> Result<Tensor> {
+    let mut r = crate::codec::ZnnReader::open(path.as_ref())?;
+    let pre = r.decode_range(0, 9)?;
+    let hlen = parse_preamble(&pre)? as u64;
+    let hbytes = r.decode_range(9, hlen)?;
+    let header = std::str::from_utf8(&hbytes)
+        .map_err(|_| Error::Corrupt("znnm header not UTF-8".into()))?;
+    let j = Json::parse(header).map_err(|e| Error::Corrupt(format!("znnm header: {e}")))?;
+    for tj in j
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Corrupt("znnm header missing tensors".into()))?
+    {
+        if tj.get("name").and_then(Json::as_str) != Some(name) {
+            continue;
+        }
+        let e = parse_tensor_entry(tj)?;
+        let data = r.decode_range(9 + hlen + e.offset as u64, e.nbytes as u64)?;
+        return Tensor::new(&e.name, &e.shape, e.dtype, data);
+    }
+    Err(Error::Invalid(format!("no tensor '{name}' in model header")))
+}
+
+/// Validate the 9-byte preamble (magic, version); returns the JSON
+/// header length. Shared by the whole-buffer parser and the lazy
+/// single-tensor loader so the two paths cannot drift.
+fn parse_preamble(data: &[u8]) -> Result<usize> {
     if data.len() < 9 || data[0..4] != MAGIC {
         return Err(Error::Corrupt("not a .znnm container".into()));
     }
     if data[4] != VERSION {
         return Err(Error::Corrupt(format!("unsupported znnm version {}", data[4])));
     }
-    let hlen = read_u32_le(data, 5) as usize;
+    Ok(read_u32_le(data, 5) as usize)
+}
+
+/// One tensor entry of the JSON header (offsets relative to the data
+/// section).
+struct TensorEntry {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    offset: usize,
+    nbytes: usize,
+}
+
+/// Parse one tensor object of the header's `tensors` array.
+fn parse_tensor_entry(tj: &Json) -> Result<TensorEntry> {
+    let name = tj
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Corrupt("tensor missing name".into()))?
+        .to_string();
+    let dtype = DType::from_name(
+        tj.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Corrupt("tensor missing dtype".into()))?,
+    )?;
+    let shape: Vec<usize> = tj
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Corrupt("tensor missing shape".into()))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let offset = tj
+        .get("offset")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Corrupt("tensor missing offset".into()))?;
+    let nbytes = tj
+        .get("nbytes")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Corrupt("tensor missing nbytes".into()))?;
+    Ok(TensorEntry { name, dtype, shape, offset, nbytes })
+}
+
+/// Parse container bytes back into a model.
+pub fn from_bytes(data: &[u8]) -> Result<Model> {
+    let hlen = parse_preamble(data)?;
     if data.len() < 9 + hlen {
         return Err(Error::Corrupt("truncated znnm header".into()));
     }
@@ -80,38 +188,19 @@ pub fn from_bytes(data: &[u8]) -> Result<Model> {
         .and_then(Json::as_arr)
         .ok_or_else(|| Error::Corrupt("znnm header missing tensors".into()))?
     {
-        let tname = tj
-            .get("name")
-            .and_then(Json::as_str)
-            .ok_or_else(|| Error::Corrupt("tensor missing name".into()))?;
-        let dtype = DType::from_name(
-            tj.get("dtype")
-                .and_then(Json::as_str)
-                .ok_or_else(|| Error::Corrupt("tensor missing dtype".into()))?,
-        )?;
-        let shape: Vec<usize> = tj
-            .get("shape")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| Error::Corrupt("tensor missing shape".into()))?
-            .iter()
-            .filter_map(Json::as_usize)
-            .collect();
-        let off = tj
-            .get("offset")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| Error::Corrupt("tensor missing offset".into()))?;
-        let nbytes = tj
-            .get("nbytes")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| Error::Corrupt("tensor missing nbytes".into()))?;
-        if off + nbytes > body.len() {
+        let e = parse_tensor_entry(tj)?;
+        if e.offset + e.nbytes > body.len() {
             return Err(Error::Corrupt(format!(
-                "tensor '{tname}' extends past data section"
+                "tensor '{}' extends past data section",
+                e.name
             )));
         }
-        model
-            .tensors
-            .push(Tensor::new(tname, &shape, dtype, body[off..off + nbytes].to_vec())?);
+        model.tensors.push(Tensor::new(
+            &e.name,
+            &e.shape,
+            e.dtype,
+            body[e.offset..e.offset + e.nbytes].to_vec(),
+        )?);
     }
     Ok(model)
 }

@@ -6,6 +6,6 @@ pub mod container;
 pub mod synthetic;
 pub mod tensor;
 
-pub use container::{read_model, write_model};
+pub use container::{read_model, read_tensor_znn, tensor_spans, write_model};
 pub use synthetic::{generate, Category, SyntheticSpec};
 pub use tensor::{Model, Tensor};

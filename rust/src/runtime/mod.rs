@@ -21,3 +21,17 @@ pub use client::Runtime;
 #[cfg(feature = "pjrt")]
 pub use literal::{literal_to_bytes, make_literal, make_scalar_f32, make_scalar_u32};
 pub use manifest::{ArtifactSpec, Manifest, ModelMeta, TensorSpec};
+
+/// Lazily load one tensor from a ZipNN-compressed model container
+/// (`<model>.znnm.znn`): only the chunks covering the tensor (and the
+/// model's JSON header) are decoded — over a mapped indexed container
+/// this is random access, never a whole-model decompress. This is the
+/// runtime-side hook for weight streaming: a trainer resuming a single
+/// layer, or an inference server paging tensors in on first use, pulls
+/// exactly what it needs from compressed storage.
+pub fn load_tensor(
+    path: impl AsRef<std::path::Path>,
+    name: &str,
+) -> crate::error::Result<crate::model::Tensor> {
+    crate::model::read_tensor_znn(path, name)
+}

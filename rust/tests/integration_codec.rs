@@ -139,3 +139,31 @@ fn weird_sizes_roundtrip() {
         assert_eq!(decompress(&comp).unwrap(), raw, "n={n}");
     }
 }
+
+/// Lazy single-tensor loading from a compressed model: the runtime-side
+/// `.znn` loader decodes only the chunks covering the JSON header and the
+/// requested tensor — exact bytes, shape, and dtype, without a
+/// whole-model decompress. Exercises both the mapped random-access path
+/// and (under `ZIPNN_NO_MMAP=1`, the CI fallback leg) sequential skips.
+#[test]
+fn lazy_tensor_load_from_indexed_container() {
+    use std::io::Write;
+    let model = generate(&SyntheticSpec::new("lazy", Category::RegularBF16, 2 << 20, 55));
+    let spans = zipnn::model::tensor_spans(&model);
+    let raw = model.to_bytes();
+    let path = std::env::temp_dir().join(format!("zipnn-lazy-{}.znnm.znn", std::process::id()));
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(8192);
+    let file = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+    let mut zw = zipnn::codec::ZnnWriter::new(file, cfg).unwrap().with_index(spans);
+    zw.write_all(&raw).unwrap();
+    zw.finish().unwrap();
+
+    for want in model.tensors.iter().step_by(3) {
+        let got = zipnn::model::read_tensor_znn(&path, &want.name).unwrap();
+        assert_eq!(&got, want, "tensor {}", want.name);
+        let via_runtime = zipnn::runtime::load_tensor(&path, &want.name).unwrap();
+        assert_eq!(&via_runtime, want);
+    }
+    assert!(zipnn::model::read_tensor_znn(&path, "absent.weight").is_err());
+    std::fs::remove_file(&path).unwrap();
+}

@@ -1,9 +1,12 @@
 //! Integration: hub server/client over loopback TCP with compression.
 
-use zipnn::codec::CodecConfig;
+use std::io::Write;
+use zipnn::codec::{CodecConfig, ZnnWriter};
 use zipnn::fp::DType;
 use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim, FRAME_MAX};
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::model::tensor_spans;
+use zipnn::util::Xoshiro256;
 
 #[test]
 fn upload_download_roundtrip_compressed_and_raw() {
@@ -260,7 +263,6 @@ fn thousand_idle_connections_bounded_threads() {
 
     // And the idle connections are still usable: pick a few and run a
     // request over raw protocol on each.
-    use std::io::Write;
     for s in idle.iter_mut().step_by(target / 7) {
         s.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
         zipnn::hub::protocol::write_request(s, zipnn::hub::protocol::Op::List, "", b"")
@@ -271,6 +273,171 @@ fn thousand_idle_connections_bounded_threads() {
     }
 
     drop(idle);
+    server.shutdown();
+}
+
+/// Tensor-addressable reads against a spooled hub: many concurrent
+/// range-GETs and tensor-GETs return exact bytes with a bounded thread
+/// count, a tensor-GET moves only the covering frames (asserted on
+/// bytes-on-wire), and a whole-blob GET of the *indexed* container still
+/// round-trips through the index-unaware download path.
+#[test]
+fn concurrent_range_gets_against_spooled_hub() {
+    let dir = std::env::temp_dir().join(format!("zipnn-hub-range-{}", std::process::id()));
+    let server = HubServer::builder().spool_dir(&dir).start().unwrap();
+    let addr = server.addr().to_string();
+    let mut client = HubClient::connect(&addr).unwrap();
+
+    let model = generate(&SyntheticSpec::new("m", Category::RegularBF16, 2 << 20, 77));
+    let raw = model.to_bytes();
+    let spans = tensor_spans(&model);
+    assert!(spans.len() >= 4, "need a multi-tensor model, got {}", spans.len());
+    // Small chunks so single tensors cover few frames (16 chunks/frame).
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 7);
+    client
+        .upload_indexed("m", &raw, spans.clone(), cfg.clone(), &mut sim)
+        .unwrap();
+
+    // The writer is deterministic, so the stored container bytes can be
+    // reproduced locally as the range-GET reference.
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap().with_index(spans.clone());
+    w.write_all(&raw).unwrap();
+    let container = w.finish().unwrap();
+    let (stored_total, _, _) = client.stat("m.znn").unwrap();
+    assert_eq!(stored_total as usize, container.len(), "stored bytes differ from local");
+
+    #[cfg(target_os = "linux")]
+    let threads_before = thread_count();
+
+    let workers: Vec<_> = (0..6)
+        .map(|w| {
+            let addr = addr.clone();
+            let container = container.clone();
+            let raw = raw.clone();
+            let spans = spans.clone();
+            std::thread::spawn(move || {
+                let mut c = HubClient::connect(&addr).unwrap();
+                let mut rng = Xoshiro256::seed_from_u64(w as u64 * 131 + 5);
+                for i in 0..8 {
+                    // Byte range of the stored (compressed) container.
+                    let off = rng.below(container.len()) as u64;
+                    let len = rng.below(container.len() - off as usize + 1) as u64;
+                    let got = c.get_range("m.znn", off, len).unwrap();
+                    assert_eq!(
+                        got,
+                        &container[off as usize..(off + len) as usize],
+                        "worker {w} iter {i} range [{off}, +{len})"
+                    );
+                    // One tensor, decoded from only its covering frames.
+                    let t = &spans[(w + i) % spans.len()];
+                    let (bytes, wire) = c.get_tensor("m", &t.name).unwrap();
+                    assert_eq!(
+                        bytes,
+                        &raw[t.offset as usize..(t.offset + t.len) as usize],
+                        "worker {w} tensor {}",
+                        t.name
+                    );
+                    // Bytes-on-wire: covering frames only — at most the
+                    // tensor's raw size (compression may beat, never
+                    // exceed it per-stream) plus frame-granularity slack
+                    // on each side, per-frame table overhead, and the
+                    // fixed meta/header/trailer — never the container.
+                    let frame_raw = 16 * 4096u64;
+                    let bound = t.len + t.len / 8 + 3 * frame_raw + 4096;
+                    assert!(
+                        wire <= bound,
+                        "worker {w} tensor {}: {wire} wire bytes for a {} tensor (bound {bound})",
+                        t.name,
+                        t.len
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in workers {
+        h.join().unwrap();
+    }
+
+    // Bounded threads: range serving happens on the reactor + fixed pool,
+    // not thread-per-request (the 6 client threads just joined). Sibling
+    // tests in this binary run concurrently, so the bound has slack —
+    // what it rules out is a thread per range request (48 requests ran).
+    #[cfg(target_os = "linux")]
+    {
+        let threads_after = thread_count();
+        assert!(
+            threads_after <= threads_before + 64,
+            "range-GETs grew the thread count {threads_before} -> {threads_after}"
+        );
+    }
+
+    // A big tensor's wire bytes stay well under the whole container.
+    let biggest = spans.iter().max_by_key(|t| t.len).unwrap();
+    let (bytes, wire) = client.get_tensor("m", &biggest.name).unwrap();
+    assert_eq!(bytes.len() as u64, biggest.len);
+    assert!(
+        (wire as usize) < container.len() / 2,
+        "biggest tensor moved {wire} of {} container bytes",
+        container.len()
+    );
+
+    // Backward compat: the index-unaware whole-blob download of the
+    // indexed container still round-trips.
+    let (got, _) = client.download("m", true, &mut sim).unwrap();
+    assert_eq!(got, raw, "indexed container must decode on old-style readers");
+
+    // Malformed ranges: clean error responses, connection stays usable.
+    let total = container.len() as u64;
+    assert!(client.get_range("m.znn", total, 1).is_err(), "off-the-end accepted");
+    assert!(client.get_range("m.znn", total - 1, 2).is_err(), "past-the-end accepted");
+    assert!(client.get_range("m.znn", u64::MAX, 1).is_err(), "overflow accepted");
+    assert_eq!(client.get_range("m.znn", 0, 0).unwrap(), b"", "zero-len range");
+    assert!(client.get_tensor("m", "no.such.tensor").is_err());
+    assert!(client.get_range("no-such-blob", 0, 1).is_err());
+    // Un-indexed blobs answer tensor-GETs with an error, not a panic —
+    // and plain byte ranges still work on them.
+    client.upload("plain.znn", &raw[..65_000], None, &mut sim).unwrap();
+    assert!(client.get_tensor("plain", "x").is_err(), "tensor-GET on un-indexed blob");
+    assert_eq!(client.get_range("plain.znn", 100, 50).unwrap(), &raw[100..150]);
+    let names = client.list().unwrap();
+    assert!(names.contains(&"m.znn".to_string()));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Range reads work identically on a non-spooled (heap-frame) store —
+/// the segment writer walks stored frames instead of one mapping.
+#[test]
+fn range_gets_from_heap_store() {
+    let server = HubServer::start().unwrap();
+    let mut client = HubClient::connect(server.addr()).unwrap();
+    let model = generate(&SyntheticSpec::new("h", Category::RegularBF16, 1 << 20, 31));
+    let raw = model.to_bytes();
+    let spans = tensor_spans(&model);
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 3);
+    client.upload_indexed("h", &raw, spans.clone(), cfg.clone(), &mut sim).unwrap();
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap().with_index(spans.clone());
+    w.write_all(&raw).unwrap();
+    let container = w.finish().unwrap();
+
+    // Ranges crossing the server's 64 KiB stored-frame boundaries.
+    for (off, len) in [
+        (0u64, 16u64),
+        (FRAME_MAX as u64 - 8, 64),
+        (FRAME_MAX as u64 * 2 - 1, 2),
+        (0, container.len() as u64),
+    ] {
+        let len = len.min(container.len() as u64 - off);
+        let got = client.get_range("h.znn", off, len).unwrap();
+        assert_eq!(got, &container[off as usize..(off + len) as usize], "range [{off}, +{len})");
+    }
+    for t in spans.iter().take(4) {
+        let (bytes, _) = client.get_tensor("h", &t.name).unwrap();
+        assert_eq!(bytes, &raw[t.offset as usize..(t.offset + t.len) as usize], "{}", t.name);
+    }
     server.shutdown();
 }
 

@@ -10,7 +10,9 @@
 
 use std::io::{Read, Write};
 use std::path::PathBuf;
-use zipnn::codec::{CodecConfig, Compressor, MappedBytes, ZnnReader, ZnnWriter};
+use zipnn::codec::{
+    index, CodecConfig, Compressor, MappedBytes, TensorMeta, ZnnReader, ZnnWriter,
+};
 use zipnn::fp::DType;
 use zipnn::util::Xoshiro256;
 
@@ -117,6 +119,311 @@ fn mapped_decode_equals_stream_decode() {
         }
         std::fs::remove_file(&path).unwrap();
     }
+}
+
+/// Random tensor layout: names, dtypes and sizes (empty tensors, sizes
+/// straddling chunk boundaries, and an odd final byte that lands in the
+/// `ZNS1` trailer tail all included). Returns the concatenated raw bytes
+/// plus the tensor directory describing them.
+fn random_tensor_layout(
+    rng: &mut Xoshiro256,
+    chunk_size: usize,
+) -> (Vec<u8>, Vec<TensorMeta>, DType) {
+    let dtype = if rng.below(2) == 0 { DType::BF16 } else { DType::F32 };
+    let n_tensors = rng.below(6);
+    let mut raw = Vec::new();
+    let mut metas = Vec::new();
+    for i in 0..n_tensors {
+        let len = match rng.below(5) {
+            0 => 0,                                       // empty tensor
+            1 => 1 + rng.below(64),                       // tiny
+            2 => chunk_size - 1 + rng.below(3), // straddles a chunk boundary
+            3 => chunk_size * (1 + rng.below(4)),         // chunk-aligned
+            _ => rng.below(3 * chunk_size + 1),
+        };
+        let meta = TensorMeta {
+            name: format!("t{i}.weight"),
+            dtype,
+            offset: raw.len() as u64,
+            len: len as u64,
+        };
+        let base = raw.len();
+        raw.resize(base + len, 0);
+        match rng.below(3) {
+            0 => rng.fill_bytes(&mut raw[base..]),
+            1 => {} // zeros
+            _ => {
+                for pair in raw[base..].chunks_exact_mut(2) {
+                    pair[0] = rng.next_u32() as u8;
+                    pair[1] = 120 + (rng.uniform().powi(2) * 12.0) as u8;
+                }
+            }
+        }
+        metas.push(meta);
+    }
+    if rng.below(2) == 0 {
+        // Odd trailing byte: the ZNS1 trailer tail, covered by a tensor.
+        metas.push(TensorMeta {
+            name: "tail.byte".into(),
+            dtype: DType::I8,
+            offset: raw.len() as u64,
+            len: 1,
+        });
+        raw.push(0xA7);
+    }
+    (raw, metas, dtype)
+}
+
+/// Ranges worth probing for a payload of `total` bytes: edges straddling
+/// chunk boundaries, empty ranges, the final partial chunk, the whole
+/// payload, and a few random spans.
+fn probe_ranges(rng: &mut Xoshiro256, total: u64, chunk_size: u64) -> Vec<(u64, u64)> {
+    let mut ranges = vec![(0, 0), (0, total), (total, 0)];
+    if total > 0 {
+        ranges.push((total - 1, 1)); // final byte (partial chunk / tail)
+        ranges.push((total / 2, total - total / 2));
+        let boundary = chunk_size.min(total);
+        ranges.push((boundary.saturating_sub(1), (total - boundary.saturating_sub(1)).min(3)));
+        for _ in 0..4 {
+            let off = rng.below(total as usize) as u64;
+            let len = rng.below((total - off) as usize + 1) as u64;
+            ranges.push((off, len));
+        }
+    }
+    ranges
+}
+
+/// `decode_range` / `decode_tensor` must equal the corresponding slice of
+/// a full decompress — across random tensor layouts, dtypes, chunk sizes,
+/// thread counts, both container formats, and every source kind (mapped
+/// file, owned bytes, sequential stream).
+#[test]
+fn partial_decode_equals_full_decode_slices() {
+    let mut rng = Xoshiro256::seed_from_u64(0x7E45_0125);
+    for case in 0..14 {
+        let chunk_size = [512usize, 1024, 4096, 64 * 1024][rng.below(4)];
+        let (raw, metas, dtype) = random_tensor_layout(&mut rng, chunk_size);
+        let total = raw.len() as u64;
+        let cfg = CodecConfig::for_dtype(dtype)
+            .with_chunk_size(chunk_size)
+            .with_threads(1 + rng.below(4));
+        // chunk size after elem alignment (what the container records)
+        let eff_chunk = cfg.chunk_size as u64;
+
+        // ZNS1 with the index written by the streaming writer.
+        let mut w = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap().with_index(metas.clone());
+        w.write_all(&raw).unwrap();
+        let zns = w.finish().unwrap();
+        // ZNN1 with the index appended to a one-shot container.
+        let mut znn = Compressor::new(cfg).compress(&raw).unwrap();
+        index::append_to_znn1(&mut znn, metas.clone()).unwrap();
+
+        for (tag, container) in [("zns", &zns), ("znn", &znn)] {
+            let path = tmp_path(case * 2 + usize::from(tag == "znn"));
+            std::fs::write(&path, container).unwrap();
+            let ctx = format!("case {case} {tag}: total={total} chunk={chunk_size}");
+
+            for threads in [1usize, 3] {
+                // Opened file: random access over the mapping, repeated
+                // calls on one reader; under ZIPNN_NO_MMAP the fallback
+                // is sequential, so each probe gets a fresh reader.
+                let mut r = ZnnReader::open(&path).unwrap().with_threads(threads);
+                let random = r.supports_random_access().unwrap();
+                let idx = r.index().unwrap().unwrap_or_else(|| panic!("{ctx}: no index"));
+                assert_eq!(idx.total_len, total, "{ctx}");
+                assert_eq!(idx.tensors.len(), metas.len(), "{ctx}");
+                for m in &metas {
+                    let want = &raw[m.offset as usize..(m.offset + m.len) as usize];
+                    let got = if random {
+                        r.decode_tensor(&m.name).unwrap()
+                    } else {
+                        ZnnReader::open(&path)
+                            .unwrap()
+                            .with_threads(threads)
+                            .decode_tensor(&m.name)
+                            .unwrap()
+                    };
+                    assert_eq!(got, want, "{ctx} tensor {} threads={threads}", m.name);
+                }
+                for (off, len) in probe_ranges(&mut rng, total, eff_chunk) {
+                    let got = if random {
+                        r.decode_range(off, len).unwrap()
+                    } else {
+                        ZnnReader::open(&path)
+                            .unwrap()
+                            .with_threads(threads)
+                            .decode_range(off, len)
+                            .unwrap()
+                    };
+                    assert_eq!(
+                        got,
+                        &raw[off as usize..(off + len) as usize],
+                        "{ctx} range [{off}, +{len}) threads={threads} opened"
+                    );
+                }
+
+                // Owned bytes through the same zero-copy machinery.
+                let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+                    .unwrap()
+                    .with_threads(threads);
+                for m in &metas {
+                    let got = r.decode_tensor(&m.name).unwrap();
+                    let want = &raw[m.offset as usize..(m.offset + m.len) as usize];
+                    assert_eq!(got, want, "{ctx} tensor {} owned", m.name);
+                }
+
+                // Sequential stream source (socket-shaped): ranges decode
+                // via skip-ahead; a fresh reader per range.
+                for (off, len) in probe_ranges(&mut rng, total, eff_chunk) {
+                    let got = ZnnReader::new(container.as_slice())
+                        .unwrap()
+                        .with_threads(threads)
+                        .decode_range(off, len)
+                        .unwrap();
+                    assert_eq!(
+                        got,
+                        &raw[off as usize..(off + len) as usize],
+                        "{ctx} range [{off}, +{len}) threads={threads} stream"
+                    );
+                }
+            }
+
+            // Ascending ranges on ONE sequential reader (the lazy model
+            // loader's access pattern: preamble, header, tensor).
+            let mut r = ZnnReader::new(container.as_slice()).unwrap();
+            let cuts = [0, total / 3, total / 2, total];
+            for w in cuts.windows(2) {
+                let (off, len) = (w[0], w[1] - w[0]);
+                let got = r.decode_range(off, len).unwrap();
+                assert_eq!(got, &raw[off as usize..(off + len) as usize], "{ctx} ascending");
+            }
+
+            // Full sequential decode of the indexed container must still
+            // match (index-unaware readers keep working).
+            let mut back = Vec::new();
+            ZnnReader::new(container.as_slice())
+                .unwrap()
+                .read_to_end(&mut back)
+                .unwrap();
+            assert_eq!(back, raw, "{ctx} whole-container decode");
+            if tag == "znn" {
+                // The strict one-shot parser accounts for the trailing
+                // index through FLAG_INDEX.
+                assert_eq!(
+                    zipnn::codec::decompress(container).unwrap(),
+                    raw,
+                    "{ctx} one-shot decompress of indexed container"
+                );
+            }
+
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}
+
+/// Malformed ranges: out of bounds, overflow, and backwards seeks on
+/// sequential sources error cleanly — never panic, never wrong bytes.
+#[test]
+fn malformed_ranges_rejected() {
+    let raw: Vec<u8> = (0..40_000u32).map(|i| (i * 7 % 251) as u8).collect();
+    let metas = vec![TensorMeta {
+        name: "all".into(),
+        dtype: DType::I8,
+        offset: 0,
+        len: raw.len() as u64,
+    }];
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap().with_index(metas);
+    w.write_all(&raw).unwrap();
+    let container = w.finish().unwrap();
+    let total = raw.len() as u64;
+
+    let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone())).unwrap();
+    assert!(r.decode_range(total, 1).is_err(), "off-the-end");
+    assert!(r.decode_range(0, total + 1).is_err(), "past-the-end");
+    assert!(r.decode_range(u64::MAX, 2).is_err(), "overflow");
+    assert!(r.decode_tensor("nope").is_err(), "unknown tensor");
+    // The reader stays usable after rejected ranges.
+    assert_eq!(r.decode_range(10, 5).unwrap(), &raw[10..15]);
+
+    // Sequential source: backwards ranges are a clean error.
+    let mut r = ZnnReader::new(container.as_slice()).unwrap();
+    assert_eq!(r.decode_range(1000, 10).unwrap(), &raw[1000..1010]);
+    assert!(r.decode_range(0, 10).is_err(), "backwards seek on a stream");
+
+    // A truncated mapped container must never satisfy a range that needs
+    // the missing bytes.
+    let cut = container.len() / 2;
+    if let Ok(mut r) = ZnnReader::from_mapped(MappedBytes::from_vec(container[..cut].to_vec())) {
+        match r.decode_range(total - 100, 100) {
+            Err(_) => {}
+            Ok(got) => assert_ne!(got, &raw[raw.len() - 100..], "truncation went unnoticed"),
+        }
+    }
+}
+
+/// Random access must survive a full sequential read of the same mapped
+/// reader — the one-shot table (and the `ZNS1` geometry) outlive the
+/// sequential state machine's `Done` transition.
+#[test]
+fn random_access_survives_sequential_read() {
+    let mut rng = Xoshiro256::seed_from_u64(0xD0_5EED);
+    let mut raw = vec![0u8; 120_000];
+    rng.fill_bytes(&mut raw);
+    let metas = vec![
+        TensorMeta { name: "a".into(), dtype: DType::BF16, offset: 4_000, len: 30_000 },
+        TensorMeta { name: "z".into(), dtype: DType::BF16, offset: 100_000, len: 20_000 },
+    ];
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+    let mut w = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap().with_index(metas.clone());
+    w.write_all(&raw).unwrap();
+    let zns = w.finish().unwrap();
+    let mut znn = Compressor::new(cfg).compress(&raw).unwrap();
+    index::append_to_znn1(&mut znn, metas.clone()).unwrap();
+
+    for (tag, container) in [("zns", &zns), ("znn", &znn)] {
+        let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone())).unwrap();
+        assert!(r.supports_random_access().unwrap(), "{tag}");
+        let mut all = Vec::new();
+        r.read_to_end(&mut all).unwrap();
+        assert_eq!(all, raw, "{tag}");
+        // The reader is fully consumed — ranges must still serve.
+        assert!(r.supports_random_access().unwrap(), "{tag} post-read");
+        assert_eq!(r.decode_tensor("a").unwrap(), &raw[4_000..34_000], "{tag} post-read tensor");
+        assert_eq!(r.decode_range(0, 64).unwrap(), &raw[..64], "{tag} post-read range");
+    }
+}
+
+/// An index written by the writer must describe the container exactly:
+/// frame offsets point at frame markers and the whole-file probe agrees
+/// with the reader's view.
+#[test]
+fn writer_index_matches_container_layout() {
+    let mut rng = Xoshiro256::seed_from_u64(0x1D0_5EED);
+    let mut raw = vec![0u8; 300_000];
+    rng.fill_bytes(&mut raw);
+    let metas = vec![
+        TensorMeta { name: "a".into(), dtype: DType::BF16, offset: 0, len: 100_000 },
+        TensorMeta { name: "b".into(), dtype: DType::BF16, offset: 100_000, len: 200_000 },
+    ];
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(2048);
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap().with_index(metas);
+    w.write_all(&raw).unwrap();
+    let container = w.finish().unwrap();
+    let idx = index::probe_bytes(&container).unwrap().expect("index present");
+    assert_eq!(idx.total_len, 300_000);
+    assert!(!idx.frame_offsets.is_empty());
+    for &f in &idx.frame_offsets {
+        assert_eq!(container[f as usize], 0xF5, "frame offset {f} not at a frame marker");
+    }
+    assert_eq!(container[idx.trailer_off as usize], 0xF6, "trailer offset wrong");
+    // Out-of-range tensors are rejected at write time.
+    let bad = vec![TensorMeta { name: "x".into(), dtype: DType::I8, offset: 1, len: u64::MAX }];
+    let mut w = ZnnWriter::new(Vec::new(), CodecConfig::for_dtype(DType::BF16))
+        .unwrap()
+        .with_index(bad);
+    w.write_all(b"abcd").unwrap();
+    assert!(w.finish().is_err());
 }
 
 /// Truncating a mapped container anywhere must error (or at minimum never
