@@ -4,8 +4,9 @@
 //! Paper: without grouping the fraction compresses poorly; with grouping
 //! byte1 ≈ 95.6% (barely), byte2 ≈ 37.5%, byte3 ≈ 0% (all zeros).
 
+use std::io::Write;
 use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, BenchEnv, Table};
-use zipnn::codec::{compress_with_report, CodecConfig};
+use zipnn::codec::{compress_with_report, CodecConfig, ZnnWriter};
 use zipnn::fp::{split_groups, DType, GroupLayout};
 use zipnn::huffman;
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
@@ -98,6 +99,36 @@ fn main() {
             ("throughput_mb_s", mb / comp_secs),
             ("allocs_per_mb", comp_allocs as f64 / mb),
             ("peak_rss_kb", peak_rss_kb().unwrap_or(0) as f64),
+        ],
+    );
+
+    // Pooled pipelined encode (the ZnnWriter on the shared sticky pool,
+    // double-buffered: batch N's frames serialize while batch N+1
+    // compresses). 8 KiB chunks keep the batch at `threads * 128 KiB` —
+    // at most 1 MiB even at 8 threads — so the 4 MiB CI payload always
+    // spans >= 4 batches and actually exercises the pipeline on every
+    // machine, not just one submit.
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .min(8);
+    let cfg = CodecConfig::for_dtype(DType::F32)
+        .with_chunk_size(8 * 1024)
+        .with_threads(threads);
+    let t = Timer::start();
+    let mut w = ZnnWriter::new(Vec::with_capacity(raw.len()), cfg).unwrap();
+    w.write_all(&raw).unwrap();
+    let pooled = w.finish().unwrap();
+    let pooled_secs = t.secs();
+    println!(
+        "pooled writer ({threads} threads): {:.1}% in {pooled_secs:.3}s",
+        pooled.len() as f64 / raw.len() as f64 * 100.0
+    );
+    json_line(
+        "fig6_compress",
+        &[
+            ("pooled_comp_mb_s", mb / pooled_secs),
+            ("threads", threads as f64),
         ],
     );
 }

@@ -5,8 +5,7 @@
 //! implementation (the golden-bytes test pins this).
 
 use crate::codec::container::{write_header, ContainerHeader};
-use crate::codec::parallel::{run_tasks_with, SUPER_CHUNK};
-use crate::codec::stream::compress_super_chunk;
+use crate::codec::stream::{compress_supers, encode_workers};
 use crate::codec::{checksum64, CodecConfig};
 use crate::error::Result;
 use crate::fp::GroupLayout;
@@ -60,31 +59,17 @@ impl Compressor {
         let groups = layout.groups();
 
         // Super-chunk tasks over the shared streaming core: deterministic
-        // under any thread count, one scratch arena per worker.
-        let n_super = n_chunks.div_ceil(SUPER_CHUNK);
-        let super_bytes = SUPER_CHUNK * chunk_size;
-        let cfg = &self.cfg;
-        let supers: Vec<(Vec<crate::codec::StreamEntry>, Vec<u8>)> = run_tasks_with(
-            n_super,
-            self.cfg.threads,
-            Vec::new,
-            |group_scratch, si| {
-                let lo = si * super_bytes;
-                let hi = ((si + 1) * super_bytes).min(data.len());
-                let mut entries = Vec::with_capacity(SUPER_CHUNK * groups);
-                let mut payload = Vec::new();
-                compress_super_chunk(
-                    cfg,
-                    layout,
-                    chunk_size,
-                    &data[lo..hi],
-                    group_scratch,
-                    &mut entries,
-                    &mut payload,
-                );
-                (entries, payload)
-            },
-        );
+        // under any thread count. Parallel runs execute as claimed tasks
+        // on the process-shared sticky-state pool (the calling thread
+        // helps; no scoped thread spawns per call) — the encode mirror of
+        // the persistent decode engine.
+        let supers = compress_supers(
+            &self.cfg,
+            layout,
+            chunk_size,
+            data,
+            encode_workers(self.cfg.threads),
+        )?;
 
         let mut entries = Vec::with_capacity(n_chunks * groups);
         let mut payload_len = 0usize;

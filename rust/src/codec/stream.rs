@@ -24,12 +24,17 @@
 //!   steady-state compression perform O(workers) allocations instead of
 //!   O(chunks × groups).
 //!
-//! With `with_threads(n > 1)` the reader decodes each batch on the
+//! With `with_threads(n > 1)` **both directions** run on the
 //! process-wide [`crate::coordinator::shared_pool`] — workers are spawned
 //! once per process, their arenas and Huffman decode tables stay warm in
-//! per-worker sticky state, and the refill is **double-buffered**: the
-//! compressed bytes (or mapped pages) of batch N+1 are fetched while
-//! batch N is still decoding.
+//! per-worker sticky state, and both sides are **double-buffered**: the
+//! reader fetches batch N+1's compressed bytes (or mapped pages) while
+//! batch N decodes, and the writer serializes batch N's frames to the
+//! inner sink while batch N+1's super-chunks compress on the pool
+//! (`ZIPNN_ENCODE_WORKERS` overrides the writer's thread count without
+//! an API change). The emitted bytes are identical for any thread count
+//! and write split — frame boundaries are fixed at super-chunk
+//! granularity.
 //!
 //! The one-shot [`crate::codec::Compressor`] and
 //! [`crate::codec::decompress`] are thin wrappers over the same
@@ -138,11 +143,14 @@ pub fn sub_container_parts(header: &[u8], raw_len: u64, tail: &[u8]) -> Result<(
 /// Reusable per-worker scratch for the codec hot paths.
 ///
 /// One arena serves one worker for its whole lifetime; every buffer is
-/// `clear()`ed and refilled per chunk or per super-chunk, so after a few
-/// super-chunks of warm-up the steady state performs no allocations at all
-/// on the Huffman/Raw/Zero paths (Zstd streams call into the zstd
-/// allocator). [`crate::codec::parallel::run_tasks_with`] threads one arena
-/// through every task a worker executes.
+/// length-set and refilled per chunk or per super-chunk (reusing its
+/// initialized spare capacity — no memset of bytes about to be
+/// overwritten), so after a few super-chunks of warm-up the steady state
+/// performs no allocations at all on the Huffman/Raw/Zero paths, and the
+/// Zstd path reuses one worst-case-bound destination buffer. Both engine
+/// directions — the decode pool (PR 3) and the encode pool — keep one
+/// arena per shared-pool worker in its sticky state, warm across batches,
+/// writers, readers, and files.
 ///
 /// The decode side additionally caches built Huffman decode tables per
 /// `(worker, table-bytes)` in [`huffman::DecodeTableCache`]: repeated
@@ -155,6 +163,9 @@ pub struct ScratchArena {
     pub(crate) entries: Vec<StreamEntry>,
     /// Concatenated compressed streams of the super-chunk in flight.
     pub(crate) payload: Vec<u8>,
+    /// Zstd destination scratch (compress only): one worst-case-bound
+    /// buffer per worker instead of a fresh `Vec` per Zstd stream.
+    pub(crate) zstd_dst: Vec<u8>,
     /// Decode-table cache (decompress only; empty on the compress side).
     pub(crate) tables: huffman::DecodeTableCache,
 }
@@ -269,18 +280,27 @@ pub(crate) fn compress_super_chunk(
     layout: GroupLayout,
     chunk_size: usize,
     data: &[u8],
-    group_scratch: &mut Vec<Vec<u8>>,
+    scratch: CompressScratch<'_>,
     entries: &mut Vec<StreamEntry>,
     payload: &mut Vec<u8>,
 ) {
+    let CompressScratch { groups: group_scratch, zstd_dst } = scratch;
     let groups = layout.groups();
     let mut policy = AutoPolicy::new(groups, cfg.skip_window);
     for chunk in data.chunks(chunk_size) {
         split_groups_into(chunk, layout, group_scratch).expect("aligned by construction");
         for (gi, g) in group_scratch.iter().enumerate() {
-            entries.push(compress_stream_into(cfg, gi, g, &mut policy, payload));
+            entries.push(compress_stream_into(cfg, gi, g, &mut policy, zstd_dst, payload));
         }
     }
+}
+
+/// The compression-side pieces of a [`ScratchArena`] — the per-group
+/// split buffers and the zstd destination buffer — borrowed together so
+/// the same arena's `entries`/`payload` stay independently borrowable.
+pub(crate) struct CompressScratch<'a> {
+    pub(crate) groups: &'a mut Vec<Vec<u8>>,
+    pub(crate) zstd_dst: &'a mut Vec<u8>,
 }
 
 /// Compress one group stream according to the configured policy, appending
@@ -291,6 +311,7 @@ fn compress_stream_into(
     group: usize,
     data: &[u8],
     policy: &mut AutoPolicy,
+    zstd_scratch: &mut Vec<u8>,
     payload: &mut Vec<u8>,
 ) -> StreamEntry {
     let raw_len = data.len() as u32;
@@ -301,7 +322,7 @@ fn compress_stream_into(
     match cfg.policy {
         MethodPolicy::Raw => store_raw(payload),
         MethodPolicy::Huffman => huffman_or_raw_into(data, None, group, policy, false, payload),
-        MethodPolicy::Zstd => zstd_or_raw_into(cfg.zstd_level, data, payload),
+        MethodPolicy::Zstd => zstd_or_raw_into(cfg.zstd_level, data, zstd_scratch, payload),
         MethodPolicy::Auto => {
             if policy.take_skip(group) {
                 return store_raw(payload);
@@ -311,7 +332,7 @@ fn compress_stream_into(
             match policy.decide_with_hist(data, &hist) {
                 Decision::SkipRaw => store_raw(payload),
                 Decision::Zero => StreamEntry { method: Method::Zero, comp_len: 0, raw_len },
-                Decision::TryZstd => zstd_or_raw_into(cfg.zstd_level, data, payload),
+                Decision::TryZstd => zstd_or_raw_into(cfg.zstd_level, data, zstd_scratch, payload),
                 Decision::TryHuffman => {
                     huffman_or_raw_into(data, Some(&hist), group, policy, true, payload)
                 }
@@ -356,7 +377,12 @@ fn huffman_or_raw_into(
     }
 }
 
-fn zstd_or_raw_into(level: i32, data: &[u8], payload: &mut Vec<u8>) -> StreamEntry {
+fn zstd_or_raw_into(
+    level: i32,
+    data: &[u8],
+    scratch: &mut Vec<u8>,
+    payload: &mut Vec<u8>,
+) -> StreamEntry {
     // An all-zero stream is cheaper as Zero even under forced-Zstd.
     if !data.is_empty() && zero_stats(data).zero_frac >= 1.0 {
         return StreamEntry {
@@ -365,12 +391,15 @@ fn zstd_or_raw_into(level: i32, data: &[u8], payload: &mut Vec<u8>) -> StreamEnt
             raw_len: data.len() as u32,
         };
     }
-    match lz::zstd_compress(data, level) {
-        Ok(enc) if enc.len() < data.len() => {
-            payload.extend_from_slice(&enc);
+    // Compress into the sticky per-worker scratch (grown once to the
+    // worst-case bound) instead of a fresh `Vec` per stream; the bytes
+    // are identical to the allocating path the golden test freezes.
+    match lz::zstd_compress_into(data, level, scratch) {
+        Ok(n) if n < data.len() => {
+            payload.extend_from_slice(&scratch[..n]);
             StreamEntry {
                 method: Method::Zstd,
-                comp_len: enc.len() as u32,
+                comp_len: n as u32,
                 raw_len: data.len() as u32,
             }
         }
@@ -445,8 +474,10 @@ pub(crate) fn decode_chunk_into(
             .ok_or_else(|| Error::Corrupt("stream extends past payload".into()))?;
         off = end;
         let buf = &mut scratch[g];
-        buf.clear();
-        buf.resize(e.raw_len as usize, 0);
+        // Length-set through spare capacity (every decode method fully
+        // overwrites `buf` or errors): steady-state chunks of equal size
+        // never memset bytes they are about to overwrite.
+        crate::fp::bytegroup::set_group_len(buf, e.raw_len as usize);
         decode_stream_into(e.method, stream, buf, tables)?;
     }
     if off != comp.len() {
@@ -608,21 +639,34 @@ fn ensure_len(v: &mut Vec<u8>, len: usize) {
 /// to an inner sink, one frame per completed super-chunk.
 ///
 /// Buffering is bounded: at most `threads × SUPER_CHUNK × chunk_size` raw
-/// bytes are held (the compression batch), independent of the total input
-/// size. Call [`ZnnWriter::finish`] to compress the final partial chunk and
-/// write the trailer — dropping the writer without finishing produces a
-/// truncated container that readers reject.
+/// bytes are accumulated per batch (two batches in pooled mode),
+/// independent of the total input size. Call [`ZnnWriter::finish`] to
+/// compress the final partial chunk and write the trailer — dropping the
+/// writer without finishing produces a truncated container that readers
+/// reject.
+///
+/// With `threads > 1` (or `ZIPNN_ENCODE_WORKERS` set) batches compress on
+/// the process-shared [`crate::coordinator::shared_pool`] — workers are
+/// spawned once per process, their scratch arenas stay warm in per-worker
+/// sticky state, and the writer is **double-buffered**: while batch N's
+/// frames serialize to the inner sink (the I/O-bound tail), batch N+1's
+/// super-chunks are already compressing on the pool. Frame boundaries are
+/// fixed at super-chunk granularity, so the emitted bytes are identical
+/// for any thread count, batch split, and write pattern.
 pub struct ZnnWriter<W: Write> {
     inner: W,
     cfg: CodecConfig,
     layout: GroupLayout,
     chunk_size: usize,
+    /// Effective encode parallelism (`ZIPNN_ENCODE_WORKERS` override or
+    /// `cfg.threads`); `> 1` routes batches through the encode pipeline.
+    threads: usize,
     buf: Vec<u8>,
     batch_bytes: usize,
     arena: ScratchArena,
-    /// Recycled (entries, payload) pairs for the multi-threaded batch
-    /// path, so steady-state frame buffers are reused across batches.
-    spare: Vec<(Vec<StreamEntry>, Vec<u8>)>,
+    /// Pooled pipelined encode state (`threads > 1` only, built on first
+    /// flush). Owns the in-flight batch the pool compresses.
+    pipe: Option<EncodePipeline>,
     head_buf: Vec<u8>,
     ck: Option<Checksummer>,
     total: u64,
@@ -632,6 +676,175 @@ pub struct ZnnWriter<W: Write> {
     frame_offsets: Vec<u64>,
     /// Tensor directory to append as an index section at `finish`.
     index_tensors: Option<Vec<TensorMeta>>,
+    /// Set when a frame emission failed. A frame may then be *partially*
+    /// on the sink, so no retry can produce a valid container — every
+    /// later `write`/`flush`/`finish` reports the writer as broken
+    /// instead of silently appending past the corruption.
+    failed: bool,
+}
+
+/// Double-buffered pooled encode state of a [`ZnnWriter`].
+///
+/// While the finished frames of batch N sit in `done` waiting to
+/// serialize to the inner sink, batch N+1's super-chunks are already
+/// compressing on the shared pool (`pending`, over `in_buf`/`in_slots`).
+/// Dropping the pipeline joins any in-flight batch first — the pool
+/// helpers hold raw pointers into its buffers.
+struct EncodePipeline {
+    engine: Engine,
+    /// Codec config behind a stable heap address: the task frame points
+    /// at it, and the writer (or this pipeline) may move between writes.
+    cfg: Box<CodecConfig>,
+    /// Raw bytes of the in-flight batch (swapped with the writer's fill
+    /// buffer at submit, so the two ping-pong without reallocating).
+    in_buf: Vec<u8>,
+    /// Per-super-chunk `(entries, payload)` output slots, in flight.
+    in_slots: Vec<EncodeSlot>,
+    /// Finished frames awaiting serialization (`done[..done_n]`); their
+    /// spare capacity becomes the next submission's slots.
+    done: Vec<EncodeSlot>,
+    done_n: usize,
+    pending: Option<TaskFrame>,
+    /// Caller-helps scratch for [`Engine::wait`].
+    arena: ScratchArena,
+}
+
+impl EncodePipeline {
+    fn new(cfg: &CodecConfig, threads: usize, batch_bytes: usize) -> EncodePipeline {
+        EncodePipeline {
+            engine: Engine::new(threads),
+            cfg: Box::new(cfg.clone()),
+            in_buf: Vec::with_capacity(batch_bytes),
+            in_slots: Vec::new(),
+            done: Vec::new(),
+            done_n: 0,
+            pending: None,
+            arena: ScratchArena::new(),
+        }
+    }
+
+    /// Join the in-flight batch, if any; its finished frames rotate into
+    /// `done` (and the previously emitted slots rotate in as spares).
+    fn join(&mut self) -> Result<()> {
+        if let Some(frame) = self.pending.take() {
+            self.engine.wait(frame, &mut self.arena)?;
+            std::mem::swap(&mut self.in_slots, &mut self.done);
+            self.done_n = frame.n;
+        }
+        Ok(())
+    }
+
+    /// Swap `batch` (its first `len` bytes are the batch's raw input)
+    /// into the pipeline and submit its super-chunks to the shared pool.
+    /// Non-blocking; the previous batch must already be joined.
+    fn submit(&mut self, batch: &mut Vec<u8>, len: usize, layout: GroupLayout, chunk_size: usize) {
+        debug_assert!(self.pending.is_none(), "previous batch must be joined");
+        std::mem::swap(&mut self.in_buf, batch);
+        let n_super = len.div_ceil(chunk_size).div_ceil(SUPER_CHUNK);
+        if self.in_slots.len() < n_super {
+            self.in_slots.resize_with(n_super, Default::default);
+        }
+        self.engine.epoch += 1;
+        let frame = TaskFrame {
+            epoch: self.engine.epoch,
+            n: n_super,
+            kind: TaskKind::Encode(EncodeFrame {
+                cfg: &*self.cfg as *const CodecConfig,
+                layout,
+                chunk_size,
+                buf: self.in_buf.as_ptr(),
+                len,
+                slots: self.in_slots.as_mut_ptr(),
+            }),
+        };
+        self.engine.submit(frame);
+        self.pending = Some(frame);
+    }
+}
+
+impl Drop for EncodePipeline {
+    /// Join any in-flight encode before the batch buffers are freed (the
+    /// pool helpers hold raw pointers into them while tasks are claimed).
+    fn drop(&mut self) {
+        if let Some(frame) = self.pending.take() {
+            let _ = self.engine.wait(frame, &mut self.arena);
+        }
+    }
+}
+
+/// Effective encode parallelism: the `ZIPNN_ENCODE_WORKERS` environment
+/// knob overrides the config's thread count, so deployments can put every
+/// existing consumer — CLI `compress`, hub PUT/`upload_indexed`, delta
+/// encodes, the checkpoint store — on the pooled pipelined path without
+/// an API change. Batch sizing moves with it, but the emitted bytes never
+/// do (frame boundaries are fixed at super-chunk granularity).
+pub(crate) fn encode_workers(cfg_threads: usize) -> usize {
+    std::env::var("ZIPNN_ENCODE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| cfg_threads.max(1))
+}
+
+/// Compress every super-chunk of `data` in order, returning one
+/// `(entries, payload)` pair per super-chunk — the shared body of the
+/// one-shot [`crate::codec::Compressor`]. `threads <= 1` compresses
+/// inline with one scratch arena; otherwise the super-chunks run as
+/// claimed tasks on the process-shared sticky pool (no per-call thread
+/// spawns), with the calling thread helping so a busy pool can never
+/// stall the caller. Output is byte-identical either way.
+pub(crate) fn compress_supers(
+    cfg: &CodecConfig,
+    layout: GroupLayout,
+    chunk_size: usize,
+    data: &[u8],
+    threads: usize,
+) -> Result<Vec<EncodeSlot>> {
+    let groups = layout.groups();
+    let n_super = data.len().div_ceil(chunk_size).div_ceil(SUPER_CHUNK);
+    let mut arena = ScratchArena::new();
+    if threads <= 1 || n_super <= 1 {
+        return Ok((0..n_super)
+            .map(|si| {
+                let (lo, hi) = super_chunk_span(chunk_size, data.len(), si);
+                let mut entries = Vec::with_capacity(SUPER_CHUNK * groups);
+                let mut payload = Vec::new();
+                let ScratchArena { groups: scratch, zstd_dst, .. } = &mut arena;
+                compress_super_chunk(
+                    cfg,
+                    layout,
+                    chunk_size,
+                    &data[lo..hi],
+                    CompressScratch { groups: scratch, zstd_dst },
+                    &mut entries,
+                    &mut payload,
+                );
+                (entries, payload)
+            })
+            .collect());
+    }
+    let mut slots: Vec<EncodeSlot> = Vec::new();
+    slots.resize_with(n_super, Default::default);
+    let mut engine = Engine::new(threads);
+    engine.epoch += 1;
+    let frame = TaskFrame {
+        epoch: engine.epoch,
+        n: n_super,
+        kind: TaskKind::Encode(EncodeFrame {
+            cfg: cfg as *const CodecConfig,
+            layout,
+            chunk_size,
+            buf: data.as_ptr(),
+            len: data.len(),
+            slots: slots.as_mut_ptr(),
+        }),
+    };
+    engine.submit(frame);
+    // Joined before returning, so the frame's pointers (into `data`,
+    // `slots`, and `cfg`) never outlive this call; stale queued helpers
+    // exit on the sealed progress without dereferencing them.
+    engine.wait(frame, &mut arena)?;
+    Ok(slots)
 }
 
 impl<W: Write> ZnnWriter<W> {
@@ -647,7 +860,7 @@ impl<W: Write> ZnnWriter<W> {
             )));
         }
         let chunk_size = cfg.chunk_size.max(elem) / elem * elem;
-        let threads = cfg.threads.max(1);
+        let threads = encode_workers(cfg.threads);
         let batch_bytes = threads * SUPER_CHUNK * chunk_size;
         let mut header = [0u8; 12];
         header[0..4].copy_from_slice(&STREAM_MAGIC);
@@ -663,15 +876,17 @@ impl<W: Write> ZnnWriter<W> {
             cfg,
             layout,
             chunk_size,
+            threads,
             buf: Vec::with_capacity(batch_bytes),
             batch_bytes,
             arena: ScratchArena::new(),
-            spare: Vec::new(),
+            pipe: None,
             head_buf: Vec::new(),
             total: 0,
             bytes_out: STREAM_HEADER_LEN as u64,
             frame_offsets: Vec::new(),
             index_tensors: None,
+            failed: false,
         })
     }
 
@@ -692,25 +907,34 @@ impl<W: Write> ZnnWriter<W> {
 
     /// Record one emitted frame's placement and size.
     fn note_frame(&mut self, n_entries: usize, payload_len: usize) {
-        if self.index_tensors.is_some() {
-            self.frame_offsets.push(self.bytes_out);
-        }
-        self.bytes_out += 5 + 9 * n_entries as u64 + payload_len as u64;
+        note_frame_at(
+            self.index_tensors.is_some(),
+            &mut self.frame_offsets,
+            &mut self.bytes_out,
+            n_entries,
+            payload_len,
+        );
     }
 
     /// Compress and emit every super-chunk in `buf[..len]`.
+    ///
+    /// Serial mode (`threads <= 1`) compresses inline and emits each
+    /// frame immediately. Pooled mode is **pipelined**: the previous
+    /// batch is joined (its frames land in the pipeline's `done` list),
+    /// this batch is swapped in and submitted to the shared pool, and
+    /// only then are the previous batch's frames serialized — the
+    /// I/O-bound tail overlaps this batch's compression. `finish` drains
+    /// the last in-flight batch.
     fn flush_compressible(&mut self, len: usize) -> Result<()> {
         if len == 0 {
             return Ok(());
         }
-        let n_chunks = len.div_ceil(self.chunk_size);
-        let n_super = n_chunks.div_ceil(SUPER_CHUNK);
-        let super_bytes = SUPER_CHUNK * self.chunk_size;
-        if self.cfg.threads.max(1) <= 1 || n_super <= 1 {
+        if self.threads <= 1 {
+            let n_chunks = len.div_ceil(self.chunk_size);
+            let n_super = n_chunks.div_ceil(SUPER_CHUNK);
             for si in 0..n_super {
-                let lo = si * super_bytes;
-                let hi = ((si + 1) * super_bytes).min(len);
-                let ScratchArena { groups, entries, payload, .. } = &mut self.arena;
+                let (lo, hi) = super_chunk_span(self.chunk_size, len, si);
+                let ScratchArena { groups, zstd_dst, entries, payload, .. } = &mut self.arena;
                 entries.clear();
                 payload.clear();
                 compress_super_chunk(
@@ -718,7 +942,7 @@ impl<W: Write> ZnnWriter<W> {
                     self.layout,
                     self.chunk_size,
                     &self.buf[lo..hi],
-                    groups,
+                    CompressScratch { groups, zstd_dst },
                     entries,
                     payload,
                 );
@@ -726,59 +950,67 @@ impl<W: Write> ZnnWriter<W> {
                 emit_frame(&mut self.inner, &mut self.head_buf, entries, payload)?;
                 self.note_frame(n_entries, payload_len);
             }
-        } else {
-            let cfg = &self.cfg;
-            let layout = self.layout;
-            let chunk_size = self.chunk_size;
-            let buf = &self.buf[..len];
-            // Frame buffers are recycled across batches through a shared
-            // pool (the pairs outlive the workers: each must be returned
-            // for in-order emission, so a pure per-worker arena can't
-            // hold them).
-            let pool = std::sync::Mutex::new(std::mem::take(&mut self.spare));
-            let frames: Vec<(Vec<StreamEntry>, Vec<u8>)> =
-                crate::codec::parallel::run_tasks_with(
-                    n_super,
-                    cfg.threads,
-                    Vec::new,
-                    |group_scratch, si| {
-                        let lo = si * super_bytes;
-                        let hi = ((si + 1) * super_bytes).min(len);
-                        let (mut entries, mut payload) =
-                            pool.lock().unwrap().pop().unwrap_or_default();
-                        entries.clear();
-                        payload.clear();
-                        compress_super_chunk(
-                            cfg,
-                            layout,
-                            chunk_size,
-                            &buf[lo..hi],
-                            group_scratch,
-                            &mut entries,
-                            &mut payload,
-                        );
-                        (entries, payload)
-                    },
-                );
-            let mut spare = pool.into_inner().unwrap();
-            for (entries, payload) in frames {
-                emit_frame(&mut self.inner, &mut self.head_buf, &entries, &payload)?;
-                self.note_frame(entries.len(), payload.len());
-                spare.push((entries, payload));
-            }
-            self.spare = spare;
+            return Ok(());
         }
+        if self.pipe.is_none() {
+            self.pipe = Some(EncodePipeline::new(&self.cfg, self.threads, self.batch_bytes));
+        }
+        let pipe = self.pipe.as_mut().expect("just created");
+        pipe.join()?;
+        // `buf` and the pipeline's batch buffer swap roles: the full
+        // batch moves in for compression, the previous (already
+        // compressed) buffer comes back as the next fill buffer.
+        pipe.submit(&mut self.buf, len, self.layout, self.chunk_size);
+        self.buf.clear();
+        self.emit_done()
+    }
+
+    /// Serialize the pipeline's finished frames (the *previous* batch) to
+    /// the inner sink, recording their placement. No-op when nothing is
+    /// waiting.
+    fn emit_done(&mut self) -> Result<()> {
+        let Some(pipe) = self.pipe.as_mut() else {
+            return Ok(());
+        };
+        for (entries, payload) in &pipe.done[..pipe.done_n] {
+            emit_frame(&mut self.inner, &mut self.head_buf, entries, payload)?;
+            // Field-level borrows: the live borrow of `pipe` keeps the
+            // whole-`self` `note_frame` method out of reach here.
+            note_frame_at(
+                self.index_tensors.is_some(),
+                &mut self.frame_offsets,
+                &mut self.bytes_out,
+                entries.len(),
+                payload.len(),
+            );
+        }
+        pipe.done_n = 0;
         Ok(())
+    }
+
+    /// Join and serialize whatever the pipeline still holds (the
+    /// in-flight final batch); called by `finish` before the trailer.
+    fn drain_pipe(&mut self) -> Result<()> {
+        if let Some(pipe) = self.pipe.as_mut() {
+            pipe.join()?;
+        }
+        self.emit_done()
     }
 
     /// Compress the final partial chunk, write the trailer, flush, and
     /// return the inner sink.
     pub fn finish(mut self) -> Result<W> {
+        if self.failed {
+            return Err(Error::Invalid(BROKEN_WRITER.into()));
+        }
         let tail_len = self.buf.len() % self.layout.elem;
         let comp_len = self.buf.len() - tail_len;
-        self.flush_compressible(comp_len)?;
-        let trailer_off = self.bytes_out;
+        // Captured before the flush: the pipelined path swaps `buf` into
+        // the encode pipeline.
         let tail = self.buf[comp_len..comp_len + tail_len].to_vec();
+        self.flush_compressible(comp_len)?;
+        self.drain_pipe()?;
+        let trailer_off = self.bytes_out;
         let mut trailer = Vec::with_capacity(2 + tail_len + 16);
         trailer.push(MARK_END);
         trailer.push(tail_len as u8);
@@ -816,6 +1048,38 @@ impl<W: Write> ZnnWriter<W> {
     }
 }
 
+/// Container bytes one frame occupies on the wire: marker + stream count
+/// + the 9-byte entry rows + the payload. Must mirror [`emit_frame`]'s
+/// serialization exactly — `bytes_out`/`frame_offsets` (and through them
+/// the tensor index and `trailer_off`) are derived from it.
+fn frame_wire_len(n_entries: usize, payload_len: usize) -> u64 {
+    5 + 9 * n_entries as u64 + payload_len as u64
+}
+
+/// Record one emitted frame's placement into the index bookkeeping and
+/// the running container byte count — the one accounting body behind
+/// both the serial emit path and the pooled `emit_done` loop.
+fn note_frame_at(
+    index_on: bool,
+    frame_offsets: &mut Vec<u64>,
+    bytes_out: &mut u64,
+    n_entries: usize,
+    payload_len: usize,
+) {
+    if index_on {
+        frame_offsets.push(*bytes_out);
+    }
+    *bytes_out += frame_wire_len(n_entries, payload_len);
+}
+
+/// The byte range of super-chunk `si` within a batch of `len` raw bytes
+/// — the one definition of super-chunk geometry shared by the serial
+/// writer, the serial one-shot, and the pooled engine task.
+fn super_chunk_span(chunk_size: usize, len: usize, si: usize) -> (usize, usize) {
+    let super_bytes = SUPER_CHUNK * chunk_size;
+    (si * super_bytes, ((si + 1) * super_bytes).min(len))
+}
+
 /// Serialize and write one frame (`entries` + `payload` of one
 /// super-chunk). `head_buf` is recycled scratch for the entry table.
 fn emit_frame<W: Write>(
@@ -837,8 +1101,14 @@ fn emit_frame<W: Write>(
     Ok(())
 }
 
+/// Error text for operations on a writer whose emission already failed.
+const BROKEN_WRITER: &str = "ZnnWriter previously failed; container is incomplete";
+
 impl<W: Write> Write for ZnnWriter<W> {
     fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        if self.failed {
+            return Err(io::Error::new(io::ErrorKind::Other, BROKEN_WRITER));
+        }
         if let Some(ck) = self.ck.as_mut() {
             ck.update(data);
         }
@@ -850,17 +1120,28 @@ impl<W: Write> Write for ZnnWriter<W> {
             self.buf.extend_from_slice(&rest[..take]);
             rest = &rest[take..];
             if self.buf.len() == self.batch_bytes {
-                self.flush_compressible(self.batch_bytes)
-                    .map_err(to_io_err)?;
+                if let Err(e) = self.flush_compressible(self.batch_bytes) {
+                    self.failed = true;
+                    return Err(to_io_err(e));
+                }
                 self.buf.clear();
             }
         }
         Ok(data.len())
     }
 
-    /// Flushes the inner sink. Completed frames have already been emitted;
-    /// a partial chunk stays buffered until [`ZnnWriter::finish`].
+    /// Flushes the inner sink. Every completed batch's frames reach the
+    /// sink first — pooled mode joins and serializes the in-flight batch
+    /// (this is the durability point a caller is asking for) — while a
+    /// partial chunk stays buffered until [`ZnnWriter::finish`].
     fn flush(&mut self) -> io::Result<()> {
+        if self.failed {
+            return Err(io::Error::new(io::ErrorKind::Other, BROKEN_WRITER));
+        }
+        if let Err(e) = self.drain_pipe() {
+            self.failed = true;
+            return Err(to_io_err(e));
+        }
         self.inner.flush()
     }
 }
@@ -980,30 +1261,61 @@ struct EndInfo {
 }
 
 // ---------------------------------------------------------------------------
-// Persistent-pool batch decode engine
+// Persistent-pool batch engine (decode chunks / encode super-chunks)
 // ---------------------------------------------------------------------------
 
 /// Raw view of one submitted batch, captured by pool helper jobs.
 ///
 /// Plain pointers and scalars (`Copy`), so a queued helper holds no
-/// borrow; it only dereferences the pointers after claiming a chunk under
-/// the frame's epoch, which guarantees the buffers are still alive.
+/// borrow; it only dereferences the pointers after claiming a task under
+/// the frame's epoch, which guarantees the buffers are still alive. One
+/// task is one decode chunk or one encode super-chunk.
 #[derive(Clone, Copy)]
 struct TaskFrame {
     epoch: u64,
+    /// Number of claimable tasks in the batch.
+    n: usize,
+    kind: TaskKind,
+}
+
+#[derive(Clone, Copy)]
+enum TaskKind {
+    Decode(DecodeFrame),
+    Encode(EncodeFrame),
+}
+
+/// Decode batch: task `c` decodes chunk `c` into its disjoint output span.
+#[derive(Clone, Copy)]
+struct DecodeFrame {
     layout: GroupLayout,
     groups: usize,
-    n_chunks: usize,
     entries: *const StreamEntry,
     comp: *const u8,
     spans: *const ChunkSpan,
     out: *mut u8,
 }
 
-// SAFETY: the pointers reference buffers owned by the submitting
-// `ZnnReader`, which blocks (`Engine::wait`, also on drop) until every
-// claimed chunk completes; chunk output spans are disjoint, and stale
-// helpers are fenced off by the epoch check before any dereference.
+/// Encode batch: task `si` compresses super-chunk `si` of `buf[..len]`
+/// into its exclusively owned `(entries, payload)` slot.
+#[derive(Clone, Copy)]
+struct EncodeFrame {
+    cfg: *const CodecConfig,
+    layout: GroupLayout,
+    chunk_size: usize,
+    buf: *const u8,
+    len: usize,
+    slots: *mut EncodeSlot,
+}
+
+/// One super-chunk's frame output: its stream-table entries and
+/// concatenated compressed streams.
+type EncodeSlot = (Vec<StreamEntry>, Vec<u8>);
+
+// SAFETY: the pointers reference buffers owned by the submitting reader,
+// writer, or one-shot compressor, which blocks (`Engine::wait`, also on
+// drop) until every claimed task completes; decode output spans and
+// encode slots are disjoint per task index, and stale helpers are fenced
+// off by the epoch check before any dereference.
 unsafe impl Send for TaskFrame {}
 
 /// Shared progress of the (single) in-flight batch; one per reader,
@@ -1022,20 +1334,20 @@ struct Progress {
     /// Epoch of the batch these counters describe; claims under any other
     /// epoch are refused (fences off stale queued helpers).
     epoch: u64,
-    /// Next unclaimed chunk index.
+    /// Next unclaimed task index.
     next: usize,
-    /// Chunk count of the batch.
+    /// Task count of the batch.
     n: usize,
-    /// Claimed-but-unfinished chunks.
+    /// Claimed-but-unfinished tasks.
     active: usize,
-    /// Finished chunks (success or failure).
+    /// Finished tasks (success or failure).
     done: usize,
-    /// First decode error, if any (seals the batch).
+    /// First task error, if any (seals the batch).
     error: Option<Error>,
 }
 
-/// Decrements `active` (and seals on error/panic) even when a decode
-/// unwinds, so [`Engine::wait`] can never hang on a lost chunk.
+/// Decrements `active` (and seals on error/panic) even when a task
+/// unwinds, so [`Engine::wait`] can never hang on a lost task.
 struct ChunkDone<'a> {
     ctl: &'a BatchCtl,
     err: Option<Error>,
@@ -1047,7 +1359,7 @@ impl Drop for ChunkDone<'_> {
         p.active -= 1;
         p.done += 1;
         if std::thread::panicking() && self.err.is_none() {
-            self.err = Some(Error::Invalid("decode worker panicked".into()));
+            self.err = Some(Error::Invalid("batch worker panicked".into()));
         }
         if let Some(e) = self.err.take() {
             if p.error.is_none() {
@@ -1063,8 +1375,10 @@ impl Drop for ChunkDone<'_> {
     }
 }
 
-/// Claim-and-decode loop shared by pool helpers and the calling thread.
-fn run_chunks(ctl: &BatchCtl, frame: TaskFrame, arena: &mut ScratchArena) {
+/// Claim-and-run loop shared by pool helpers and the calling thread:
+/// tasks are decode chunks or encode super-chunks, claimed one at a time
+/// under the frame's epoch.
+fn run_frame_tasks(ctl: &BatchCtl, frame: TaskFrame, arena: &mut ScratchArena) {
     loop {
         let c = {
             let mut p = ctl.prog.lock().unwrap();
@@ -1080,36 +1394,72 @@ fn run_chunks(ctl: &BatchCtl, frame: TaskFrame, arena: &mut ScratchArena) {
             c
         };
         let mut done = ChunkDone { ctl, err: None };
-        // SAFETY: chunk `c` was claimed under the live epoch, so the batch
+        // SAFETY: task `c` was claimed under the live epoch, so the batch
         // buffers behind the frame's pointers stay alive until the waiter
-        // observes this chunk's completion, and no other task touches this
-        // chunk's output span.
-        done.err = unsafe { decode_chunk_raw(&frame, c, arena) }.err();
+        // observes this task's completion, and no other task touches this
+        // task's output span or slot.
+        done.err = unsafe { run_task_raw(&frame, c, arena) }.err();
         drop(done);
     }
 }
 
-/// Decode one claimed chunk through the frame's raw slices.
+/// Run one claimed task of `frame` through its raw pointers.
 ///
 /// # Safety
 ///
-/// The frame's pointers must reference live batch buffers whose spans
-/// were validated against the payload and output sizes at staging time
-/// (upheld by `stage_payload` + `submit_back`), and `c` must be a
-/// uniquely claimed index `< n_chunks`.
-unsafe fn decode_chunk_raw(frame: &TaskFrame, c: usize, arena: &mut ScratchArena) -> Result<()> {
-    let span = *frame.spans.add(c);
-    let es = std::slice::from_raw_parts(frame.entries.add(c * frame.groups), frame.groups);
-    let comp = std::slice::from_raw_parts(frame.comp.add(span.comp_off), span.comp_len);
-    let out = std::slice::from_raw_parts_mut(frame.out.add(span.out_off), span.out_len);
-    decode_chunk_into(frame.layout, es, comp, arena, out)
+/// The frame's pointers must reference live batch buffers whose geometry
+/// was validated at staging time (upheld by `stage_payload` +
+/// `submit_back` on the decode side, `EncodePipeline::submit` /
+/// [`compress_supers`] on the encode side), and `c` must be a uniquely
+/// claimed index `< frame.n`.
+unsafe fn run_task_raw(frame: &TaskFrame, c: usize, arena: &mut ScratchArena) -> Result<()> {
+    match &frame.kind {
+        TaskKind::Decode(f) => decode_chunk_raw(f, c, arena),
+        TaskKind::Encode(f) => {
+            encode_super_raw(f, c, arena);
+            Ok(())
+        }
+    }
 }
 
-/// Persistent decode executor: helper jobs on the process-shared
-/// [`WorkerPool`] plus the calling thread decode each batch's chunks.
-/// No thread is ever spawned per batch; pool workers keep their sticky
-/// [`ScratchArena`] (group buffers + Huffman decode-table cache) warm
-/// across batches, readers, and files.
+/// Decode one claimed chunk through the frame's raw slices.
+unsafe fn decode_chunk_raw(f: &DecodeFrame, c: usize, arena: &mut ScratchArena) -> Result<()> {
+    let span = *f.spans.add(c);
+    let es = std::slice::from_raw_parts(f.entries.add(c * f.groups), f.groups);
+    let comp = std::slice::from_raw_parts(f.comp.add(span.comp_off), span.comp_len);
+    let out = std::slice::from_raw_parts_mut(f.out.add(span.out_off), span.out_len);
+    decode_chunk_into(f.layout, es, comp, arena, out)
+}
+
+/// Compress one claimed super-chunk into its exclusively owned output
+/// slot, using the worker's sticky scratch. Infallible (panics are
+/// reported through the `ChunkDone` guard).
+unsafe fn encode_super_raw(f: &EncodeFrame, si: usize, arena: &mut ScratchArena) {
+    let cfg = &*f.cfg;
+    let (lo, hi) = super_chunk_span(f.chunk_size, f.len, si);
+    let data = std::slice::from_raw_parts(f.buf.add(lo), hi - lo);
+    let (entries, payload) = &mut *f.slots.add(si);
+    entries.clear();
+    payload.clear();
+    let ScratchArena { groups, zstd_dst, .. } = arena;
+    compress_super_chunk(
+        cfg,
+        f.layout,
+        f.chunk_size,
+        data,
+        CompressScratch { groups, zstd_dst },
+        entries,
+        payload,
+    );
+}
+
+/// Persistent batch executor: helper jobs on the process-shared
+/// [`WorkerPool`] plus the calling thread run each batch's tasks —
+/// decode chunks for readers, encode super-chunks for writers and the
+/// one-shot compressor. No thread is ever spawned per batch; pool
+/// workers keep their sticky [`ScratchArena`] (group buffers, zstd
+/// destination scratch, Huffman decode-table cache) warm across batches,
+/// writers, readers, and files.
 struct Engine {
     pool: &'static WorkerPool,
     ctl: Arc<BatchCtl>,
@@ -1129,13 +1479,14 @@ impl Engine {
     }
 
     /// Publish a batch and top the pool up to `runners` helper jobs.
-    /// Non-blocking: decode proceeds while the caller fetches the next
-    /// batch's bytes; [`Engine::wait`] joins (and helps finish) it.
+    /// Non-blocking: the batch runs while the caller fetches (decode) or
+    /// serializes (encode) other bytes; [`Engine::wait`] joins (and helps
+    /// finish) it.
     fn submit(&self, frame: TaskFrame) {
         {
             let mut p = self.ctl.prog.lock().unwrap();
             p.epoch = frame.epoch;
-            p.n = frame.n_chunks;
+            p.n = frame.n;
             p.next = 0;
             p.active = 0;
             p.done = 0;
@@ -1159,23 +1510,23 @@ impl Engine {
                     }
                 }
                 let guard = QueuedGuard(ctl);
-                run_chunks(&guard.0, frame, sticky.slot::<ScratchArena>());
+                run_frame_tasks(&guard.0, frame, sticky.slot::<ScratchArena>());
             });
             if submitted.is_err() {
                 self.ctl.queued.fetch_sub(1, Ordering::AcqRel);
-                break; // pool unavailable: the caller decodes inline in wait()
+                break; // pool unavailable: the caller runs the batch in wait()
             }
         }
     }
 
-    /// Help decode the in-flight batch on the calling thread, then block
-    /// until every claimed chunk has finished. On return (even `Err`) no
+    /// Help run the in-flight batch on the calling thread, then block
+    /// until every claimed task has finished. On return (even `Err`) no
     /// task references the batch buffers any more.
     fn wait(&self, frame: TaskFrame, arena: &mut ScratchArena) -> Result<()> {
         // The caller's claims race with the pool helpers', so a busy (or
         // absent) pool can never deadlock a batch — worst case the caller
-        // decodes every chunk itself.
-        run_chunks(&self.ctl, frame, arena);
+        // runs every task itself.
+        run_frame_tasks(&self.ctl, frame, arena);
         let mut p = self.ctl.prog.lock().unwrap();
         while p.active > 0 || p.next < p.n {
             p = self.ctl.cv.wait(p).unwrap();
@@ -1184,7 +1535,7 @@ impl Engine {
             return Err(e);
         }
         if p.done != p.n {
-            return Err(Error::Invalid("decode batch lost chunks to a worker failure".into()));
+            return Err(Error::Invalid("batch lost tasks to a worker failure".into()));
         }
         Ok(())
     }
@@ -1732,13 +2083,15 @@ impl<R: Read> ZnnReader<R> {
         debug_assert!(b.out.len() >= b.out_len);
         let frame = TaskFrame {
             epoch: engine.epoch,
-            layout: b.layout,
-            groups: b.groups,
-            n_chunks: b.n_chunks,
-            entries: b.entries.as_ptr(),
-            comp: comp_ptr,
-            spans: b.spans.as_ptr(),
-            out: b.out.as_mut_ptr(),
+            n: b.n_chunks,
+            kind: TaskKind::Decode(DecodeFrame {
+                layout: b.layout,
+                groups: b.groups,
+                entries: b.entries.as_ptr(),
+                comp: comp_ptr,
+                spans: b.spans.as_ptr(),
+                out: b.out.as_mut_ptr(),
+            }),
         };
         engine.submit(frame);
         self.pending = Some(frame);
@@ -2043,13 +2396,15 @@ impl<R: Read> ZnnReader<R> {
             let b = &mut self.range_buf;
             let frame = TaskFrame {
                 epoch: engine.epoch,
-                layout: b.layout,
-                groups: b.groups,
-                n_chunks: b.n_chunks,
-                entries: b.entries.as_ptr(),
-                comp: comp_ptr,
-                spans: b.spans.as_ptr(),
-                out: b.out.as_mut_ptr(),
+                n: b.n_chunks,
+                kind: TaskKind::Decode(DecodeFrame {
+                    layout: b.layout,
+                    groups: b.groups,
+                    entries: b.entries.as_ptr(),
+                    comp: comp_ptr,
+                    spans: b.spans.as_ptr(),
+                    out: b.out.as_mut_ptr(),
+                }),
             };
             engine.submit(frame);
             // Joined before returning, so the frame's pointers never
@@ -2457,6 +2812,89 @@ mod tests {
             decompress_reader(container.as_slice(), 1).unwrap(),
             [1, 2, 3, 4, 5, 6]
         );
+    }
+
+    #[test]
+    fn failed_emission_poisons_writer() {
+        /// Sink that rejects any write past its first `ok_bytes`.
+        struct FailAfter {
+            ok_bytes: usize,
+            written: usize,
+        }
+        impl Write for FailAfter {
+            fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+                if self.written + b.len() > self.ok_bytes {
+                    return Err(io::Error::new(io::ErrorKind::WriteZero, "sink full"));
+                }
+                self.written += b.len();
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let raw = gaussian_bf16(120_000, 33);
+        for threads in [1usize, 2] {
+            let cfg = CodecConfig::for_dtype(DType::BF16)
+                .with_chunk_size(4096)
+                .with_threads(threads);
+            // Room for the 12-byte header and little else: the first
+            // emitted frame fails mid-write, leaving a partial frame on
+            // the sink.
+            let sink = FailAfter { ok_bytes: 64, written: 0 };
+            let mut w = ZnnWriter::new(sink, cfg).unwrap();
+            let mut failed = false;
+            for part in raw.chunks(10_000) {
+                if w.write_all(part).and_then(|()| w.flush()).is_err() {
+                    failed = true;
+                    break;
+                }
+            }
+            assert!(failed, "threads={threads}: sink failure never surfaced");
+            // Poisoned: no write can append past the corruption, and
+            // finish refuses to cap a half-written container.
+            assert!(w.write_all(&[0, 0]).is_err(), "threads={threads}: write after failure");
+            assert!(w.flush().is_err(), "threads={threads}: flush after failure");
+            assert!(w.finish().is_err(), "threads={threads}: finish after failure");
+        }
+    }
+
+    #[test]
+    fn pooled_flush_emits_completed_frames() {
+        use std::sync::{Arc, Mutex};
+        /// Cloneable sink so the test can watch bytes arrive while the
+        /// writer still owns its copy.
+        #[derive(Clone)]
+        struct Shared(Arc<Mutex<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        // Exactly one batch (2 threads x 16 chunks x 4 KiB = 128 KiB):
+        // the batch is submitted to the pool the moment the buffer
+        // fills, and `flush` must join it and emit its frames — not
+        // leave the sink holding only the 12-byte header.
+        let cfg = CodecConfig::for_dtype(DType::BF16)
+            .with_chunk_size(4096)
+            .with_threads(2);
+        let raw = gaussian_bf16(65536, 31); // 131072 bytes
+        let sink = Shared(Arc::new(Mutex::new(Vec::new())));
+        let mut w = ZnnWriter::new(sink.clone(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        w.flush().unwrap();
+        let emitted = sink.0.lock().unwrap().len();
+        assert!(
+            emitted > STREAM_HEADER_LEN,
+            "flush left the completed batch unemitted ({emitted} bytes on the sink)"
+        );
+        w.finish().unwrap();
+        let full: Vec<u8> = sink.0.lock().unwrap().clone();
+        assert_eq!(decompress_reader(full.as_slice(), 2).unwrap(), raw);
     }
 
     fn tmp_container(tag: &str, bytes: &[u8]) -> std::path::PathBuf {

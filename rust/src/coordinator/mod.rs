@@ -9,9 +9,10 @@
 //! (backpressure) instead of buffering unboundedly.
 //!
 //! It also owns the process-wide [`shared_pool`]: one lazily-spawned
-//! [`WorkerPool`] that long-lived batch work (streaming decode) runs on,
-//! so worker threads — and their sticky per-worker scratch state — are
-//! created once and stay warm across batches, readers, and files.
+//! [`WorkerPool`] that long-lived batch work — streaming decode *and* the
+//! pooled pipelined encode — runs on, so worker threads and their sticky
+//! per-worker scratch state are created once and stay warm across
+//! batches, writers, readers, and files.
 
 pub mod metrics;
 pub mod pipeline;
@@ -23,30 +24,39 @@ pub use pool::{StickyMap, WorkerPool};
 
 use std::sync::OnceLock;
 
-/// Cap on the shared pool's default size; decode batches rarely have more
-/// than this many independent chunks in flight.
+/// Cap on the shared pool's default size; codec batches rarely have more
+/// than this many independent chunks or super-chunks in flight.
 const SHARED_POOL_MAX: usize = 16;
 
 static SHARED_POOL: OnceLock<WorkerPool> = OnceLock::new();
 
 /// The process-wide shared worker pool, spawned on first use.
 ///
-/// Sized from `ZIPNN_DECODE_WORKERS` when set, else `ncpu` capped at 16.
+/// `ZIPNN_DECODE_WORKERS` sets the pool size outright (it always has —
+/// tests pin small pools with it); otherwise the default is `ncpu`
+/// capped at 16. `ZIPNN_ENCODE_WORKERS` can only **raise** that size, so
+/// capping encode parallelism never throttles decode as a side effect.
 /// The pool lives for the rest of the process (its threads idle on an
 /// empty queue), which is exactly what keeps per-worker sticky state —
-/// decode arenas, Huffman table caches — warm across files.
+/// codec scratch arenas, Huffman table caches — warm across files.
 pub fn shared_pool() -> &'static WorkerPool {
     SHARED_POOL.get_or_init(|| {
-        let threads = std::env::var("ZIPNN_DECODE_WORKERS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(2)
-                    .min(SHARED_POOL_MAX)
-            });
+        let env = |key: &str| {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+        };
+        let base = env("ZIPNN_DECODE_WORKERS").unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+                .min(SHARED_POOL_MAX)
+        });
+        let threads = match env("ZIPNN_ENCODE_WORKERS") {
+            Some(e) => base.max(e),
+            None => base,
+        };
         WorkerPool::new(threads)
     })
 }

@@ -3,18 +3,20 @@
 //! One pool serves many producers: the compression [`crate::coordinator::Pipeline`]
 //! runs its worker loops on it, the hub's readiness reactor
 //! ([`crate::hub`]) executes ready PUT/GET/Stat work on it, and the
-//! streaming decoder ([`crate::codec::ZnnReader`]) runs its batch decode
-//! on the shared pool. Threads are spawned once at construction —
-//! submitting work never spawns a thread, which is what keeps the hub's
-//! thread count flat under thousands of connections and decode free of
-//! per-batch spawns.
+//! streaming codec runs both its batch decode ([`crate::codec::ZnnReader`])
+//! and its pipelined batch encode ([`crate::codec::ZnnWriter`], the
+//! one-shot compressor) on the shared pool. Threads are spawned once at
+//! construction — submitting work never spawns a thread, which is what
+//! keeps the hub's thread count flat under thousands of connections and
+//! both codec directions free of per-batch spawns.
 //!
 //! Every worker additionally owns a **sticky state map** ([`StickyMap`]):
 //! a per-thread, type-keyed store that jobs submitted through
 //! [`WorkerPool::execute_with_state`] can borrow. State lives as long as
-//! the worker, so a decode job's scratch arena (and its Huffman
-//! decode-table cache) stays warm across batches — and across files —
-//! instead of being rebuilt per submission.
+//! the worker, so a codec job's scratch arena (its byte-group buffers,
+//! zstd destination scratch, and Huffman decode-table cache) stays warm
+//! across batches — and across files — instead of being rebuilt per
+//! submission.
 
 use crate::error::{Error, Result};
 use std::any::{Any, TypeId};

@@ -93,6 +93,9 @@ impl DeltaCodec {
     /// into a [`crate::codec::ZnnWriter`] on `sink`. Peak extra memory is
     /// one chunk, not the whole delta — this is the checkpoint-store hot
     /// path for multi-GB checkpoints. Emits a `ZNS1` streaming container.
+    /// With `cfg.threads > 1` (or `ZIPNN_ENCODE_WORKERS`) the writer
+    /// compresses batches on the shared sticky pool, overlapping the
+    /// sink's I/O with the next batch's compression.
     pub fn encode_to(&self, base: &[u8], next: &[u8], sink: impl Write) -> Result<()> {
         if base.len() != next.len() {
             return Err(Error::Invalid(format!(

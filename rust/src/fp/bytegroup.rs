@@ -49,9 +49,10 @@ pub fn split_groups(data: &[u8], layout: GroupLayout) -> Result<Vec<Vec<u8>>> {
 
 /// [`split_groups`] into caller-provided buffers — the allocation-free
 /// compression path. `out` is resized to `layout.groups()` vectors of
-/// `data.len() / elem` bytes each; existing capacity is reused, so a
-/// steady-state caller (the streaming codec's scratch arena) performs no
-/// allocations after warm-up.
+/// exactly `data.len() / elem` bytes each; existing capacity — and the
+/// already-initialized bytes in it — is reused, so a steady-state caller
+/// (the streaming codec's scratch arena, whose chunks are all the same
+/// size) performs no allocations *and no zero-fills* after warm-up.
 pub fn split_groups_into(data: &[u8], layout: GroupLayout, out: &mut Vec<Vec<u8>>) -> Result<()> {
     let k = layout.elem;
     if data.len() % k != 0 {
@@ -63,8 +64,7 @@ pub fn split_groups_into(data: &[u8], layout: GroupLayout, out: &mut Vec<Vec<u8>
     out.resize_with(k, Vec::new);
     let n = data.len() / k;
     for g in out.iter_mut() {
-        g.clear();
-        g.resize(n, 0);
+        set_group_len(g, n);
     }
     if k == 1 {
         out[0].copy_from_slice(data);
@@ -73,17 +73,47 @@ pub fn split_groups_into(data: &[u8], layout: GroupLayout, out: &mut Vec<Vec<u8>
     match k {
         2 => split2(data, layout, out),
         4 => split4(data, layout, out),
-        _ => {
-            let order = group_order(layout);
-            for (gi, &pos) in order.iter().enumerate() {
-                let dst = &mut out[gi];
-                for (i, chunk) in data.chunks_exact(k).enumerate() {
-                    dst[i] = chunk[pos];
-                }
-            }
-        }
+        _ => split_generic(data, layout, out),
     }
     Ok(())
+}
+
+/// Generic split for `elem` outside {1, 2, 4}: byte position `pos` of
+/// every element feeds stream `map[pos]`. Container-valid layouts
+/// (`elem <= 16`) use the stack-only map — no `group_order` allocation
+/// per super-chunk; larger library-level layouts keep working through
+/// the allocating inverse (off the codec hot path).
+fn split_generic(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
+    let k = layout.elem;
+    let stack_map;
+    let heap_map;
+    let map: &[usize] = if k <= 16 {
+        stack_map = pos_to_stream(layout);
+        &stack_map[..k]
+    } else {
+        heap_map = pos_to_stream_vec(layout);
+        &heap_map
+    };
+    for pos in 0..k {
+        let dst = &mut out[map[pos]];
+        for (i, chunk) in data.chunks_exact(k).enumerate() {
+            dst[i] = chunk[pos];
+        }
+    }
+}
+
+/// Set a group buffer's length to exactly `n`, writing through spare
+/// capacity: shrinking is a pure length set and growth zero-fills only
+/// past the buffer's high-water mark. Callers must overwrite all `n`
+/// bytes before reading them (every split/merge path here does, as does
+/// the decode side's per-group scratch fill), so the per-chunk memset of
+/// bytes about to be overwritten is skipped entirely in steady state.
+pub(crate) fn set_group_len(g: &mut Vec<u8>, n: usize) {
+    if g.len() < n {
+        g.resize(n, 0);
+    } else {
+        g.truncate(n);
+    }
 }
 
 /// Inverse of [`split_groups`]: interleave the streams back into elements.
@@ -124,18 +154,30 @@ pub fn merge_groups_into(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) 
     match k {
         2 => merge2(groups, layout, out),
         4 => merge4(groups, layout, out),
-        _ => {
-            // cold path: elem outside {1,2,4}; the allocation is fine here
-            let order = group_order(layout);
-            for (gi, &pos) in order.iter().enumerate() {
-                let src = &groups[gi];
-                for (i, chunk) in out.chunks_exact_mut(k).enumerate() {
-                    chunk[pos] = src[i];
-                }
-            }
-        }
+        _ => merge_generic(groups, layout, out),
     }
     Ok(())
+}
+
+/// Generic merge for `elem` outside {1, 2, 4}; mirrors [`split_generic`]
+/// (stack map for `elem <= 16`, allocating inverse beyond).
+fn merge_generic(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
+    let k = layout.elem;
+    let stack_map;
+    let heap_map;
+    let map: &[usize] = if k <= 16 {
+        stack_map = pos_to_stream(layout);
+        &stack_map[..k]
+    } else {
+        heap_map = pos_to_stream_vec(layout);
+        &heap_map
+    };
+    for pos in 0..k {
+        let src = groups[map[pos]];
+        for (i, chunk) in out.chunks_exact_mut(k).enumerate() {
+            chunk[pos] = src[i];
+        }
+    }
 }
 
 /// Byte positions in on-disk stream order: exponent group first, then the
@@ -163,8 +205,20 @@ fn pos_to_stream(layout: GroupLayout) -> [usize; 16] {
     map
 }
 
+/// [`pos_to_stream`] for layouts beyond the container's `elem <= 16`
+/// ceiling (reachable only through the public split/merge API): the same
+/// inverse, heap-allocated.
+fn pos_to_stream_vec(layout: GroupLayout) -> Vec<usize> {
+    let mut map = vec![0usize; layout.elem];
+    for (gi, pos) in group_order(layout).into_iter().enumerate() {
+        map[pos] = gi;
+    }
+    map
+}
+
 // --- specialized fast paths -------------------------------------------------
 
+#[inline]
 fn split2(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
     // stream 0 = exponent byte (hi for bf16/f16), stream 1 = the other.
     let hi_first = layout.exp_group == 1;
@@ -181,6 +235,7 @@ fn split2(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
     }
 }
 
+#[inline]
 fn merge2(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
     let hi_first = layout.exp_group == 1;
     let (g0, g1) = (groups[0], groups[1]);
@@ -195,6 +250,7 @@ fn merge2(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
     }
 }
 
+#[inline]
 fn split4(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
     let map = pos_to_stream(layout);
     // Split the output vector to get simultaneous &mut to all four streams.
@@ -210,6 +266,7 @@ fn split4(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
     }
 }
 
+#[inline]
 fn merge4(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
     let map = pos_to_stream(layout);
     let srcs = [groups[0], groups[1], groups[2], groups[3]];
@@ -281,6 +338,53 @@ mod tests {
         let layout = GroupLayout::for_dtype(DType::BF16);
         assert!(merge_groups(&[vec![1]], layout).is_err());
         assert!(merge_groups(&[vec![1], vec![2, 3]], layout).is_err());
+    }
+
+    #[test]
+    fn split_into_reuses_longer_buffers() {
+        // The scratch-reuse contract: buffers left over from a *larger*
+        // chunk (stale longer contents) must come back truncated to the
+        // new length with fully overwritten bytes — no zero-fill relied
+        // upon, no stale tail visible.
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        for d in [DType::BF16, DType::F32] {
+            let layout = GroupLayout::for_dtype(d);
+            let mut scratch: Vec<Vec<u8>> = Vec::new();
+            let mut big = vec![0u8; 64 * d.size()];
+            rng.fill_bytes(&mut big);
+            split_groups_into(&big, layout, &mut scratch).unwrap();
+            for small_n in [64usize, 7, 1, 0, 33] {
+                let mut small = vec![0u8; small_n * d.size()];
+                rng.fill_bytes(&mut small);
+                split_groups_into(&small, layout, &mut scratch).unwrap();
+                assert!(scratch.iter().all(|g| g.len() == small_n));
+                let back = merge_groups(&scratch, layout).unwrap();
+                assert_eq!(back, small, "{d:?} n={small_n}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_k_split_merge_roundtrips() {
+        // elem outside {1, 2, 4}: the stack-map cold path. Pin both the
+        // roundtrip and the on-disk stream order (exponent group first,
+        // then descending byte positions).
+        // elem 20 exceeds the container's 16-byte ceiling: only reachable
+        // through the public API, served by the allocating inverse.
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        for (elem, exp_group) in [(3usize, 2), (8, 5), (16, 0), (20, 11)] {
+            let layout = GroupLayout { elem, exp_group };
+            let mut data = vec![0u8; 45 * elem];
+            rng.fill_bytes(&mut data);
+            let groups = split_groups(&data, layout).unwrap();
+            let order = group_order(layout);
+            for (gi, &pos) in order.iter().enumerate() {
+                let expect: Vec<u8> =
+                    data.chunks_exact(elem).map(|ch| ch[pos]).collect();
+                assert_eq!(groups[gi], expect, "elem={elem} stream {gi} (pos {pos})");
+            }
+            assert_eq!(merge_groups(&groups, layout).unwrap(), data, "elem={elem}");
+        }
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! Transfers are streamed: an upload pipes raw bytes through a
 //! [`ZnnWriter`] straight onto the socket (the compressed blob is never
 //! materialized client-side), and a compressed download decompresses
-//! through a [`ZnnReader`] as frames arrive off the wire.
+//! through a [`ZnnReader`] as frames arrive off the wire. With
+//! `with_threads(n > 1)` both directions run on the process-shared
+//! sticky-state pool, pipelined: a PUT compresses batch N+1 while batch
+//! N's frames drain onto the socket, and a GET fetches batch N+1's wire
+//! bytes while batch N decodes.
 
 use crate::codec::{CodecConfig, TensorMeta, ZnnReader, ZnnWriter};
 use crate::error::{Error, Result};

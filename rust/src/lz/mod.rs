@@ -12,6 +12,23 @@ pub fn zstd_compress(data: &[u8], level: i32) -> Result<Vec<u8>> {
     zstd::bulk::compress(data, level).map_err(|e| Error::Format(format!("zstd: {e}")))
 }
 
+/// [`zstd_compress`] into a caller-provided scratch buffer, returning the
+/// compressed length (the frame is `dst[..len]`). The buffer is grown to
+/// the zstd worst-case bound and then reused across calls — the codec's
+/// per-stream hot path feeds this a sticky per-worker buffer instead of
+/// allocating a fresh `Vec` per stream. Output bytes are identical to
+/// [`zstd_compress`].
+pub fn zstd_compress_into(data: &[u8], level: i32, dst: &mut Vec<u8>) -> Result<usize> {
+    // Over-estimate of ZSTD_compressBound (src + src/256 + small frame
+    // overhead), so the destination can never be "too small".
+    let bound = data.len() + data.len() / 255 + 128;
+    if dst.len() < bound {
+        dst.resize(bound, 0);
+    }
+    zstd::bulk::compress_to_buffer(data, &mut dst[..], level)
+        .map_err(|e| Error::Format(format!("zstd: {e}")))
+}
+
 /// Decompress a Zstandard frame with a known decompressed capacity.
 pub fn zstd_decompress(data: &[u8], capacity: usize) -> Result<Vec<u8>> {
     zstd::bulk::decompress(data, capacity).map_err(|e| Error::Corrupt(format!("zstd: {e}")))
@@ -52,6 +69,27 @@ mod tests {
         let c = zlib_compress(&data, 6).unwrap();
         assert!(c.len() < data.len() / 4);
         assert_eq!(zlib_decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn zstd_compress_into_matches_compress() {
+        // The scratch-buffer variant must be byte-identical to the
+        // allocating one (the golden-bytes pin depends on it), across
+        // compressible, random, and empty inputs, reusing one buffer.
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut dst = Vec::new();
+        for len in [0usize, 1, 100, 10_000, 1 << 17] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            for (i, b) in data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *b = 7; // partially structured: exercises real matches
+                }
+            }
+            let whole = zstd_compress(&data, 3).unwrap();
+            let n = zstd_compress_into(&data, 3, &mut dst).unwrap();
+            assert_eq!(&dst[..n], &whole[..], "len={len}");
+        }
     }
 
     #[test]

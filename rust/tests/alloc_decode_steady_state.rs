@@ -11,6 +11,10 @@
 //! allocations (stack, handle, channel wiring), so the flat-allocation
 //! bound doubles as a no-spawn-per-batch check — and with per-worker
 //! sticky arenas staying warm across batches.
+//!
+//! The encode direction has its own twin binary,
+//! `alloc_encode_steady_state.rs`, pinning the same bounds for the
+//! pooled pipelined `ZnnWriter`.
 
 use std::io::{Read, Write};
 use zipnn::bench_support::{alloc_count, CountingAlloc};

@@ -1,0 +1,90 @@
+//! Steady-state allocation test for the **pooled encode** path — the
+//! encode twin of `alloc_decode_steady_state.rs`: once a `ZnnWriter`'s
+//! buffers (batch double-buffer, per-super-chunk frame slots, sticky
+//! per-worker arenas on the shared pool) have warmed up, compressing more
+//! input must not allocate. A thread spawn per batch (the old scoped
+//! per-flush workers) costs dozens of allocations — stack, handle,
+//! channel wiring — so the flat-allocation bound doubles as a
+//! no-spawn-per-batch check, exactly as on the decode side.
+//!
+//! One test, one binary: the counting allocator is process-global, so no
+//! second test may run concurrently. Both thread counts {1, 4} run inside
+//! the single test, each across several batches.
+
+use std::io::Write;
+use zipnn::bench_support::{alloc_count, CountingAlloc};
+use zipnn::codec::{CodecConfig, ZnnWriter};
+use zipnn::fp::DType;
+use zipnn::util::Xoshiro256;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// BF16-shaped data with **no zero bytes** (see `alloc_steady_state.rs`):
+/// keeps the auto-selector on the Huffman/Raw paths deterministically, so
+/// the measurement never enters the zstd allocator.
+fn nonzero_bf16ish(n_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(n_bytes);
+    while out.len() < n_bytes {
+        let mantissa = 1 + (rng.next_u32() % 255) as u8; // uniform 1..=255
+        let exp = 120 + (rng.uniform().powi(2) * 12.0) as u8; // skewed 120..132
+        out.push(mantissa);
+        out.push(exp);
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+#[test]
+fn steady_state_pooled_encode_does_not_allocate() {
+    const MIB: usize = 1 << 20;
+    // Pin the shared pool to 2 workers so warm-up reliably touches every
+    // worker's sticky arena (a large pool could route a measured batch to
+    // a cold worker whose first-use growth would pollute the windows).
+    // Must be set before the first pooled encode spins the pool up.
+    std::env::set_var("ZIPNN_DECODE_WORKERS", "2");
+    // 64 KiB chunks -> 1 MiB super-chunks: batches are `threads` MiB, so
+    // both windows below span several batches at both thread counts.
+    let data = nonzero_bf16ish(32 * MIB, 44);
+
+    for threads in [1usize, 4] {
+        let cfg = CodecConfig::for_dtype(DType::BF16)
+            .with_chunk_size(64 * 1024)
+            .with_threads(threads);
+        let mut w = ZnnWriter::new(std::io::sink(), cfg).unwrap();
+
+        // Warm-up: 8 MiB (≥ 2 batches at threads=4) sizes the batch
+        // double-buffer, every frame slot, and the pool workers' sticky
+        // arenas, and fills the pipeline.
+        w.write_all(&data[..8 * MIB]).unwrap();
+
+        // Window A: 8 MiB (2 batches at threads=4, 8 at threads=1).
+        let before_a = alloc_count();
+        w.write_all(&data[8 * MIB..16 * MIB]).unwrap();
+        let allocs_a = alloc_count() - before_a;
+
+        // Window B: 16 MiB — twice the batches of window A.
+        let before_b = alloc_count();
+        w.write_all(&data[16 * MIB..32 * MIB]).unwrap();
+        let allocs_b = alloc_count() - before_b;
+
+        w.finish().unwrap();
+
+        // The old scoped-thread flush spawned `threads` workers per batch
+        // (hundreds of allocations over window B); per-stream buffers
+        // would cost >= 256 for 256 chunks x 2 groups. Steady state here
+        // is a couple of boxed helper-job submissions per batch.
+        assert!(
+            allocs_b <= allocs_a + 48,
+            "threads={threads}: encode allocations scale with batches: \
+             window A (8 MiB) = {allocs_a}, window B (16 MiB) = {allocs_b}"
+        );
+        assert!(
+            allocs_b <= 96,
+            "threads={threads}: steady-state encode window B performed {allocs_b} \
+             allocations over 16 batch-MiB; expected a few per batch \
+             (helper-job submission only — no thread spawns, no frame buffers)"
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Coverage for the `ZIPNN_ENCODE_WORKERS` environment knob — in its own
+//! test binary because environment variables are process-global (no other
+//! test may race them) and the shared pool's size is fixed at first use.
+//!
+//! Pins the three knob behaviors: the override routes a `threads = 1`
+//! writer (and one-shot compressor) through the pooled encode path with
+//! byte-identical output, and the knob *raises* the shared pool's size
+//! above the pinned decode default without shrinking anything.
+
+use std::io::Write;
+use zipnn::codec::{CodecConfig, Compressor, ZnnWriter};
+use zipnn::fp::DType;
+
+#[test]
+fn encode_workers_env_overrides_threads_and_raises_pool() {
+    // Must be set before anything spins the shared pool up.
+    std::env::set_var("ZIPNN_DECODE_WORKERS", "2");
+    std::env::set_var("ZIPNN_ENCODE_WORKERS", "5");
+
+    // ~1.2 MB over 5 * 16 * 4 KiB = 320 KiB batches: several pipelined
+    // batches under the env-sized writer.
+    let raw: Vec<u8> = (0..1_200_000u32).map(|i| (i * 7 % 251) as u8).collect();
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+
+    // cfg.threads is 1, but the knob must route the writer through the
+    // pooled pipeline (and the one-shot compressor through the pooled
+    // super-chunk tasks).
+    let mut w = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap();
+    w.write_all(&raw).unwrap();
+    let pooled = w.finish().unwrap();
+    let one_shot_pooled = Compressor::new(cfg.clone()).compress(&raw).unwrap();
+
+    // The encode knob only ever raises the pool: decode pinned it to 2,
+    // encode lifts it to exactly 5.
+    assert_eq!(
+        zipnn::coordinator::shared_pool().threads(),
+        5,
+        "ZIPNN_ENCODE_WORKERS must raise the shared pool past the decode floor"
+    );
+
+    std::env::remove_var("ZIPNN_ENCODE_WORKERS");
+
+    // Serial references with the knob cleared: bytes must be identical.
+    let mut w = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap();
+    w.write_all(&raw).unwrap();
+    let serial = w.finish().unwrap();
+    assert_eq!(pooled, serial, "env-pooled writer output must match serial");
+    let one_shot_serial = Compressor::new(cfg).compress(&raw).unwrap();
+    assert_eq!(
+        one_shot_pooled, one_shot_serial,
+        "env-pooled one-shot output must match serial"
+    );
+
+    // And the container still decodes back to the input.
+    assert_eq!(zipnn::codec::decompress(&one_shot_serial).unwrap(), raw);
+}

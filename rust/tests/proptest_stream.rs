@@ -121,6 +121,54 @@ fn mapped_decode_equals_stream_decode() {
     }
 }
 
+/// The pooled pipelined encode path must be **byte-identical** to the
+/// serial writer — across chunk sizes, write-split patterns, dtypes, and
+/// thread counts (the engine claims super-chunks in nondeterministic
+/// order; emission must still be in order). Also pins the one-shot
+/// compressor's pooled path against its serial output, and that the
+/// containers still roundtrip.
+#[test]
+fn pooled_encode_output_equals_serial() {
+    let mut rng = Xoshiro256::seed_from_u64(0xE7C0_DE5);
+    for case in 0..16 {
+        let raw = random_payload(&mut rng);
+        let dtype = [DType::BF16, DType::F32, DType::F16][rng.below(3)];
+        let chunk_size = [1024usize, 4096, 64 * 1024][rng.below(3)];
+        let cfg = CodecConfig::for_dtype(dtype).with_chunk_size(chunk_size);
+        let ctx = format!("case {case}: len={} dtype={dtype:?} chunk={chunk_size}", raw.len());
+
+        // Reference: the serial writer, whole buffer in one write.
+        let mut w = ZnnWriter::new(Vec::new(), cfg.clone()).unwrap();
+        w.write_all(&raw).unwrap();
+        let serial = w.finish().unwrap();
+
+        for threads in [2usize, 4, 8] {
+            // Pooled pipelined writer fed in random splits.
+            let mut w = ZnnWriter::new(Vec::new(), cfg.clone().with_threads(threads)).unwrap();
+            let mut at = 0usize;
+            while at < raw.len() {
+                let take = (1 + rng.below(70_000)).min(raw.len() - at);
+                w.write_all(&raw[at..at + take]).unwrap();
+                at += take;
+            }
+            let pooled = w.finish().unwrap();
+            assert_eq!(pooled, serial, "{ctx} threads={threads}");
+        }
+
+        // One-shot compressor: pooled tasks vs serial inline.
+        let one = Compressor::new(cfg.clone()).compress(&raw).unwrap();
+        for threads in [2usize, 8] {
+            let par = Compressor::new(cfg.clone().with_threads(threads)).compress(&raw).unwrap();
+            assert_eq!(par, one, "{ctx} one-shot threads={threads}");
+        }
+
+        // And the bytes still decode back to the input.
+        let mut back = Vec::new();
+        ZnnReader::new(serial.as_slice()).unwrap().read_to_end(&mut back).unwrap();
+        assert_eq!(back, raw, "{ctx} roundtrip");
+    }
+}
+
 /// Random tensor layout: names, dtypes and sizes (empty tensors, sizes
 /// straddling chunk boundaries, and an odd final byte that lands in the
 /// `ZNS1` trailer tail all included). Returns the concatenated raw bytes

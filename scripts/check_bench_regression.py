@@ -19,10 +19,11 @@ can be copied over the baseline to re-calibrate:
 rewrites the gated values in the baseline file to ``--headroom`` (default
 60%) of the run's measured means — conservative floors derived from a
 healthy run, so runner jitter keeps clearing the gate. Record-only (0)
-metrics stay record-only, and metrics missing from the run are left
-untouched. Run it on a healthy main build's ``bench.out`` (or on the
-downloaded ``bench-results.json`` artifact's source output) and commit
-the result.
+metrics stay record-only unless named via ``--promote KEY`` (which turns
+them into gated floors from the same run), and metrics missing from the
+run are left untouched. Run it on a healthy main build's ``bench.out``
+(or on the downloaded ``bench-results.json`` artifact's source output)
+and commit the result.
 """
 
 import argparse
@@ -66,7 +67,15 @@ def main():
     ap.add_argument("--headroom", type=float, default=0.6,
                     help="fraction of the measured mean committed as the "
                          "new floor with --update-baseline (default 0.6)")
+    ap.add_argument("--promote", action="append", default=[], metavar="KEY",
+                    help="with --update-baseline: also turn these "
+                         "record-only (0) metrics into gated floors from "
+                         "this run's means (repeatable)")
     args = ap.parse_args()
+
+    if args.promote and not args.update_baseline:
+        print("error: --promote only makes sense with --update-baseline")
+        sys.exit(2)
 
     with open(args.baseline, "r", encoding="utf-8") as f:
         baseline = json.load(f)
@@ -77,14 +86,32 @@ def main():
     means = {k: sum(v) / len(v) for k, v in values.items()}
 
     if args.update_baseline:
+        # A typo'd or unmeasured --promote key must not silently leave
+        # the metric record-only while the operator believes it gates:
+        # refuse to rewrite anything.
+        bad = []
+        for key in args.promote:
+            if key not in gated:
+                bad.append(f"--promote {key}: not in the baseline's "
+                           f"metrics; add a record-only entry first")
+            elif key not in means:
+                bad.append(f"--promote {key}: not present in this run's "
+                           f"bench output")
+        if bad:
+            for b in bad:
+                print(f"error: {b}")
+            print("baseline NOT rewritten.")
+            sys.exit(2)
         updated = {}
         for key, base in sorted(gated.items()):
             cur = means.get(key)
-            if cur is None or not base:
+            promote = key in args.promote
+            if cur is None or (not base and not promote):
                 updated[key] = base  # record-only / not measured: keep
                 continue
             updated[key] = round(cur * args.headroom, 1)
-            print(f"  {key}: floor {base} -> {updated[key]} "
+            verb = "promoted to floor" if promote and not base else "floor"
+            print(f"  {key}: {verb} {base} -> {updated[key]} "
                   f"({args.headroom:.0%} of measured {cur:.2f})")
         baseline["metrics"] = updated
         with open(args.baseline, "w", encoding="utf-8") as f:
