@@ -7,17 +7,40 @@
 //! simulated transfers (the paper: variance was almost entirely network).
 
 use std::io::Read;
-use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, BenchEnv, Table};
+use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, time_n, BenchEnv, Table};
 use zipnn::codec::{CodecConfig, Compressor, ZnnReader};
 use zipnn::hub::{HubClient, HubServer, NetProfile, NetSim};
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
-use zipnn::util::{human_bytes, Timer};
+use zipnn::util::{human_bytes, Timer, Xoshiro256};
 
 #[global_allocator]
 static ALLOC: zipnn::bench_support::CountingAlloc = zipnn::bench_support::CountingAlloc;
 
 fn main() {
     let env = BenchEnv::from_env();
+
+    // Huffman decode in isolation: the four-lane two-level multi-symbol
+    // LUT decoder on a BF16-exponent-shaped stream — the hottest loop of
+    // every compressed download. Record-only baseline in the regression
+    // gate (per-machine; re-baseline after hardware moves).
+    let mut rng = Xoshiro256::seed_from_u64(710);
+    let mut exp = vec![0u8; 8 * 1024 * 1024];
+    for b in &mut exp {
+        *b = 120 + (rng.uniform().powi(2) * 12.0) as u8;
+    }
+    let enc = zipnn::huffman::compress(&exp);
+    let mut dec = vec![0u8; exp.len()];
+    let t = time_n(env.reps, || {
+        zipnn::huffman::decompress_into(&enc, &mut dec).unwrap();
+    });
+    assert_eq!(dec, exp, "huffman decode roundtrip");
+    let huff_mb = exp.len() as f64 / (1024.0 * 1024.0);
+    println!(
+        "huffman decode (4-lane two-level LUT): {:.0} MB/s on skewed exponents",
+        huff_mb / t.min
+    );
+    json_line("fig10", &[("huff_decode_mb_s", huff_mb / t.min)]);
+
     let models = [
         ("Llama-3.1 BF16", Category::RegularBF16, 701u64),
         ("Olmo FP32", Category::RegularF32, 702),

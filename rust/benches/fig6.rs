@@ -5,9 +5,9 @@
 //! byte1 ≈ 95.6% (barely), byte2 ≈ 37.5%, byte3 ≈ 0% (all zeros).
 
 use std::io::Write;
-use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, BenchEnv, Table};
+use zipnn::bench_support::{alloc_count, json_line, peak_rss_kb, time_n, BenchEnv, Table};
 use zipnn::codec::{compress_with_report, CodecConfig, ZnnWriter};
-use zipnn::fp::{split_groups, DType, GroupLayout};
+use zipnn::fp::{simd, split_groups, DType, GroupLayout};
 use zipnn::huffman;
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
 use zipnn::util::Timer;
@@ -129,6 +129,48 @@ fn main() {
         &[
             ("pooled_comp_mb_s", mb / pooled_secs),
             ("threads", threads as f64),
+        ],
+    );
+
+    // Byte-group transpose kernels: the runtime-dispatched SIMD layer
+    // under `split_groups`/`merge_groups`, measured in isolation on the
+    // k = 4 position-ordered transpose (the F32 fast path). The scalar
+    // numbers put the dispatched ISA's speedup in context; both are
+    // record-only in the regression gate (per-machine, re-baseline after
+    // hardware moves).
+    let kn = raw.len() / 4 * 4;
+    let kdata = &raw[..kn];
+    let kmb = kn as f64 / (1024.0 * 1024.0);
+    let q = kn / 4;
+    let mut d: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; q]).collect();
+    let mut merged = vec![0u8; kn];
+    let mut bench_pair = |k: &'static simd::Kernels| {
+        let ts = time_n(env.reps, || {
+            let [d0, d1, d2, d3] = &mut d[..] else { unreachable!() };
+            k.split4(kdata, d0, d1, d2, d3);
+            std::hint::black_box(&mut d);
+        });
+        let tm = time_n(env.reps, || {
+            k.merge4(&d[0], &d[1], &d[2], &d[3], &mut merged);
+            std::hint::black_box(&mut merged);
+        });
+        (kmb / ts.min, kmb / tm.min)
+    };
+    let (split_mb_s, merge_mb_s) = bench_pair(simd::dispatched());
+    let (scalar_split, scalar_merge) = bench_pair(simd::scalar());
+    assert_eq!(merged, kdata, "kernel roundtrip");
+    println!(
+        "k=4 transpose kernels ({}): split {split_mb_s:.0} MB/s, merge {merge_mb_s:.0} MB/s \
+         (scalar: {scalar_split:.0} / {scalar_merge:.0})",
+        simd::dispatched().isa()
+    );
+    json_line(
+        "fig6_kernel",
+        &[
+            ("split_mb_s", split_mb_s),
+            ("merge_mb_s", merge_mb_s),
+            ("scalar_split_mb_s", scalar_split),
+            ("scalar_merge_mb_s", scalar_merge),
         ],
     );
 }

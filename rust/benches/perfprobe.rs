@@ -4,7 +4,7 @@
 
 use zipnn::bench_support::{time_n, BenchEnv};
 use zipnn::codec::{decompress_with, CodecConfig, Compressor};
-use zipnn::fp::{merge_groups, split_groups, DType, GroupLayout};
+use zipnn::fp::{merge_groups, simd, split_groups, DType, GroupLayout};
 use zipnn::huffman;
 use zipnn::lz;
 use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
@@ -25,7 +25,11 @@ fn main() {
     let raw = m.to_bytes();
     let n = raw.len();
     let layout = GroupLayout::for_dtype(DType::BF16);
-    println!("probe buffer: {} MB bf16", n >> 20);
+    println!(
+        "probe buffer: {} MB bf16 (byte-group kernels: {})",
+        n >> 20,
+        simd::dispatched().isa()
+    );
 
     let groups = split_groups(&raw, layout).unwrap();
     let exp = &groups[0];

@@ -5,8 +5,7 @@
 
 use crate::codec::checksum64;
 use crate::codec::container::{parse, ContainerInfo};
-use crate::codec::parallel::{run_tasks_with, SUPER_CHUNK};
-use crate::codec::stream::{decode_chunk_into, decompress_reader, ScratchArena, STREAM_MAGIC};
+use crate::codec::stream::{decode_chunks, decompress_reader, STREAM_MAGIC};
 use crate::error::{Error, Result};
 
 /// Decompress a `.znn` container (single-threaded).
@@ -21,59 +20,19 @@ pub fn inspect(data: &[u8]) -> Result<ContainerInfo> {
 
 /// Decompress with `threads` workers. For `ZNN1`, the metadata table gives
 /// every stream's payload offset and every chunk's output placement up
-/// front, so chunks decode independently (paper §5.1). `ZNS1` containers
-/// are decoded frame by frame.
+/// front, so chunks decode independently (paper §5.1) as claimed tasks on
+/// the process-shared sticky worker pool — the same batch engine the
+/// streaming reader and both encode paths run on. `ZNS1` containers are
+/// decoded frame by frame.
 pub fn decompress_with(data: &[u8], threads: usize) -> Result<Vec<u8>> {
     if data.len() >= 4 && data[0..4] == STREAM_MAGIC {
         return decompress_reader(data, threads);
     }
     let info = parse(data)?;
     let h = &info.header;
-    let groups = info.groups();
-    let layout = h.layout;
     let payload = &data[info.payload_start..];
-    let n_chunks = h.n_chunks as usize;
-
-    let n_super = n_chunks.div_ceil(SUPER_CHUNK);
-    let pieces: Vec<Result<Vec<u8>>> = run_tasks_with(
-        n_super,
-        threads.max(1),
-        ScratchArena::new,
-        |arena: &mut ScratchArena, si| {
-            let lo = si * SUPER_CHUNK;
-            let hi = ((si + 1) * SUPER_CHUNK).min(n_chunks);
-            let piece_len: usize = info.entries[lo * groups..hi * groups]
-                .iter()
-                .map(|e| e.raw_len as usize)
-                .sum();
-            let mut out = vec![0u8; piece_len];
-            let mut at = 0usize;
-            for c in lo..hi {
-                let es = &info.entries[c * groups..(c + 1) * groups];
-                let chunk_raw: usize = es.iter().map(|e| e.raw_len as usize).sum();
-                let chunk_comp: usize = es.iter().map(|e| e.comp_len as usize).sum();
-                let off = info.offsets[c * groups] as usize;
-                let comp = payload
-                    .get(off..off + chunk_comp)
-                    .ok_or_else(|| Error::Corrupt("payload shorter than table".into()))?;
-                decode_chunk_into(layout, es, comp, arena, &mut out[at..at + chunk_raw])?;
-                at += chunk_raw;
-            }
-            Ok(out)
-        },
-    );
-
-    let mut out = Vec::with_capacity(h.total_len as usize);
-    for p in pieces {
-        out.extend_from_slice(&p?);
-    }
-    if out.len() as u64 != h.total_len {
-        return Err(Error::Corrupt(format!(
-            "decompressed {} bytes, expected {}",
-            out.len(),
-            h.total_len
-        )));
-    }
+    let mut out = vec![0u8; h.total_len as usize];
+    decode_chunks(h.layout, &info.entries, payload, &mut out, threads.max(1))?;
     if let Some(expect) = h.checksum {
         let got = checksum64(&out);
         if got != expect {

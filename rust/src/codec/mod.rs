@@ -22,7 +22,6 @@ pub mod compress;
 pub mod container;
 pub mod decompress;
 pub mod index;
-pub mod parallel;
 pub mod stream;
 
 pub use auto::{AutoPolicy, Method};
@@ -32,7 +31,7 @@ pub use decompress::{decompress, decompress_with, inspect};
 pub use index::{ContainerKind, TensorIndex, TensorMeta};
 pub use stream::{
     decompress_path, decompress_reader, ByteSource, MappedBytes, ScratchArena, ZnnReader,
-    ZnnWriter, STREAM_MAGIC,
+    ZnnWriter, STREAM_MAGIC, SUPER_CHUNK,
 };
 
 use crate::fp::{DType, GroupLayout};

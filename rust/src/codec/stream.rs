@@ -89,7 +89,6 @@ use crate::codec::auto::{AutoPolicy, Decision, Method};
 // corruption guards cannot drift.
 use crate::codec::container::{StreamEntry, MAX_CHUNK_SIZE};
 use crate::codec::index::{self, ContainerKind, TensorIndex, TensorMeta};
-use crate::codec::parallel::SUPER_CHUNK;
 use crate::codec::{CodecConfig, MethodPolicy};
 use crate::coordinator::{shared_pool, StickyMap, WorkerPool};
 use crate::error::{Error, Result};
@@ -102,6 +101,14 @@ use std::io::{self, Read, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Chunks per super-chunk: the work granule of both batch engine
+/// directions and the `ZNS1` frame size. The probe-and-skip state
+/// ([`crate::codec::auto::AutoPolicy`]) resets at every super-chunk
+/// boundary, in serial and parallel mode alike, so compressed output is
+/// byte-identical regardless of thread count — a property the
+/// integration tests assert.
+pub const SUPER_CHUNK: usize = 16;
 
 /// Streaming container magic.
 pub const STREAM_MAGIC: [u8; 4] = *b"ZNS1";
@@ -845,6 +852,77 @@ pub(crate) fn compress_supers(
     // exit on the sealed progress without dereferencing them.
     engine.wait(frame, &mut arena)?;
     Ok(slots)
+}
+
+/// Decode every chunk of a `ZNN1` payload into `out` — the shared body
+/// of the one-shot [`crate::codec::decompress`] wrapper, and the decode
+/// twin of [`compress_supers`]. The stream table gives every chunk's
+/// compressed span and output placement up front (the payload is the
+/// streams concatenated in table order), so chunks decode independently
+/// (paper §5.1). `threads <= 1` decodes inline with one scratch arena;
+/// otherwise the chunks run as claimed tasks on the process-shared
+/// sticky pool (no per-call thread spawns), with the calling thread
+/// helping so a busy pool can never stall the caller.
+pub(crate) fn decode_chunks(
+    layout: GroupLayout,
+    entries: &[StreamEntry],
+    payload: &[u8],
+    out: &mut [u8],
+    threads: usize,
+) -> Result<()> {
+    let groups = layout.groups();
+    if groups == 0 || entries.len() % groups != 0 {
+        return Err(Error::Corrupt("stream table not a whole number of chunks".into()));
+    }
+    let n_chunks = entries.len() / groups;
+    let mut spans = Vec::with_capacity(n_chunks);
+    let (mut comp_off, mut out_off) = (0usize, 0usize);
+    for es in entries.chunks_exact(groups) {
+        let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
+        let out_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
+        spans.push(ChunkSpan { comp_off, comp_len, out_off, out_len });
+        comp_off += comp_len;
+        out_off += out_len;
+    }
+    if comp_off != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "payload is {} bytes, stream table covers {comp_off}",
+            payload.len()
+        )));
+    }
+    if out_off != out.len() {
+        return Err(Error::Corrupt(format!(
+            "output is {} bytes, stream table covers {out_off}",
+            out.len()
+        )));
+    }
+    let mut arena = ScratchArena::new();
+    if threads <= 1 || n_chunks <= 1 {
+        for (span, es) in spans.iter().zip(entries.chunks_exact(groups)) {
+            let comp = &payload[span.comp_off..span.comp_off + span.comp_len];
+            let dst = &mut out[span.out_off..span.out_off + span.out_len];
+            decode_chunk_into(layout, es, comp, &mut arena, dst)?;
+        }
+        return Ok(());
+    }
+    let mut engine = Engine::new(threads);
+    engine.epoch += 1;
+    let frame = TaskFrame {
+        epoch: engine.epoch,
+        n: n_chunks,
+        kind: TaskKind::Decode(DecodeFrame {
+            layout,
+            groups,
+            entries: entries.as_ptr(),
+            comp: payload.as_ptr(),
+            spans: spans.as_ptr(),
+            out: out.as_mut_ptr(),
+        }),
+    };
+    engine.submit(frame);
+    // Joined before returning, so the frame's pointers (into `entries`,
+    // `payload`, `spans`, and `out`) never outlive this call.
+    engine.wait(frame, &mut arena)
 }
 
 impl<W: Write> ZnnWriter<W> {

@@ -7,7 +7,7 @@
 //! inverse given the layout, and both directions are hot-path code.
 
 use crate::error::{Error, Result};
-use crate::fp::DType;
+use crate::fp::{simd, DType};
 
 /// How elements are split into byte streams.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -217,6 +217,12 @@ fn pos_to_stream_vec(layout: GroupLayout) -> Vec<usize> {
 }
 
 // --- specialized fast paths -------------------------------------------------
+//
+// The k=2 / k=4 bodies are pure byte transposes, so they route through the
+// runtime-dispatched kernels in [`crate::fp::simd`] (AVX2/SSE2/NEON with a
+// scalar fallback; `ZIPNN_NO_SIMD` forces scalar). Kernels are
+// position-ordered — this layer's only job is mapping the exponent-first
+// stream order onto byte positions before the call.
 
 #[inline]
 fn split2(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
@@ -224,58 +230,56 @@ fn split2(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
     let hi_first = layout.exp_group == 1;
     let (a, b) = out.split_at_mut(1);
     let (g0, g1) = (&mut a[0][..], &mut b[0][..]);
-    for (i, ch) in data.chunks_exact(2).enumerate() {
-        if hi_first {
-            g0[i] = ch[1];
-            g1[i] = ch[0];
-        } else {
-            g0[i] = ch[0];
-            g1[i] = ch[1];
-        }
+    let k = simd::dispatched();
+    if hi_first {
+        k.split2(data, g1, g0);
+    } else {
+        k.split2(data, g0, g1);
     }
 }
 
 #[inline]
 fn merge2(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
     let hi_first = layout.exp_group == 1;
-    let (g0, g1) = (groups[0], groups[1]);
-    for (i, ch) in out.chunks_exact_mut(2).enumerate() {
-        if hi_first {
-            ch[1] = g0[i];
-            ch[0] = g1[i];
-        } else {
-            ch[0] = g0[i];
-            ch[1] = g1[i];
-        }
+    let k = simd::dispatched();
+    if hi_first {
+        k.merge2(groups[1], groups[0], out);
+    } else {
+        k.merge2(groups[0], groups[1], out);
     }
 }
 
 #[inline]
 fn split4(data: &[u8], layout: GroupLayout, out: &mut [Vec<u8>]) {
     let map = pos_to_stream(layout);
-    // Split the output vector to get simultaneous &mut to all four streams.
+    // Split the output vector to get simultaneous &mut to all four streams,
+    // then rearrange them so kernel slot `pos` receives stream `map[pos]`.
     let (o0, rest) = out.split_at_mut(1);
     let (o1, rest) = rest.split_at_mut(1);
     let (o2, o3) = rest.split_at_mut(1);
-    let dsts = [&mut o0[0][..], &mut o1[0][..], &mut o2[0][..], &mut o3[0][..]];
-    for (i, ch) in data.chunks_exact(4).enumerate() {
-        dsts[map[0]][i] = ch[0];
-        dsts[map[1]][i] = ch[1];
-        dsts[map[2]][i] = ch[2];
-        dsts[map[3]][i] = ch[3];
+    let mut pos_of = [0usize; 4];
+    for (pos, &stream) in map.iter().take(4).enumerate() {
+        pos_of[stream] = pos;
     }
+    let mut slot: [Option<&mut [u8]>; 4] = [None, None, None, None];
+    let streams = [&mut o0[0][..], &mut o1[0][..], &mut o2[0][..], &mut o3[0][..]];
+    for (stream, g) in streams.into_iter().enumerate() {
+        slot[pos_of[stream]] = Some(g);
+    }
+    let [d0, d1, d2, d3] = slot.map(|s| s.unwrap());
+    simd::dispatched().split4(data, d0, d1, d2, d3);
 }
 
 #[inline]
 fn merge4(groups: &[&[u8]], layout: GroupLayout, out: &mut [u8]) {
     let map = pos_to_stream(layout);
-    let srcs = [groups[0], groups[1], groups[2], groups[3]];
-    for (i, ch) in out.chunks_exact_mut(4).enumerate() {
-        ch[0] = srcs[map[0]][i];
-        ch[1] = srcs[map[1]][i];
-        ch[2] = srcs[map[2]][i];
-        ch[3] = srcs[map[3]][i];
-    }
+    simd::dispatched().merge4(
+        groups[map[0]],
+        groups[map[1]],
+        groups[map[2]],
+        groups[map[3]],
+        out,
+    );
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 
 pub mod bytegroup;
 pub mod dtype;
+pub mod simd;
 pub mod stats;
 
 pub use bytegroup::{merge_groups, merge_groups_into, split_groups, split_groups_into, GroupLayout};

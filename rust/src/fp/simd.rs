@@ -1,0 +1,673 @@
+//! Runtime-dispatched SIMD kernels for the byte-group transpose.
+//!
+//! The k=2 and k=4 split/merge loops in [`bytegroup`](super::bytegroup) are
+//! pure byte transposes (16×k or 32×k per vector step) — exactly the shape
+//! shuffle/unpack units are built for. This module provides three
+//! implementations behind one function-pointer table:
+//!
+//! - **scalar** — the reference. Always compiled, used as the proptest
+//!   oracle, and selected when `ZIPNN_NO_SIMD` is set.
+//! - **x86_64** — SSE2 (baseline, no detection needed) and AVX2 (selected
+//!   via `is_x86_feature_detected!` once per process). split2 is a
+//!   mask/shift + `packus` de-interleave; merge2 is `unpacklo/hi`; split4
+//!   extracts each byte plane with shift+mask then re-packs dwords→bytes;
+//!   merge4 is a two-level `unpack` interleave. The AVX2 variants add the
+//!   cross-lane permutes (`permute4x64` / `permutevar8x32` /
+//!   `permute2x128`) that repair the per-128-bit-lane semantics of the
+//!   256-bit pack/unpack ops.
+//! - **aarch64** — NEON `uzp1/uzp2` (split) and `zip1/zip2` (merge) trees.
+//!
+//! Kernels are **position-ordered**: `d<p>` holds byte `p` of every
+//! element. The exponent-first stream ordering of `.znn` is applied by the
+//! callers in `bytegroup.rs`, which map streams to positions around these
+//! calls. Every kernel handles arbitrary lengths with a scalar tail; the
+//! dispatch decision (env knob + CPUID) is made once and cached in a
+//! `OnceLock`, so steady-state callers pay one atomic load.
+
+use std::sync::OnceLock;
+
+type Split2Fn = fn(&[u8], &mut [u8], &mut [u8]);
+type Merge2Fn = fn(&[u8], &[u8], &mut [u8]);
+type Split4Fn = fn(&[u8], &mut [u8], &mut [u8], &mut [u8], &mut [u8]);
+type Merge4Fn = fn(&[u8], &[u8], &[u8], &[u8], &mut [u8]);
+
+/// One ISA's kernel set. Obtain via [`dispatched`] (runtime-selected) or
+/// [`scalar`] (the portable reference, also the test oracle).
+pub struct Kernels {
+    isa: &'static str,
+    split2: Split2Fn,
+    merge2: Merge2Fn,
+    split4: Split4Fn,
+    merge4: Merge4Fn,
+}
+
+impl Kernels {
+    /// Name of the instruction set backing this kernel table
+    /// (`"scalar"`, `"sse2"`, `"avx2"`, or `"neon"`).
+    pub fn isa(&self) -> &'static str {
+        self.isa
+    }
+
+    /// Split 2-byte elements into two position streams:
+    /// `d0[i] = data[2i]`, `d1[i] = data[2i+1]`.
+    pub fn split2(&self, data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        let n = d0.len();
+        assert!(data.len() == 2 * n && d1.len() == n, "split2 length mismatch");
+        (self.split2)(data, d0, d1);
+    }
+
+    /// Inverse of [`Kernels::split2`]: `out[2i] = s0[i]`, `out[2i+1] = s1[i]`.
+    pub fn merge2(&self, s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        assert!(s1.len() == n && out.len() == 2 * n, "merge2 length mismatch");
+        (self.merge2)(s0, s1, out);
+    }
+
+    /// Split 4-byte elements into four position streams:
+    /// `d<p>[i] = data[4i+p]`.
+    pub fn split4(&self, data: &[u8], d0: &mut [u8], d1: &mut [u8], d2: &mut [u8], d3: &mut [u8]) {
+        let n = d0.len();
+        assert!(
+            data.len() == 4 * n && d1.len() == n && d2.len() == n && d3.len() == n,
+            "split4 length mismatch"
+        );
+        (self.split4)(data, d0, d1, d2, d3);
+    }
+
+    /// Inverse of [`Kernels::split4`]: `out[4i+p] = s<p>[i]`.
+    pub fn merge4(&self, s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        assert!(
+            s1.len() == n && s2.len() == n && s3.len() == n && out.len() == 4 * n,
+            "merge4 length mismatch"
+        );
+        (self.merge4)(s0, s1, s2, s3, out);
+    }
+}
+
+static SCALAR: Kernels = Kernels {
+    isa: "scalar",
+    split2: split2_scalar,
+    merge2: merge2_scalar,
+    split4: split4_scalar,
+    merge4: merge4_scalar,
+};
+
+static DISPATCH: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The portable scalar kernel set — fallback, oracle, and the
+/// `ZIPNN_NO_SIMD` target.
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The kernel set for this process: best detected ISA, or scalar when
+/// `ZIPNN_NO_SIMD` is set. Decided once, cached for the process lifetime
+/// (the env knob is read at first use, like `ZIPNN_NO_MMAP`).
+pub fn dispatched() -> &'static Kernels {
+    *DISPATCH.get_or_init(|| select(std::env::var_os("ZIPNN_NO_SIMD").is_some()))
+}
+
+/// Dispatch decision, split out from the cache so tests can pin the
+/// `no_simd` branch without racing on process-global env state.
+fn select(no_simd: bool) -> &'static Kernels {
+    if no_simd {
+        return &SCALAR;
+    }
+    best_native()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_native() -> &'static Kernels {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        &x86::AVX2
+    } else {
+        // SSE2 is part of the x86_64 baseline: always available.
+        &x86::SSE2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn best_native() -> &'static Kernels {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        &neon::NEON
+    } else {
+        &SCALAR
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn best_native() -> &'static Kernels {
+    &SCALAR
+}
+
+// --- scalar reference -------------------------------------------------------
+
+fn split2_scalar(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+    for ((ch, a), b) in data.chunks_exact(2).zip(d0.iter_mut()).zip(d1.iter_mut()) {
+        *a = ch[0];
+        *b = ch[1];
+    }
+}
+
+fn merge2_scalar(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+    for ((ch, a), b) in out.chunks_exact_mut(2).zip(s0.iter()).zip(s1.iter()) {
+        ch[0] = *a;
+        ch[1] = *b;
+    }
+}
+
+fn split4_scalar(data: &[u8], d0: &mut [u8], d1: &mut [u8], d2: &mut [u8], d3: &mut [u8]) {
+    for (i, ch) in data.chunks_exact(4).enumerate() {
+        d0[i] = ch[0];
+        d1[i] = ch[1];
+        d2[i] = ch[2];
+        d3[i] = ch[3];
+    }
+}
+
+fn merge4_scalar(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+    for (i, ch) in out.chunks_exact_mut(4).enumerate() {
+        ch[0] = s0[i];
+        ch[1] = s1[i];
+        ch[2] = s2[i];
+        ch[3] = s3[i];
+    }
+}
+
+// --- x86_64: SSE2 + AVX2 ----------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{merge2_scalar, merge4_scalar, split2_scalar, split4_scalar, Kernels};
+    use std::arch::x86_64::*;
+
+    pub(super) static SSE2: Kernels = Kernels {
+        isa: "sse2",
+        split2: split2_sse2,
+        merge2: merge2_sse2,
+        split4: split4_sse2,
+        merge4: merge4_sse2,
+    };
+
+    pub(super) static AVX2: Kernels = Kernels {
+        isa: "avx2",
+        split2: split2_avx2,
+        merge2: merge2_avx2,
+        split4: split4_avx2,
+        merge4: merge4_avx2,
+    };
+
+    // SSE2 is baseline on x86_64, so these wrappers are sound everywhere;
+    // the AVX2 wrappers are sound because the dispatch table only installs
+    // them after `is_x86_feature_detected!("avx2")`.
+
+    fn split2_sse2(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        unsafe { split2_sse2_impl(data, d0, d1) }
+    }
+    fn merge2_sse2(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        unsafe { merge2_sse2_impl(s0, s1, out) }
+    }
+    fn split4_sse2(data: &[u8], d0: &mut [u8], d1: &mut [u8], d2: &mut [u8], d3: &mut [u8]) {
+        unsafe { split4_sse2_impl(data, d0, d1, d2, d3) }
+    }
+    fn merge4_sse2(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        unsafe { merge4_sse2_impl(s0, s1, s2, s3, out) }
+    }
+    fn split2_avx2(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        unsafe { split2_avx2_impl(data, d0, d1) }
+    }
+    fn merge2_avx2(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        unsafe { merge2_avx2_impl(s0, s1, out) }
+    }
+    fn split4_avx2(data: &[u8], d0: &mut [u8], d1: &mut [u8], d2: &mut [u8], d3: &mut [u8]) {
+        unsafe { split4_avx2_impl(data, d0, d1, d2, d3) }
+    }
+    fn merge4_avx2(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        unsafe { merge4_avx2_impl(s0, s1, s2, s3, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn split2_sse2_impl(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        let n = d0.len();
+        let lo8 = _mm_set1_epi16(0x00FF);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v0 = _mm_loadu_si128(data.as_ptr().add(2 * i).cast());
+            let v1 = _mm_loadu_si128(data.as_ptr().add(2 * i + 16).cast());
+            let ev = _mm_packus_epi16(_mm_and_si128(v0, lo8), _mm_and_si128(v1, lo8));
+            let od = _mm_packus_epi16(_mm_srli_epi16::<8>(v0), _mm_srli_epi16::<8>(v1));
+            _mm_storeu_si128(d0.as_mut_ptr().add(i).cast(), ev);
+            _mm_storeu_si128(d1.as_mut_ptr().add(i).cast(), od);
+            i += 16;
+        }
+        split2_scalar(&data[2 * i..], &mut d0[i..], &mut d1[i..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn merge2_sse2_impl(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = _mm_loadu_si128(s0.as_ptr().add(i).cast());
+            let b = _mm_loadu_si128(s1.as_ptr().add(i).cast());
+            _mm_storeu_si128(out.as_mut_ptr().add(2 * i).cast(), _mm_unpacklo_epi8(a, b));
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(2 * i + 16).cast(),
+                _mm_unpackhi_epi8(a, b),
+            );
+            i += 16;
+        }
+        merge2_scalar(&s0[i..], &s1[i..], &mut out[2 * i..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn split4_sse2_impl(
+        data: &[u8],
+        d0: &mut [u8],
+        d1: &mut [u8],
+        d2: &mut [u8],
+        d3: &mut [u8],
+    ) {
+        let n = d0.len();
+        let lo8 = _mm_set1_epi32(0xFF);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v0 = _mm_loadu_si128(data.as_ptr().add(4 * i).cast());
+            let v1 = _mm_loadu_si128(data.as_ptr().add(4 * i + 16).cast());
+            let v2 = _mm_loadu_si128(data.as_ptr().add(4 * i + 32).cast());
+            let v3 = _mm_loadu_si128(data.as_ptr().add(4 * i + 48).cast());
+            // Byte plane p of 16 u32 lanes: shift + mask leaves one byte
+            // per dword (≤ 255, so the signed packs never saturates), then
+            // dwords→words→bytes re-pack restores element order.
+            for (p, dst) in [&mut *d0, &mut *d1, &mut *d2, &mut *d3].into_iter().enumerate() {
+                let sh = 8 * p as i32;
+                let x0 = _mm_and_si128(_mm_srl_epi32(v0, _mm_cvtsi32_si128(sh)), lo8);
+                let x1 = _mm_and_si128(_mm_srl_epi32(v1, _mm_cvtsi32_si128(sh)), lo8);
+                let x2 = _mm_and_si128(_mm_srl_epi32(v2, _mm_cvtsi32_si128(sh)), lo8);
+                let x3 = _mm_and_si128(_mm_srl_epi32(v3, _mm_cvtsi32_si128(sh)), lo8);
+                let r = _mm_packus_epi16(_mm_packs_epi32(x0, x1), _mm_packs_epi32(x2, x3));
+                _mm_storeu_si128(dst.as_mut_ptr().add(i).cast(), r);
+            }
+            i += 16;
+        }
+        split4_scalar(
+            &data[4 * i..],
+            &mut d0[i..],
+            &mut d1[i..],
+            &mut d2[i..],
+            &mut d3[i..],
+        );
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn merge4_sse2_impl(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let b0 = _mm_loadu_si128(s0.as_ptr().add(i).cast());
+            let b1 = _mm_loadu_si128(s1.as_ptr().add(i).cast());
+            let b2 = _mm_loadu_si128(s2.as_ptr().add(i).cast());
+            let b3 = _mm_loadu_si128(s3.as_ptr().add(i).cast());
+            let a = _mm_unpacklo_epi8(b0, b1);
+            let b = _mm_unpacklo_epi8(b2, b3);
+            let c = _mm_unpackhi_epi8(b0, b1);
+            let d = _mm_unpackhi_epi8(b2, b3);
+            _mm_storeu_si128(out.as_mut_ptr().add(4 * i).cast(), _mm_unpacklo_epi16(a, b));
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(4 * i + 16).cast(),
+                _mm_unpackhi_epi16(a, b),
+            );
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(4 * i + 32).cast(),
+                _mm_unpacklo_epi16(c, d),
+            );
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(4 * i + 48).cast(),
+                _mm_unpackhi_epi16(c, d),
+            );
+            i += 16;
+        }
+        merge4_scalar(&s0[i..], &s1[i..], &s2[i..], &s3[i..], &mut out[4 * i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn split2_avx2_impl(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        let n = d0.len();
+        let lo8 = _mm256_set1_epi16(0x00FF);
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v0 = _mm256_loadu_si256(data.as_ptr().add(2 * i).cast());
+            let v1 = _mm256_loadu_si256(data.as_ptr().add(2 * i + 32).cast());
+            // 256-bit packus packs within each 128-bit lane; permute4x64
+            // 0xD8 ([0,2,1,3]) restores linear order.
+            let ev = _mm256_packus_epi16(_mm256_and_si256(v0, lo8), _mm256_and_si256(v1, lo8));
+            let od = _mm256_packus_epi16(_mm256_srli_epi16::<8>(v0), _mm256_srli_epi16::<8>(v1));
+            let ev = _mm256_permute4x64_epi64::<0xD8>(ev);
+            let od = _mm256_permute4x64_epi64::<0xD8>(od);
+            _mm256_storeu_si256(d0.as_mut_ptr().add(i).cast(), ev);
+            _mm256_storeu_si256(d1.as_mut_ptr().add(i).cast(), od);
+            i += 32;
+        }
+        split2_scalar(&data[2 * i..], &mut d0[i..], &mut d1[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn merge2_avx2_impl(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let a = _mm256_loadu_si256(s0.as_ptr().add(i).cast());
+            let b = _mm256_loadu_si256(s1.as_ptr().add(i).cast());
+            let lo = _mm256_unpacklo_epi8(a, b);
+            let hi = _mm256_unpackhi_epi8(a, b);
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(2 * i).cast(),
+                _mm256_permute2x128_si256::<0x20>(lo, hi),
+            );
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(2 * i + 32).cast(),
+                _mm256_permute2x128_si256::<0x31>(lo, hi),
+            );
+            i += 32;
+        }
+        merge2_scalar(&s0[i..], &s1[i..], &mut out[2 * i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn split4_avx2_impl(
+        data: &[u8],
+        d0: &mut [u8],
+        d1: &mut [u8],
+        d2: &mut [u8],
+        d3: &mut [u8],
+    ) {
+        let n = d0.len();
+        let lo8 = _mm256_set1_epi32(0xFF);
+        // After the in-lane dword→byte packs the 8 result dwords sit in
+        // order [0,2,4,6,1,3,5,7]; this permutevar index inverts that.
+        let fix = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let v0 = _mm256_loadu_si256(data.as_ptr().add(4 * i).cast());
+            let v1 = _mm256_loadu_si256(data.as_ptr().add(4 * i + 32).cast());
+            let v2 = _mm256_loadu_si256(data.as_ptr().add(4 * i + 64).cast());
+            let v3 = _mm256_loadu_si256(data.as_ptr().add(4 * i + 96).cast());
+            for (p, dst) in [&mut *d0, &mut *d1, &mut *d2, &mut *d3].into_iter().enumerate() {
+                let sh = _mm_cvtsi32_si128(8 * p as i32);
+                let x0 = _mm256_and_si256(_mm256_srl_epi32(v0, sh), lo8);
+                let x1 = _mm256_and_si256(_mm256_srl_epi32(v1, sh), lo8);
+                let x2 = _mm256_and_si256(_mm256_srl_epi32(v2, sh), lo8);
+                let x3 = _mm256_and_si256(_mm256_srl_epi32(v3, sh), lo8);
+                let r = _mm256_packus_epi16(
+                    _mm256_packs_epi32(x0, x1),
+                    _mm256_packs_epi32(x2, x3),
+                );
+                let r = _mm256_permutevar8x32_epi32(r, fix);
+                _mm256_storeu_si256(dst.as_mut_ptr().add(i).cast(), r);
+            }
+            i += 32;
+        }
+        split4_scalar(
+            &data[4 * i..],
+            &mut d0[i..],
+            &mut d1[i..],
+            &mut d2[i..],
+            &mut d3[i..],
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn merge4_avx2_impl(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let b0 = _mm256_loadu_si256(s0.as_ptr().add(i).cast());
+            let b1 = _mm256_loadu_si256(s1.as_ptr().add(i).cast());
+            let b2 = _mm256_loadu_si256(s2.as_ptr().add(i).cast());
+            let b3 = _mm256_loadu_si256(s3.as_ptr().add(i).cast());
+            let a = _mm256_unpacklo_epi8(b0, b1);
+            let b = _mm256_unpacklo_epi8(b2, b3);
+            let c = _mm256_unpackhi_epi8(b0, b1);
+            let d = _mm256_unpackhi_epi8(b2, b3);
+            let lo16a = _mm256_unpacklo_epi16(a, b);
+            let hi16a = _mm256_unpackhi_epi16(a, b);
+            let lo16c = _mm256_unpacklo_epi16(c, d);
+            let hi16c = _mm256_unpackhi_epi16(c, d);
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(4 * i).cast(),
+                _mm256_permute2x128_si256::<0x20>(lo16a, hi16a),
+            );
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(4 * i + 32).cast(),
+                _mm256_permute2x128_si256::<0x20>(lo16c, hi16c),
+            );
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(4 * i + 64).cast(),
+                _mm256_permute2x128_si256::<0x31>(lo16a, hi16a),
+            );
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(4 * i + 96).cast(),
+                _mm256_permute2x128_si256::<0x31>(lo16c, hi16c),
+            );
+            i += 32;
+        }
+        merge4_scalar(&s0[i..], &s1[i..], &s2[i..], &s3[i..], &mut out[4 * i..]);
+    }
+}
+
+// --- aarch64: NEON ----------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{merge2_scalar, merge4_scalar, split2_scalar, split4_scalar, Kernels};
+    use std::arch::aarch64::*;
+
+    pub(super) static NEON: Kernels = Kernels {
+        isa: "neon",
+        split2: split2_neon,
+        merge2: merge2_neon,
+        split4: split4_neon,
+        merge4: merge4_neon,
+    };
+
+    // Sound: the dispatch table only installs these after
+    // `is_aarch64_feature_detected!("neon")`.
+
+    fn split2_neon(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        unsafe { split2_neon_impl(data, d0, d1) }
+    }
+    fn merge2_neon(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        unsafe { merge2_neon_impl(s0, s1, out) }
+    }
+    fn split4_neon(data: &[u8], d0: &mut [u8], d1: &mut [u8], d2: &mut [u8], d3: &mut [u8]) {
+        unsafe { split4_neon_impl(data, d0, d1, d2, d3) }
+    }
+    fn merge4_neon(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        unsafe { merge4_neon_impl(s0, s1, s2, s3, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn split2_neon_impl(data: &[u8], d0: &mut [u8], d1: &mut [u8]) {
+        let n = d0.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v0 = vld1q_u8(data.as_ptr().add(2 * i));
+            let v1 = vld1q_u8(data.as_ptr().add(2 * i + 16));
+            vst1q_u8(d0.as_mut_ptr().add(i), vuzp1q_u8(v0, v1));
+            vst1q_u8(d1.as_mut_ptr().add(i), vuzp2q_u8(v0, v1));
+            i += 16;
+        }
+        split2_scalar(&data[2 * i..], &mut d0[i..], &mut d1[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn merge2_neon_impl(s0: &[u8], s1: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = vld1q_u8(s0.as_ptr().add(i));
+            let b = vld1q_u8(s1.as_ptr().add(i));
+            vst1q_u8(out.as_mut_ptr().add(2 * i), vzip1q_u8(a, b));
+            vst1q_u8(out.as_mut_ptr().add(2 * i + 16), vzip2q_u8(a, b));
+            i += 16;
+        }
+        merge2_scalar(&s0[i..], &s1[i..], &mut out[2 * i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn split4_neon_impl(
+        data: &[u8],
+        d0: &mut [u8],
+        d1: &mut [u8],
+        d2: &mut [u8],
+        d3: &mut [u8],
+    ) {
+        let n = d0.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v0 = vld1q_u8(data.as_ptr().add(4 * i));
+            let v1 = vld1q_u8(data.as_ptr().add(4 * i + 16));
+            let v2 = vld1q_u8(data.as_ptr().add(4 * i + 32));
+            let v3 = vld1q_u8(data.as_ptr().add(4 * i + 48));
+            // Two uzp levels: first by byte parity, then by dword parity.
+            let e0 = vuzp1q_u8(v0, v1);
+            let e1 = vuzp1q_u8(v2, v3);
+            let o0 = vuzp2q_u8(v0, v1);
+            let o1 = vuzp2q_u8(v2, v3);
+            vst1q_u8(d0.as_mut_ptr().add(i), vuzp1q_u8(e0, e1));
+            vst1q_u8(d2.as_mut_ptr().add(i), vuzp2q_u8(e0, e1));
+            vst1q_u8(d1.as_mut_ptr().add(i), vuzp1q_u8(o0, o1));
+            vst1q_u8(d3.as_mut_ptr().add(i), vuzp2q_u8(o0, o1));
+            i += 16;
+        }
+        split4_scalar(
+            &data[4 * i..],
+            &mut d0[i..],
+            &mut d1[i..],
+            &mut d2[i..],
+            &mut d3[i..],
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn merge4_neon_impl(s0: &[u8], s1: &[u8], s2: &[u8], s3: &[u8], out: &mut [u8]) {
+        let n = s0.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let b0 = vld1q_u8(s0.as_ptr().add(i));
+            let b1 = vld1q_u8(s1.as_ptr().add(i));
+            let b2 = vld1q_u8(s2.as_ptr().add(i));
+            let b3 = vld1q_u8(s3.as_ptr().add(i));
+            let a_lo = vzip1q_u8(b0, b2);
+            let a_hi = vzip2q_u8(b0, b2);
+            let b_lo = vzip1q_u8(b1, b3);
+            let b_hi = vzip2q_u8(b1, b3);
+            vst1q_u8(out.as_mut_ptr().add(4 * i), vzip1q_u8(a_lo, b_lo));
+            vst1q_u8(out.as_mut_ptr().add(4 * i + 16), vzip2q_u8(a_lo, b_lo));
+            vst1q_u8(out.as_mut_ptr().add(4 * i + 32), vzip1q_u8(a_hi, b_hi));
+            vst1q_u8(out.as_mut_ptr().add(4 * i + 48), vzip2q_u8(a_hi, b_hi));
+            i += 16;
+        }
+        merge4_scalar(&s0[i..], &s1[i..], &s2[i..], &s3[i..], &mut out[4 * i..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    /// Lengths hitting every regime: empty, sub-vector, one vector ± 1 for
+    /// both the 16- and 32-element step sizes, and multi-vector + tail.
+    const LENS: &[usize] = &[
+        0, 1, 2, 3, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 1000, 4093,
+    ];
+
+    fn check_pair(k: &Kernels, s: &Kernels, n: usize, rng: &mut Xoshiro256) {
+        // k = 2
+        let mut data = vec![0u8; 2 * n];
+        rng.fill_bytes(&mut data);
+        let (mut a0, mut a1) = (vec![0u8; n], vec![0u8; n]);
+        let (mut b0, mut b1) = (vec![0u8; n], vec![0u8; n]);
+        k.split2(&data, &mut a0, &mut a1);
+        s.split2(&data, &mut b0, &mut b1);
+        assert_eq!(a0, b0, "split2 d0 n={n} isa={}", k.isa());
+        assert_eq!(a1, b1, "split2 d1 n={n} isa={}", k.isa());
+        let mut m_a = vec![0u8; 2 * n];
+        let mut m_b = vec![0u8; 2 * n];
+        k.merge2(&a0, &a1, &mut m_a);
+        s.merge2(&a0, &a1, &mut m_b);
+        assert_eq!(m_a, m_b, "merge2 n={n} isa={}", k.isa());
+        assert_eq!(m_a, data, "merge2 roundtrip n={n} isa={}", k.isa());
+
+        // k = 4
+        let mut data = vec![0u8; 4 * n];
+        rng.fill_bytes(&mut data);
+        let mut a: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; n]).collect();
+        let mut b: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; n]).collect();
+        {
+            let [a0, a1, a2, a3] = &mut a[..] else { unreachable!() };
+            k.split4(&data, a0, a1, a2, a3);
+            let [b0, b1, b2, b3] = &mut b[..] else { unreachable!() };
+            s.split4(&data, b0, b1, b2, b3);
+        }
+        assert_eq!(a, b, "split4 n={n} isa={}", k.isa());
+        let mut m_a = vec![0u8; 4 * n];
+        let mut m_b = vec![0u8; 4 * n];
+        k.merge4(&a[0], &a[1], &a[2], &a[3], &mut m_a);
+        s.merge4(&a[0], &a[1], &a[2], &a[3], &mut m_b);
+        assert_eq!(m_a, m_b, "merge4 n={n} isa={}", k.isa());
+        assert_eq!(m_a, data, "merge4 roundtrip n={n} isa={}", k.isa());
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(0x51D0);
+        for &n in LENS {
+            check_pair(dispatched(), scalar(), n, &mut rng);
+        }
+        // random lengths sweep the tail space more densely
+        for _ in 0..200 {
+            let n = rng.below(2048);
+            check_pair(dispatched(), scalar(), n, &mut rng);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn every_x86_kernel_set_matches_scalar() {
+        // Exercise SSE2 explicitly even when dispatch would pick AVX2.
+        let mut rng = Xoshiro256::seed_from_u64(0x51D1);
+        for &n in LENS {
+            check_pair(&x86::SSE2, scalar(), n, &mut rng);
+            if std::arch::is_x86_feature_detected!("avx2") {
+                check_pair(&x86::AVX2, scalar(), n, &mut rng);
+            }
+        }
+    }
+
+    #[test]
+    fn no_simd_knob_selects_scalar() {
+        assert!(std::ptr::eq(select(true), scalar()));
+        // The positive branch picks *some* table and never panics.
+        assert!(!select(false).isa().is_empty());
+    }
+
+    #[test]
+    fn scalar_split_is_definitional() {
+        // Pin the position-ordered contract independent of the oracle role.
+        let data: Vec<u8> = (0..40u8).collect();
+        let mut d0 = vec![0u8; 10];
+        let mut d1 = vec![0u8; 10];
+        let mut d2 = vec![0u8; 10];
+        let mut d3 = vec![0u8; 10];
+        scalar().split4(&data, &mut d0, &mut d1, &mut d2, &mut d3);
+        for i in 0..10 {
+            assert_eq!(d0[i], 4 * i as u8);
+            assert_eq!(d1[i], 4 * i as u8 + 1);
+            assert_eq!(d2[i], 4 * i as u8 + 2);
+            assert_eq!(d3[i], 4 * i as u8 + 3);
+        }
+    }
+}

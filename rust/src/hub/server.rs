@@ -26,7 +26,7 @@
 //! both sliced straight from the spooled mapping with zero payload copies.
 
 use crate::codec::index::{self, ContainerKind, TensorIndex, INDEX_FOOTER_LEN};
-use crate::codec::parallel::SUPER_CHUNK;
+use crate::codec::stream::SUPER_CHUNK;
 use crate::codec::stream::{sub_container_parts, STREAM_HEADER_LEN};
 use crate::codec::STREAM_MAGIC;
 use crate::error::Result;

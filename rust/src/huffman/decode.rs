@@ -1,17 +1,38 @@
-//! Huffman decoder: single-level 2^12-entry lookup table, four interleaved
-//! LSB-first bitstreams decoded in lockstep (independent dependency
-//! chains → ILP), 4 symbols per lane refill.
+//! Huffman decoder: flat two-level **multi-symbol** lookup table, four
+//! interleaved LSB-first bitstreams decoded in lockstep (independent
+//! dependency chains → ILP), up to 8 symbols per lane refill.
+//!
+//! The primary table is indexed by 8 peeked bits and packs *up to two*
+//! short symbols per entry — byte-group streams are dominated by 1–6-bit
+//! exponent codes, so most probes emit two symbols for one load+shift.
+//! Codes of 9–12 bits take a sentinel-flagged entry linking to a 16-entry
+//! secondary block indexed by the next 4 bits. Dead bit patterns decode as
+//! `consumed = 0` entries that poison the `ok` flag but still advance one
+//! output slot, so corrupt input terminates without a validity branch in
+//! the hot loop.
 
 use super::lengths::{canonical_codes, kraft_ok, rev_bits, unpack_lens, MAX_CODE_LEN};
 use super::{MODE_HUFF, MODE_RAW, MODE_SINGLE};
 use crate::error::{Error, Result};
 use crate::util::read_u32_le;
 
-/// Decode table: `entry[peek] = (symbol << 4) | len`. `len == 0` marks an
-/// unreachable bit pattern (corrupt stream). Boxed fixed-size array so the
-/// 12-bit peek indexes without bounds checks.
+/// Sentinel bit: the primary entry links to a secondary block.
+const LONG_FLAG: u32 = 1 << 31;
+/// Dead bit pattern: symbol 0, `consumed = 0` (flags `ok` false), one
+/// output slot of advance so corrupt streams terminate.
+const ENTRY_INVALID: u32 = 1 << 25;
+
+/// Two-level decode table.
+///
+/// **Primary** (`primary[peek & 0xFF]`), short form (bit 31 clear):
+/// `sym0` in bits 0..8, `sym1` in 8..16, total consumed bits in 16..21,
+/// `len0` in 21..25, symbol count (1 or 2) in 25..27. Long form (bit 31
+/// set): bits 0..16 hold the base index of a 16-entry **secondary** block,
+/// indexed by peek bits 8..12; a secondary entry holds `sym` in bits 0..8
+/// and `len` in 8..13, with 0 marking an invalid extension.
 pub struct DecodeTable {
-    entries: Box<[u16; 1 << MAX_CODE_LEN]>,
+    primary: Box<[u32; 256]>,
+    secondary: Vec<u32>,
 }
 
 impl DecodeTable {
@@ -20,28 +41,34 @@ impl DecodeTable {
         if !kraft_ok(lens) {
             return Err(Error::Corrupt("code lengths violate Kraft inequality".into()));
         }
-        let size = 1usize << MAX_CODE_LEN;
-        let mut entries: Box<[u16; 1 << MAX_CODE_LEN]> =
-            vec![0u16; size].into_boxed_slice().try_into().unwrap();
-        Self::fill(&mut entries, lens);
-        Ok(DecodeTable { entries })
+        let mut table = DecodeTable {
+            primary: Box::new([0u32; 256]),
+            secondary: Vec::new(),
+        };
+        table.fill(lens);
+        Ok(table)
     }
 
-    /// Rebuild in place from new code lengths — no allocation. This is
-    /// the steady-state eviction path of [`DecodeTableCache`]: the 8 KiB
-    /// box is recycled instead of re-boxed per stream.
+    /// Rebuild in place from new code lengths — the steady-state eviction
+    /// path of [`DecodeTableCache`]: the primary box and the secondary
+    /// vector's high-water capacity are recycled instead of re-allocated
+    /// per stream, so table churn stays allocation-free once warm.
     pub fn rebuild(&mut self, lens: &[u8; 256]) -> Result<()> {
         if !kraft_ok(lens) {
             return Err(Error::Corrupt("code lengths violate Kraft inequality".into()));
         }
-        self.entries.fill(0);
-        Self::fill(&mut self.entries, lens);
+        self.primary.fill(0);
+        self.secondary.clear();
+        self.fill(lens);
         Ok(())
     }
 
-    /// Populate a zeroed table from (Kraft-valid) code lengths.
-    fn fill(entries: &mut [u16; 1 << MAX_CODE_LEN], lens: &[u8; 256]) {
-        let size = 1usize << MAX_CODE_LEN;
+    /// Populate the cleared table from (Kraft-valid) code lengths.
+    fn fill(&mut self, lens: &[u8; 256]) {
+        // Stage 1: the classic single-level table — first symbol + length
+        // for every 12-bit pattern — on the stack (8 KiB, build-time only).
+        const SIZE: usize = 1 << MAX_CODE_LEN;
+        let mut tmp = [0u16; SIZE];
         let codes = canonical_codes(lens);
         for s in 0..256u16 {
             let l = lens[s as usize];
@@ -53,21 +80,69 @@ impl DecodeTable {
             let entry = (s << 4) | l as u16;
             // every table slot whose low `l` bits equal the reversed code
             let mut idx = rc;
-            while idx < size {
-                entries[idx] = entry;
+            while idx < SIZE {
+                tmp[idx] = entry;
                 idx += step;
             }
         }
+        // Stage 2: fold into the two-level multi-symbol layout. For a
+        // short (≤ 8-bit) first code, the *second* symbol starting at bit
+        // `len0` is `tmp[idx >> len0]` — its missing high bits are zero,
+        // which is exact whenever `len1 ≤ 8 - len0` (the bits consumed all
+        // lie inside the 8 peeked); prefix-freeness guarantees no short
+        // code and long code ever claim the same pattern.
+        for idx in 0..256usize {
+            let e1 = tmp[idx];
+            let len0 = (e1 & 0xF) as u32;
+            self.primary[idx] = if (1..=8).contains(&len0) {
+                let sym0 = (e1 >> 4) as u32;
+                let e2 = tmp[idx >> len0];
+                let len1 = (e2 & 0xF) as u32;
+                if len1 != 0 && len1 <= 8 - len0 {
+                    let sym1 = (e2 >> 4) as u32;
+                    sym0 | (sym1 << 8) | ((len0 + len1) << 16) | (len0 << 21) | (2 << 25)
+                } else {
+                    sym0 | (len0 << 16) | (len0 << 21) | (1 << 25)
+                }
+            } else {
+                // no ≤8-bit code matches these low bits: either a 9–12-bit
+                // code (resolved by 4 more bits) or a dead pattern
+                let mut block = [0u32; 16];
+                let mut any_valid = false;
+                for (sub, slot) in block.iter_mut().enumerate() {
+                    let t = tmp[idx | (sub << 8)];
+                    let l = (t & 0xF) as u32;
+                    if l != 0 {
+                        any_valid = true;
+                        *slot = (t >> 4) as u32 | (l << 8);
+                    }
+                }
+                if any_valid {
+                    let base = self.secondary.len() as u32;
+                    debug_assert!(base <= 0xFFFF, "secondary table exceeds base field");
+                    self.secondary.extend_from_slice(&block);
+                    LONG_FLAG | base
+                } else {
+                    ENTRY_INVALID
+                }
+            };
+        }
     }
 
-    /// Decode one symbol from the peeked bits; returns `(symbol, len)`.
-    /// (Tests and the fallback lane use it; the hot loops inline the load.)
+    /// Decode one symbol from the peeked bits; returns `(symbol, len)` —
+    /// the *first* symbol of multi-symbol entries, matching the old
+    /// single-level table's contract. (Tests and the reference-equivalence
+    /// proptest use it; the hot loops inline the loads.)
     #[inline(always)]
     #[cfg_attr(not(test), allow(dead_code))]
     fn lookup(&self, peek: u32) -> (u8, u32) {
-        // peek is masked to MAX_CODE_LEN bits -> always in bounds
-        let e = self.entries[(peek & ((1 << MAX_CODE_LEN) - 1)) as usize];
-        ((e >> 4) as u8, (e & 0xF) as u32)
+        let e = self.primary[(peek & 0xFF) as usize];
+        if e & LONG_FLAG == 0 {
+            (e as u8, (e >> 21) & 0xF)
+        } else {
+            let e2 = self.secondary[(e & 0xFFFF) as usize + ((peek >> 8) & 0xF) as usize];
+            (e2 as u8, (e2 >> 8) & 0x1F)
+        }
     }
 }
 
@@ -76,15 +151,15 @@ const PACKED_LENS: usize = 128;
 /// Cached tables per worker. Model byte-group streams cycle through a
 /// handful of length tables (one shape per group), so a small
 /// fully-associative cache hits in practice; a miss with a full cache
-/// recycles a slot's box via [`DecodeTable::rebuild`], so steady state
+/// recycles a slot's buffers via [`DecodeTable::rebuild`], so steady state
 /// allocates nothing either way.
 const CACHE_SLOTS: usize = 8;
 
 /// Per-worker cache of built [`DecodeTable`]s keyed by the stream's
 /// 128-byte packed length table. Lives in the codec's
 /// [`crate::codec::ScratchArena`] so each decode worker reuses tables
-/// across the chunks it touches instead of rebuilding (and re-boxing
-/// 8 KiB) per stream.
+/// across the chunks it touches instead of rebuilding (and re-allocating
+/// primary + secondary storage) per stream.
 #[derive(Default)]
 pub struct DecodeTableCache {
     slots: Vec<([u8; PACKED_LENS], DecodeTable)>,
@@ -120,7 +195,7 @@ impl DecodeTableCache {
     }
 }
 
-/// Decode two lanes in lockstep. Each symbol's table load depends on the
+/// Decode two lanes in lockstep. Each probe's table load depends on the
 /// previous shift (a ~6-cycle chain); interleaving two independent chains
 /// hides that latency while the state (2 × {pos, buf, nbits}) still fits
 /// in registers — four lanes at once spills and is slower.
@@ -132,7 +207,8 @@ fn decode_lane2(
     oa: &mut [u8],
     ob: &mut [u8],
 ) -> bool {
-    let entries = &table.entries;
+    let primary = &table.primary;
+    let secondary = table.secondary.as_slice();
     let mut ok = true;
     let (mut pa, mut ba, mut na) = (0usize, 0u64, 0u32);
     let (mut pb, mut bb, mut nb) = (0usize, 0u64, 0u32);
@@ -154,93 +230,77 @@ fn decode_lane2(
             }
         };
     }
-    macro_rules! decode1 {
-        ($b:ident, $n:ident) => {{
-            let e = entries[($b & ((1 << MAX_CODE_LEN) - 1)) as usize];
-            let l = (e & 0xF) as u32;
-            ok &= l != 0 && l <= $n;
-            $b >>= l;
-            $n -= l.min($n);
-            (e >> 4) as u8
-        }};
-    }
-
-    let q = oa.len().min(ob.len());
-    let mut i = 0;
-    // main loop: 4 symbols per lane per refill (4 × 12 = 48 ≤ 56 bits)
-    while i + 4 <= q {
-        refill!(da, pa, ba, na);
-        refill!(db, pb, bb, nb);
-        oa[i] = decode1!(ba, na);
-        ob[i] = decode1!(bb, nb);
-        oa[i + 1] = decode1!(ba, na);
-        ob[i + 1] = decode1!(bb, nb);
-        oa[i + 2] = decode1!(ba, na);
-        ob[i + 2] = decode1!(bb, nb);
-        oa[i + 3] = decode1!(ba, na);
-        ob[i + 3] = decode1!(bb, nb);
-        i += 4;
-    }
-    for slot in oa[i..].iter_mut() {
-        refill!(da, pa, ba, na);
-        *slot = decode1!(ba, na);
-    }
-    for slot in ob[i..].iter_mut() {
-        refill!(db, pb, bb, nb);
-        *slot = decode1!(bb, nb);
-    }
-    ok
-}
-
-/// Decode one lane into `out` (tail/fallback path).
-#[inline(never)]
-#[allow(dead_code)]
-fn decode_lane(table: &DecodeTable, data: &[u8], out: &mut [u8]) -> bool {
-    let entries = &table.entries;
-    let mut pos: usize = 0;
-    let mut buf: u64 = 0;
-    let mut nbits: u32 = 0;
-    let mut ok = true;
-
-    macro_rules! refill {
-        () => {
-            if pos + 8 <= data.len() {
-                let w = u64::from_le_bytes(data[pos..pos + 8].try_into().unwrap());
-                buf |= w << nbits;
-                let take = (63 - nbits) >> 3;
-                pos += take as usize;
-                nbits += take * 8;
+    // One multi-symbol probe: a short entry writes both symbol bytes
+    // unconditionally (the main loop's `+ 8` slack guarantees room) and
+    // advances by its symbol count; a long entry resolves one symbol
+    // through the secondary block.
+    macro_rules! probe {
+        ($b:ident, $n:ident, $o:ident, $i:ident) => {
+            let e = primary[($b & 0xFF) as usize];
+            if e & LONG_FLAG == 0 {
+                $o[$i] = e as u8;
+                $o[$i + 1] = (e >> 8) as u8;
+                let consumed = (e >> 16) & 0x1F;
+                $i += ((e >> 25) & 0x3) as usize;
+                ok &= consumed != 0 && consumed <= $n;
+                $b >>= consumed;
+                $n -= consumed.min($n);
             } else {
-                while nbits <= 56 && pos < data.len() {
-                    buf |= (data[pos] as u64) << nbits;
-                    pos += 1;
-                    nbits += 8;
-                }
+                let e2 = secondary[(e & 0xFFFF) as usize + (($b >> 8) & 0xF) as usize];
+                let l = (e2 >> 8) & 0x1F;
+                $o[$i] = e2 as u8;
+                $i += 1;
+                ok &= l != 0 && l <= $n;
+                $b >>= l;
+                $n -= l.min($n);
             }
         };
     }
+    // Strict single-symbol step for the tails: never writes past the
+    // emitted slot, so it runs to the exact lane end.
     macro_rules! decode1 {
-        () => {{
-            let e = entries[(buf & ((1 << MAX_CODE_LEN) - 1)) as usize];
-            let l = (e & 0xF) as u32;
-            ok &= l != 0 && l <= nbits;
-            buf >>= l;
-            nbits -= l.min(nbits);
-            (e >> 4) as u8
+        ($b:ident, $n:ident) => {{
+            let e = primary[($b & 0xFF) as usize];
+            let (sym, l) = if e & LONG_FLAG == 0 {
+                (e as u8, (e >> 21) & 0xF)
+            } else {
+                let e2 = secondary[(e & 0xFFFF) as usize + (($b >> 8) & 0xF) as usize];
+                (e2 as u8, (e2 >> 8) & 0x1F)
+            };
+            ok &= l != 0 && l <= $n;
+            $b >>= l;
+            $n -= l.min($n);
+            sym
         }};
     }
 
-    let mut chunks = out.chunks_exact_mut(4);
-    for ch in &mut chunks {
-        refill!();
-        ch[0] = decode1!();
-        ch[1] = decode1!();
-        ch[2] = decode1!();
-        ch[3] = decode1!();
+    let qa = oa.len();
+    let qb = ob.len();
+    let (mut ia, mut ib) = (0usize, 0usize);
+    // Main loop: four probes per lane per refill. Worst case 4 × 12 = 48
+    // bits ≤ the ≥ 56 a refill guarantees; best case (four 2-symbol
+    // probes) emits 8 symbols per lane per refill — the `+ 8` bound also
+    // caps the highest written index at `i + 7`. Lanes advance at
+    // data-dependent rates, so each tracks its own cursor.
+    while ia + 8 <= qa && ib + 8 <= qb {
+        refill!(da, pa, ba, na);
+        refill!(db, pb, bb, nb);
+        probe!(ba, na, oa, ia);
+        probe!(bb, nb, ob, ib);
+        probe!(ba, na, oa, ia);
+        probe!(bb, nb, ob, ib);
+        probe!(ba, na, oa, ia);
+        probe!(bb, nb, ob, ib);
+        probe!(ba, na, oa, ia);
+        probe!(bb, nb, ob, ib);
     }
-    for slot in chunks.into_remainder() {
-        refill!();
-        *slot = decode1!();
+    for slot in oa[ia..].iter_mut() {
+        refill!(da, pa, ba, na);
+        *slot = decode1!(ba, na);
+    }
+    for slot in ob[ib..].iter_mut() {
+        refill!(db, pb, bb, nb);
+        *slot = decode1!(bb, nb);
     }
     ok
 }
@@ -261,8 +321,8 @@ pub fn decompress_into(data: &[u8], out: &mut [u8]) -> Result<()> {
 }
 
 /// [`decompress_into`] with a per-worker [`DecodeTableCache`]: repeated
-/// length tables skip the build, and misses recycle a cached 8 KiB box —
-/// the decode side's steady state performs no allocations.
+/// length tables skip the build, and misses recycle a cached table's
+/// storage — the decode side's steady state performs no allocations.
 pub fn decompress_into_cached(
     data: &[u8],
     out: &mut [u8],
@@ -364,6 +424,8 @@ fn decode_huff(data: &[u8], out: &mut [u8], cache: Option<&mut DecodeTableCache>
 mod tests {
     use super::*;
     use crate::huffman::compress;
+    use crate::huffman::lengths::build_lengths;
+    use crate::util::Xoshiro256;
 
     #[test]
     fn table_marks_unused_patterns_invalid() {
@@ -461,5 +523,159 @@ mod tests {
             let enc = compress(&data);
             assert_eq!(decompress(&enc, count).unwrap(), data, "count {count}");
         }
+    }
+
+    /// Random histogram with a skew knob; deep skews force 9–12-bit codes
+    /// (the secondary-table path).
+    fn random_lens(rng: &mut Xoshiro256, max_syms: usize, skew: i32) -> Option<[u8; 256]> {
+        let mut hist = [0u64; 256];
+        let nsyms = 2 + rng.below(max_syms - 1);
+        for _ in 0..nsyms {
+            let s = rng.below(256);
+            hist[s] += 1 + (rng.uniform().powi(skew) * 1_000_000.0) as u64;
+        }
+        build_lengths(&hist)
+    }
+
+    #[test]
+    fn lookup_matches_reference_over_random_tables() {
+        // The two-level table must agree with a bit-by-bit canonical
+        // decoder on the (first symbol, length) of **every** 12-bit
+        // pattern, across random Kraft-valid length tables.
+        let mut rng = Xoshiro256::seed_from_u64(0xDEC0DE);
+        let mut long_tables = 0usize;
+        for _ in 0..30 {
+            let Some(lens) = random_lens(&mut rng, 256, 6) else {
+                continue;
+            };
+            if lens.iter().any(|&l| l > 8) {
+                long_tables += 1;
+            }
+            let table = DecodeTable::from_lengths(&lens).unwrap();
+            // (reversed code, len, sym), any scan order works: prefix-free
+            // codes match at most one entry per pattern.
+            let codes = canonical_codes(&lens);
+            let ref_tab: Vec<(u16, u8, u8)> = (0..256usize)
+                .filter(|&s| lens[s] > 0)
+                .map(|s| (rev_bits(codes[s].0, lens[s]), lens[s], s as u8))
+                .collect();
+            for peek in 0..(1u32 << MAX_CODE_LEN) {
+                let want = ref_tab
+                    .iter()
+                    .find(|&&(rc, l, _)| peek & ((1 << l) - 1) == rc as u32)
+                    .map(|&(_, l, s)| (s, l as u32));
+                let (sym, l) = table.lookup(peek);
+                match want {
+                    Some(w) => assert_eq!((sym, l), w, "peek {peek:03x}"),
+                    None => assert_eq!(l, 0, "peek {peek:03x} should be invalid"),
+                }
+            }
+        }
+        assert!(long_tables > 0, "no trial produced >8-bit codes");
+    }
+
+    #[test]
+    fn decode_matches_reference_bitwise_decoder() {
+        // Full-stream equivalence: the multi-symbol fast path (2-symbol
+        // entries, secondary blocks, strict tails) must reproduce what a
+        // bit-by-bit canonical decoder extracts from each lane.
+        let mut rng = Xoshiro256::seed_from_u64(0xB17D);
+
+        // Deterministic Fibonacci skew guarantees 12-bit codes.
+        let mut fib_data = Vec::new();
+        let (mut a, mut b) = (1u64, 1u64);
+        for s in 0..20u8 {
+            for _ in 0..a {
+                fib_data.push(s);
+            }
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+
+        let mut cases: Vec<Vec<u8>> = vec![fib_data];
+        for _ in 0..25 {
+            let Some(lens) = random_lens(&mut rng, 200, 4) else {
+                continue;
+            };
+            let pop: Vec<u8> = (0..256usize).filter(|&s| lens[s] > 0).map(|s| s as u8).collect();
+            let count = 1 + rng.below(5000);
+            let mut data = Vec::with_capacity(count);
+            for _ in 0..count {
+                let u = rng.uniform();
+                let idx = ((u * u) * pop.len() as f64) as usize;
+                data.push(pop[idx.min(pop.len() - 1)]);
+            }
+            cases.push(data);
+        }
+
+        let mut huff_streams = 0usize;
+        for data in &cases {
+            let enc = compress(data);
+            if enc[0] != MODE_HUFF {
+                continue;
+            }
+            huff_streams += 1;
+            assert_eq!(&decompress(&enc, data.len()).unwrap(), data);
+
+            // Reference decode, lane by lane.
+            const HDR: usize = 1 + 128 + 4 + 12 + 4;
+            let lens = unpack_lens(&enc[1..129]);
+            let count = read_u32_le(&enc, 129) as usize;
+            let s0 = read_u32_le(&enc, 133) as usize;
+            let s1 = read_u32_le(&enc, 137) as usize;
+            let s2 = read_u32_le(&enc, 141) as usize;
+            let paylen = read_u32_le(&enc, 145) as usize;
+            let payload = &enc[HDR..HDR + paylen];
+            let q = count / 4;
+            let lanes = [
+                (&payload[..s0], q),
+                (&payload[s0..s0 + s1], q),
+                (&payload[s0 + s1..s0 + s1 + s2], q),
+                (&payload[s0 + s1 + s2..], count - 3 * q),
+            ];
+            let mut ref_out = Vec::with_capacity(count);
+            for (lane, n) in lanes {
+                ref_out.extend(reference_decode_lane(&lens, lane, n).expect("valid stream"));
+            }
+            assert_eq!(&ref_out, data);
+        }
+        assert!(huff_streams > 2, "too few Huffman-mode cases");
+    }
+
+    /// Bit-by-bit LSB-first canonical decode of one lane — the oracle.
+    fn reference_decode_lane(lens: &[u8; 256], data: &[u8], n: usize) -> Option<Vec<u8>> {
+        let codes = canonical_codes(lens);
+        let tab: Vec<(u16, u8, u8)> = (0..256usize)
+            .filter(|&s| lens[s] > 0)
+            .map(|s| (rev_bits(codes[s].0, lens[s]), lens[s], s as u8))
+            .collect();
+        let total_bits = data.len() * 8;
+        let mut out = Vec::with_capacity(n);
+        let mut at = 0usize;
+        while out.len() < n {
+            let mut matched = false;
+            for &(rc, l, s) in &tab {
+                let l = l as usize;
+                if at + l > total_bits {
+                    continue;
+                }
+                let mut v = 0u16;
+                for k in 0..l {
+                    let bit = (data[(at + k) / 8] >> ((at + k) % 8)) & 1;
+                    v |= (bit as u16) << k;
+                }
+                if v == rc {
+                    out.push(s);
+                    at += l;
+                    matched = true;
+                    break;
+                }
+            }
+            if !matched {
+                return None;
+            }
+        }
+        Some(out)
     }
 }

@@ -12,7 +12,9 @@
 //! - canonical code assignment, so the table serializes as 256 nibble
 //!   lengths (128 bytes);
 //! - LSB-first bitstream with 64-bit buffered writer/reader;
-//! - single-level 2^12-entry decode table, 4 symbols decoded per refill.
+//! - two-level multi-symbol decode table: an 8-bit primary packing up to
+//!   two short symbols per probe, with sentinel-linked 16-entry secondary
+//!   blocks for 9–12-bit codes — up to 8 symbols decoded per refill.
 //!
 //! Stream framing (self-contained; callers may still prefer raw when the
 //! encoded form is larger):

@@ -4,13 +4,15 @@
 //! allocate — historically every Huffman stream re-boxed an 8 KiB
 //! `DecodeTable`, which made decode allocations O(streams).
 //!
-//! Two scenarios share the one test (the counter is global, so no second
-//! test may run concurrently): the inline single-threaded path, and the
-//! **persistent-pool** path (`with_threads > 1`), which must sustain many
-//! refills without per-batch thread spawns — a spawn costs dozens of
+//! Three scenarios share the one test (the counter is global, so no
+//! second test may run concurrently): the inline single-threaded path;
+//! the **persistent-pool** path (`with_threads > 1`), which must sustain
+//! many refills without per-batch thread spawns — a spawn costs dozens of
 //! allocations (stack, handle, channel wiring), so the flat-allocation
 //! bound doubles as a no-spawn-per-batch check — and with per-worker
-//! sticky arenas staying warm across batches.
+//! sticky arenas staying warm across batches; and a **decode-table cache
+//! churn** section pinning that evicting more distinct Huffman tables
+//! than the cache holds rebuilds tables in place instead of reallocating.
 //!
 //! The encode direction has its own twin binary,
 //! `alloc_encode_steady_state.rs`, pinning the same bounds for the
@@ -138,5 +140,67 @@ fn steady_state_decompression_does_not_allocate() {
         "steady-state pooled decode window B performed {pool_b} allocations over 8 refills; \
          expected a few per refill (helper-job submission only — no thread spawns, \
          no batch buffers)"
+    );
+
+    // --- decode-table cache churn: rebuild-in-place ---------------------
+    //
+    // More distinct Huffman tables than the cache holds (12 > 8 slots),
+    // accessed cyclically, so in steady state every lookup is a miss that
+    // evicts a slot. Each miss must *rebuild* the evicted two-level table
+    // in place — refill the boxed primary, truncate-and-extend the
+    // secondary-block vector inside its retained capacity — never re-box
+    // the primary or grow the secondary afresh. If rebuild allocated,
+    // 24 misses of window B would show ≥ 24 allocations.
+    let streams: Vec<Vec<u8>> = (0..12u64)
+        .map(|i| {
+            let mut rng = Xoshiro256::seed_from_u64(1000 + i);
+            let mut s = vec![0u8; 64 * 1024];
+            // Distinct skewed alphabets (size varies with i) so each
+            // stream serializes a distinct code-length table.
+            let alphabet = 6 + i as usize;
+            for b in &mut s {
+                let u = rng.uniform().powi(3);
+                *b = 100 + (i as u8) * 8 + ((u * alphabet as f64) as usize).min(alphabet - 1) as u8;
+            }
+            s
+        })
+        .collect();
+    let encoded: Vec<Vec<u8>> = streams.iter().map(|s| zipnn::huffman::compress(s)).collect();
+    let mut cache = zipnn::huffman::DecodeTableCache::new();
+    let mut dst = vec![0u8; 64 * 1024];
+
+    // Warm-up: two full passes. The clock victim sequence has period two
+    // passes here (12 misses rotate the 8 slots by 4 per pass), so two
+    // passes put every slot's secondary capacity at its steady-state max.
+    for _ in 0..2 {
+        for (enc, raw) in encoded.iter().zip(&streams) {
+            zipnn::huffman::decompress_into_cached(enc, &mut dst, &mut cache).unwrap();
+            assert_eq!(&dst, raw);
+        }
+    }
+
+    // Window A: one pass (12 miss-rebuilds). Window B: two passes (24).
+    let before_a = alloc_count();
+    for enc in &encoded {
+        zipnn::huffman::decompress_into_cached(enc, &mut dst, &mut cache).unwrap();
+    }
+    let churn_a = alloc_count() - before_a;
+    let before_b = alloc_count();
+    for _ in 0..2 {
+        for enc in &encoded {
+            zipnn::huffman::decompress_into_cached(enc, &mut dst, &mut cache).unwrap();
+        }
+    }
+    let churn_b = alloc_count() - before_b;
+
+    assert!(
+        churn_b <= churn_a + 8,
+        "table-cache churn allocations scale with misses: window A (12 rebuilds) = {churn_a}, \
+         window B (24 rebuilds) = {churn_b}"
+    );
+    assert!(
+        churn_b <= 16,
+        "cache churn window B performed {churn_b} allocations over 24 evicting rebuilds; \
+         rebuild must reuse the evicted table's primary box and secondary capacity"
     );
 }

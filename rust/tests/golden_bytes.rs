@@ -10,10 +10,9 @@
 //! header layout — this test catches it at the byte level.
 
 use zipnn::codec::container::write_header;
-use zipnn::codec::parallel::SUPER_CHUNK;
 use zipnn::codec::{
     checksum64, decompress_with, AutoPolicy, CodecConfig, Compressor, Method, MethodPolicy,
-    StreamEntry,
+    StreamEntry, SUPER_CHUNK,
 };
 use zipnn::fp::{split_groups, DType, GroupLayout};
 use zipnn::stats::{byte_histogram, zero_stats};

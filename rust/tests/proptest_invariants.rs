@@ -4,6 +4,7 @@
 
 use zipnn::codec::{decompress, CodecConfig, Compressor, MethodPolicy};
 use zipnn::delta::xor_delta;
+use zipnn::fp::bytegroup::group_order;
 use zipnn::fp::{merge_groups, split_groups, DType, GroupLayout};
 use zipnn::huffman;
 use zipnn::stats::{byte_histogram, zero_stats};
@@ -111,6 +112,39 @@ fn prop_split_merge_identity() {
         assert_eq!(merge_groups(&groups, layout).unwrap(), data);
         // each group carries exactly n/elem bytes; total is preserved
         assert!(groups.iter().all(|g| g.len() == n / elem));
+    });
+}
+
+#[test]
+fn prop_split_groups_matches_definitional_reference() {
+    // Pins the byte-group transpose — including the runtime-dispatched
+    // SIMD fast paths for k = 2 and 4 — to the definition: stream `gi`
+    // of the split holds byte position `group_order(layout)[gi]` of
+    // every element. Length buckets hit the vector widths, the scalar
+    // tails around them, empty input, and multi-register bodies. The CI
+    // matrix re-runs this with `ZIPNN_NO_SIMD=1`, so the dispatched and
+    // scalar kernels are both pinned to the same oracle.
+    forall(50, |rng| {
+        let elem = [1usize, 2, 4, 8][rng.below(4)];
+        let exp_group = rng.below(elem);
+        let layout = GroupLayout { elem, exp_group };
+        let n = match rng.below(4) {
+            0 => rng.below(33),          // sub-register + empty
+            1 => 16 + rng.below(49),     // around the 16/32-byte widths
+            2 => rng.below(4096),        // tails after full registers
+            _ => 4096 + rng.below(60_000), // multi-register bodies
+        } * elem;
+        let mut data = vec![0u8; n];
+        rng.fill_bytes(&mut data);
+        let groups = split_groups(&data, layout).unwrap();
+        for (gi, &pos) in group_order(layout).iter().enumerate() {
+            let expect: Vec<u8> = data.chunks_exact(elem).map(|ch| ch[pos]).collect();
+            assert_eq!(
+                groups[gi], expect,
+                "elem={elem} exp_group={exp_group} stream {gi} (pos {pos}) len {n}"
+            );
+        }
+        assert_eq!(merge_groups(&groups, layout).unwrap(), data);
     });
 }
 
