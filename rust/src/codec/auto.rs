@@ -1,6 +1,10 @@
 //! Per-stream method auto-selection (paper §3.2 "identifying
-//! compressibility" and §4.2 "auto detection of compression method").
+//! compressibility" and §4.2 "auto detection of compression method"),
+//! plus the per-tensor [`ProfileSelector`] that maps tensor spans to
+//! [`CodecProfile`]s for the profiled streaming path.
 
+use crate::codec::index::TensorMeta;
+use crate::codec::CodecProfile;
 use crate::stats::zero_stats;
 
 /// Compression method applied to one `(chunk, group)` stream.
@@ -126,6 +130,166 @@ impl AutoPolicy {
     }
 }
 
+/// Byte-entropy above which a tensor is ruled incompressible and stored
+/// raw (8.0 bits = uniform; Huffman on > 7.8-bit bytes saves < ~2%,
+/// matching [`PROBE_MIN_SAVING`]).
+pub const RAW_ENTROPY_BITS: f64 = 7.8;
+/// At most this many bytes of a tensor are histogrammed when refining
+/// its profile from data — plenty for a 256-bin byte histogram.
+const REFINE_SAMPLE: usize = 256 * 1024;
+
+/// Maps positions in the raw payload to the [`CodecProfile`] that should
+/// compress them: the per-tensor extension of this module's per-stream
+/// auto-selection, consumed by `ZnnWriter::with_profiles`.
+///
+/// Build one with [`ProfileSelector::auto`] (dtype-driven defaults per
+/// tensor, optionally refined by each tensor's byte histogram via
+/// [`ProfileSelector::auto_with_data`]) or [`ProfileSelector::uniform`],
+/// then override individual tensors by name with
+/// [`ProfileSelector::with_override`].
+#[derive(Debug, Clone)]
+pub struct ProfileSelector {
+    /// `(start, end, profile)` per tensor, sorted by `start`,
+    /// non-overlapping (enforced at construction).
+    spans: Vec<(u64, u64, CodecProfile)>,
+    /// Names aligned with `spans` (override lookups).
+    names: Vec<String>,
+    /// Profile for bytes outside every span (padding, headers, and the
+    /// whole payload when no spans were given).
+    default: CodecProfile,
+}
+
+impl ProfileSelector {
+    /// One profile for every byte — the degenerate selector that makes
+    /// the profiled writer behave like the classic single-profile one.
+    pub fn uniform(profile: CodecProfile) -> ProfileSelector {
+        ProfileSelector { spans: Vec::new(), names: Vec::new(), default: profile }
+    }
+
+    /// Dtype-driven selection: each tensor gets its dtype's default
+    /// profile (byte-grouping for multi-byte floats, flat single-stream
+    /// for one-byte dtypes). `spans` must be sorted by offset and
+    /// non-overlapping — the layout `Model::tensor_spans` produces.
+    pub fn auto(spans: &[TensorMeta], default: CodecProfile) -> crate::error::Result<ProfileSelector> {
+        Self::build(spans, default, |_, _| None)
+    }
+
+    /// [`ProfileSelector::auto`], refined per tensor from its actual
+    /// bytes (`data` is the raw payload the spans index into): a
+    /// near-uniform byte histogram demotes the tensor to store-raw, a
+    /// zero-heavy one to flat Zstd; everything else keeps the dtype
+    /// profile. Sampling is capped at 256 KiB per tensor.
+    pub fn auto_with_data(
+        spans: &[TensorMeta],
+        default: CodecProfile,
+        data: &[u8],
+    ) -> crate::error::Result<ProfileSelector> {
+        Self::build(spans, default, |m, base| {
+            let start = usize::try_from(m.offset).ok()?;
+            let end = usize::try_from(m.offset.checked_add(m.len)?).ok()?;
+            let bytes = data.get(start..end)?;
+            let cut = bytes.len().min(REFINE_SAMPLE);
+            let sample = &bytes[..cut - cut % base.layout.elem.max(1)];
+            if sample.is_empty() {
+                return None;
+            }
+            let hist = crate::stats::byte_histogram(sample);
+            let n = sample.len() as f64;
+            if hist[0] as f64 > ZSTD_ZERO_FRAC * n {
+                return Some(CodecProfile::zstd_flat());
+            }
+            if crate::fp::stats::shannon_entropy(&hist) > RAW_ENTROPY_BITS {
+                // Check the *grouped* view before giving up: a bf16
+                // tensor is near-uniform as whole elements while its
+                // exponent stream alone is highly skewed.
+                let skewed_group = crate::fp::stats::group_entropies(sample, base.layout)
+                    .iter()
+                    .any(|&h| h <= RAW_ENTROPY_BITS);
+                if !skewed_group {
+                    return Some(CodecProfile::store_raw());
+                }
+            }
+            None
+        })
+    }
+
+    fn build(
+        spans: &[TensorMeta],
+        default: CodecProfile,
+        refine: impl Fn(&TensorMeta, &CodecProfile) -> Option<CodecProfile>,
+    ) -> crate::error::Result<ProfileSelector> {
+        let mut out = Vec::with_capacity(spans.len());
+        let mut names = Vec::with_capacity(spans.len());
+        let mut prev_end = 0u64;
+        for m in spans {
+            let end = m.offset.checked_add(m.len).ok_or_else(|| {
+                crate::error::Error::Invalid(format!("tensor '{}' span overflows", m.name))
+            })?;
+            if m.offset < prev_end {
+                return Err(crate::error::Error::Invalid(format!(
+                    "tensor '{}' overlaps the previous span (offset {} < {})",
+                    m.name, m.offset, prev_end
+                )));
+            }
+            prev_end = end;
+            let base = CodecProfile::for_dtype(m.dtype);
+            let profile = refine(m, &base).unwrap_or(base);
+            out.push((m.offset, end, profile));
+            names.push(m.name.clone());
+        }
+        Ok(ProfileSelector { spans: out, names, default })
+    }
+
+    /// Override one tensor's profile by exact name (no-op when the name
+    /// is unknown — overrides are advisory tuning, not addressing).
+    pub fn with_override(mut self, name: &str, profile: CodecProfile) -> Self {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            self.spans[i].2 = profile;
+        }
+        self
+    }
+
+    /// Replace the out-of-span default profile.
+    pub fn with_default(mut self, profile: CodecProfile) -> Self {
+        self.default = profile;
+        self
+    }
+
+    /// The profile of the tensor named `name`, if known.
+    pub fn profile_of(&self, name: &str) -> Option<CodecProfile> {
+        let i = self.names.iter().position(|n| n == name)?;
+        Some(self.spans[i].2)
+    }
+
+    /// The profile governing raw range `[start, end)`: the profile of
+    /// the tensor with the largest byte overlap (first-by-offset wins
+    /// ties deterministically), or the default when nothing overlaps.
+    /// Frame-granular callers pass one frame's raw extent — the dominant
+    /// tensor of the frame picks its codec.
+    pub fn profile_for_range(&self, start: u64, end: u64) -> CodecProfile {
+        let mut best: Option<(u64, CodecProfile)> = None;
+        // spans are sorted; find the first that could overlap
+        let from = self.spans.partition_point(|&(_, e, _)| e <= start);
+        for &(s, e, p) in &self.spans[from..] {
+            if s >= end {
+                break;
+            }
+            let overlap = e.min(end).saturating_sub(s.max(start));
+            if overlap > best.map_or(0, |(b, _)| b) {
+                best = Some((overlap, p));
+            }
+        }
+        best.map_or(self.default, |(_, p)| p)
+    }
+
+    /// Every profile this selector can yield: each span's profile plus
+    /// the out-of-span default. Used by the writer to validate the whole
+    /// selection up front, before any frame is emitted.
+    pub fn profiles(&self) -> impl Iterator<Item = &CodecProfile> {
+        self.spans.iter().map(|(_, _, p)| p).chain(std::iter::once(&self.default))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +363,89 @@ mod tests {
             assert_eq!(Method::from_tag(m.tag()), Some(m));
         }
         assert_eq!(Method::from_tag(9), None);
+    }
+
+    use crate::codec::index::TensorMeta;
+    use crate::codec::MethodPolicy;
+    use crate::fp::DType;
+
+    fn meta(name: &str, dtype: DType, offset: u64, len: u64) -> TensorMeta {
+        TensorMeta { name: name.into(), dtype, offset, len }
+    }
+
+    #[test]
+    fn selector_picks_dtype_profiles() {
+        let spans = [
+            meta("trunk", DType::BF16, 0, 1000),
+            meta("norm", DType::F32, 1000, 400),
+            meta("mlp", DType::F8E4M3, 1400, 600),
+        ];
+        let sel = ProfileSelector::auto(&spans, CodecProfile::for_dtype(DType::BF16)).unwrap();
+        assert_eq!(sel.profile_of("trunk").unwrap().layout.elem, 2);
+        assert_eq!(sel.profile_of("norm").unwrap().layout.elem, 4);
+        assert_eq!(sel.profile_of("mlp").unwrap().layout.elem, 1);
+        assert!(sel.profile_of("nope").is_none());
+    }
+
+    #[test]
+    fn selector_dominant_overlap() {
+        let spans = [
+            meta("a", DType::BF16, 0, 100),
+            meta("b", DType::F32, 100, 1000),
+        ];
+        let sel = ProfileSelector::auto(&spans, CodecProfile::store_raw()).unwrap();
+        // range [0,150): 100 bytes of a vs 50 of b -> a's profile
+        assert_eq!(sel.profile_for_range(0, 150).layout.elem, 2);
+        // range [50,300): 50 bytes of a vs 200 of b -> b's profile
+        assert_eq!(sel.profile_for_range(50, 300).layout.elem, 4);
+        // out of range -> default
+        assert_eq!(
+            sel.profile_for_range(5000, 6000).policy,
+            MethodPolicy::Raw
+        );
+    }
+
+    #[test]
+    fn selector_rejects_overlapping_spans() {
+        let spans = [
+            meta("a", DType::BF16, 0, 100),
+            meta("b", DType::F32, 50, 100),
+        ];
+        assert!(ProfileSelector::auto(&spans, CodecProfile::for_dtype(DType::BF16)).is_err());
+    }
+
+    #[test]
+    fn selector_override_by_name() {
+        let spans = [meta("a", DType::BF16, 0, 100)];
+        let sel = ProfileSelector::auto(&spans, CodecProfile::for_dtype(DType::BF16))
+            .unwrap()
+            .with_override("a", CodecProfile::store_raw());
+        assert_eq!(sel.profile_of("a").unwrap().policy, MethodPolicy::Raw);
+    }
+
+    #[test]
+    fn data_refinement_demotes_uniform_and_zero_tensors() {
+        let mut rng = crate::util::Xoshiro256::seed_from_u64(9);
+        let mut data = vec![0u8; 24_000];
+        rng.fill_bytes(&mut data[..8000]); // uniform bytes: incompressible
+        // [8000,16000): zeros
+        for (i, b) in data[16_000..].iter_mut().enumerate() {
+            *b = if i % 2 == 0 { 0x3F } else { 0x80 } // skewed bf16-ish
+        }
+        let spans = [
+            meta("rand", DType::I8, 0, 8000),
+            meta("zeros", DType::F32, 8000, 8000),
+            meta("skewed", DType::BF16, 16_000, 8000),
+        ];
+        let sel = ProfileSelector::auto_with_data(
+            &spans,
+            CodecProfile::for_dtype(DType::BF16),
+            &data,
+        )
+        .unwrap();
+        assert_eq!(sel.profile_of("rand").unwrap().policy, MethodPolicy::Raw);
+        assert_eq!(sel.profile_of("zeros").unwrap().policy, MethodPolicy::Zstd);
+        assert_eq!(sel.profile_of("skewed").unwrap().policy, MethodPolicy::Auto);
+        assert_eq!(sel.profile_of("skewed").unwrap().layout.elem, 2);
     }
 }

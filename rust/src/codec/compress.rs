@@ -6,7 +6,7 @@
 
 use crate::codec::container::{write_header, ContainerHeader};
 use crate::codec::stream::{compress_supers, encode_workers};
-use crate::codec::{checksum64, CodecConfig};
+use crate::codec::{checksum64, CodecConfig, CodecProfile};
 use crate::error::Result;
 use crate::fp::GroupLayout;
 
@@ -63,9 +63,9 @@ impl Compressor {
         // on the process-shared sticky-state pool (the calling thread
         // helps; no scoped thread spawns per call) — the encode mirror of
         // the persistent decode engine.
+        let profile = CodecProfile { layout, ..self.cfg.profile() };
         let supers = compress_supers(
-            &self.cfg,
-            layout,
+            &profile,
             chunk_size,
             data,
             encode_workers(self.cfg.threads),

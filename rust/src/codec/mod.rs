@@ -24,14 +24,14 @@ pub mod decompress;
 pub mod index;
 pub mod stream;
 
-pub use auto::{AutoPolicy, Method};
+pub use auto::{AutoPolicy, Method, ProfileSelector};
 pub use compress::{compress_with_report, Compressor, GroupReport};
 pub use container::{ContainerHeader, ContainerInfo, StreamEntry};
 pub use decompress::{decompress, decompress_with, inspect};
 pub use index::{ContainerKind, TensorIndex, TensorMeta};
 pub use stream::{
     decompress_path, decompress_reader, ByteSource, MappedBytes, ScratchArena, ZnnReader,
-    ZnnWriter, STREAM_MAGIC, SUPER_CHUNK,
+    ZnnReaderBuilder, ZnnWriter, STREAM_MAGIC, SUPER_CHUNK,
 };
 
 use crate::fp::{DType, GroupLayout};
@@ -52,7 +52,109 @@ pub enum MethodPolicy {
     Raw,
 }
 
-/// Codec configuration.
+/// *How bytes compress*: the per-tensor (or per-frame) half of the old
+/// monolithic [`CodecConfig`]. A profile is everything the decoder needs
+/// to reverse — layout — plus the encode-side method knobs; it carries
+/// **no** run-wide execution state (threads, checksum, chunk size — see
+/// [`RunConfig`]). Profiles are what a
+/// [`auto::ProfileSelector`] hands out per tensor and what a profiled
+/// `ZNS1` frame records on disk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecProfile {
+    /// Byte-group layout (element size + exponent group).
+    /// `GroupLayout::flat()` disables exponent extraction.
+    pub layout: GroupLayout,
+    /// Method policy.
+    pub policy: MethodPolicy,
+    /// Zstd level for Zstd-method streams (paper uses default = 3).
+    pub zstd_level: i32,
+    /// After a stream of some group probes incompressible, skip the probe
+    /// (store Raw directly) for this many subsequent chunks of that group.
+    pub skip_window: usize,
+}
+
+impl CodecProfile {
+    /// ZipNN defaults for a dtype: byte grouping on, auto methods,
+    /// probe-skip window of 8.
+    pub fn for_dtype(d: DType) -> CodecProfile {
+        CodecProfile {
+            layout: GroupLayout::for_dtype(d),
+            policy: MethodPolicy::Auto,
+            zstd_level: 3,
+            skip_window: 8,
+        }
+    }
+
+    /// Huffman-only over ungrouped bytes — the fp8/int8 shape, where the
+    /// single byte already carries the skewed exponent bits.
+    pub fn huffman_flat() -> CodecProfile {
+        CodecProfile {
+            layout: GroupLayout::flat(),
+            policy: MethodPolicy::Huffman,
+            zstd_level: 3,
+            skip_window: 8,
+        }
+    }
+
+    /// Zstd over ungrouped bytes (zero-heavy or delta-like tensors).
+    pub fn zstd_flat() -> CodecProfile {
+        CodecProfile {
+            layout: GroupLayout::flat(),
+            policy: MethodPolicy::Zstd,
+            zstd_level: 3,
+            skip_window: 0,
+        }
+    }
+
+    /// Store raw (near-uniform bytes that never compress).
+    pub fn store_raw() -> CodecProfile {
+        CodecProfile {
+            layout: GroupLayout::flat(),
+            policy: MethodPolicy::Raw,
+            zstd_level: 3,
+            skip_window: 0,
+        }
+    }
+
+    /// Builder-style: set method policy.
+    pub fn with_policy(mut self, p: MethodPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Builder-style: set the zstd level.
+    pub fn with_zstd_level(mut self, level: i32) -> Self {
+        self.zstd_level = level;
+        self
+    }
+}
+
+/// *How the run executes*: the run-wide half of the old monolithic
+/// [`CodecConfig`] — settings that apply to a whole container regardless
+/// of which [`CodecProfile`] each tensor gets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunConfig {
+    /// Raw bytes per chunk. Must be a multiple of every profile's
+    /// `layout.elem`.
+    pub chunk_size: usize,
+    /// Worker threads for chunk-parallel compress/decompress (1 = inline).
+    pub threads: usize,
+    /// Record a (cheap) checksum of the raw buffer for integrity checking.
+    pub checksum: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig { chunk_size: DEFAULT_CHUNK_SIZE, threads: 1, checksum: true }
+    }
+}
+
+/// Codec configuration: one [`CodecProfile`] plus one [`RunConfig`],
+/// kept as a flat struct for source compatibility. Prefer
+/// [`CodecConfig::builder`] for new code — it validates the
+/// profile/chunk-size combination regardless of the order the knobs are
+/// set in, which the legacy `with_*` chain does not (see
+/// [`CodecConfig::with_chunk_size`]).
 #[derive(Debug, Clone)]
 pub struct CodecConfig {
     /// Byte-group layout (element size + exponent group). `GroupLayout::flat()`
@@ -77,28 +179,53 @@ impl CodecConfig {
     /// ZipNN defaults for a dtype: byte grouping on, auto methods,
     /// 256 KiB chunks, probe-skip window of 8.
     pub fn for_dtype(d: DType) -> CodecConfig {
-        CodecConfig {
-            layout: GroupLayout::for_dtype(d),
-            chunk_size: DEFAULT_CHUNK_SIZE,
-            policy: MethodPolicy::Auto,
-            zstd_level: 3,
-            skip_window: 8,
-            threads: 1,
-            checksum: true,
-        }
+        CodecConfig::from_parts(CodecProfile::for_dtype(d), RunConfig::default())
     }
 
     /// Vanilla baseline: no grouping, Zstd everywhere.
     pub fn vanilla_zstd() -> CodecConfig {
+        CodecConfig::from_parts(CodecProfile::zstd_flat(), RunConfig::default())
+    }
+
+    /// Assemble a config from its two halves. No validation — pair with
+    /// [`CodecConfig::builder`] when the inputs aren't known-good.
+    pub fn from_parts(profile: CodecProfile, run: RunConfig) -> CodecConfig {
         CodecConfig {
-            layout: GroupLayout::flat(),
-            chunk_size: DEFAULT_CHUNK_SIZE,
-            policy: MethodPolicy::Zstd,
-            zstd_level: 3,
-            skip_window: 0,
-            threads: 1,
-            checksum: true,
+            layout: profile.layout,
+            chunk_size: run.chunk_size,
+            policy: profile.policy,
+            zstd_level: profile.zstd_level,
+            skip_window: profile.skip_window,
+            threads: run.threads,
+            checksum: run.checksum,
         }
+    }
+
+    /// The per-tensor half of this config.
+    pub fn profile(&self) -> CodecProfile {
+        CodecProfile {
+            layout: self.layout,
+            policy: self.policy,
+            zstd_level: self.zstd_level,
+            skip_window: self.skip_window,
+        }
+    }
+
+    /// The run-wide half of this config.
+    pub fn run(&self) -> RunConfig {
+        RunConfig {
+            chunk_size: self.chunk_size,
+            threads: self.threads,
+            checksum: self.checksum,
+        }
+    }
+
+    /// An order-insensitive, validating builder. Unlike the legacy
+    /// `with_*` chain, every knob can be set in any order; alignment of
+    /// `chunk_size` against the **final** layout is checked once at
+    /// [`CodecConfigBuilder::build`].
+    pub fn builder() -> CodecConfigBuilder {
+        CodecConfigBuilder::default()
     }
 
     /// Builder-style: set thread count.
@@ -114,10 +241,118 @@ impl CodecConfig {
     }
 
     /// Builder-style: set chunk size (clamped to a layout multiple).
+    ///
+    /// **Pitfall** (the reason [`CodecConfig::builder`] exists): the
+    /// clamp uses the layout at the time of *this* call, so assigning
+    /// `layout` afterwards can leave `chunk_size` misaligned to the new
+    /// `layout.elem`. The builder validates against the final layout
+    /// instead.
     pub fn with_chunk_size(mut self, n: usize) -> Self {
         let e = self.layout.elem;
         self.chunk_size = (n.max(e) / e) * e;
         self
+    }
+}
+
+/// Order-insensitive builder for [`CodecConfig`]; see
+/// [`CodecConfig::builder`]. Knobs default to the BF16 profile and
+/// [`RunConfig::default`]; `build` validates the combination as a whole.
+#[derive(Debug, Clone)]
+pub struct CodecConfigBuilder {
+    profile: CodecProfile,
+    run: RunConfig,
+}
+
+impl Default for CodecConfigBuilder {
+    fn default() -> CodecConfigBuilder {
+        CodecConfigBuilder {
+            profile: CodecProfile::for_dtype(DType::BF16),
+            run: RunConfig::default(),
+        }
+    }
+}
+
+impl CodecConfigBuilder {
+    /// Start from a dtype's default profile (layout + auto methods).
+    pub fn dtype(mut self, d: DType) -> Self {
+        self.profile = CodecProfile::for_dtype(d);
+        self
+    }
+
+    /// Replace the whole per-tensor profile.
+    pub fn profile(mut self, p: CodecProfile) -> Self {
+        self.profile = p;
+        self
+    }
+
+    /// Set the byte-group layout.
+    pub fn layout(mut self, l: GroupLayout) -> Self {
+        self.profile.layout = l;
+        self
+    }
+
+    /// Set the method policy.
+    pub fn policy(mut self, p: MethodPolicy) -> Self {
+        self.profile.policy = p;
+        self
+    }
+
+    /// Set the zstd level.
+    pub fn zstd_level(mut self, level: i32) -> Self {
+        self.profile.zstd_level = level;
+        self
+    }
+
+    /// Set the incompressible-probe skip window.
+    pub fn skip_window(mut self, n: usize) -> Self {
+        self.profile.skip_window = n;
+        self
+    }
+
+    /// Set the raw chunk size (validated against the final layout at
+    /// [`CodecConfigBuilder::build`], **not** clamped here).
+    pub fn chunk_size(mut self, n: usize) -> Self {
+        self.run.chunk_size = n;
+        self
+    }
+
+    /// Set the worker thread count.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.run.threads = n.max(1);
+        self
+    }
+
+    /// Enable or disable the raw-buffer checksum.
+    pub fn checksum(mut self, on: bool) -> Self {
+        self.run.checksum = on;
+        self
+    }
+
+    /// Validate and assemble. Errors (instead of silently clamping) when
+    /// the chunk size is zero, exceeds the container limit, or is not a
+    /// multiple of the **final** layout's element size — regardless of
+    /// the order `chunk_size`/`layout` were set in.
+    pub fn build(self) -> crate::error::Result<CodecConfig> {
+        let CodecProfile { layout, .. } = self.profile;
+        if layout.elem == 0 || layout.elem > 16 || layout.exp_group >= layout.elem {
+            return Err(crate::error::Error::Invalid(format!(
+                "bad group layout: elem={} exp_group={}",
+                layout.elem, layout.exp_group
+            )));
+        }
+        let cs = self.run.chunk_size;
+        if cs == 0 || cs as u64 > container::MAX_CHUNK_SIZE as u64 {
+            return Err(crate::error::Error::Invalid(format!(
+                "chunk_size {cs} out of range"
+            )));
+        }
+        if cs % layout.elem != 0 {
+            return Err(crate::error::Error::Invalid(format!(
+                "chunk_size {cs} is not a multiple of the element size {}",
+                layout.elem
+            )));
+        }
+        Ok(CodecConfig::from_parts(self.profile, self.run))
     }
 }
 
@@ -260,6 +495,59 @@ mod tests {
             .unwrap();
         assert_eq!(serial, par, "parallel output must be byte-identical");
         assert_eq!(decompress_with(&par, 4).unwrap(), raw);
+    }
+
+    #[test]
+    fn builder_is_order_insensitive() {
+        // The legacy chain's documented pitfall: with_chunk_size clamps
+        // against the layout *at call time*, so setting the layout
+        // afterwards leaves chunk_size misaligned.
+        let mut legacy = CodecConfig::for_dtype(DType::I8).with_chunk_size(4097);
+        legacy.layout = GroupLayout::for_dtype(DType::F32);
+        assert_ne!(legacy.chunk_size % legacy.layout.elem, 0, "the bug this guards");
+
+        // The builder validates against the final layout in either order.
+        let a = CodecConfig::builder()
+            .chunk_size(4096)
+            .dtype(DType::F32)
+            .build()
+            .unwrap();
+        let b = CodecConfig::builder()
+            .dtype(DType::F32)
+            .chunk_size(4096)
+            .build()
+            .unwrap();
+        assert_eq!(a.chunk_size, b.chunk_size);
+        assert_eq!(a.layout, b.layout);
+
+        // Misaligned chunk sizes error instead of silently clamping,
+        // in both orders.
+        assert!(CodecConfig::builder()
+            .chunk_size(4097)
+            .dtype(DType::F32)
+            .build()
+            .is_err());
+        assert!(CodecConfig::builder()
+            .dtype(DType::F32)
+            .chunk_size(4097)
+            .build()
+            .is_err());
+        assert!(CodecConfig::builder().chunk_size(0).build().is_err());
+    }
+
+    #[test]
+    fn config_splits_and_reassembles() {
+        let cfg = CodecConfig::for_dtype(DType::BF16)
+            .with_threads(4)
+            .with_chunk_size(8192);
+        let back = CodecConfig::from_parts(cfg.profile(), cfg.run());
+        assert_eq!(back.layout, cfg.layout);
+        assert_eq!(back.chunk_size, cfg.chunk_size);
+        assert_eq!(back.policy, cfg.policy);
+        assert_eq!(back.zstd_level, cfg.zstd_level);
+        assert_eq!(back.skip_window, cfg.skip_window);
+        assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.checksum, cfg.checksum);
     }
 
     #[test]

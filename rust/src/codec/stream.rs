@@ -53,6 +53,7 @@
 //! header:  "ZNS1" [version u8] [flags u8] [elem u8] [exp_group u8] [chunk_size u32]
 //! frame:   0xF5 [n_streams u32] [entries: n_streams × (method u8, comp u32, raw u32)]
 //!          [payload: concatenated streams]
+//! pframe:  0xF7 [elem u8] [exp_group u8] [n_streams u32] [entries …] [payload …]
 //! trailer: 0xF6 [tail_len u8] [tail bytes] [total_len u64] [checksum u64 if flagged]
 //! ```
 //!
@@ -61,6 +62,15 @@
 //! split of the incoming writes and any thread count. A non-element-aligned
 //! tail (< `elem` ≤ 16 bytes) rides in the trailer verbatim, so every chunk
 //! keeps the full byte-group layout.
+//!
+//! A writer built with [`ZnnWriter::with_profiles`] selects a
+//! [`CodecProfile`] per frame (the dominant tensor of the frame's raw
+//! range picks it) and records the chosen byte-group layout in a `0xF7`
+//! **profiled frame** prefix, so readers decode each frame with the
+//! layout it was encoded with. Containers written without profiles are
+//! byte-identical to previous releases (`0xF5` frames only); a profiled
+//! container is flagged in the header (`flags` bit 1) and rejected
+//! cleanly — "bad frame marker" — by profile-unaware readers.
 //!
 //! ## Worked example
 //!
@@ -84,12 +94,12 @@
 //! assert_eq!(back, [1, 2, 3, 4, 5, 6, 7, 8]);
 //! ```
 
-use crate::codec::auto::{AutoPolicy, Decision, Method};
+use crate::codec::auto::{AutoPolicy, Decision, Method, ProfileSelector};
 // MAX_CHUNK_SIZE is shared with the ZNN1 parser so the two formats'
 // corruption guards cannot drift.
 use crate::codec::container::{StreamEntry, MAX_CHUNK_SIZE};
 use crate::codec::index::{self, ContainerKind, TensorIndex, TensorMeta};
-use crate::codec::{CodecConfig, MethodPolicy};
+use crate::codec::{CodecConfig, CodecProfile, MethodPolicy};
 use crate::coordinator::{shared_pool, StickyMap, WorkerPool};
 use crate::error::{Error, Result};
 use crate::fp::{merge_groups_into, split_groups_into, GroupLayout};
@@ -118,8 +128,15 @@ pub const STREAM_VERSION: u8 = 1;
 pub(crate) const MARK_FRAME: u8 = 0xF5;
 /// Trailer marker byte.
 pub(crate) const MARK_END: u8 = 0xF6;
+/// Profiled-frame marker byte: the frame carries a 2-byte
+/// `[elem, exp_group]` layout prefix before the stream count.
+pub(crate) const MARK_PFRAME: u8 = 0xF7;
 /// Header flag: trailer carries a checksum.
 pub(crate) const SFLAG_CHECKSUM: u8 = 1;
+/// Header flag: frames record per-frame codec profiles (`0xF7` frames).
+/// Informational — the frame markers alone drive decoding — but it lets
+/// tools distinguish profiled containers without scanning frames.
+pub(crate) const SFLAG_PROFILES: u8 = 2;
 /// `ZNS1` header length.
 pub(crate) const STREAM_HEADER_LEN: usize = 12;
 
@@ -279,12 +296,12 @@ impl Checksummer {
 /// `entries` and the concatenated streams to `payload`.
 ///
 /// `data` must be the super-chunk's exact raw bytes (1..=[`SUPER_CHUNK`]
-/// chunks; the last may be short) and a multiple of `layout.elem`. The
-/// probe-and-skip state resets here, at the super-chunk boundary, which is
-/// what makes the output independent of thread count and write splits.
+/// chunks; the last may be short) and a multiple of the profile's
+/// `layout.elem`. The probe-and-skip state resets here, at the
+/// super-chunk boundary, which is what makes the output independent of
+/// thread count and write splits.
 pub(crate) fn compress_super_chunk(
-    cfg: &CodecConfig,
-    layout: GroupLayout,
+    profile: &CodecProfile,
     chunk_size: usize,
     data: &[u8],
     scratch: CompressScratch<'_>,
@@ -292,12 +309,13 @@ pub(crate) fn compress_super_chunk(
     payload: &mut Vec<u8>,
 ) {
     let CompressScratch { groups: group_scratch, zstd_dst } = scratch;
+    let layout = profile.layout;
     let groups = layout.groups();
-    let mut policy = AutoPolicy::new(groups, cfg.skip_window);
+    let mut policy = AutoPolicy::new(groups, profile.skip_window);
     for chunk in data.chunks(chunk_size) {
         split_groups_into(chunk, layout, group_scratch).expect("aligned by construction");
         for (gi, g) in group_scratch.iter().enumerate() {
-            entries.push(compress_stream_into(cfg, gi, g, &mut policy, zstd_dst, payload));
+            entries.push(compress_stream_into(profile, gi, g, &mut policy, zstd_dst, payload));
         }
     }
 }
@@ -314,7 +332,7 @@ pub(crate) struct CompressScratch<'a> {
 /// its bytes to `payload`. Decision logic is shared verbatim with the
 /// historical one-shot path, so containers stay byte-identical.
 fn compress_stream_into(
-    cfg: &CodecConfig,
+    profile: &CodecProfile,
     group: usize,
     data: &[u8],
     policy: &mut AutoPolicy,
@@ -326,10 +344,10 @@ fn compress_stream_into(
         payload.extend_from_slice(data);
         StreamEntry { method: Method::Raw, comp_len: raw_len, raw_len }
     };
-    match cfg.policy {
+    match profile.policy {
         MethodPolicy::Raw => store_raw(payload),
         MethodPolicy::Huffman => huffman_or_raw_into(data, None, group, policy, false, payload),
-        MethodPolicy::Zstd => zstd_or_raw_into(cfg.zstd_level, data, zstd_scratch, payload),
+        MethodPolicy::Zstd => zstd_or_raw_into(profile.zstd_level, data, zstd_scratch, payload),
         MethodPolicy::Auto => {
             if policy.take_skip(group) {
                 return store_raw(payload);
@@ -339,7 +357,9 @@ fn compress_stream_into(
             match policy.decide_with_hist(data, &hist) {
                 Decision::SkipRaw => store_raw(payload),
                 Decision::Zero => StreamEntry { method: Method::Zero, comp_len: 0, raw_len },
-                Decision::TryZstd => zstd_or_raw_into(cfg.zstd_level, data, zstd_scratch, payload),
+                Decision::TryZstd => {
+                    zstd_or_raw_into(profile.zstd_level, data, zstd_scratch, payload)
+                }
                 Decision::TryHuffman => {
                     huffman_or_raw_into(data, Some(&hist), group, policy, true, payload)
                 }
@@ -616,7 +636,7 @@ impl ByteSource<std::io::BufReader<std::fs::File>> {
     /// bounded memory on the fallback too.
     pub fn open(path: &Path) -> io::Result<ByteSource<std::io::BufReader<std::fs::File>>> {
         let file = std::fs::File::open(path)?;
-        if std::env::var_os("ZIPNN_NO_MMAP").is_none() {
+        if !crate::util::env::no_mmap() {
             if let Ok(map) = Mmap::map(&file) {
                 map.advise_sequential();
                 return Ok(ByteSource(SourceInner::Mapped {
@@ -668,6 +688,20 @@ pub struct ZnnWriter<W: Write> {
     /// Effective encode parallelism (`ZIPNN_ENCODE_WORKERS` override or
     /// `cfg.threads`); `> 1` routes batches through the encode pipeline.
     threads: usize,
+    /// `ZNS1` header, pending until the first byte reaches the sink —
+    /// deferred so [`ZnnWriter::with_profiles`] can still patch its
+    /// flags after construction. `None` once written.
+    header: Option<[u8; STREAM_HEADER_LEN]>,
+    /// Per-tensor profile selection (profile mode); `None` = the classic
+    /// uniform writer, whose output bytes are unchanged.
+    selector: Option<ProfileSelector>,
+    /// Raw bytes already handed to `flush_compressible` — the raw offset
+    /// of `buf[0]`, which profile mode maps through the selector to pick
+    /// each frame's codec.
+    flushed: u64,
+    /// Scratch: the per-super-chunk profile table of the batch being
+    /// submitted (copied into the pipeline at submit).
+    profile_scratch: Vec<CodecProfile>,
     buf: Vec<u8>,
     batch_bytes: usize,
     arena: ScratchArena,
@@ -699,14 +733,24 @@ pub struct ZnnWriter<W: Write> {
 /// helpers hold raw pointers into its buffers.
 struct EncodePipeline {
     engine: Engine,
-    /// Codec config behind a stable heap address: the task frame points
-    /// at it, and the writer (or this pipeline) may move between writes.
-    cfg: Box<CodecConfig>,
+    /// Profiles of the in-flight batch, behind a stable heap address: the
+    /// task frame points at this vector's buffer, and the writer (or this
+    /// pipeline) may move between writes. One entry per super-chunk in
+    /// profile mode (`stride` 1), a single shared entry otherwise
+    /// (`stride` 0).
+    in_profiles: Vec<CodecProfile>,
+    /// Profile-table stride of the batches this pipeline carries (fixed
+    /// per writer: 1 = profiled, 0 = uniform).
+    stride: usize,
     /// Raw bytes of the in-flight batch (swapped with the writer's fill
     /// buffer at submit, so the two ping-pong without reallocating).
     in_buf: Vec<u8>,
     /// Per-super-chunk `(entries, payload)` output slots, in flight.
     in_slots: Vec<EncodeSlot>,
+    /// Profiles matching `done[..done_n]` — `emit_done` reads each
+    /// finished frame's layout from here when serializing profiled
+    /// frames.
+    done_profiles: Vec<CodecProfile>,
     /// Finished frames awaiting serialization (`done[..done_n]`); their
     /// spare capacity becomes the next submission's slots.
     done: Vec<EncodeSlot>,
@@ -717,12 +761,14 @@ struct EncodePipeline {
 }
 
 impl EncodePipeline {
-    fn new(cfg: &CodecConfig, threads: usize, batch_bytes: usize) -> EncodePipeline {
+    fn new(stride: usize, threads: usize, batch_bytes: usize) -> EncodePipeline {
         EncodePipeline {
             engine: Engine::new(threads),
-            cfg: Box::new(cfg.clone()),
+            in_profiles: Vec::new(),
+            stride,
             in_buf: Vec::with_capacity(batch_bytes),
             in_slots: Vec::new(),
+            done_profiles: Vec::new(),
             done: Vec::new(),
             done_n: 0,
             pending: None,
@@ -730,24 +776,31 @@ impl EncodePipeline {
         }
     }
 
-    /// Join the in-flight batch, if any; its finished frames rotate into
-    /// `done` (and the previously emitted slots rotate in as spares).
+    /// Join the in-flight batch, if any; its finished frames (and their
+    /// profiles) rotate into `done`/`done_profiles` (and the previously
+    /// emitted slots rotate in as spares).
     fn join(&mut self) -> Result<()> {
         if let Some(frame) = self.pending.take() {
             self.engine.wait(frame, &mut self.arena)?;
             std::mem::swap(&mut self.in_slots, &mut self.done);
+            std::mem::swap(&mut self.in_profiles, &mut self.done_profiles);
             self.done_n = frame.n;
         }
         Ok(())
     }
 
     /// Swap `batch` (its first `len` bytes are the batch's raw input)
-    /// into the pipeline and submit its super-chunks to the shared pool.
-    /// Non-blocking; the previous batch must already be joined.
-    fn submit(&mut self, batch: &mut Vec<u8>, len: usize, layout: GroupLayout, chunk_size: usize) {
+    /// into the pipeline, copy the batch's profile table (one entry per
+    /// super-chunk at `stride` 1, a single shared entry at `stride` 0),
+    /// and submit its super-chunks to the shared pool. Non-blocking; the
+    /// previous batch must already be joined.
+    fn submit(&mut self, batch: &mut Vec<u8>, len: usize, profiles: &[CodecProfile], chunk_size: usize) {
         debug_assert!(self.pending.is_none(), "previous batch must be joined");
         std::mem::swap(&mut self.in_buf, batch);
         let n_super = len.div_ceil(chunk_size).div_ceil(SUPER_CHUNK);
+        debug_assert_eq!(profiles.len(), if self.stride == 0 { 1 } else { n_super });
+        self.in_profiles.clear();
+        self.in_profiles.extend_from_slice(profiles);
         if self.in_slots.len() < n_super {
             self.in_slots.resize_with(n_super, Default::default);
         }
@@ -756,8 +809,8 @@ impl EncodePipeline {
             epoch: self.engine.epoch,
             n: n_super,
             kind: TaskKind::Encode(EncodeFrame {
-                cfg: &*self.cfg as *const CodecConfig,
-                layout,
+                profiles: self.in_profiles.as_ptr(),
+                stride: self.stride,
                 chunk_size,
                 buf: self.in_buf.as_ptr(),
                 len,
@@ -786,11 +839,7 @@ impl Drop for EncodePipeline {
 /// an API change. Batch sizing moves with it, but the emitted bytes never
 /// do (frame boundaries are fixed at super-chunk granularity).
 pub(crate) fn encode_workers(cfg_threads: usize) -> usize {
-    std::env::var("ZIPNN_ENCODE_WORKERS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| cfg_threads.max(1))
+    crate::util::env::encode_workers().unwrap_or_else(|| cfg_threads.max(1))
 }
 
 /// Compress every super-chunk of `data` in order, returning one
@@ -801,13 +850,12 @@ pub(crate) fn encode_workers(cfg_threads: usize) -> usize {
 /// spawns), with the calling thread helping so a busy pool can never
 /// stall the caller. Output is byte-identical either way.
 pub(crate) fn compress_supers(
-    cfg: &CodecConfig,
-    layout: GroupLayout,
+    profile: &CodecProfile,
     chunk_size: usize,
     data: &[u8],
     threads: usize,
 ) -> Result<Vec<EncodeSlot>> {
-    let groups = layout.groups();
+    let groups = profile.layout.groups();
     let n_super = data.len().div_ceil(chunk_size).div_ceil(SUPER_CHUNK);
     let mut arena = ScratchArena::new();
     if threads <= 1 || n_super <= 1 {
@@ -818,8 +866,7 @@ pub(crate) fn compress_supers(
                 let mut payload = Vec::new();
                 let ScratchArena { groups: scratch, zstd_dst, .. } = &mut arena;
                 compress_super_chunk(
-                    cfg,
-                    layout,
+                    profile,
                     chunk_size,
                     &data[lo..hi],
                     CompressScratch { groups: scratch, zstd_dst },
@@ -838,8 +885,8 @@ pub(crate) fn compress_supers(
         epoch: engine.epoch,
         n: n_super,
         kind: TaskKind::Encode(EncodeFrame {
-            cfg: cfg as *const CodecConfig,
-            layout,
+            profiles: profile as *const CodecProfile,
+            stride: 0,
             chunk_size,
             buf: data.as_ptr(),
             len: data.len(),
@@ -848,8 +895,8 @@ pub(crate) fn compress_supers(
     };
     engine.submit(frame);
     // Joined before returning, so the frame's pointers (into `data`,
-    // `slots`, and `cfg`) never outlive this call; stale queued helpers
-    // exit on the sealed progress without dereferencing them.
+    // `slots`, and `profile`) never outlive this call; stale queued
+    // helpers exit on the sealed progress without dereferencing them.
     engine.wait(frame, &mut arena)?;
     Ok(slots)
 }
@@ -877,10 +924,18 @@ pub(crate) fn decode_chunks(
     let n_chunks = entries.len() / groups;
     let mut spans = Vec::with_capacity(n_chunks);
     let (mut comp_off, mut out_off) = (0usize, 0usize);
-    for es in entries.chunks_exact(groups) {
+    for (c, es) in entries.chunks_exact(groups).enumerate() {
         let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
         let out_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
-        spans.push(ChunkSpan { comp_off, comp_len, out_off, out_len });
+        spans.push(ChunkSpan {
+            comp_off,
+            comp_len,
+            out_off,
+            out_len,
+            entry_off: c * groups,
+            layout,
+            groups,
+        });
         comp_off += comp_len;
         out_off += out_len;
     }
@@ -911,8 +966,6 @@ pub(crate) fn decode_chunks(
         epoch: engine.epoch,
         n: n_chunks,
         kind: TaskKind::Decode(DecodeFrame {
-            layout,
-            groups,
             entries: entries.as_ptr(),
             comp: payload.as_ptr(),
             spans: spans.as_ptr(),
@@ -926,9 +979,11 @@ pub(crate) fn decode_chunks(
 }
 
 impl<W: Write> ZnnWriter<W> {
-    /// Start a streaming container on `inner` (writes the header
-    /// immediately).
-    pub fn new(mut inner: W, cfg: CodecConfig) -> Result<ZnnWriter<W>> {
+    /// Start a streaming container on `inner`. The header reaches the
+    /// sink with the first flushed frame (or at `finish` for empty
+    /// input), so builder methods like [`ZnnWriter::with_profiles`] can
+    /// still adjust it.
+    pub fn new(inner: W, cfg: CodecConfig) -> Result<ZnnWriter<W>> {
         let layout = cfg.layout;
         let elem = layout.elem;
         if elem == 0 || elem > 16 || layout.exp_group >= elem {
@@ -940,14 +995,13 @@ impl<W: Write> ZnnWriter<W> {
         let chunk_size = cfg.chunk_size.max(elem) / elem * elem;
         let threads = encode_workers(cfg.threads);
         let batch_bytes = threads * SUPER_CHUNK * chunk_size;
-        let mut header = [0u8; 12];
+        let mut header = [0u8; STREAM_HEADER_LEN];
         header[0..4].copy_from_slice(&STREAM_MAGIC);
         header[4] = STREAM_VERSION;
         header[5] = if cfg.checksum { SFLAG_CHECKSUM } else { 0 };
         header[6] = elem as u8;
         header[7] = layout.exp_group as u8;
         header[8..12].copy_from_slice(&(chunk_size as u32).to_le_bytes());
-        inner.write_all(&header)?;
         Ok(ZnnWriter {
             inner,
             ck: cfg.checksum.then(Checksummer::streaming),
@@ -955,6 +1009,10 @@ impl<W: Write> ZnnWriter<W> {
             layout,
             chunk_size,
             threads,
+            header: Some(header),
+            selector: None,
+            flushed: 0,
+            profile_scratch: Vec::new(),
             buf: Vec::with_capacity(batch_bytes),
             batch_bytes,
             arena: ScratchArena::new(),
@@ -966,6 +1024,73 @@ impl<W: Write> ZnnWriter<W> {
             index_tensors: None,
             failed: false,
         })
+    }
+
+    /// Builder-style: compress each frame with the [`CodecProfile`] the
+    /// selector picks for the frame's raw range (the dominant tensor by
+    /// byte overlap decides; see [`ProfileSelector::profile_for_range`]),
+    /// recording the chosen layout in a `0xF7` profiled-frame prefix so
+    /// readers reverse each frame with the layout it was written with.
+    ///
+    /// Must be called before any bytes are written. Every profile the
+    /// selector can hand out must have a layout whose `elem` (1..=16)
+    /// divides this writer's chunk size — rejected here rather than
+    /// producing an undecodable container. A final partial frame that is
+    /// not aligned to its profile's element falls back to the flat
+    /// (single-group) variant of that profile, so profile mode never
+    /// carries a trailer tail.
+    pub fn with_profiles(mut self, selector: ProfileSelector) -> Result<Self> {
+        if self.total > 0 || self.header.is_none() {
+            return Err(Error::Invalid(
+                "with_profiles must be configured before any write".into(),
+            ));
+        }
+        for p in selector.profiles() {
+            let elem = p.layout.elem;
+            if elem == 0 || elem > 16 || p.layout.exp_group >= elem {
+                return Err(Error::Invalid(format!(
+                    "bad profile layout elem={elem} exp_group={}",
+                    p.layout.exp_group
+                )));
+            }
+            if self.chunk_size % elem != 0 {
+                return Err(Error::Invalid(format!(
+                    "profile element size {elem} does not divide chunk size {}",
+                    self.chunk_size
+                )));
+            }
+        }
+        if let Some(h) = self.header.as_mut() {
+            h[5] |= SFLAG_PROFILES;
+        }
+        self.selector = Some(selector);
+        Ok(self)
+    }
+
+    /// Write the deferred header once, ahead of the first frame, the
+    /// trailer, or an explicit flush.
+    fn write_header_once(&mut self) -> Result<()> {
+        if let Some(h) = self.header.take() {
+            self.inner.write_all(&h)?;
+        }
+        Ok(())
+    }
+
+    /// The profile compressing the super-chunk at raw range
+    /// `[start, start + len)`, with the flat fallback for a final
+    /// non-element-aligned partial frame.
+    fn profile_for_super(&self, start: u64, len: usize) -> CodecProfile {
+        match &self.selector {
+            Some(sel) => {
+                let p = sel.profile_for_range(start, start + len as u64);
+                if len % p.layout.elem != 0 {
+                    CodecProfile { layout: GroupLayout::flat(), ..p }
+                } else {
+                    p
+                }
+            }
+            None => self.cfg.profile(),
+        }
     }
 
     /// Raw bytes accepted so far.
@@ -984,13 +1109,14 @@ impl<W: Write> ZnnWriter<W> {
     }
 
     /// Record one emitted frame's placement and size.
-    fn note_frame(&mut self, n_entries: usize, payload_len: usize) {
+    fn note_frame(&mut self, n_entries: usize, payload_len: usize, profiled: bool) {
         note_frame_at(
             self.index_tensors.is_some(),
             &mut self.frame_offsets,
             &mut self.bytes_out,
             n_entries,
             payload_len,
+            profiled,
         );
     }
 
@@ -1007,17 +1133,21 @@ impl<W: Write> ZnnWriter<W> {
         if len == 0 {
             return Ok(());
         }
+        self.write_header_once()?;
+        let profiled = self.selector.is_some();
+        let base = self.flushed;
+        self.flushed += len as u64;
         if self.threads <= 1 {
             let n_chunks = len.div_ceil(self.chunk_size);
             let n_super = n_chunks.div_ceil(SUPER_CHUNK);
             for si in 0..n_super {
                 let (lo, hi) = super_chunk_span(self.chunk_size, len, si);
+                let profile = self.profile_for_super(base + lo as u64, hi - lo);
                 let ScratchArena { groups, zstd_dst, entries, payload, .. } = &mut self.arena;
                 entries.clear();
                 payload.clear();
                 compress_super_chunk(
-                    &self.cfg,
-                    self.layout,
+                    &profile,
                     self.chunk_size,
                     &self.buf[lo..hi],
                     CompressScratch { groups, zstd_dst },
@@ -1025,20 +1155,41 @@ impl<W: Write> ZnnWriter<W> {
                     payload,
                 );
                 let (n_entries, payload_len) = (entries.len(), payload.len());
-                emit_frame(&mut self.inner, &mut self.head_buf, entries, payload)?;
-                self.note_frame(n_entries, payload_len);
+                emit_frame(
+                    &mut self.inner,
+                    &mut self.head_buf,
+                    profiled.then_some(profile.layout),
+                    entries,
+                    payload,
+                )?;
+                self.note_frame(n_entries, payload_len, profiled);
             }
             return Ok(());
         }
+        // Resolve the batch's profile table before borrowing the
+        // pipeline (one entry per super-chunk in profile mode, a single
+        // shared entry otherwise).
+        self.profile_scratch.clear();
+        if profiled {
+            let n_super = len.div_ceil(self.chunk_size).div_ceil(SUPER_CHUNK);
+            for si in 0..n_super {
+                let (lo, hi) = super_chunk_span(self.chunk_size, len, si);
+                let p = self.profile_for_super(base + lo as u64, hi - lo);
+                self.profile_scratch.push(p);
+            }
+        } else {
+            self.profile_scratch.push(self.cfg.profile());
+        }
         if self.pipe.is_none() {
-            self.pipe = Some(EncodePipeline::new(&self.cfg, self.threads, self.batch_bytes));
+            let stride = if profiled { 1 } else { 0 };
+            self.pipe = Some(EncodePipeline::new(stride, self.threads, self.batch_bytes));
         }
         let pipe = self.pipe.as_mut().expect("just created");
         pipe.join()?;
         // `buf` and the pipeline's batch buffer swap roles: the full
         // batch moves in for compression, the previous (already
         // compressed) buffer comes back as the next fill buffer.
-        pipe.submit(&mut self.buf, len, self.layout, self.chunk_size);
+        pipe.submit(&mut self.buf, len, &self.profile_scratch, self.chunk_size);
         self.buf.clear();
         self.emit_done()
     }
@@ -1047,11 +1198,13 @@ impl<W: Write> ZnnWriter<W> {
     /// the inner sink, recording their placement. No-op when nothing is
     /// waiting.
     fn emit_done(&mut self) -> Result<()> {
+        let profiled = self.selector.is_some();
         let Some(pipe) = self.pipe.as_mut() else {
             return Ok(());
         };
-        for (entries, payload) in &pipe.done[..pipe.done_n] {
-            emit_frame(&mut self.inner, &mut self.head_buf, entries, payload)?;
+        for (i, (entries, payload)) in pipe.done[..pipe.done_n].iter().enumerate() {
+            let layout = profiled.then(|| pipe.done_profiles[i].layout);
+            emit_frame(&mut self.inner, &mut self.head_buf, layout, entries, payload)?;
             // Field-level borrows: the live borrow of `pipe` keeps the
             // whole-`self` `note_frame` method out of reach here.
             note_frame_at(
@@ -1060,6 +1213,7 @@ impl<W: Write> ZnnWriter<W> {
                 &mut self.bytes_out,
                 entries.len(),
                 payload.len(),
+                profiled,
             );
         }
         pipe.done_n = 0;
@@ -1081,7 +1235,14 @@ impl<W: Write> ZnnWriter<W> {
         if self.failed {
             return Err(Error::Invalid(BROKEN_WRITER.into()));
         }
-        let tail_len = self.buf.len() % self.layout.elem;
+        self.write_header_once()?;
+        // Profile mode never leaves a trailer tail: an unaligned final
+        // frame compresses under the flat fallback layout instead.
+        let tail_len = if self.selector.is_some() {
+            0
+        } else {
+            self.buf.len() % self.layout.elem
+        };
         let comp_len = self.buf.len() - tail_len;
         // Captured before the flush: the pipelined path swaps `buf` into
         // the encode pipeline.
@@ -1126,12 +1287,14 @@ impl<W: Write> ZnnWriter<W> {
     }
 }
 
-/// Container bytes one frame occupies on the wire: marker + stream count
-/// + the 9-byte entry rows + the payload. Must mirror [`emit_frame`]'s
-/// serialization exactly — `bytes_out`/`frame_offsets` (and through them
-/// the tensor index and `trailer_off`) are derived from it.
-fn frame_wire_len(n_entries: usize, payload_len: usize) -> u64 {
-    5 + 9 * n_entries as u64 + payload_len as u64
+/// Container bytes one frame occupies on the wire: marker (+ 2-byte
+/// layout prefix for profiled `0xF7` frames) + stream count + the 9-byte
+/// entry rows + the payload. Must mirror [`emit_frame`]'s serialization
+/// exactly — `bytes_out`/`frame_offsets` (and through them the tensor
+/// index and `trailer_off`) are derived from it.
+fn frame_wire_len(n_entries: usize, payload_len: usize, profiled: bool) -> u64 {
+    let prefix = if profiled { 2 } else { 0 };
+    5 + prefix + 9 * n_entries as u64 + payload_len as u64
 }
 
 /// Record one emitted frame's placement into the index bookkeeping and
@@ -1143,11 +1306,12 @@ fn note_frame_at(
     bytes_out: &mut u64,
     n_entries: usize,
     payload_len: usize,
+    profiled: bool,
 ) {
     if index_on {
         frame_offsets.push(*bytes_out);
     }
-    *bytes_out += frame_wire_len(n_entries, payload_len);
+    *bytes_out += frame_wire_len(n_entries, payload_len, profiled);
 }
 
 /// The byte range of super-chunk `si` within a batch of `len` raw bytes
@@ -1160,14 +1324,24 @@ fn super_chunk_span(chunk_size: usize, len: usize, si: usize) -> (usize, usize) 
 
 /// Serialize and write one frame (`entries` + `payload` of one
 /// super-chunk). `head_buf` is recycled scratch for the entry table.
+/// `profile` adds the `0xF7` per-frame layout prefix; `None` emits the
+/// classic `0xF5` frame byte-for-byte.
 fn emit_frame<W: Write>(
     inner: &mut W,
     head_buf: &mut Vec<u8>,
+    profile: Option<GroupLayout>,
     entries: &[StreamEntry],
     payload: &[u8],
 ) -> Result<()> {
     head_buf.clear();
-    head_buf.push(MARK_FRAME);
+    match profile {
+        Some(layout) => {
+            head_buf.push(MARK_PFRAME);
+            head_buf.push(layout.elem as u8);
+            head_buf.push(layout.exp_group as u8);
+        }
+        None => head_buf.push(MARK_FRAME),
+    }
     head_buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
     for e in entries {
         head_buf.push(e.method.tag());
@@ -1216,7 +1390,7 @@ impl<W: Write> Write for ZnnWriter<W> {
         if self.failed {
             return Err(io::Error::new(io::ErrorKind::Other, BROKEN_WRITER));
         }
-        if let Err(e) = self.drain_pipe() {
+        if let Err(e) = self.write_header_once().and_then(|()| self.drain_pipe()) {
             self.failed = true;
             return Err(to_io_err(e));
         }
@@ -1318,6 +1492,12 @@ struct ChunkSpan {
     comp_len: usize,
     out_off: usize,
     out_len: usize,
+    /// Index of this chunk's first entry in the batch entry list.
+    entry_off: usize,
+    /// Byte-group geometry the chunk was encoded with — per-frame in a
+    /// profiled `ZNS1` container, the container layout otherwise.
+    layout: GroupLayout,
+    groups: usize,
 }
 
 /// Outcome of fetching the next decode batch from the source.
@@ -1362,11 +1542,11 @@ enum TaskKind {
     Encode(EncodeFrame),
 }
 
-/// Decode batch: task `c` decodes chunk `c` into its disjoint output span.
+/// Decode batch: task `c` decodes chunk `c` into its disjoint output
+/// span. Each span carries its own layout/entry placement, so one batch
+/// can mix frame geometries (profiled containers).
 #[derive(Clone, Copy)]
 struct DecodeFrame {
-    layout: GroupLayout,
-    groups: usize,
     entries: *const StreamEntry,
     comp: *const u8,
     spans: *const ChunkSpan,
@@ -1377,8 +1557,12 @@ struct DecodeFrame {
 /// into its exclusively owned `(entries, payload)` slot.
 #[derive(Clone, Copy)]
 struct EncodeFrame {
-    cfg: *const CodecConfig,
-    layout: GroupLayout,
+    /// Profile table: task `si` compresses with `profiles[si * stride]`.
+    /// `stride` 0 shares one profile batch-wide (the classic uniform
+    /// writer and the one-shot compressor); `stride` 1 is the profiled
+    /// writer's per-super-chunk table.
+    profiles: *const CodecProfile,
+    stride: usize,
     chunk_size: usize,
     buf: *const u8,
     len: usize,
@@ -1503,17 +1687,17 @@ unsafe fn run_task_raw(frame: &TaskFrame, c: usize, arena: &mut ScratchArena) ->
 /// Decode one claimed chunk through the frame's raw slices.
 unsafe fn decode_chunk_raw(f: &DecodeFrame, c: usize, arena: &mut ScratchArena) -> Result<()> {
     let span = *f.spans.add(c);
-    let es = std::slice::from_raw_parts(f.entries.add(c * f.groups), f.groups);
+    let es = std::slice::from_raw_parts(f.entries.add(span.entry_off), span.groups);
     let comp = std::slice::from_raw_parts(f.comp.add(span.comp_off), span.comp_len);
     let out = std::slice::from_raw_parts_mut(f.out.add(span.out_off), span.out_len);
-    decode_chunk_into(f.layout, es, comp, arena, out)
+    decode_chunk_into(span.layout, es, comp, arena, out)
 }
 
 /// Compress one claimed super-chunk into its exclusively owned output
 /// slot, using the worker's sticky scratch. Infallible (panics are
 /// reported through the `ChunkDone` guard).
 unsafe fn encode_super_raw(f: &EncodeFrame, si: usize, arena: &mut ScratchArena) {
-    let cfg = &*f.cfg;
+    let profile = &*f.profiles.add(si * f.stride);
     let (lo, hi) = super_chunk_span(f.chunk_size, f.len, si);
     let data = std::slice::from_raw_parts(f.buf.add(lo), hi - lo);
     let (entries, payload) = &mut *f.slots.add(si);
@@ -1521,8 +1705,7 @@ unsafe fn encode_super_raw(f: &EncodeFrame, si: usize, arena: &mut ScratchArena)
     payload.clear();
     let ScratchArena { groups, zstd_dst, .. } = arena;
     compress_super_chunk(
-        cfg,
-        f.layout,
+        profile,
         f.chunk_size,
         data,
         CompressScratch { groups, zstd_dst },
@@ -1658,25 +1841,20 @@ fn fetch_batch<R: Read>(
             let mut marker = [0u8; 1];
             src.read_exact(&mut marker)?;
             match marker[0] {
-                MARK_FRAME => {
-                    let mut n4 = [0u8; 4];
-                    src.read_exact(&mut n4)?;
-                    let n_streams = u32::from_le_bytes(n4) as usize;
-                    if n_streams == 0 || n_streams > SUPER_CHUNK * 16 || n_streams % groups != 0 {
-                        return Err(Error::Corrupt(format!("bad frame stream count {n_streams}")));
+                MARK_FRAME => fetch_v2_frame(src, buf, layout, groups, chunk_size),
+                MARK_PFRAME => {
+                    // Profiled frame: a 2-byte layout prefix overrides
+                    // the header geometry for this frame only.
+                    let mut ph = [0u8; 2];
+                    src.read_exact(&mut ph)?;
+                    let (elem, exp_group) = (ph[0] as usize, ph[1] as usize);
+                    if elem == 0 || elem > 16 || exp_group >= elem {
+                        return Err(Error::Corrupt(format!(
+                            "bad frame layout elem={elem} exp_group={exp_group}"
+                        )));
                     }
-                    buf.entries.clear();
-                    let mut row = [0u8; 9];
-                    for _ in 0..n_streams {
-                        src.read_exact(&mut row)?;
-                        let e = parse_entry(&row)?;
-                        if e.comp_len > e.raw_len || e.raw_len > chunk_size {
-                            return Err(Error::Corrupt("implausible stream entry".into()));
-                        }
-                        buf.entries.push(e);
-                    }
-                    stage_payload(src, buf, layout, groups)?;
-                    Ok(Fetch::Batch)
+                    let f_layout = GroupLayout { elem, exp_group };
+                    fetch_v2_frame(src, buf, f_layout, f_layout.groups(), chunk_size)
                 }
                 MARK_END => {
                     let mut t = [0u8; 1];
@@ -1704,6 +1882,36 @@ fn fetch_batch<R: Read>(
     }
 }
 
+/// Read one `ZNS1` frame body — stream count, entry rows, payload
+/// staging — under the given per-frame geometry. Shared by plain `0xF5`
+/// frames (header layout) and profiled `0xF7` frames (prefix layout).
+fn fetch_v2_frame<R: Read>(
+    src: &mut ByteSource<R>,
+    buf: &mut BatchBuf,
+    layout: GroupLayout,
+    groups: usize,
+    chunk_size: u32,
+) -> Result<Fetch> {
+    let mut n4 = [0u8; 4];
+    src.read_exact(&mut n4)?;
+    let n_streams = u32::from_le_bytes(n4) as usize;
+    if n_streams == 0 || n_streams > SUPER_CHUNK * 16 || n_streams % groups != 0 {
+        return Err(Error::Corrupt(format!("bad frame stream count {n_streams}")));
+    }
+    buf.entries.clear();
+    let mut row = [0u8; 9];
+    for _ in 0..n_streams {
+        src.read_exact(&mut row)?;
+        let e = parse_entry(&row)?;
+        if e.comp_len > e.raw_len || e.raw_len > chunk_size {
+            return Err(Error::Corrupt("implausible stream entry".into()));
+        }
+        buf.entries.push(e);
+    }
+    stage_payload(src, buf, layout, groups)?;
+    Ok(Fetch::Batch)
+}
+
 /// Build the batch's chunk spans from its staged entries, then stage the
 /// compressed payload: copied into the batch buffer for stream sources
 /// (into high-water-length storage — no per-refill zero-fill), recorded
@@ -1722,10 +1930,18 @@ fn stage_payload<R: Read>(
     buf.n_chunks = buf.entries.len() / groups;
     buf.spans.clear();
     let (mut comp_off, mut out_off) = (0usize, 0usize);
-    for es in buf.entries.chunks_exact(groups) {
+    for (c, es) in buf.entries.chunks_exact(groups).enumerate() {
         let comp_len: usize = es.iter().map(|e| e.comp_len as usize).sum();
         let out_len: usize = es.iter().map(|e| e.raw_len as usize).sum();
-        buf.spans.push(ChunkSpan { comp_off, comp_len, out_off, out_len });
+        buf.spans.push(ChunkSpan {
+            comp_off,
+            comp_len,
+            out_off,
+            out_len,
+            entry_off: c * groups,
+            layout,
+            groups,
+        });
         comp_off += comp_len;
         out_off += out_len;
     }
@@ -1764,17 +1980,16 @@ fn decode_batch_serial<R: Read>(
     buf: &mut BatchBuf,
     arena: &mut ScratchArena,
 ) -> Result<()> {
-    let BatchBuf { entries, comp, spans, out, layout, groups, comp_len, payload, .. } = buf;
-    let (layout, groups) = (*layout, *groups);
+    let BatchBuf { entries, comp, spans, out, comp_len, payload, .. } = buf;
     let comp_all: &[u8] = match payload {
         PayloadAt::Buf => &comp[..*comp_len],
         PayloadAt::Mapped(off) => src.mapped_slice(*off, *comp_len),
     };
-    for (c, s) in spans.iter().enumerate() {
-        let es = &entries[c * groups..(c + 1) * groups];
+    for s in spans.iter() {
+        let es = &entries[s.entry_off..s.entry_off + s.groups];
         let comp_chunk = &comp_all[s.comp_off..s.comp_off + s.comp_len];
         decode_chunk_into(
-            layout,
+            s.layout,
             es,
             comp_chunk,
             arena,
@@ -1853,7 +2068,79 @@ struct RangeAccessV1 {
     raw_off: Vec<u64>,
 }
 
+/// Order-insensitive open options for [`ZnnReader`]: set decode threads
+/// and index probing once, then open from any source kind. The direct
+/// constructors ([`ZnnReader::open`], [`ZnnReader::new`],
+/// [`ZnnReader::from_mapped`], [`ZnnReader::with_source`]) remain and
+/// behave exactly as before; the builder is where new open-time options
+/// land without widening every constructor.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ZnnReaderBuilder {
+    threads: usize,
+    probe_index: bool,
+}
+
+impl ZnnReaderBuilder {
+    /// Worker threads for chunk-parallel decoding (0 or 1 = serial);
+    /// same semantics as [`ZnnReader::with_threads`].
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Probe the tensor index eagerly at open time instead of lazily on
+    /// the first `decode_tensor`/`decode_range`/`index()` call, so a
+    /// missing index surfaces before any decode work is staged.
+    pub fn probe_index(mut self, yes: bool) -> Self {
+        self.probe_index = yes;
+        self
+    }
+
+    /// Open a container file (zero-copy mmap fast path; see
+    /// [`ZnnReader::open`]).
+    pub fn open(
+        self,
+        path: impl AsRef<Path>,
+    ) -> Result<ZnnReader<std::io::BufReader<std::fs::File>>> {
+        self.finish(ZnnReader::open(path)?)
+    }
+
+    /// Open over a sequential reader (see [`ZnnReader::new`]).
+    pub fn reader<R: Read>(self, inner: R) -> Result<ZnnReader<R>> {
+        self.finish(ZnnReader::new(inner)?)
+    }
+
+    /// Open over already-mapped (or owned) container bytes (see
+    /// [`ZnnReader::from_mapped`]).
+    pub fn mapped(self, bytes: MappedBytes) -> Result<ZnnReader<std::io::Empty>> {
+        self.finish(ZnnReader::from_mapped(bytes)?)
+    }
+
+    /// Open over an explicit [`ByteSource`].
+    pub fn source<R: Read>(self, src: ByteSource<R>) -> Result<ZnnReader<R>> {
+        self.finish(ZnnReader::with_source(src)?)
+    }
+
+    fn finish<R: Read>(self, mut r: ZnnReader<R>) -> Result<ZnnReader<R>> {
+        if self.threads > 0 {
+            r = r.with_threads(self.threads);
+        }
+        if self.probe_index {
+            r.ensure_index()?;
+        }
+        Ok(r)
+    }
+}
+
 impl ZnnReader<std::io::Empty> {
+    /// Start building open options; terminal methods
+    /// ([`ZnnReaderBuilder::open`], [`ZnnReaderBuilder::reader`],
+    /// [`ZnnReaderBuilder::mapped`], [`ZnnReaderBuilder::source`])
+    /// produce the reader.
+    pub fn builder() -> ZnnReaderBuilder {
+        ZnnReaderBuilder::default()
+    }
+
     /// Decode from already-mapped (or owned) container bytes.
     pub fn from_mapped(bytes: MappedBytes) -> Result<ZnnReader<std::io::Empty>> {
         Self::with_source(ByteSource::mapped(bytes))
@@ -2163,8 +2450,6 @@ impl<R: Read> ZnnReader<R> {
             epoch: engine.epoch,
             n: b.n_chunks,
             kind: TaskKind::Decode(DecodeFrame {
-                layout: b.layout,
-                groups: b.groups,
                 entries: b.entries.as_ptr(),
                 comp: comp_ptr,
                 spans: b.spans.as_ptr(),
@@ -2401,6 +2686,9 @@ impl<R: Read> ZnnReader<R> {
                 comp_len: (ra.comp_off[c + 1] - ra.comp_off[c]) as usize,
                 out_off,
                 out_len,
+                entry_off: (c - c0) * groups,
+                layout,
+                groups,
             });
             out_off += out_len;
         }
@@ -2476,8 +2764,6 @@ impl<R: Read> ZnnReader<R> {
                 epoch: engine.epoch,
                 n: b.n_chunks,
                 kind: TaskKind::Decode(DecodeFrame {
-                    layout: b.layout,
-                    groups: b.groups,
                     entries: b.entries.as_ptr(),
                     comp: comp_ptr,
                     spans: b.spans.as_ptr(),
@@ -2583,18 +2869,43 @@ fn stage_range_v2<R: Read>(
     let mut row = [0u8; 9];
     for f in f0..f1 {
         let foff = idx.frame_offsets[f] as usize;
-        let rows_base = foff
-            .checked_add(5)
+        if foff >= data.len() {
+            return Err(Error::Corrupt("index frame offset past container".into()));
+        }
+        // Plain frames (0xF5) decode with the container-wide layout;
+        // pframes (0xF7) prefix the stream count with their own 2-byte
+        // layout, so a single staged batch can mix geometries.
+        let (f_layout, count_at) = match data[foff] {
+            MARK_FRAME => (layout, foff + 1),
+            MARK_PFRAME => {
+                if foff + 3 > data.len() {
+                    return Err(Error::Corrupt("frame layout prefix past container".into()));
+                }
+                let elem = data[foff + 1] as usize;
+                let exp_group = data[foff + 2] as usize;
+                if elem == 0 || elem > 16 || exp_group >= elem {
+                    return Err(Error::Corrupt(format!(
+                        "bad frame layout elem={elem} exp_group={exp_group}"
+                    )));
+                }
+                (GroupLayout { elem, exp_group }, foff + 3)
+            }
+            m => {
+                return Err(Error::Corrupt(format!(
+                    "index frame offset not at a frame marker (0x{m:02x})"
+                )))
+            }
+        };
+        let f_groups = f_layout.groups();
+        let rows_base = count_at
+            .checked_add(4)
             .filter(|&e| e <= data.len())
             .ok_or_else(|| Error::Corrupt("index frame offset past container".into()))?;
-        if data[foff] != MARK_FRAME {
-            return Err(Error::Corrupt("index frame offset not at a frame marker".into()));
-        }
-        let n_streams = u32::from_le_bytes(data[foff + 1..rows_base].try_into().unwrap()) as usize;
-        if n_streams == 0 || n_streams > SUPER_CHUNK * 16 || n_streams % groups != 0 {
+        let n_streams = u32::from_le_bytes(data[count_at..rows_base].try_into().unwrap()) as usize;
+        if n_streams == 0 || n_streams > SUPER_CHUNK * 16 || n_streams % f_groups != 0 {
             return Err(Error::Corrupt(format!("bad frame stream count {n_streams}")));
         }
-        let frame_chunks = n_streams / groups;
+        let frame_chunks = n_streams / f_groups;
         let rows_end = rows_base
             .checked_add(9 * n_streams)
             .filter(|&e| e <= data.len())
@@ -2606,9 +2917,10 @@ fn stage_range_v2<R: Read>(
                 return Err(Error::Corrupt("frame holds chunks past the container".into()));
             }
             let included = c >= c0 && c < c1;
+            let entry_off = buf.entries.len();
             let (mut comp_sum, mut raw_sum) = (0u64, 0u64);
-            for g in 0..groups {
-                let base = rows_base + 9 * (j * groups + g);
+            for g in 0..f_groups {
+                let base = rows_base + 9 * (j * f_groups + g);
                 row.copy_from_slice(&data[base..base + 9]);
                 let e = parse_entry(&row)?;
                 if e.comp_len > e.raw_len || e.raw_len as u64 > chunk {
@@ -2631,6 +2943,9 @@ fn stage_range_v2<R: Read>(
                     comp_len: comp_sum as usize,
                     out_off,
                     out_len: raw_sum as usize,
+                    entry_off,
+                    layout: f_layout,
+                    groups: f_groups,
                 });
                 out_off += raw_sum as usize;
                 buf.n_chunks += 1;
@@ -3001,7 +3316,7 @@ mod tests {
                 // mmap'd file (or its read fallback)
                 let mut r = ZnnReader::open(&path).unwrap().with_threads(threads);
                 #[cfg(unix)]
-                if std::env::var_os("ZIPNN_NO_MMAP").is_none() {
+                if !crate::util::env::no_mmap() {
                     assert!(r.is_zero_copy(), "{tag}: expected the mapped fast path");
                 }
                 let mut got = Vec::new();
@@ -3057,6 +3372,137 @@ mod tests {
         let n = r.read(&mut buf).unwrap();
         assert!(n > 0);
         drop(r);
+    }
+
+    fn gaussian_f32(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(4 * n);
+        for _ in 0..n {
+            let w = (rng.normal() * 0.02) as f32;
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// fp8-like bytes: skewed exponent field, random sign/mantissa bits —
+    /// compressible as a flat stream, garbled by multi-byte grouping.
+    fn skewed_f8(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let e = (8.0 + rng.normal() * 1.5).clamp(1.0, 14.0) as u8;
+            let r = rng.next_u32();
+            out.push(((r >> 24) as u8 & 0x80) | (e << 3) | (r as u8 & 0x7));
+        }
+        out
+    }
+
+    /// A bf16 + fp32 + fp8 payload with its tensor spans — large enough
+    /// that each dtype region dominates several 64 KiB (4 KiB x 16)
+    /// frames on its own.
+    fn mixed_payload(seed: u64) -> (Vec<u8>, Vec<TensorMeta>) {
+        let mut raw = Vec::new();
+        let mut metas = Vec::new();
+        for (name, dtype, bytes) in [
+            ("attn.w", DType::BF16, gaussian_bf16(120_000, seed)),
+            ("embed.w", DType::F32, gaussian_f32(50_000, seed + 1)),
+            ("mlp.w", DType::F8E4M3, skewed_f8(150_000, seed + 2)),
+        ] {
+            metas.push(TensorMeta {
+                name: name.into(),
+                dtype,
+                offset: raw.len() as u64,
+                len: bytes.len() as u64,
+            });
+            raw.extend_from_slice(&bytes);
+        }
+        (raw, metas)
+    }
+
+    #[test]
+    fn profiled_writer_roundtrips_and_flags() {
+        let (raw, metas) = mixed_payload(41);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+        let sel = ProfileSelector::auto(&metas, CodecProfile::for_dtype(DType::BF16)).unwrap();
+        let mut w = ZnnWriter::new(Vec::new(), cfg.clone())
+            .unwrap()
+            .with_profiles(sel.clone())
+            .unwrap();
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        assert_ne!(container[5] & SFLAG_PROFILES, 0, "profile flag must be set");
+        assert_eq!(container[STREAM_HEADER_LEN], MARK_PFRAME, "first frame must be 0xF7");
+        assert_eq!(decompress_reader(container.as_slice(), 1).unwrap(), raw);
+        assert_eq!(decompress_reader(container.as_slice(), 4).unwrap(), raw);
+
+        // Pooled writer with scattered write sizes: byte-identical output.
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let mut wt = ZnnWriter::new(Vec::new(), cfg.clone().with_threads(4))
+            .unwrap()
+            .with_profiles(sel)
+            .unwrap();
+        let mut at = 0;
+        while at < raw.len() {
+            let take = (1 + rng.below(30_000)).min(raw.len() - at);
+            wt.write_all(&raw[at..at + take]).unwrap();
+            at += take;
+        }
+        assert_eq!(wt.finish().unwrap(), container, "threads must not change bytes");
+
+        // The profile-free writer stays on classic 0xF5 frames with the
+        // flag clear (pre-profile readers keep working on its output).
+        let mut wp = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        wp.write_all(&raw).unwrap();
+        let plain = wp.finish().unwrap();
+        assert_eq!(plain[5] & SFLAG_PROFILES, 0);
+        assert_eq!(plain[STREAM_HEADER_LEN], MARK_FRAME);
+        assert_eq!(decompress_reader(plain.as_slice(), 1).unwrap(), raw);
+    }
+
+    #[test]
+    fn with_profiles_rejects_late_and_misaligned() {
+        // elem 2 cannot divide an odd chunk size
+        let cfg = CodecConfig::for_dtype(DType::I8).with_chunk_size(1001);
+        let sel = ProfileSelector::uniform(CodecProfile::for_dtype(DType::BF16));
+        assert!(ZnnWriter::new(Vec::new(), cfg)
+            .unwrap()
+            .with_profiles(sel.clone())
+            .is_err());
+        // configuring after bytes were accepted is an error
+        let mut w = ZnnWriter::new(Vec::new(), CodecConfig::for_dtype(DType::BF16)).unwrap();
+        w.write_all(&[1, 2, 3, 4]).unwrap();
+        assert!(w.with_profiles(sel).is_err());
+    }
+
+    #[test]
+    fn profiled_container_random_access() {
+        let (raw, metas) = mixed_payload(43);
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(4096);
+        let sel = ProfileSelector::auto(&metas, CodecProfile::for_dtype(DType::BF16)).unwrap();
+        let mut w = ZnnWriter::new(Vec::new(), cfg)
+            .unwrap()
+            .with_profiles(sel)
+            .unwrap()
+            .with_index(metas.clone());
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        for threads in [1usize, 4] {
+            let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+                .unwrap()
+                .with_threads(threads);
+            for m in &metas {
+                let got = r.decode_tensor(&m.name).unwrap();
+                let want = &raw[m.offset as usize..(m.offset + m.len) as usize];
+                assert_eq!(got.as_slice(), want, "tensor {} threads={threads}", m.name);
+            }
+            // ranges that straddle differently-profiled frames
+            for m in &metas[1..] {
+                let mid = m.offset as usize;
+                let (a, b) = (mid.saturating_sub(70_000), (mid + 70_000).min(raw.len()));
+                let got = r.decode_range(a as u64, (b - a) as u64).unwrap();
+                assert_eq!(got.as_slice(), &raw[a..b], "range {a}..{b} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -41,19 +41,13 @@ static SHARED_POOL: OnceLock<WorkerPool> = OnceLock::new();
 /// codec scratch arenas, Huffman table caches — warm across files.
 pub fn shared_pool() -> &'static WorkerPool {
     SHARED_POOL.get_or_init(|| {
-        let env = |key: &str| {
-            std::env::var(key)
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .filter(|&n| n > 0)
-        };
-        let base = env("ZIPNN_DECODE_WORKERS").unwrap_or_else(|| {
+        let base = crate::util::env::decode_workers().unwrap_or_else(|| {
             std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(2)
                 .min(SHARED_POOL_MAX)
         });
-        let threads = match env("ZIPNN_ENCODE_WORKERS") {
+        let threads = match crate::util::env::encode_workers() {
             Some(e) => base.max(e),
             None => base,
         };

@@ -20,7 +20,10 @@ pub struct GroupLayout {
 
 impl GroupLayout {
     /// Layout for a dtype: one group per element byte, exponent group
-    /// flagged per Figure 3/5 (high byte for FP32/BF16/FP16).
+    /// flagged per Figure 3/5 (high byte for FP32/BF16/FP16). One-byte
+    /// dtypes (I8, fp8 E4M3/E5M2) degenerate to the flat layout — the
+    /// fp8 exponent never leaves its byte, so the win comes from a
+    /// single Huffman stream over the skewed raw bytes, not transposes.
     pub fn for_dtype(d: DType) -> GroupLayout {
         GroupLayout { elem: d.size(), exp_group: d.exponent_byte() }
     }
@@ -303,6 +306,19 @@ mod tests {
         assert_eq!(groups[0], vec![0x3F, 0xBF], "exponent (hi) bytes first");
         assert_eq!(groups[1], vec![0x80, 0x00]);
         roundtrip(layout, &data);
+    }
+
+    #[test]
+    fn fp8_layouts_are_flat() {
+        for d in [DType::F8E4M3, DType::F8E5M2, DType::I8] {
+            let layout = GroupLayout::for_dtype(d);
+            assert_eq!(layout, GroupLayout::flat(), "{d:?}");
+            let data = [0x38u8, 0xB8, 0x00, 0x7E];
+            let groups = split_groups(&data, layout).unwrap();
+            assert_eq!(groups.len(), 1);
+            assert_eq!(groups[0], data);
+            roundtrip(layout, &data);
+        }
     }
 
     #[test]

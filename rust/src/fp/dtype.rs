@@ -9,6 +9,7 @@ use crate::error::{Error, Result};
 /// | FP32  | 1    | 8        | 23       | 1/4 of bytes   |
 /// | BF16  | 1    | 8        | 7        | 1/2 of bytes   |
 /// | FP16  | 1    | 5        | 10       | (in high byte) |
+/// | F8*   | 1    | 4/5      | 3/2      | (single byte)  |
 /// | I8/U8 | —    | —        | —        | quantized      |
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
@@ -20,6 +21,12 @@ pub enum DType {
     F16,
     /// 8-bit integer (quantized models).
     I8,
+    /// fp8 E4M3 (OCP FP8 "e4m3fn": bias 7, no infinities, one NaN
+    /// pattern `S.1111.111`, max finite ±448).
+    F8E4M3,
+    /// fp8 E5M2 (IEEE-like: bias 15, infinities at `S.11111.00`,
+    /// NaN payloads above, max finite ±57344).
+    F8E5M2,
 }
 
 impl DType {
@@ -28,7 +35,7 @@ impl DType {
         match self {
             DType::F32 => 4,
             DType::BF16 | DType::F16 => 2,
-            DType::I8 => 1,
+            DType::I8 | DType::F8E4M3 | DType::F8E5M2 => 1,
         }
     }
 
@@ -39,6 +46,8 @@ impl DType {
             DType::BF16 => "bf16",
             DType::F16 => "f16",
             DType::I8 => "i8",
+            DType::F8E4M3 => "f8e4m3",
+            DType::F8E5M2 => "f8e5m2",
         }
     }
 
@@ -49,6 +58,8 @@ impl DType {
             "bf16" | "bfloat16" => Ok(DType::BF16),
             "f16" | "fp16" | "float16" => Ok(DType::F16),
             "i8" | "int8" | "u8" => Ok(DType::I8),
+            "f8e4m3" | "fp8_e4m3" | "float8_e4m3fn" | "e4m3" => Ok(DType::F8E4M3),
+            "f8e5m2" | "fp8_e5m2" | "float8_e5m2" | "e5m2" => Ok(DType::F8E5M2),
             other => Err(Error::Invalid(format!("unknown dtype '{other}'"))),
         }
     }
@@ -60,6 +71,8 @@ impl DType {
             DType::BF16 => 1,
             DType::F16 => 2,
             DType::I8 => 3,
+            DType::F8E4M3 => 4,
+            DType::F8E5M2 => 5,
         }
     }
 
@@ -70,6 +83,8 @@ impl DType {
             1 => Ok(DType::BF16),
             2 => Ok(DType::F16),
             3 => Ok(DType::I8),
+            4 => Ok(DType::F8E4M3),
+            5 => Ok(DType::F8E5M2),
             other => Err(Error::Corrupt(format!("bad dtype tag {other}"))),
         }
     }
@@ -80,12 +95,14 @@ impl DType {
     /// - FP32: byte 3 = sign + exp[7:1] (high byte).
     /// - BF16: byte 1 = sign + exp[7:1] (high byte).
     /// - FP16: byte 1 = sign + exp[4:0] + mantissa[9:8].
-    /// - I8: byte 0 (no exponent; single group).
+    /// - I8/F8*: byte 0 (one-byte elements; single group — the fp8
+    ///   exponent never leaves its own byte, so "grouping" degenerates
+    ///   to a single Huffman stream over the raw bytes).
     pub fn exponent_byte(self) -> usize {
         match self {
             DType::F32 => 3,
             DType::BF16 | DType::F16 => 1,
-            DType::I8 => 0,
+            DType::I8 | DType::F8E4M3 | DType::F8E5M2 => 0,
         }
     }
 }
@@ -168,13 +185,148 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
+/// Convert an `f32` to fp8 E4M3 ("e4m3fn") bits, round-to-nearest-even.
+///
+/// E4M3 has no infinities: overflow (and f32 infinity) saturates to the
+/// max finite ±448 = `S.1111.110`; f32 NaN maps to the single NaN
+/// pattern `S.1111.111`.
+pub fn f32_to_f8e4m3_bits(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // NaN stays NaN; infinity saturates (e4m3fn has none).
+        return if man != 0 { sign | 0x7F } else { sign | 0x7E };
+    }
+    let e = exp - 127 + 7;
+    if e >= 16 {
+        return sign | 0x7E; // overflow saturates to max finite
+    }
+    if e <= 0 {
+        // subnormal or zero: smallest subnormal is 2^-9
+        if e < -3 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (21 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u8;
+    }
+    let half = 0x0007_FFFF + ((man >> 20) & 1);
+    let man_r = man + half;
+    if man_r & 0x0080_0000 != 0 {
+        // mantissa overflow bumps exponent
+        let e = e + 1;
+        if e >= 16 {
+            return sign | 0x7E;
+        }
+        return sign | ((e as u8) << 3);
+    }
+    let m3 = (man_r >> 20) as u8;
+    if e == 15 && m3 == 7 {
+        return sign | 0x7E; // S.1111.111 is NaN, not a finite value
+    }
+    sign | ((e as u8) << 3) | m3
+}
+
+/// Expand fp8 E4M3 bits to `f32` (exact).
+pub fn f8e4m3_bits_to_f32(b: u8) -> f32 {
+    let sign = ((b & 0x80) as u32) << 24;
+    let exp = ((b >> 3) & 0x0F) as u32;
+    let man = (b & 0x07) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value = man * 2^-9
+            let p = 31 - man.leading_zeros(); // MSB position (0..=2)
+            let e32 = 118 + p; // 127 + (p - 9)
+            sign | (e32 << 23) | ((man << (23 - p)) & 0x007F_FFFF)
+        }
+    } else if exp == 0x0F && man == 0x07 {
+        sign | 0x7FC0_0000 // the one NaN pattern
+    } else {
+        sign | ((exp + 120) << 23) | (man << 20)
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert an `f32` to fp8 E5M2 bits, round-to-nearest-even, IEEE-style
+/// (infinities at `S.11111.00`, NaN payloads above).
+pub fn f32_to_f8e5m2_bits(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C | if man != 0 { 0x02 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7C; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero: smallest subnormal is 2^-16
+        if e < -2 {
+            return sign;
+        }
+        let man = man | 0x0080_0000;
+        let shift = (22 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u8;
+    }
+    let half = 0x000F_FFFF + ((man >> 21) & 1);
+    let man_r = man + half;
+    if man_r & 0x0080_0000 != 0 {
+        let e = e + 1;
+        if e >= 31 {
+            return sign | 0x7C;
+        }
+        return sign | ((e as u8) << 2);
+    }
+    sign | ((e as u8) << 2) | ((man_r >> 21) as u8)
+}
+
+/// Expand fp8 E5M2 bits to `f32` (exact).
+pub fn f8e5m2_bits_to_f32(b: u8) -> f32 {
+    let sign = ((b & 0x80) as u32) << 24;
+    let exp = ((b >> 2) & 0x1F) as u32;
+    let man = (b & 0x03) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value = man * 2^-16
+            let p = 31 - man.leading_zeros(); // MSB position (0..=1)
+            let e32 = 111 + p; // 127 + (p - 16)
+            sign | (e32 << 23) | ((man << (23 - p)) & 0x007F_FFFF)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 21)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 21)
+    };
+    f32::from_bits(bits)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn dtype_roundtrips() {
-        for d in [DType::F32, DType::BF16, DType::F16, DType::I8] {
+        for d in [
+            DType::F32,
+            DType::BF16,
+            DType::F16,
+            DType::I8,
+            DType::F8E4M3,
+            DType::F8E5M2,
+        ] {
             assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
             assert_eq!(DType::from_name(d.name()).unwrap(), d);
         }
@@ -229,5 +381,66 @@ mod tests {
         let tiny = f16_bits_to_f32(0x0001); // smallest positive subnormal
         assert!(tiny > 0.0 && tiny < 1e-7);
         assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+    }
+
+    #[test]
+    fn f8e4m3_known_values() {
+        assert_eq!(f32_to_f8e4m3_bits(0.0), 0x00);
+        assert_eq!(f32_to_f8e4m3_bits(1.0), 0x38);
+        assert_eq!(f32_to_f8e4m3_bits(-1.0), 0xB8);
+        assert_eq!(f32_to_f8e4m3_bits(448.0), 0x7E); // max finite
+        assert_eq!(f32_to_f8e4m3_bits(1000.0), 0x7E); // saturates: no inf
+        assert_eq!(f32_to_f8e4m3_bits(f32::INFINITY), 0x7E);
+        assert_eq!(f32_to_f8e4m3_bits(f32::NAN), 0x7F);
+        assert_eq!(f8e4m3_bits_to_f32(0x38), 1.0);
+        assert_eq!(f8e4m3_bits_to_f32(0x7E), 448.0);
+        assert!(f8e4m3_bits_to_f32(0x7F).is_nan());
+        assert!(f8e4m3_bits_to_f32(0xFF).is_nan());
+        // smallest subnormal: 2^-9
+        assert_eq!(f8e4m3_bits_to_f32(0x01), 0.001953125);
+    }
+
+    #[test]
+    fn f8e5m2_known_values() {
+        assert_eq!(f32_to_f8e5m2_bits(0.0), 0x00);
+        assert_eq!(f32_to_f8e5m2_bits(1.0), 0x3C);
+        assert_eq!(f32_to_f8e5m2_bits(-1.0), 0xBC);
+        assert_eq!(f32_to_f8e5m2_bits(57344.0), 0x7B); // max finite
+        assert_eq!(f32_to_f8e5m2_bits(1.0e6), 0x7C); // overflow -> inf
+        assert_eq!(f32_to_f8e5m2_bits(f32::INFINITY), 0x7C);
+        assert_eq!(f8e5m2_bits_to_f32(0x3C), 1.0);
+        assert_eq!(f8e5m2_bits_to_f32(0x7C), f32::INFINITY);
+        assert!(f8e5m2_bits_to_f32(0x7E).is_nan());
+        assert!(f32_to_f8e5m2_bits(f32::NAN) & 0x03 != 0);
+        // smallest subnormal: 2^-16
+        assert_eq!(f8e5m2_bits_to_f32(0x01), 1.0 / 65536.0);
+    }
+
+    #[test]
+    fn f8_roundtrip_all_bit_patterns() {
+        // Every fp8 bit pattern -> f32 -> fp8 must be identity (NaN
+        // payloads excepted; both formats collapse them to one pattern
+        // per sign at most).
+        for b in 0u16..=0xFF {
+            let b = b as u8;
+            let x = f8e4m3_bits_to_f32(b);
+            if !x.is_nan() {
+                assert_eq!(f32_to_f8e4m3_bits(x), b, "e4m3 b={b:#04x} x={x}");
+            }
+            let y = f8e5m2_bits_to_f32(b);
+            if !y.is_nan() {
+                assert_eq!(f32_to_f8e5m2_bits(y), b, "e5m2 b={b:#04x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn f8_rounds_to_nearest_even() {
+        // 1.0 + 2^-4 is exactly halfway between e4m3 values 0x38 and 0x39.
+        assert_eq!(f32_to_f8e4m3_bits(1.0625), 0x38, "ties to even");
+        // 1.0 + 2^-3 is exactly halfway between e5m2 values 0x3C and 0x3D.
+        assert_eq!(f32_to_f8e5m2_bits(1.125), 0x3C, "ties to even");
+        // just above the halfway point rounds up
+        assert_eq!(f32_to_f8e4m3_bits(1.07), 0x39);
     }
 }

@@ -105,7 +105,7 @@ pub fn scalar() -> &'static Kernels {
 /// `ZIPNN_NO_SIMD` is set. Decided once, cached for the process lifetime
 /// (the env knob is read at first use, like `ZIPNN_NO_MMAP`).
 pub fn dispatched() -> &'static Kernels {
-    *DISPATCH.get_or_init(|| select(std::env::var_os("ZIPNN_NO_SIMD").is_some()))
+    *DISPATCH.get_or_init(|| select(crate::util::env::no_simd()))
 }
 
 /// Dispatch decision, split out from the cache so tests can pin the

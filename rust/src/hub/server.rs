@@ -151,7 +151,7 @@ fn write_and_map(path: &Path, frames: &[Vec<u8>], total: u64) -> std::io::Result
     // No point writing a spool file that could never be served from a
     // mapping: when mmap can't engage, the caller keeps the frames it
     // already holds and no disk I/O happens at all.
-    if cfg!(not(unix)) || std::env::var_os("ZIPNN_NO_MMAP").is_some() {
+    if cfg!(not(unix)) || crate::util::env::no_mmap() {
         return Err(std::io::Error::new(
             std::io::ErrorKind::Unsupported,
             "mmap unavailable; keep the blob heap-resident",
@@ -240,16 +240,12 @@ impl HubServerBuilder {
     }
 }
 
-fn env_usize(key: &str) -> Option<usize> {
-    std::env::var(key).ok().and_then(|v| v.parse().ok())
-}
-
 fn default_spool_dir() -> Option<PathBuf> {
-    std::env::var_os("ZIPNN_HUB_SPOOL_DIR").map(PathBuf::from)
+    crate::util::env::hub_spool_dir()
 }
 
 fn default_workers() -> usize {
-    env_usize("ZIPNN_HUB_WORKERS").unwrap_or_else(|| {
+    crate::util::env::hub_workers().unwrap_or_else(|| {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(2)
@@ -258,7 +254,7 @@ fn default_workers() -> usize {
 }
 
 fn default_max_conns() -> usize {
-    env_usize("ZIPNN_HUB_MAX_CONNS").unwrap_or(4096).max(1)
+    crate::util::env::hub_max_conns().unwrap_or(4096).max(1)
 }
 
 /// In-process model hub listening on loopback.

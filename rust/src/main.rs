@@ -20,13 +20,13 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 use zipnn::codec::{
-    compress_with_report, decompress_path, inspect, CodecConfig, MethodPolicy, ZnnReader,
-    ZnnWriter,
+    compress_with_report, decompress_path, inspect, CodecConfig, CodecProfile, MethodPolicy,
+    ProfileSelector, ZnnReader, ZnnWriter,
 };
 use zipnn::delta::DeltaCodec;
 use zipnn::fp::stats::{exponent_histogram, summarize_exponents};
 use zipnn::fp::{DType, GroupLayout};
-use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::model::synthetic::{generate, mixed_precision_model, Category, SyntheticSpec};
 use zipnn::model::{read_model, write_model};
 use zipnn::util::{human_bytes, Timer};
 
@@ -69,8 +69,8 @@ impl Args {
 fn usage() -> ExitCode {
     eprintln!(
         "usage: zipnn <gen|compress|decompress|inspect|exphist|delta|apply|train|serve> [args]
-  gen        --category <bf16|fp32|fp16|clean-fp32|clean-t5|fp16-from-bf16|gptq|gguf> --mb N --seed S --out M.znnm
-  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group] [--index (.znnm only)]
+  gen        --category <bf16|fp32|fp16|clean-fp32|clean-t5|fp16-from-bf16|gptq|gguf|mixed> --mb N --seed S --out M.znnm
+  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|f8e4m3|f8e5m2|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group] [--index (.znnm only)] [--per-tensor (with --index)]
   decompress <in.znn> --out F [--threads N]
   ls         <in.znn>
   cat        <in.znn> (--tensor NAME | --range OFF:LEN) [--out F] [--threads N]
@@ -130,16 +130,18 @@ fn read_input(path: &str, args: &Args) -> anyhow::Result<(Vec<u8>, DType)> {
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     match cmd {
         "gen" => {
-            let cat = category_of(&args.flag("category", "bf16"))?;
+            let cat_name = args.flag("category", "bf16");
             let mb = args.usize_flag("mb", 64);
             let seed = args.usize_flag("seed", 42) as u64;
             let out = args.flag("out", "model.znnm");
-            let model = generate(&SyntheticSpec::new(
-                out.trim_end_matches(".znnm"),
-                cat,
-                mb << 20,
-                seed,
-            ));
+            let name = out.trim_end_matches(".znnm");
+            // "mixed" is not a Category: it emits a different dtype per
+            // tensor (the --per-tensor / with_profiles test bed).
+            let model = if cat_name == "mixed" {
+                mixed_precision_model(name, mb << 20, seed)
+            } else {
+                generate(&SyntheticSpec::new(name, category_of(&cat_name)?, mb << 20, seed))
+            };
             write_model(&out, &model)?;
             println!(
                 "wrote {} ({} tensors, {})",
@@ -167,7 +169,15 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let out = args.flag("out", &format!("{input}.znn"));
             let t = Timer::start();
             let file = std::io::BufWriter::new(std::fs::File::create(&out)?);
-            let mut zw = ZnnWriter::new(file, cfg)?.with_index(spans);
+            let mut zw = ZnnWriter::new(file, cfg)?;
+            // --per-tensor: each frame is compressed under the profile of
+            // its dominant tensor (dtype-driven, refined by a byte-
+            // histogram sample of each tensor's actual data).
+            if args.flags.contains_key("per-tensor") {
+                let default = CodecProfile::for_dtype(model.dominant_dtype());
+                zw = zw.with_profiles(ProfileSelector::auto_with_data(&spans, default, &raw)?)?;
+            }
+            let mut zw = zw.with_index(spans);
             std::io::Write::write_all(&mut zw, &raw)?;
             zw.finish()?;
             let comp_len = std::fs::metadata(&out)?.len();
@@ -183,6 +193,9 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
         }
         "compress" => {
+            if args.flags.contains_key("per-tensor") {
+                anyhow::bail!("--per-tensor requires --index (tensor spans come from the .znnm header)");
+            }
             let input = args
                 .positional
                 .first()

@@ -255,6 +255,37 @@ fn gen_f16_from_bf16(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
     out
 }
 
+fn gen_f8e4m3(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
+    // e4m3fn: bias 7, top exponent reserved here to dodge the fn-variant
+    // NaN encodings (S.1111.111). f32 biased exponent maps via -120.
+    let cum = exponent_cdf(sigma);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let e32 = sample_exp(&cum, rng) as i32;
+        let e8 = (e32 - 120).clamp(1, 14) as u8;
+        let r = rng.next_u32();
+        let sign = ((r >> 24) & 0x80) as u8;
+        let man = (r & 0x7) as u8;
+        out.push(sign | (e8 << 3) | man);
+    }
+    out
+}
+
+fn gen_f8e5m2(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
+    // e5m2: bias 15 (the f16 exponent layout), 31 = inf/NaN, excluded.
+    let cum = exponent_cdf(sigma);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let e32 = sample_exp(&cum, rng) as i32;
+        let e8 = (e32 - 112).clamp(1, 30) as u8;
+        let r = rng.next_u32();
+        let sign = ((r >> 24) & 0x80) as u8;
+        let man = (r & 0x3) as u8;
+        out.push(sign | (e8 << 2) | man);
+    }
+    out
+}
+
 fn gen_i8(rng: &mut Xoshiro256, n: usize, sigma: f64) -> Vec<u8> {
     // Discretized Gaussian (GPTQ/AWQ-like): entropy ≈ 7.2 bits -> ~90%.
     let mut out = Vec::with_capacity(n);
@@ -270,6 +301,62 @@ fn gen_i8_uniform(rng: &mut Xoshiro256, n: usize) -> Vec<u8> {
     let mut out = vec![0u8; n];
     rng.fill_bytes(&mut out);
     out
+}
+
+/// A mixed-precision model analog: fp32 embedding and norms, bf16
+/// attention trunk, fp8 MLP weights (`e4m3` up / `e5m2` down) — the
+/// per-tensor profile test bed. No single [`crate::codec::CodecProfile`]
+/// fits every tensor here, which is exactly what
+/// [`crate::codec::ProfileSelector`] + `ZnnWriter::with_profiles` fix.
+pub fn mixed_precision_model(name: &str, target_bytes: usize, seed: u64) -> Model {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    // ~2 bytes/element on average across the bf16/fp32/fp8 mix.
+    let target_elems = (target_bytes / 2).max(4096);
+    let mut d = 64usize;
+    while 32 * d * d + 1024 * d < target_elems && d < 8192 {
+        d += 64;
+    }
+    let vocab = 1024.max(target_elems / 16 / d);
+    let mut layers: Vec<(String, Vec<usize>, DType)> = Vec::new();
+    layers.push(("embed.weight".into(), vec![vocab, d], DType::F32));
+    let mut elems = vocab * d;
+    let mut b = 0;
+    while elems < target_elems {
+        for (n, shape, dt) in [
+            (format!("blocks.{b}.attn.wq"), vec![d, d], DType::BF16),
+            (format!("blocks.{b}.attn.wk"), vec![d, d], DType::BF16),
+            (format!("blocks.{b}.attn.wv"), vec![d, d], DType::BF16),
+            (format!("blocks.{b}.attn.wo"), vec![d, d], DType::BF16),
+            (format!("blocks.{b}.mlp.up"), vec![d, 4 * d], DType::F8E4M3),
+            (format!("blocks.{b}.mlp.down"), vec![4 * d, d], DType::F8E5M2),
+            (format!("blocks.{b}.norm1"), vec![d], DType::F32),
+            (format!("blocks.{b}.norm2"), vec![d], DType::F32),
+        ] {
+            elems += shape.iter().product::<usize>();
+            layers.push((n, shape, dt));
+        }
+        b += 1;
+    }
+    let fan = d as f64;
+    let mut model = Model::new(name);
+    for (name, shape, dt) in layers {
+        let n: usize = shape.iter().product();
+        let sigma = (1.0 / fan.sqrt()) * (0.5 + rng.uniform() * 1.5);
+        let data = match dt {
+            DType::BF16 => gen_bf16(&mut rng, n, sigma),
+            DType::F32 => gen_f32(&mut rng, n, sigma, 23),
+            // fp8 checkpoints carry per-tensor scales that recenter the
+            // weights into the format's narrow dynamic range — model that
+            // with a fixed σ near the middle of it instead of 1/√fan.
+            DType::F8E4M3 => gen_f8e4m3(&mut rng, n, 0.4),
+            DType::F8E5M2 => gen_f8e5m2(&mut rng, n, 0.4),
+            _ => unreachable!("mixed model holds float dtypes only"),
+        };
+        model
+            .tensors
+            .push(Tensor::new(&name, &shape, dt, data).expect("sized correctly"));
+    }
+    model
 }
 
 /// The paper's named model analogs, used by the Table 1/2 and figure
@@ -406,6 +493,35 @@ mod tests {
             let sz = m.size_bytes();
             assert!(sz >= target / 2 && sz <= target * 3, "target {target} got {sz}");
         }
+    }
+
+    #[test]
+    fn mixed_model_spans_all_dtypes() {
+        let m = mixed_precision_model("mix", 4 << 20, 9);
+        let have: std::collections::HashSet<DType> =
+            m.tensors.iter().map(|t| t.dtype).collect();
+        for dt in [DType::F32, DType::BF16, DType::F8E4M3, DType::F8E5M2] {
+            assert!(have.contains(&dt), "missing {dt:?}");
+        }
+        let sz = m.size_bytes();
+        assert!(sz >= 2 << 20 && sz <= 12 << 20, "size {sz}");
+        assert_eq!(
+            m.to_bytes(),
+            mixed_precision_model("mix", 4 << 20, 9).to_bytes()
+        );
+    }
+
+    #[test]
+    fn fp8_generators_stay_finite_and_skewed() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let e4 = gen_f8e4m3(&mut rng, 50_000, 0.4);
+        // no NaN encodings (exponent 15 is excluded entirely)
+        assert!(e4.iter().all(|&b| (b >> 3) & 0xF != 15));
+        let e5 = gen_f8e5m2(&mut rng, 50_000, 0.4);
+        assert!(e5.iter().all(|&b| (b >> 2) & 0x1F != 31));
+        // byte entropy well below uniform: fp8 streams are compressible
+        let h = crate::fp::stats::shannon_entropy(&crate::stats::byte_histogram(&e4));
+        assert!(h < 7.5, "e4m3 entropy {h}");
     }
 
     #[test]

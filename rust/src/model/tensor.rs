@@ -74,6 +74,16 @@ impl Tensor {
                     data.push(v.clamp(-128.0, 127.0) as i8 as u8);
                 }
             }
+            DType::F8E4M3 => {
+                for v in vals {
+                    data.push(crate::fp::dtype::f32_to_f8e4m3_bits(*v));
+                }
+            }
+            DType::F8E5M2 => {
+                for v in vals {
+                    data.push(crate::fp::dtype::f32_to_f8e5m2_bits(*v));
+                }
+            }
         }
         Tensor::new(name, shape, dtype, data)
     }
@@ -105,6 +115,16 @@ impl Tensor {
                 })
                 .collect(),
             DType::I8 => self.data.iter().map(|&b| b as i8 as f32).collect(),
+            DType::F8E4M3 => self
+                .data
+                .iter()
+                .map(|&b| crate::fp::dtype::f8e4m3_bits_to_f32(b))
+                .collect(),
+            DType::F8E5M2 => self
+                .data
+                .iter()
+                .map(|&b| crate::fp::dtype::f8e5m2_bits_to_f32(b))
+                .collect(),
         }
     }
 }
@@ -190,6 +210,17 @@ mod tests {
         let vals = [0.1f32, -2.7, 1e-20, 3e20];
         let t = Tensor::from_f32("w", &[2, 2], DType::F32, &vals).unwrap();
         assert_eq!(t.to_f32(), vals);
+    }
+
+    #[test]
+    fn from_f32_roundtrip_fp8() {
+        // Values exactly representable in both fp8 formats.
+        let vals = [0.5f32, -1.0, 0.0, 2.0, -0.25];
+        for dtype in [DType::F8E4M3, DType::F8E5M2] {
+            let t = Tensor::from_f32("w", &[5], dtype, &vals).unwrap();
+            assert_eq!(t.to_f32(), vals, "{dtype:?}");
+            assert_eq!(t.data.len(), 5, "{dtype:?} is one byte per element");
+        }
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! The `ZIPNN_*` environment knobs, in one place.
+//!
+//! Every runtime tunable the library reads from the environment lives
+//! here as a typed accessor, so call sites never re-parse strings and
+//! the full surface stays documented in a single table:
+//!
+//! | Variable                | Type  | Effect                                             |
+//! |-------------------------|-------|----------------------------------------------------|
+//! | `ZIPNN_NO_SIMD`         | set?  | Force the scalar byte-group transpose kernels      |
+//! | `ZIPNN_NO_MMAP`         | set?  | Disable memory-mapped I/O (streaming fallback)     |
+//! | `ZIPNN_DECODE_WORKERS`  | usize | Shared-pool size (decode side sets the base)       |
+//! | `ZIPNN_ENCODE_WORKERS`  | usize | Encode worker count; can only raise the pool size  |
+//! | `ZIPNN_HUB_WORKERS`     | usize | Hub reactor worker threads (default ncpu, max 16)  |
+//! | `ZIPNN_HUB_MAX_CONNS`   | usize | Hub concurrent-connection cap (default 4096)       |
+//! | `ZIPNN_HUB_SPOOL_DIR`   | path  | Spool hub PUT bodies to files under this directory |
+//!
+//! Boolean knobs are "set at all" flags (any value, even empty, turns
+//! them on). Numeric knobs ignore unset, unparsable, and zero values —
+//! the documented default applies instead. Accessors re-read the
+//! environment on every call so tests can toggle knobs at runtime;
+//! call sites that must latch a value (e.g. the SIMD dispatch table)
+//! cache the result themselves.
+//!
+//! Bench-harness knobs (`ZIPNN_BENCH_MB`, `ZIPNN_BENCH_REPS`, figure
+//! toggles) are intentionally *not* here: they tune test payload sizes,
+//! not library behavior, and stay local to `bench_support`.
+
+use std::path::PathBuf;
+
+/// Parse a positive integer knob; unset / unparsable / zero mean
+/// "use the default".
+fn usize_var(key: &str) -> Option<usize> {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// `ZIPNN_NO_SIMD`: force the scalar byte-group transpose kernels.
+pub fn no_simd() -> bool {
+    std::env::var_os("ZIPNN_NO_SIMD").is_some()
+}
+
+/// `ZIPNN_NO_MMAP`: disable memory-mapped I/O everywhere (readers fall
+/// back to buffered streaming; the hub keeps blobs heap-resident).
+pub fn no_mmap() -> bool {
+    std::env::var_os("ZIPNN_NO_MMAP").is_some()
+}
+
+/// `ZIPNN_DECODE_WORKERS`: shared worker-pool size.
+pub fn decode_workers() -> Option<usize> {
+    usize_var("ZIPNN_DECODE_WORKERS")
+}
+
+/// `ZIPNN_ENCODE_WORKERS`: encode worker count (raise-only on the
+/// shared pool, override for writer thread counts).
+pub fn encode_workers() -> Option<usize> {
+    usize_var("ZIPNN_ENCODE_WORKERS")
+}
+
+/// `ZIPNN_HUB_WORKERS`: hub reactor worker threads.
+pub fn hub_workers() -> Option<usize> {
+    usize_var("ZIPNN_HUB_WORKERS")
+}
+
+/// `ZIPNN_HUB_MAX_CONNS`: hub concurrent-connection cap.
+pub fn hub_max_conns() -> Option<usize> {
+    usize_var("ZIPNN_HUB_MAX_CONNS")
+}
+
+/// `ZIPNN_HUB_SPOOL_DIR`: directory for hub PUT spool files.
+pub fn hub_spool_dir() -> Option<PathBuf> {
+    std::env::var_os("ZIPNN_HUB_SPOOL_DIR").map(PathBuf::from)
+}

@@ -1,7 +1,9 @@
 //! Small shared utilities: PRNG, bit I/O, JSON mini-parser, timers,
-//! human-readable sizes, read-only memory mapping.
+//! human-readable sizes, read-only memory mapping, and the `ZIPNN_*`
+//! environment knobs ([`env`]).
 
 pub mod bitio;
+pub mod env;
 pub mod human;
 pub mod json;
 pub mod mmap;

@@ -11,9 +11,12 @@
 use std::io::{Read, Write};
 use std::path::PathBuf;
 use zipnn::codec::{
-    index, CodecConfig, Compressor, MappedBytes, TensorMeta, ZnnReader, ZnnWriter,
+    index, CodecConfig, CodecProfile, Compressor, MappedBytes, ProfileSelector, TensorMeta,
+    ZnnReader, ZnnWriter,
 };
 use zipnn::fp::DType;
+use zipnn::model::synthetic::mixed_precision_model;
+use zipnn::model::tensor_spans;
 use zipnn::util::Xoshiro256;
 
 fn tmp_path(case: usize) -> PathBuf {
@@ -472,6 +475,203 @@ fn writer_index_matches_container_layout() {
         .with_index(bad);
     w.write_all(b"abcd").unwrap();
     assert!(w.finish().is_err());
+}
+
+/// Random mixed-dtype tensor layout including the fp8 dtypes: each
+/// tensor's bytes are shaped like its dtype (skewed exponent byte), so
+/// per-tensor profiles genuinely differ across the payload.
+fn random_mixed_layout(rng: &mut Xoshiro256, chunk_size: usize) -> (Vec<u8>, Vec<TensorMeta>) {
+    let n_tensors = 2 + rng.below(5);
+    let mut raw = Vec::new();
+    let mut metas = Vec::new();
+    for i in 0..n_tensors {
+        let dtype = [DType::BF16, DType::F32, DType::F8E4M3, DType::F8E5M2, DType::F16]
+            [rng.below(5)];
+        let len = match rng.below(4) {
+            0 => 0,
+            1 => 1 + rng.below(64),
+            2 => chunk_size - 1 + rng.below(3),
+            _ => rng.below(4 * chunk_size + 1),
+        };
+        let meta = TensorMeta {
+            name: format!("t{i}.weight"),
+            dtype,
+            offset: raw.len() as u64,
+            len: len as u64,
+        };
+        let base = raw.len();
+        raw.resize(base + len, 0);
+        match dtype.size() {
+            4 => {
+                for quad in raw[base..].chunks_exact_mut(4) {
+                    let r = rng.next_u32().to_le_bytes();
+                    quad[..3].copy_from_slice(&r[..3]);
+                    quad[3] = 120 + (rng.uniform().powi(2) * 12.0) as u8;
+                }
+            }
+            2 => {
+                for pair in raw[base..].chunks_exact_mut(2) {
+                    pair[0] = rng.next_u32() as u8;
+                    pair[1] = 120 + (rng.uniform().powi(2) * 12.0) as u8;
+                }
+            }
+            _ => {
+                for b in &mut raw[base..] {
+                    let e = (8.0 + rng.normal() * 1.5).clamp(1.0, 14.0) as u8;
+                    *b = ((rng.next_u32() >> 24) as u8 & 0x80) | (e << 3);
+                }
+            }
+        }
+        metas.push(meta);
+    }
+    (raw, metas)
+}
+
+/// Profiled containers (per-frame codec profiles over a mixed
+/// bf16+fp32+fp8 payload) round-trip **byte-identically** across thread
+/// counts and every source kind, serve `decode_tensor`/`decode_range`,
+/// and the pooled profiled writer emits the same bytes as the serial one.
+#[test]
+fn profiled_mixed_roundtrip_randomized() {
+    let mut rng = Xoshiro256::seed_from_u64(0xF8_AB1E);
+    for case in 0..10 {
+        let chunk_size = [1024usize, 4096, 64 * 1024][rng.below(3)];
+        let (raw, metas) = random_mixed_layout(&mut rng, chunk_size);
+        let total = raw.len() as u64;
+        let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(chunk_size);
+        let sel = ProfileSelector::auto(&metas, CodecProfile::for_dtype(DType::BF16)).unwrap();
+        let ctx = format!("case {case}: total={total} chunk={chunk_size}");
+
+        // Serial reference, then the pooled writer under random splits.
+        let mut w = ZnnWriter::new(Vec::new(), cfg.clone())
+            .unwrap()
+            .with_profiles(sel.clone())
+            .unwrap()
+            .with_index(metas.clone());
+        w.write_all(&raw).unwrap();
+        let container = w.finish().unwrap();
+        for threads in [2usize, 4] {
+            let mut w = ZnnWriter::new(Vec::new(), cfg.clone().with_threads(threads))
+                .unwrap()
+                .with_profiles(sel.clone())
+                .unwrap()
+                .with_index(metas.clone());
+            let mut at = 0usize;
+            while at < raw.len() {
+                let take = (1 + rng.below(70_000)).min(raw.len() - at);
+                w.write_all(&raw[at..at + take]).unwrap();
+                at += take;
+            }
+            assert_eq!(w.finish().unwrap(), container, "{ctx} writer threads={threads}");
+        }
+
+        let path = tmp_path(1000 + case);
+        std::fs::write(&path, &container).unwrap();
+        for threads in [1usize, 4] {
+            // Sequential stream source.
+            let mut streamed = Vec::new();
+            ZnnReader::new(container.as_slice())
+                .unwrap()
+                .with_threads(threads)
+                .read_to_end(&mut streamed)
+                .unwrap();
+            assert_eq!(streamed, raw, "{ctx} threads={threads} stream");
+            // Mapped file source.
+            let mut mapped = Vec::new();
+            ZnnReader::open(&path)
+                .unwrap()
+                .with_threads(threads)
+                .read_to_end(&mut mapped)
+                .unwrap();
+            assert_eq!(mapped, raw, "{ctx} threads={threads} mapped");
+            // Owned bytes + random access over the recorded profiles.
+            let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+                .unwrap()
+                .with_threads(threads);
+            for m in &metas {
+                let want = &raw[m.offset as usize..(m.offset + m.len) as usize];
+                assert_eq!(
+                    r.decode_tensor(&m.name).unwrap(),
+                    want,
+                    "{ctx} tensor {} threads={threads}",
+                    m.name
+                );
+            }
+            for (off, len) in probe_ranges(&mut rng, total, chunk_size as u64) {
+                assert_eq!(
+                    r.decode_range(off, len).unwrap(),
+                    &raw[off as usize..(off + len) as usize],
+                    "{ctx} range [{off}, +{len}) threads={threads}"
+                );
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// The tentpole's acceptance bar: on a synthetic mixed-precision model
+/// (fp32 embedding/norms + bf16 attention + fp8 MLPs), per-tensor
+/// profiles must compress **strictly better** than the best uniform
+/// single-profile container — and still decode byte-identically, both in
+/// full and through the tensor index.
+#[test]
+fn per_tensor_profiles_beat_best_uniform() {
+    let model = mixed_precision_model("mix", 6 << 20, 77);
+    let spans = tensor_spans(&model);
+    let raw = model.to_bytes();
+    // Smaller chunks than default: more frames, so per-frame profile
+    // choices matter on a test-sized model.
+    let chunk_size = 32 * 1024;
+
+    let mut best_uniform = usize::MAX;
+    for dt in [DType::BF16, DType::F32, DType::F8E4M3] {
+        let cfg = CodecConfig::for_dtype(dt).with_chunk_size(chunk_size);
+        let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+        w.write_all(&raw).unwrap();
+        let c = w.finish().unwrap();
+        let mut back = Vec::new();
+        ZnnReader::new(c.as_slice()).unwrap().read_to_end(&mut back).unwrap();
+        assert_eq!(back, raw, "uniform {dt:?} roundtrip");
+        best_uniform = best_uniform.min(c.len());
+    }
+
+    let default = CodecProfile::for_dtype(model.dominant_dtype());
+    let sel = ProfileSelector::auto_with_data(&spans, default, &raw).unwrap();
+    let cfg = CodecConfig::for_dtype(model.dominant_dtype()).with_chunk_size(chunk_size);
+    let mut w = ZnnWriter::new(Vec::new(), cfg)
+        .unwrap()
+        .with_profiles(sel)
+        .unwrap()
+        .with_index(spans.clone());
+    w.write_all(&raw).unwrap();
+    let profiled = w.finish().unwrap();
+
+    for threads in [1usize, 4] {
+        let mut back = Vec::new();
+        ZnnReader::new(profiled.as_slice())
+            .unwrap()
+            .with_threads(threads)
+            .read_to_end(&mut back)
+            .unwrap();
+        assert_eq!(back, raw, "profiled roundtrip threads={threads}");
+    }
+    let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(profiled.clone())).unwrap();
+    for m in spans.iter().filter(|m| m.len > 0) {
+        assert_eq!(
+            r.decode_tensor(&m.name).unwrap(),
+            &raw[m.offset as usize..(m.offset + m.len) as usize],
+            "tensor {}",
+            m.name
+        );
+    }
+
+    assert!(
+        profiled.len() < best_uniform,
+        "per-tensor profiles must strictly beat the best uniform profile \
+         ({} vs {best_uniform} bytes over {} raw)",
+        profiled.len(),
+        raw.len()
+    );
 }
 
 /// Truncating a mapped container anywhere must error (or at minimum never
