@@ -30,8 +30,8 @@ pub use container::{ContainerHeader, ContainerInfo, StreamEntry};
 pub use decompress::{decompress, decompress_with, inspect};
 pub use index::{ContainerKind, TensorIndex, TensorMeta};
 pub use stream::{
-    decompress_path, decompress_reader, ByteSource, MappedBytes, ScratchArena, ZnnReader,
-    ZnnReaderBuilder, ZnnWriter, STREAM_MAGIC, SUPER_CHUNK,
+    decompress_path, decompress_reader, ByteSource, MappedBytes, SalvageReport, ScratchArena,
+    ZnnReader, ZnnReaderBuilder, ZnnWriter, STREAM_MAGIC, SUPER_CHUNK,
 };
 
 use crate::fp::{DType, GroupLayout};

@@ -27,6 +27,11 @@ pub enum Error {
     #[error("xla error: {0}")]
     Xla(String),
 
+    /// The hub is at capacity and shed this connection; the operation is
+    /// safe to retry after a backoff.
+    #[error("hub busy")]
+    Busy,
+
     /// I/O failure.
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),

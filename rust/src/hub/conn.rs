@@ -180,12 +180,15 @@ pub(crate) struct Conn {
     pub(crate) gen: u64,
     /// Readiness interest currently registered with the poller.
     pub(crate) interest: crate::hub::sys::Interest,
+    /// In-flight body budget: PUT frames beyond this many payload bytes
+    /// are counted but not retained (the executor rejects the request).
+    max_body: u64,
     last_activity: Instant,
 }
 
 impl Conn {
     /// Wrap an accepted (already non-blocking) stream.
-    pub(crate) fn new(stream: TcpStream, gen: u64) -> Conn {
+    pub(crate) fn new(stream: TcpStream, gen: u64, max_body: u64) -> Conn {
         Conn {
             stream,
             parser: RequestParser::new(),
@@ -195,6 +198,7 @@ impl Conn {
             close_after_write: false,
             gen,
             interest: crate::hub::sys::Interest::READ,
+            max_body,
             last_activity: Instant::now(),
         }
     }
@@ -226,14 +230,15 @@ impl Conn {
                 ReqEvent::Frame(frame) => {
                     if let Some(req) = self.cur.as_mut() {
                         req.total += frame.len() as u64;
-                        // PUT bodies stream unbounded (that is the op's
-                        // job). Range/GetTensor bodies are tiny by
+                        // PUT bodies stream up to the server's in-flight
+                        // body budget. Range/GetTensor bodies are tiny by
                         // contract (16 bytes / a tensor name), so retain
-                        // at most NAME_MAX bytes — `total` keeps the true
-                        // count and the executor rejects oversized
-                        // requests without the server ever buffering them.
+                        // at most NAME_MAX bytes. Either way `total`
+                        // keeps the true count and the executor rejects
+                        // oversized requests with a clean error — the
+                        // server never buffers past its budget.
                         let keep = match req.op {
-                            Op::Put => true,
+                            Op::Put => req.total <= self.max_body,
                             Op::Range | Op::GetTensor => req.total <= NAME_MAX as u64,
                             _ => false,
                         };

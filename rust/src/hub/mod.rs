@@ -15,13 +15,15 @@
 
 pub mod client;
 pub(crate) mod conn;
+pub mod faultsim;
 pub mod netsim;
 pub mod protocol;
 pub(crate) mod reactor;
 pub mod server;
 pub mod sys;
 
-pub use client::{HubClient, TransferReport};
+pub use client::{HubClient, RetryPolicy, TransferReport};
+pub use faultsim::{FaultKind, FaultProfile, FaultProxy, FaultSpec, ScriptedFault};
 pub use netsim::{NetProfile, NetSim};
 pub use protocol::{encode_range, parse_range, Op, ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
 pub use server::{HubServer, HubServerBuilder};

@@ -505,18 +505,35 @@ pub fn read_request(r: &mut impl Read) -> Result<(Op, String, Vec<u8>)> {
     Ok((op, name, payload))
 }
 
+/// Response status byte: request succeeded, body is the payload.
+pub const STATUS_OK: u8 = 0;
+/// Response status byte: request failed, body is the error message.
+pub const STATUS_ERR: u8 = 1;
+/// Response status byte: the server is at capacity and shed this
+/// connection (written at accept time, before any request). The body is
+/// empty and the connection is closed; retry after a backoff.
+pub const STATUS_BUSY: u8 = 2;
+
+/// The complete load-shed message a full server writes at accept time:
+/// busy status + an empty chunked body (its terminator alone).
+pub const BUSY_RESPONSE: [u8; 5] = [STATUS_BUSY, 0, 0, 0, 0];
+
 /// Write a response's status byte; the caller streams the body through a
 /// [`ChunkedWriter`].
 pub fn write_response_header(w: &mut impl Write, ok: bool) -> Result<()> {
-    w.write_all(&[if ok { 0 } else { 1 }])?;
+    w.write_all(&[if ok { STATUS_OK } else { STATUS_ERR }])?;
     Ok(())
 }
 
-/// Read a response's status byte.
+/// Read a response's status byte. A [`STATUS_BUSY`] shed surfaces as
+/// [`Error::Busy`] so clients can tell "retry later" from a real error.
 pub fn read_response_header(r: &mut impl Read) -> Result<bool> {
     let mut status = [0u8; 1];
     r.read_exact(&mut status)?;
-    Ok(status[0] == 0)
+    match status[0] {
+        STATUS_BUSY => Err(Error::Busy),
+        s => Ok(s == STATUS_OK),
+    }
 }
 
 /// Write a complete response with an in-memory payload.

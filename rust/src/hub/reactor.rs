@@ -20,8 +20,12 @@
 //!
 //! In-flight requests keep the blocking server's stall bound: a
 //! connection mid-request (either direction) that makes no progress for
-//! [`IO_TIMEOUT`] is dropped by the periodic sweep; idle between-requests
-//! connections are never timed out.
+//! [`ReactorConfig::io_timeout`] is dropped by the periodic sweep — this
+//! includes slowloris-style stalled *writers* (a peer that stops reading
+//! its response); idle between-requests connections are never timed out.
+//! Over-cap accepts are shed with a clean
+//! [`crate::hub::protocol::BUSY_RESPONSE`] instead of a silent close, so
+//! clients can tell "retry later" from a dead server.
 
 use crate::coordinator::pool::WorkerPool;
 use crate::hub::conn::{Conn, ReadOutcome, Request, Response, WriteOutcome};
@@ -43,9 +47,6 @@ const TOKEN_WAKER: u64 = 1;
 const TOKEN_BASE: u64 = 2;
 /// Poll tick: upper bound on stop-flag / stall-sweep latency.
 const TICK_MS: i32 = 100;
-/// A connection mid-request with no progress for this long is dropped
-/// (same bound the thread-per-connection server enforced per read).
-const IO_TIMEOUT: Duration = Duration::from_secs(5);
 /// After the stop flag: how long in-flight executions/responses may take
 /// to flush before connections are closed anyway.
 const DRAIN_GRACE: Duration = Duration::from_millis(500);
@@ -54,10 +55,16 @@ const DRAIN_GRACE: Duration = Duration::from_millis(500);
 pub(crate) struct ReactorConfig {
     /// Worker threads executing ready requests.
     pub(crate) workers: usize,
-    /// Connection cap; excess accepts are dropped immediately.
+    /// Connection cap; excess accepts are shed with a busy response.
     pub(crate) max_conns: usize,
     /// Spool directory for PUT bodies (served back from a memory mapping).
     pub(crate) spool_dir: Option<Arc<std::path::Path>>,
+    /// A connection mid-request (either direction, stalled writers
+    /// included) with no progress for this long is dropped by the sweep.
+    pub(crate) io_timeout: Duration,
+    /// In-flight request-body budget: PUT bodies beyond this are shed
+    /// with a clean error instead of buffered.
+    pub(crate) max_body: u64,
 }
 
 /// A finished request execution, routed back to its connection.
@@ -198,12 +205,18 @@ impl Reactor {
         }
     }
 
-    /// Accept until `WouldBlock`; over-cap connections are dropped.
+    /// Accept until `WouldBlock`; over-cap connections are shed with a
+    /// best-effort [`crate::hub::protocol::BUSY_RESPONSE`] so the client
+    /// sees a clean "retry later" instead of a silent close.
     fn accept_all(&mut self) {
         loop {
             match self.listener.accept() {
-                Ok((stream, _)) => {
+                Ok((mut stream, _)) => {
                     if self.n_conns >= self.cfg.max_conns {
+                        // Non-blocking: a peer that can't take 5 bytes
+                        // right now just sees the close.
+                        let _ = stream.set_nonblocking(true);
+                        let _ = stream.write_all(&crate::hub::protocol::BUSY_RESPONSE);
                         drop(stream);
                         continue;
                     }
@@ -216,7 +229,7 @@ impl Reactor {
                         self.slots.len() - 1
                     });
                     self.next_gen += 1;
-                    let conn = Conn::new(stream, self.next_gen);
+                    let conn = Conn::new(stream, self.next_gen, self.cfg.max_body);
                     let token = TOKEN_BASE + slot as u64;
                     if self
                         .poller
@@ -318,8 +331,10 @@ impl Reactor {
         let completions = Arc::clone(&self.completions);
         let wake = Arc::clone(&self.wake_tx);
         let spool = self.cfg.spool_dir.clone();
+        let max_body = self.cfg.max_body;
         let job = move || {
-            let (resp, close_after) = execute_request(req, &store, &stop, spool.as_deref());
+            let (resp, close_after) =
+                execute_request(req, &store, &stop, spool.as_deref(), max_body);
             completions
                 .lock()
                 .unwrap()
@@ -352,17 +367,22 @@ impl Reactor {
         }
     }
 
-    /// Drop connections stalled mid-request (either direction) past
-    /// [`IO_TIMEOUT`]. Idle keep-alive connections are left alone.
+    /// Drop connections stalled mid-request (either direction — a reader
+    /// that stopped sending its body, or a slowloris writer that stopped
+    /// draining its response) past [`ReactorConfig::io_timeout`]. Idle
+    /// keep-alive connections are left alone.
     fn sweep_stalled(&mut self) {
         let now = Instant::now();
-        if now.duration_since(self.last_sweep) < Duration::from_millis(500) {
+        let sweep_every = Duration::from_millis(500).min(self.cfg.io_timeout / 2).max(
+            Duration::from_millis(10),
+        );
+        if now.duration_since(self.last_sweep) < sweep_every {
             return;
         }
         self.last_sweep = now;
         for slot in 0..self.slots.len() {
             let stalled = match &self.slots[slot] {
-                Some(c) => c.in_flight() && !c.busy && c.idle_for(now) > IO_TIMEOUT,
+                Some(c) => c.in_flight() && !c.busy && c.idle_for(now) > self.cfg.io_timeout,
                 None => false,
             };
             if stalled {

@@ -27,7 +27,7 @@
 
 use crate::codec::index::{self, ContainerKind, TensorIndex, INDEX_FOOTER_LEN};
 use crate::codec::stream::SUPER_CHUNK;
-use crate::codec::stream::{sub_container_parts, STREAM_HEADER_LEN};
+use crate::codec::stream::{sub_container_parts, Checksummer, STREAM_HEADER_LEN};
 use crate::codec::STREAM_MAGIC;
 use crate::error::Result;
 use crate::hub::conn::{Request, Response, Segment};
@@ -41,12 +41,26 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// One stored blob: the wire frames of its PUT body, either owned on the
 /// heap or mapped from an (unlinked) spool file.
 pub(crate) struct StoredBlob {
     bytes: BlobBytes,
     pub(crate) total: u64,
+    /// Whole-blob checksum, computed once at store time and reported by
+    /// Stat — resilient clients gate download completion on it.
+    pub(crate) ck: u64,
+}
+
+/// Whole-blob checksum over a PUT body's frames (matches the client's
+/// [`Checksummer::streaming`] hash of the reassembled bytes).
+fn frames_ck(frames: &[Vec<u8>]) -> u64 {
+    let mut ck = Checksummer::streaming();
+    for f in frames {
+        ck.update(f);
+    }
+    ck.finalize()
 }
 
 enum BlobBytes {
@@ -59,13 +73,14 @@ enum BlobBytes {
 
 impl StoredBlob {
     pub(crate) fn in_memory(frames: Vec<Vec<u8>>, total: u64) -> StoredBlob {
+        let ck = frames_ck(&frames);
         let mut starts = Vec::with_capacity(frames.len());
         let mut at = 0u64;
         for f in &frames {
             starts.push(at);
             at += f.len() as u64;
         }
-        StoredBlob { bytes: BlobBytes::Frames { frames, starts }, total }
+        StoredBlob { bytes: BlobBytes::Frames { frames, starts }, total, ck }
     }
 
     /// Number of stored wire frames.
@@ -178,7 +193,8 @@ fn write_and_map(path: &Path, frames: &[Vec<u8>], total: u64) -> std::io::Result
             "spool file length mismatch",
         ));
     }
-    Ok(StoredBlob { bytes: BlobBytes::Mapped { map, spans }, total })
+    let ck = frames_ck(frames);
+    Ok(StoredBlob { bytes: BlobBytes::Mapped { map, spans }, total, ck })
 }
 
 /// Shared blob store (name → frames).
@@ -189,6 +205,8 @@ pub struct HubServerBuilder {
     workers: Option<usize>,
     max_conns: Option<usize>,
     spool_dir: Option<PathBuf>,
+    io_timeout: Option<Duration>,
+    max_body: Option<u64>,
 }
 
 impl HubServerBuilder {
@@ -199,10 +217,28 @@ impl HubServerBuilder {
         self
     }
 
-    /// Maximum concurrent connections; excess accepts are dropped.
+    /// Maximum concurrent connections; excess accepts are refused with a
+    /// clean busy response ([`crate::error::Error::Busy`] client-side).
     /// Default: the `ZIPNN_HUB_MAX_CONNS` env var, else 4096.
     pub fn max_conns(mut self, n: usize) -> Self {
         self.max_conns = Some(n.max(1));
+        self
+    }
+
+    /// Stall bound: a connection mid-request (either direction — a
+    /// reader that stopped sending, or a slowloris writer that stopped
+    /// draining its response) with no progress for this long is reaped.
+    /// Default 5 s.
+    pub fn io_timeout(mut self, t: Duration) -> Self {
+        self.io_timeout = Some(t.max(Duration::from_millis(10)));
+        self
+    }
+
+    /// In-flight request-body budget in MiB: PUT bodies larger than this
+    /// are shed with a clean error instead of buffered. Default: the
+    /// `ZIPNN_HUB_MAX_BODY_MB` env var, else 4096 (4 GiB).
+    pub fn max_body_mb(mut self, mb: usize) -> Self {
+        self.max_body = Some((mb.max(1) as u64) << 20);
         self
     }
 
@@ -231,6 +267,8 @@ impl HubServerBuilder {
             workers: self.workers.unwrap_or_else(default_workers),
             max_conns: self.max_conns.unwrap_or_else(default_max_conns),
             spool_dir,
+            io_timeout: self.io_timeout.unwrap_or(Duration::from_secs(5)),
+            max_body: self.max_body.unwrap_or_else(default_max_body),
         };
         // Built here so setup failures (poller, self-pipe) surface as an
         // error instead of a silently dead server.
@@ -257,6 +295,10 @@ fn default_max_conns() -> usize {
     crate::util::env::hub_max_conns().unwrap_or(4096).max(1)
 }
 
+fn default_max_body() -> u64 {
+    (crate::util::env::hub_max_body_mb().unwrap_or(4096).max(1) as u64) << 20
+}
+
 /// In-process model hub listening on loopback.
 pub struct HubServer {
     addr: String,
@@ -270,9 +312,15 @@ impl HubServer {
         HubServer::builder().start()
     }
 
-    /// Tune workers / connection cap before starting.
+    /// Tune workers / connection cap / timeouts before starting.
     pub fn builder() -> HubServerBuilder {
-        HubServerBuilder { workers: None, max_conns: None, spool_dir: None }
+        HubServerBuilder {
+            workers: None,
+            max_conns: None,
+            spool_dir: None,
+            io_timeout: None,
+            max_body: None,
+        }
     }
 
     /// Address to connect to.
@@ -312,10 +360,21 @@ pub(crate) fn execute_request(
     store: &Store,
     stop: &AtomicBool,
     spool: Option<&Path>,
+    max_body: u64,
 ) -> (Response, bool) {
     match req.op {
         Op::Put => {
             debug_assert!(req.frames.iter().all(|f| f.len() <= FRAME_MAX));
+            // Oversized bodies were counted but not retained by the
+            // connection (graceful degradation: the budget bounds server
+            // memory, the client gets a clean protocol error).
+            if req.total > max_body {
+                let msg = format!(
+                    "put body of {} bytes exceeds the server's {} byte budget",
+                    req.total, max_body
+                );
+                return (Response::Small(small_response(false, msg.as_bytes())), false);
+            }
             // Spool to disk + mmap when configured; any spool failure
             // (full disk, bad dir) falls back to heap frames, so a PUT
             // never fails on account of the optimization.
@@ -415,8 +474,16 @@ pub(crate) fn execute_request(
             let blob = store.lock().unwrap().get(&req.name).cloned();
             match blob {
                 Some(blob) => {
-                    let msg =
-                        format!("{} {} {}", blob.total, blob.n_frames(), blob.max_frame());
+                    // `total frames max_frame checksum` — the trailing
+                    // whole-blob checksum is what resilient downloads
+                    // verify against.
+                    let msg = format!(
+                        "{} {} {} {}",
+                        blob.total,
+                        blob.n_frames(),
+                        blob.max_frame(),
+                        blob.ck
+                    );
                     (Response::Small(small_response(true, msg.as_bytes())), false)
                 }
                 None => (Response::Small(small_response(false, b"not found")), false),

@@ -5,9 +5,12 @@
 //!   compress    compress a file/model into a .znn container
 //!               (--index embeds a tensor index for random access)
 //!   decompress  restore the original bytes from a .znn container
+//!   verify      decode a .znn container end to end, checking every
+//!               frame/trailer checksum, without writing output
 //!   ls          list the tensors of an indexed .znn container
-//!   cat         decode one tensor (--tensor) or byte range (--range)
-//!               of a .znn container without a full decompress
+//!   cat         decode one tensor (--tensor), byte range (--range), or
+//!               everything recoverable (--salvage) of a .znn container
+//!               without a full decompress
 //!   inspect     print a container's metadata + per-group breakdown
 //!   exphist     exponent histogram of a model (paper Fig. 2)
 //!   delta       XOR-delta-compress one file against a base
@@ -68,12 +71,13 @@ impl Args {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: zipnn <gen|compress|decompress|inspect|exphist|delta|apply|train|serve> [args]
+        "usage: zipnn <gen|compress|decompress|verify|inspect|exphist|delta|apply|train|serve> [args]
   gen        --category <bf16|fp32|fp16|clean-fp32|clean-t5|fp16-from-bf16|gptq|gguf|mixed> --mb N --seed S --out M.znnm
-  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|f8e4m3|f8e5m2|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group] [--index (.znnm only)] [--per-tensor (with --index)]
+  compress   <in> [--out F.znn] [--dtype bf16|f32|f16|f8e4m3|f8e5m2|i8] [--threads N] [--policy auto|huffman|zstd|raw] [--no-group] [--frame-ck] [--index (.znnm only)] [--per-tensor (with --index)]
   decompress <in.znn> --out F [--threads N]
+  verify     <in.znn> [--threads N]
   ls         <in.znn>
-  cat        <in.znn> (--tensor NAME | --range OFF:LEN) [--out F] [--threads N]
+  cat        <in.znn> (--tensor NAME | --range OFF:LEN | --salvage) [--out F] [--threads N]
   inspect    <in.znn>
   exphist    <in.znnm>
   delta      --base A --next B --out D.znn [--dtype bf16]
@@ -170,6 +174,11 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let t = Timer::start();
             let file = std::io::BufWriter::new(std::fs::File::create(&out)?);
             let mut zw = ZnnWriter::new(file, cfg)?;
+            // --frame-ck: per-frame checksums, so corruption is pinned to
+            // one frame (verify / salvage / hub frame refetch).
+            if args.flags.contains_key("frame-ck") {
+                zw = zw.with_frame_checksums()?;
+            }
             // --per-tensor: each frame is compressed under the profile of
             // its dominant tensor (dtype-driven, refined by a byte-
             // histogram sample of each tensor's actual data).
@@ -214,7 +223,15 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 cfg.layout = GroupLayout::flat();
             }
             let t = Timer::start();
-            let (out_bytes, groups) = compress_with_report(cfg, &raw)?;
+            let (out_bytes, groups) = if args.flags.contains_key("frame-ck") {
+                // Per-frame checksums need the streaming writer; the
+                // per-group breakdown is skipped on this path.
+                let mut zw = ZnnWriter::new(Vec::new(), cfg)?.with_frame_checksums()?;
+                std::io::Write::write_all(&mut zw, &raw)?;
+                (zw.finish()?, Vec::new())
+            } else {
+                compress_with_report(cfg, &raw)?
+            };
             let secs = t.secs();
             let out = args.flag("out", &format!("{input}.znn"));
             std::fs::write(&out, &out_bytes)?;
@@ -249,6 +266,23 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 out,
                 human_bytes(raw.len() as u64),
                 raw.len() as f64 / t.secs() / 1e9
+            );
+        }
+        "verify" => {
+            let input = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("missing input file"))?;
+            // Full integrity pass: decodes every frame (validating frame
+            // checksums where present and the trailer checksum) without
+            // materializing the output to disk.
+            let t = Timer::start();
+            let mut r = ZnnReader::open(input)?.with_threads(args.usize_flag("threads", 1));
+            let n = r.verify()?;
+            println!(
+                "{input}: OK ({} verified, {:.2} GB/s)",
+                human_bytes(n),
+                n as f64 / t.secs() / 1e9
             );
         }
         "ls" => {
@@ -288,7 +322,29 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             // Partial decode: only the chunks covering the request are
             // decompressed (random access on a mapped indexed container).
             let mut r = ZnnReader::open(input)?.with_threads(args.usize_flag("threads", 1));
-            let bytes = if let Some(tensor) = args.flags.get("tensor") {
+            let bytes = if args.flags.contains_key("salvage") {
+                // Decode past corrupt frames: bad frames come back
+                // zero-filled, and the report names what was lost.
+                let (bytes, rep) = r.salvage()?;
+                if rep.is_clean() {
+                    eprintln!("salvage: all {} frames intact", rep.total_frames);
+                } else {
+                    eprintln!(
+                        "salvage: {}/{} frames recovered ({} of {})",
+                        rep.total_frames - rep.bad_frames.len(),
+                        rep.total_frames,
+                        human_bytes(rep.recovered_bytes),
+                        human_bytes(rep.total_len)
+                    );
+                    for f in &rep.bad_frames {
+                        eprintln!("  lost frame {f}");
+                    }
+                    for t in &rep.lost_tensors {
+                        eprintln!("  lost tensor {t}");
+                    }
+                }
+                bytes
+            } else if let Some(tensor) = args.flags.get("tensor") {
                 r.decode_tensor(tensor)?
             } else if let Some(spec) = args.flags.get("range") {
                 let (off, len) = spec
@@ -297,7 +353,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("--range wants OFF:LEN (byte offset:length)"))?;
                 r.decode_range(off, len)?
             } else {
-                anyhow::bail!("cat needs --tensor NAME or --range OFF:LEN");
+                anyhow::bail!("cat needs --tensor NAME, --range OFF:LEN, or --salvage");
             };
             match args.flags.get("out") {
                 Some(path) => {

@@ -13,6 +13,9 @@
 //! | `ZIPNN_HUB_WORKERS`     | usize | Hub reactor worker threads (default ncpu, max 16)  |
 //! | `ZIPNN_HUB_MAX_CONNS`   | usize | Hub concurrent-connection cap (default 4096)       |
 //! | `ZIPNN_HUB_SPOOL_DIR`   | path  | Spool hub PUT bodies to files under this directory |
+//! | `ZIPNN_HUB_MAX_BODY_MB` | usize | Hub in-flight request-body budget (default 4096)   |
+//! | `ZIPNN_FAULT_PROFILE`   | name  | Hub clients connect through a fault-injecting proxy|
+//! | `ZIPNN_FAULT_SEED`      | u64   | Deterministic schedule seed for the fault proxy    |
 //!
 //! Boolean knobs are "set at all" flags (any value, even empty, turns
 //! them on). Numeric knobs ignore unset, unparsable, and zero values —
@@ -71,4 +74,23 @@ pub fn hub_max_conns() -> Option<usize> {
 /// `ZIPNN_HUB_SPOOL_DIR`: directory for hub PUT spool files.
 pub fn hub_spool_dir() -> Option<PathBuf> {
     std::env::var_os("ZIPNN_HUB_SPOOL_DIR").map(PathBuf::from)
+}
+
+/// `ZIPNN_HUB_MAX_BODY_MB`: cap on request-body bytes the hub holds in
+/// flight per request before shedding the request with a clean error.
+pub fn hub_max_body_mb() -> Option<usize> {
+    usize_var("ZIPNN_HUB_MAX_BODY_MB")
+}
+
+/// `ZIPNN_FAULT_PROFILE`: named fault-injection profile (`drop-heavy`,
+/// `corrupt-heavy`, `stall-heavy`) routing every [`crate::hub::HubClient`]
+/// connection through an in-process fault proxy. Unset = no injection.
+pub fn fault_profile() -> Option<String> {
+    std::env::var("ZIPNN_FAULT_PROFILE").ok().filter(|v| !v.is_empty())
+}
+
+/// `ZIPNN_FAULT_SEED`: seed for the fault proxy's deterministic
+/// schedule, so a failing run replays exactly (default 1).
+pub fn fault_seed() -> Option<u64> {
+    std::env::var("ZIPNN_FAULT_SEED").ok().and_then(|v| v.parse::<u64>().ok())
 }

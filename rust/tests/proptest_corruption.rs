@@ -1,0 +1,282 @@
+//! Property tests: damaged containers (random byte flips and
+//! truncations) must never panic and never silently return wrong bytes —
+//! every decode path either errors cleanly or produces exact payload
+//! bytes, and frame-checksummed containers localize the damage for
+//! `verify()` and `salvage()`.
+//!
+//! Hand-rolled randomized cases (no proptest crate offline), in the style
+//! of `proptest_stream.rs`: one seeded PRNG drives payload generation,
+//! damage placement, and parameter choice, so failures replay
+//! deterministically from the case number.
+
+use std::io::{Read, Write};
+use zipnn::codec::{CodecConfig, MappedBytes, TensorMeta, ZnnReader, ZnnWriter};
+use zipnn::fp::DType;
+use zipnn::util::Xoshiro256;
+
+const CHUNK: usize = 4096;
+/// Raw bytes per `ZNS1` frame at [`CHUNK`] (16 chunks per super-chunk).
+const FRAME_RAW: usize = 16 * CHUNK;
+
+/// BF16-shaped payload (skewed exponent byte) sized to span many frames.
+fn bf16_payload(rng: &mut Xoshiro256, len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; len];
+    for pair in out.chunks_exact_mut(2) {
+        pair[0] = rng.next_u32() as u8;
+        pair[1] = 120 + (rng.uniform().powi(2) * 12.0) as u8;
+    }
+    out
+}
+
+fn tensor_dir(raw_len: usize) -> Vec<TensorMeta> {
+    let cut = raw_len / 3 & !1; // even split so bf16 elements stay whole
+    vec![
+        TensorMeta { name: "a.weight".into(), dtype: DType::BF16, offset: 0, len: cut as u64 },
+        TensorMeta {
+            name: "b.weight".into(),
+            dtype: DType::BF16,
+            offset: cut as u64,
+            len: (raw_len - cut) as u64,
+        },
+    ]
+}
+
+fn build(raw: &[u8], frame_ck: bool, indexed: bool) -> Vec<u8> {
+    let cfg = CodecConfig::for_dtype(DType::BF16).with_chunk_size(CHUNK);
+    let mut w = ZnnWriter::new(Vec::new(), cfg).unwrap();
+    if frame_ck {
+        w = w.with_frame_checksums().unwrap();
+    }
+    if indexed {
+        w = w.with_index(tensor_dir(raw.len()));
+    }
+    w.write_all(raw).unwrap();
+    w.finish().unwrap()
+}
+
+/// Full decodes of `bytes` (streaming and mapped sources) plus
+/// `verify()`: each must either error cleanly or return the exact
+/// payload. Panics are the harness's failure mode — nothing here
+/// catches them.
+fn assert_full_decodes(bytes: &[u8], raw: &[u8], ctx: &str) {
+    let streamed = ZnnReader::new(bytes).and_then(|mut r| {
+        let mut out = Vec::new();
+        r.read_to_end(&mut out)?;
+        Ok(out)
+    });
+    if let Ok(out) = streamed {
+        assert_eq!(out, raw, "{ctx}: streaming decode silently wrong");
+    }
+    let mapped = ZnnReader::from_mapped(MappedBytes::from_vec(bytes.to_vec())).and_then(|r| {
+        let mut out = Vec::new();
+        r.with_threads(3).read_to_end(&mut out)?;
+        Ok(out)
+    });
+    if let Ok(out) = mapped {
+        assert_eq!(out, raw, "{ctx}: mapped decode silently wrong");
+    }
+    let verified = ZnnReader::new(bytes).and_then(|mut r| r.verify());
+    if let Ok(n) = verified {
+        assert_eq!(n, raw.len() as u64, "{ctx}: verify passed with a bad length");
+    }
+}
+
+/// The corruption/truncation matrix: flip or cut every container
+/// variant at random offsets; no decode path may panic or hand back
+/// wrong bytes as success. On the frame-checksummed indexed container,
+/// ranged decodes must also be error-or-exact, and `salvage()` must
+/// zero-fill only the damaged frames.
+#[test]
+fn corrupted_containers_error_or_stay_exact() {
+    let mut rng = Xoshiro256::seed_from_u64(0xC0_22BB7);
+    let raw = bf16_payload(&mut rng, 300_000 + 1); // odd byte lands in the trailer tail
+    let variants = [
+        ("plain", build(&raw, false, false)),
+        ("frame-ck", build(&raw, true, false)),
+        ("frame-ck-indexed", build(&raw, true, true)),
+    ];
+    for (tag, container) in &variants {
+        for case in 0..24 {
+            let mut bytes = container.clone();
+            let truncate = case % 2 == 1;
+            let at = rng.below(bytes.len());
+            let ctx = format!("{tag} case {case} at {at} truncate={truncate}");
+            if truncate {
+                bytes.truncate(at);
+            } else {
+                bytes[at] ^= 1 << rng.below(8);
+            }
+            assert_full_decodes(&bytes, &raw, &ctx);
+
+            if *tag != "frame-ck-indexed" {
+                continue;
+            }
+            // Ranged decode over the damaged, frame-checksummed bytes:
+            // the per-frame checksum turns what would be silent garbage
+            // into a clean error.
+            let off = rng.below(raw.len()) as u64;
+            let len = rng.below(raw.len() - off as usize + 1).min(3 * CHUNK) as u64;
+            let ranged = ZnnReader::from_mapped(MappedBytes::from_vec(bytes.clone()))
+                .and_then(|mut r| r.decode_range(off, len));
+            if let Ok(got) = ranged {
+                assert_eq!(
+                    got,
+                    &raw[off as usize..(off + len) as usize],
+                    "{ctx}: range [{off}, +{len}) silently wrong"
+                );
+            }
+            // Salvage: flips are pinned to their frame; whatever it
+            // reports recovered must be exact, bad frames zero-filled.
+            if !truncate {
+                let salvaged = ZnnReader::from_mapped(MappedBytes::from_vec(bytes.clone()))
+                    .and_then(|mut r| r.salvage());
+                if let Ok((out, rep)) = salvaged {
+                    assert_eq!(out.len(), raw.len(), "{ctx}: salvage length");
+                    if rep.is_clean() {
+                        assert_eq!(out, raw, "{ctx}: clean salvage differs");
+                    }
+                    for (i, (got, want)) in out.iter().zip(raw.iter()).enumerate() {
+                        let frame = i / FRAME_RAW;
+                        if !rep.bad_frames.contains(&frame) {
+                            assert_eq!(got, want, "{ctx}: salvage byte {i} outside bad frames");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A flip in a known frame's payload of a frame-checksummed, indexed
+/// container: `verify()` rejects it, `salvage()` recovers every other
+/// frame and names the tensors overlapping the damage.
+#[test]
+fn salvage_recovers_all_but_the_corrupt_frame() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5A17A6E);
+    let raw = bf16_payload(&mut rng, 8 * FRAME_RAW + 137);
+    let container = build(&raw, true, true);
+
+    // Undamaged: verify passes and salvage is clean.
+    let mut r = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone())).unwrap();
+    assert_eq!(r.verify().unwrap(), raw.len() as u64);
+    let (out, rep) = ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+        .unwrap()
+        .salvage()
+        .unwrap();
+    assert!(rep.is_clean(), "clean container reported {:?}", rep.bad_frames);
+    assert_eq!(out, raw);
+    assert_eq!(rep.recovered_bytes, raw.len() as u64);
+
+    // Flip one byte in the middle of the container — squarely inside
+    // some frame's compressed payload.
+    let mut bad = container.clone();
+    let at = bad.len() / 2;
+    bad[at] ^= 0x40;
+    assert!(
+        ZnnReader::from_mapped(MappedBytes::from_vec(bad.clone())).unwrap().verify().is_err(),
+        "verify accepted a flipped byte"
+    );
+    let (out, rep) = ZnnReader::from_mapped(MappedBytes::from_vec(bad))
+        .unwrap()
+        .salvage()
+        .unwrap();
+    assert_eq!(rep.bad_frames.len(), 1, "one flip must cost one frame: {:?}", rep.bad_frames);
+    assert!(!rep.lost_tensors.is_empty(), "a mid-payload frame overlaps some tensor");
+    assert_eq!(out.len(), raw.len());
+    let f = rep.bad_frames[0];
+    let lo = f * FRAME_RAW;
+    let hi = ((f + 1) * FRAME_RAW).min(raw.len());
+    assert_eq!(&out[..lo], &raw[..lo], "bytes before the bad frame");
+    assert_eq!(&out[hi..], &raw[hi..], "bytes after the bad frame");
+    assert!(out[lo..hi].iter().all(|&b| b == 0), "bad frame must be zero-filled");
+    assert!(
+        rep.recovered_bytes as usize >= raw.len() - (hi - lo),
+        "recovered {} of {} bytes",
+        rep.recovered_bytes,
+        raw.len()
+    );
+}
+
+/// A container cut mid-frame must name the frame index and the byte
+/// offset of the cut in its decode error — not a bare I/O message.
+#[test]
+fn truncation_error_names_frame_and_offset() {
+    let mut rng = Xoshiro256::seed_from_u64(0x72C47E);
+    let raw = bf16_payload(&mut rng, 6 * FRAME_RAW);
+    let container = build(&raw, false, false);
+
+    // Well inside frame 0's compressed payload (a 64 KiB-raw bf16 frame
+    // compresses to far more than 16 KiB of wire).
+    let cut = 12 + 16_000;
+    assert!(cut < container.len() / 2);
+    let err = ZnnReader::new(&container[..cut])
+        .and_then(|mut r| {
+            let mut out = Vec::new();
+            r.read_to_end(&mut out)?;
+            Ok(out)
+        })
+        .expect_err("truncated container decoded");
+    let msg = err.to_string();
+    assert!(msg.contains("truncated in frame"), "unhelpful truncation error: {msg}");
+    assert!(msg.contains("byte offset"), "truncation error names no offset: {msg}");
+
+    // And a mid-stream cut reports the right frame, not always frame 0.
+    let deep_cut = container.len() - 2_000;
+    let err = ZnnReader::new(&container[..deep_cut])
+        .and_then(|mut r| {
+            let mut out = Vec::new();
+            r.read_to_end(&mut out)?;
+            Ok(out)
+        })
+        .expect_err("deeply truncated container decoded");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("truncated") || msg.contains("eof") || msg.contains("trailer"),
+        "unhelpful deep-truncation error: {msg}"
+    );
+}
+
+/// Frame checksums are additive: the flag-free writer's bytes are
+/// untouched (no flag bit, no per-frame checksum words), the flagged
+/// container stays within a hair of the flag-free size, and both decode
+/// byte-identically on every path.
+#[test]
+fn frame_checksum_flag_costs_little_and_roundtrips() {
+    let mut rng = Xoshiro256::seed_from_u64(0xF1A6);
+    let raw = bf16_payload(&mut rng, 5 * FRAME_RAW + 77);
+    let plain = build(&raw, false, false);
+    let flagged = build(&raw, true, false);
+
+    // Flag bit 4 (SFLAG_FRAME_CK) set only on the flagged container.
+    assert_eq!(plain[5] & 4, 0, "flag-free container carries the frame-ck bit");
+    assert_eq!(flagged[5] & 4, 4, "flagged container lost the frame-ck bit");
+    assert!(flagged.len() > plain.len());
+    // ~8 bytes per frame: six frames here, plus slack for the directory.
+    assert!(
+        flagged.len() - plain.len() <= 8 * 8,
+        "frame checksums cost {} bytes over {}",
+        flagged.len() - plain.len(),
+        plain.len()
+    );
+
+    for (tag, container) in [("plain", &plain), ("flagged", &flagged)] {
+        for threads in [1usize, 4] {
+            let mut out = Vec::new();
+            ZnnReader::new(container.as_slice())
+                .unwrap()
+                .with_threads(threads)
+                .read_to_end(&mut out)
+                .unwrap();
+            assert_eq!(out, raw, "{tag} streaming threads={threads}");
+            let mut out = Vec::new();
+            ZnnReader::from_mapped(MappedBytes::from_vec(container.clone()))
+                .unwrap()
+                .with_threads(threads)
+                .read_to_end(&mut out)
+                .unwrap();
+            assert_eq!(out, raw, "{tag} mapped threads={threads}");
+        }
+        let mut r = ZnnReader::new(container.as_slice()).unwrap();
+        assert_eq!(r.verify().unwrap(), raw.len() as u64, "{tag} verify");
+    }
+}
