@@ -304,4 +304,69 @@ fn main() {
         );
     }
     server.shutdown();
+
+    // Fleet multi-peer download (the PR 9 sharded-hub metric): a 3-hub
+    // R=2 fleet serves one indexed container as concurrent stripes from
+    // both replicas; a single peer serves the same container whole on
+    // the same run. Aggregate simulated time for the striped path is
+    // the slowest peer's (peers transfer in parallel), so the striped
+    // throughput must beat the single-peer one. Record-only baseline
+    // (per-machine codec time feeds the goodput denominator).
+    {
+        use zipnn::hub::{Fleet, FleetClient, FleetConfig, RetryPolicy};
+        let fleet = Fleet::start(3).unwrap();
+        let cfg = FleetConfig {
+            replication: 2,
+            peers: 3,
+            vnodes: 64,
+            retry: RetryPolicy::default(),
+        };
+        let mut fc = FleetClient::connect_direct(&fleet.members(), cfg);
+        // Floor the model at 2 MiB: striping needs several frames no
+        // matter how small ZIPNN_BENCH_MB squeezes the other figures.
+        let m = generate(&SyntheticSpec::new(
+            "fleet-bench",
+            Category::RegularBF16,
+            env.model_bytes().max(2 << 20),
+            712,
+        ));
+        let raw = m.to_bytes();
+        let spans = zipnn::model::tensor_spans(&m);
+        // Small chunks => many container frames => stripe boundaries to
+        // split at, even when ZIPNN_BENCH_MB shrinks the model.
+        let ccfg = CodecConfig::for_dtype(m.dominant_dtype()).with_chunk_size(16 * 1024);
+        let mut sim = NetSim::new(NetProfile::UPLOAD, 712);
+        fc.upload_indexed("fleet-bench", &raw, spans, ccfg, &mut sim).unwrap();
+
+        let mut dsim = NetSim::new(NetProfile::CLOUD_CACHED, 713);
+        let t = Timer::start();
+        let (got, frep) = fc.download("fleet-bench", true, &mut dsim).unwrap();
+        let wall_secs = t.secs();
+        assert_eq!(got, raw, "fleet bench download");
+        assert!(frep.stripes >= 2, "bench container must stripe");
+        let wire_mb = frep.report.wire_len as f64 / (1024.0 * 1024.0);
+        let multi_mb_s = wire_mb / frep.report.transfer_secs.max(1e-9);
+        let single_mb_s = wire_mb / dsim.transfer_secs(frep.report.wire_len as u64).max(1e-9);
+        assert!(
+            multi_mb_s > single_mb_s,
+            "striping across {} peers must beat one peer ({multi_mb_s:.0} vs {single_mb_s:.0} MB/s)",
+            frep.peers
+        );
+        json_line(
+            "fig10_fleet",
+            &[
+                ("multi_peer_mb_s", multi_mb_s),
+                ("single_peer_mb_s", single_mb_s),
+                ("stripes", frep.stripes as f64),
+                ("peers", frep.peers as f64),
+                ("wall_goodput_mb_s", raw.len() as f64 / (1024.0 * 1024.0) / wall_secs.max(1e-9)),
+            ],
+        );
+        println!(
+            "fleet: {multi_mb_s:.0} MB/s striped across {} peers vs {single_mb_s:.0} MB/s \
+             single-peer ({} stripes, cloud-cached regime)",
+            frep.peers, frep.stripes
+        );
+        fleet.shutdown();
+    }
 }

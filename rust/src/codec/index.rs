@@ -226,6 +226,43 @@ impl TensorIndex {
     }
 }
 
+/// Partition a container's byte range `[0, container_len)` into at most
+/// `parts` contiguous stripes whose internal boundaries all fall on
+/// frame starts from the index's frame directory. Returns
+/// `(offset, len)` spans in file order; they tile the container exactly.
+///
+/// The first stripe always carries the stream header, the last carries
+/// the trailer and the index tail, and every boundary is a `0xF5` frame
+/// offset — so a multi-peer client can fetch stripes from different
+/// replicas, scan each stripe's frames independently (prepending the
+/// header bytes it already holds), and concatenate without re-framing.
+/// Fewer than `parts` spans come back when the frame directory is too
+/// small to honor the requested split.
+pub fn stripe_spans(idx: &TensorIndex, container_len: u64, parts: usize) -> Vec<(u64, u64)> {
+    let parts = parts.max(1) as u64;
+    // Boundary candidates: every frame start strictly inside the file.
+    // (frame_offsets are validated monotonic ≤ trailer_off at parse.)
+    let candidates: Vec<u64> = idx
+        .frame_offsets
+        .iter()
+        .copied()
+        .filter(|&o| o > 0 && o < container_len)
+        .collect();
+    let mut bounds = vec![0u64];
+    for k in 1..parts {
+        let target = container_len * k / parts;
+        // First candidate ≥ the even-split target that still advances.
+        let i = candidates.partition_point(|&o| o < target);
+        if let Some(&off) = candidates.get(i) {
+            if off > *bounds.last().unwrap() {
+                bounds.push(off);
+            }
+        }
+    }
+    bounds.push(container_len);
+    bounds.windows(2).map(|w| (w[0], w[1] - w[0])).collect()
+}
+
 /// Given a container's total byte length and its last
 /// [`INDEX_FOOTER_LEN`] bytes, locate the index section. Returns
 /// `(section_offset, section_len)`, or `None` when no index is present
@@ -425,6 +462,42 @@ mod tests {
         enc[30..34].copy_from_slice(&u32::MAX.to_le_bytes());
         let len = enc.len() - INDEX_FOOTER_LEN;
         assert!(TensorIndex::parse_section(&enc[..len]).is_err());
+    }
+
+    #[test]
+    fn stripe_spans_tile_and_align() {
+        let mut idx = sample();
+        idx.frame_offsets = vec![12, 100, 220, 300, 420, 560, 650];
+        let total = 1000u64;
+        for parts in 1..=8 {
+            let spans = stripe_spans(&idx, total, parts);
+            assert!(!spans.is_empty() && spans.len() <= parts.max(1));
+            // Spans tile [0, total) exactly.
+            let mut at = 0u64;
+            for &(off, len) in &spans {
+                assert_eq!(off, at);
+                assert!(len > 0);
+                at += len;
+            }
+            assert_eq!(at, total);
+            // Every internal boundary is a frame offset.
+            for &(off, _) in &spans[1..] {
+                assert!(idx.frame_offsets.contains(&off), "boundary {off} not a frame start");
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_spans_degenerate() {
+        let mut idx = sample();
+        idx.frame_offsets = Vec::new();
+        // No frame directory: one span covering everything.
+        assert_eq!(stripe_spans(&idx, 500, 4), vec![(0, 500)]);
+        idx.frame_offsets = vec![12];
+        // One usable boundary can satisfy at most two spans.
+        let spans = stripe_spans(&idx, 500, 4);
+        assert!(spans.len() <= 2);
+        assert_eq!(spans.iter().map(|s| s.1).sum::<u64>(), 500);
     }
 
     #[test]

@@ -51,14 +51,6 @@ use std::time::{Duration, Instant};
 /// it), small enough that a dead server fails the client promptly.
 const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Connect retry budget: the reactor accepts in batches, so a connect
-/// issued in a burst can land on a momentarily full backlog.
-const CONNECT_ATTEMPTS: usize = 8;
-const CONNECT_BACKOFF: Duration = Duration::from_millis(10);
-/// Ceiling on the doubling connect backoff — seven unjittered doublings
-/// of 10 ms would reach 1.28 s; reconnect latency stays bounded instead.
-const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(500);
-
 /// How a client survives transient transfer failures: per-operation
 /// attempt budget, exponential backoff with **full jitter** (each sleep
 /// is uniform in `[0, ceiling]`, the ceiling doubling up to
@@ -94,6 +86,22 @@ impl RetryPolicy {
     }
 }
 
+/// One full-jitter backoff draw under `policy`: uniform in
+/// `[0, ceiling]`, after which the ceiling doubles up to the policy cap.
+/// Both the operation retry loop and the connect path draw their sleeps
+/// here, so a fleet restart never re-dials in lockstep — and the
+/// schedule is a pure function of the rng, which is what the
+/// seeded-divergence test pins.
+pub(crate) fn jitter_backoff(
+    policy: &RetryPolicy,
+    ceiling: &mut Duration,
+    rng: &mut Xoshiro256,
+) -> Duration {
+    let nanos = (rng.uniform() * ceiling.as_nanos() as f64) as u64;
+    *ceiling = (*ceiling * 2).min(policy.max_backoff);
+    Duration::from_nanos(nanos)
+}
+
 /// End-to-end timing of one transfer (Fig. 10 bars).
 #[derive(Debug, Clone)]
 pub struct TransferReport {
@@ -125,6 +133,20 @@ impl TransferReport {
     pub fn pct(&self) -> f64 {
         self.wire_len as f64 / self.raw_len as f64 * 100.0
     }
+}
+
+/// One tensor fetched with its placement, from
+/// [`HubClient::get_tensor_placed`].
+#[derive(Debug, Clone)]
+pub struct TensorFetch {
+    /// Absolute byte offset of the tensor within the raw payload
+    /// (the wire meta's base offset plus the tensor's offset relative
+    /// to the shipped frames).
+    pub offset: u64,
+    /// The tensor's raw bytes.
+    pub data: Vec<u8>,
+    /// Response payload bytes on the wire.
+    pub wire: u64,
 }
 
 /// Is this failure worth a reconnect-and-retry? Transport errors and
@@ -253,7 +275,7 @@ impl HubClient {
 
     fn connect_inner(target: String, fault: Option<FaultProxy>) -> Result<HubClient> {
         let mut rng = Xoshiro256::seed_from_u64(jitter_seed(&target));
-        let stream = connect_stream(&target, &mut rng)?;
+        let stream = connect_stream(&target, &RetryPolicy::default(), &mut rng)?;
         let client = HubClient {
             stream,
             threads: 1,
@@ -287,9 +309,11 @@ impl HubClient {
         self
     }
 
-    /// Replace the (dead) connection with a fresh one.
+    /// Replace the (dead) connection with a fresh one, under this
+    /// client's own retry policy (connect retries draw from the same
+    /// jittered backoff as every other operation).
     fn reconnect(&mut self) -> Result<()> {
-        let stream = connect_stream(&self.addr, &mut self.rng)?;
+        let stream = connect_stream(&self.addr, &self.retry, &mut self.rng)?;
         stream.set_read_timeout(Some(self.timeout))?;
         stream.set_write_timeout(Some(self.timeout))?;
         self.stream = stream;
@@ -298,9 +322,8 @@ impl HubClient {
 
     /// One full-jitter backoff sleep; doubles the ceiling up to the cap.
     fn backoff_sleep(&mut self, ceiling: &mut Duration) {
-        let nanos = (self.rng.uniform() * ceiling.as_nanos() as f64) as u64;
-        std::thread::sleep(Duration::from_nanos(nanos));
-        *ceiling = (*ceiling * 2).min(self.retry.max_backoff);
+        let retry = self.retry;
+        std::thread::sleep(jitter_backoff(&retry, ceiling, &mut self.rng));
     }
 
     /// Run `f` under the retry policy: transient failures reconnect
@@ -624,6 +647,21 @@ impl HubClient {
     /// payload bytes on the wire (the bytes-on-wire measure asserted in
     /// tests and reported by the fig10 bench).
     pub fn get_tensor(&mut self, name: &str, tensor: &str) -> Result<(Vec<u8>, u64)> {
+        let f = self.get_tensor_placed(name, tensor)?;
+        Ok((f.data, f.wire))
+    }
+
+    /// Like [`HubClient::get_tensor`], but also surfaces the placement:
+    /// the raw-payload offset of the tensor's first byte. The multi-peer
+    /// fleet client reassembles stripes with it, and callers laying
+    /// tensors back into a model buffer need it too.
+    ///
+    /// The 24-byte placement meta is validated against the payload that
+    /// actually arrived: a declared length the decoded bytes don't match,
+    /// or a base/offset pair that doesn't add up, is an
+    /// [`Error::Corrupt`] naming the mismatch — never bytes silently
+    /// handed onward.
+    pub fn get_tensor_placed(&mut self, name: &str, tensor: &str) -> Result<TensorFetch> {
         self.with_retries(|c| {
             write_request(
                 &mut c.stream,
@@ -642,14 +680,25 @@ impl HubClient {
             // sub-container of the covering frames.
             let mut meta = [0u8; 24];
             body.read_exact(&mut meta)?;
-            let _base_raw = u64::from_le_bytes(meta[0..8].try_into().unwrap());
+            let base = u64::from_le_bytes(meta[0..8].try_into().unwrap());
             let rel = u64::from_le_bytes(meta[8..16].try_into().unwrap());
             let len = u64::from_le_bytes(meta[16..24].try_into().unwrap());
+            let offset = base.checked_add(rel).ok_or_else(|| {
+                Error::Corrupt(format!(
+                    "tensor placement meta overflows: base {base} + rel {rel}"
+                ))
+            })?;
             let mut zr = ZnnReader::new(&mut body)?.with_threads(c.threads);
             let data = zr.decode_range(rel, len)?;
             drop(zr);
             body.drain()?; // stay in sync on the keep-alive connection
-            Ok((data, body.payload_len()))
+            if data.len() as u64 != len {
+                return Err(Error::Corrupt(format!(
+                    "tensor response declared {len} bytes but {} arrived",
+                    data.len()
+                )));
+            }
+            Ok(TensorFetch { offset, data, wire: body.payload_len() })
         })
     }
 
@@ -690,16 +739,16 @@ impl HubClient {
     }
 }
 
-/// Dial with capped, fully-jittered exponential backoff (satellite of
-/// the resilience PR: the previous loop doubled without cap or jitter).
-fn connect_stream(addr: &str, rng: &mut Xoshiro256) -> Result<TcpStream> {
-    let mut ceiling = CONNECT_BACKOFF;
+/// Dial under `policy`: the attempt budget, backoff base/cap, and the
+/// full-jitter sleep schedule are the same [`RetryPolicy`] machinery
+/// every operation retries under (the connect path used to run its own
+/// constants, so a fleet restart re-dialed on one shared schedule).
+fn connect_stream(addr: &str, policy: &RetryPolicy, rng: &mut Xoshiro256) -> Result<TcpStream> {
+    let mut ceiling = policy.base_backoff;
     let mut last_err = None;
-    for attempt in 0..CONNECT_ATTEMPTS {
+    for attempt in 0..policy.attempts.max(1) {
         if attempt > 0 {
-            let nanos = (rng.uniform() * ceiling.as_nanos() as f64) as u64;
-            std::thread::sleep(Duration::from_nanos(nanos));
-            ceiling = (ceiling * 2).min(CONNECT_BACKOFF_CAP);
+            std::thread::sleep(jitter_backoff(policy, &mut ceiling, rng));
         }
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
@@ -719,4 +768,54 @@ fn connect_stream(addr: &str, rng: &mut Xoshiro256) -> Result<TcpStream> {
         }
     }
     Err(last_err.expect("at least one connect attempt").into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full sleep schedule `attempts` retries would draw.
+    fn schedule(policy: &RetryPolicy, seed: u64) -> Vec<Duration> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut ceiling = policy.base_backoff;
+        (1..policy.attempts).map(|_| jitter_backoff(policy, &mut ceiling, &mut rng)).collect()
+    }
+
+    #[test]
+    fn seeded_connect_schedules_diverge() {
+        // Two clients restarting against the same fleet must not re-dial
+        // in lockstep: different jitter seeds produce different sleep
+        // schedules, while the same seed replays exactly.
+        let policy = RetryPolicy::default();
+        let a = schedule(&policy, 1);
+        let b = schedule(&policy, 2);
+        assert_eq!(a.len(), b.len());
+        assert_ne!(a, b, "distinct seeds drew identical connect backoff schedules");
+        assert_eq!(a, schedule(&policy, 1), "same seed must replay the same schedule");
+    }
+
+    #[test]
+    fn connect_backoff_respects_policy_cap() {
+        let policy = RetryPolicy {
+            attempts: 16,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(80),
+            deadline: Duration::from_secs(60),
+        };
+        for seed in 0..32 {
+            for sleep in schedule(&policy, seed) {
+                assert!(sleep <= policy.max_backoff, "sleep {sleep:?} exceeds the cap");
+            }
+        }
+    }
+
+    #[test]
+    fn per_process_jitter_seeds_decorrelate_by_time() {
+        // Same address, two draws: the wall-clock/pid mix must not
+        // collapse every process onto one schedule.
+        let s1 = jitter_seed("127.0.0.1:4000");
+        std::thread::sleep(Duration::from_micros(10));
+        let s2 = jitter_seed("127.0.0.1:4000");
+        assert_ne!(s1, s2);
+    }
 }

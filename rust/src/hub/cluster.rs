@@ -1,0 +1,251 @@
+//! Consistent-hash placement for a fleet of hubs (paper §2.1.1: the
+//! hub-scale workload is a *fleet*, not one process).
+//!
+//! Blob names map to nodes through a classic consistent-hash ring:
+//! every node contributes `vnodes` pseudo-random points on a 64-bit
+//! ring, a blob hashes to a point, and its R replicas are the first R
+//! *distinct* nodes walking clockwise from there. Because each point is
+//! a pure function of `(node id, vnode index)`, membership changes move
+//! only the blobs whose arcs a joining/leaving node's points cover —
+//! the minimal-remapping property the rebalance path and the proptests
+//! lean on.
+//!
+//! The ring deals in *node ids* (stable logical names), not addresses:
+//! callers keep an id→address map (see [`crate::hub::fleet`]), so a hub
+//! can be re-dialed through a proxy or restarted on a new port without
+//! re-placing every blob.
+
+use std::collections::BTreeSet;
+
+/// Default pseudo-random points per node. 64 keeps the max/mean load
+/// skew within ~2x across a handful of nodes (see the balance proptest)
+/// while membership changes stay O(vnodes · log points).
+pub const DEFAULT_VNODES: u32 = 64;
+
+/// FNV-1a over the bytes, finished with a splitmix64 avalanche so
+/// single-character name differences spread over the whole ring.
+fn hash64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    // splitmix64 finalizer
+    h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// A node's ring point for one virtual-node index.
+fn point(node: &str, vnode: u32) -> u64 {
+    let mut key = Vec::with_capacity(node.len() + 5);
+    key.extend_from_slice(node.as_bytes());
+    key.push(b'#');
+    key.extend_from_slice(&vnode.to_le_bytes());
+    hash64(&key)
+}
+
+/// Consistent-hash ring with R-way replication.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    replication: usize,
+    vnodes: u32,
+    /// Membership, in join order (stable for display; placement does not
+    /// depend on it).
+    nodes: Vec<String>,
+    /// `(ring point, index into nodes)`, sorted by point. Rebuilt on
+    /// membership change — points of surviving nodes never move, which
+    /// is what makes remapping minimal.
+    points: Vec<(u64, u32)>,
+}
+
+impl HashRing {
+    /// Empty ring with `replication`-way placement and default vnodes.
+    pub fn new(replication: usize) -> HashRing {
+        HashRing::with_vnodes(replication, DEFAULT_VNODES)
+    }
+
+    /// Empty ring with an explicit virtual-node count per node.
+    pub fn with_vnodes(replication: usize, vnodes: u32) -> HashRing {
+        HashRing {
+            replication: replication.max(1),
+            vnodes: vnodes.max(1),
+            nodes: Vec::new(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Replication factor R (capped at the node count during lookup).
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// Current member ids, in join order.
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a member. Returns `false` (and changes nothing) when the id
+    /// is already present.
+    pub fn add_node(&mut self, id: &str) -> bool {
+        if self.nodes.iter().any(|n| n == id) {
+            return false;
+        }
+        self.nodes.push(id.to_string());
+        self.rebuild();
+        true
+    }
+
+    /// Remove a member. Returns `false` when the id was not present.
+    pub fn remove_node(&mut self, id: &str) -> bool {
+        let Some(at) = self.nodes.iter().position(|n| n == id) else {
+            return false;
+        };
+        self.nodes.remove(at);
+        self.rebuild();
+        true
+    }
+
+    fn rebuild(&mut self) {
+        self.points.clear();
+        self.points.reserve(self.nodes.len() * self.vnodes as usize);
+        for (i, node) in self.nodes.iter().enumerate() {
+            for v in 0..self.vnodes {
+                self.points.push((point(node, v), i as u32));
+            }
+        }
+        self.points.sort_unstable();
+    }
+
+    /// The R distinct replica nodes holding `name`, primary first:
+    /// the first `replication` distinct nodes clockwise from the name's
+    /// ring point (all nodes, when fewer than R are members).
+    pub fn replicas_for(&self, name: &str) -> Vec<&str> {
+        let want = self.replication.min(self.nodes.len());
+        let mut out: Vec<&str> = Vec::with_capacity(want);
+        if want == 0 {
+            return out;
+        }
+        let h = hash64(name.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = BTreeSet::new();
+        for k in 0..self.points.len() {
+            let (_, node_idx) = self.points[(start + k) % self.points.len()];
+            if seen.insert(node_idx) {
+                out.push(self.nodes[node_idx as usize].as_str());
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The primary replica for `name` (`None` on an empty ring).
+    pub fn primary_for(&self, name: &str) -> Option<&str> {
+        self.replicas_for(name).first().copied()
+    }
+
+    /// Does `node` hold a replica of `name`?
+    pub fn owns(&self, node: &str, name: &str) -> bool {
+        self.replicas_for(name).iter().any(|&n| n == node)
+    }
+}
+
+/// The per-blob rebalance plan for a membership change: for each name,
+/// the nodes that must newly receive a copy (its replica set under
+/// `new` minus its set under `old`). Names whose ownership did not move
+/// are absent — a rebalance streams only these.
+pub fn moved_blobs<'a>(
+    old: &HashRing,
+    new: &HashRing,
+    names: impl IntoIterator<Item = &'a str>,
+) -> Vec<(String, Vec<String>)> {
+    let mut plan = Vec::new();
+    for name in names {
+        let before: BTreeSet<&str> = old.replicas_for(name).into_iter().collect();
+        let gained: Vec<String> = new
+            .replicas_for(name)
+            .into_iter()
+            .filter(|n| !before.contains(n))
+            .map(String::from)
+            .collect();
+        if !gained.is_empty() {
+            plan.push((name.to_string(), gained));
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize, r: usize) -> HashRing {
+        let mut ring = HashRing::new(r);
+        for i in 0..n {
+            assert!(ring.add_node(&format!("hub{i}")));
+        }
+        ring
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_distinct() {
+        let a = ring(5, 3);
+        let b = ring(5, 3);
+        for i in 0..100 {
+            let name = format!("blob-{i}.znn");
+            let ra = a.replicas_for(&name);
+            assert_eq!(ra, b.replicas_for(&name));
+            assert_eq!(ra.len(), 3);
+            let set: BTreeSet<&&str> = ra.iter().collect();
+            assert_eq!(set.len(), 3, "replicas must be distinct nodes");
+        }
+    }
+
+    #[test]
+    fn replication_caps_at_membership() {
+        let r = ring(2, 3);
+        assert_eq!(r.replicas_for("x").len(), 2);
+        assert!(HashRing::new(2).replicas_for("x").is_empty());
+        assert!(HashRing::new(2).primary_for("x").is_none());
+    }
+
+    #[test]
+    fn duplicate_and_missing_membership_ops() {
+        let mut r = ring(3, 2);
+        assert!(!r.add_node("hub1"));
+        assert!(!r.remove_node("hub9"));
+        assert!(r.remove_node("hub1"));
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn moved_blobs_names_only_gaining_nodes() {
+        let old = ring(3, 2);
+        let mut new = old.clone();
+        new.add_node("hub3");
+        let names: Vec<String> = (0..200).map(|i| format!("b{i}")).collect();
+        let plan = moved_blobs(&old, &new, names.iter().map(String::as_str));
+        for (name, gained) in &plan {
+            // Every gaining node really is a new replica of the name.
+            let before: BTreeSet<&str> = old.replicas_for(name).into_iter().collect();
+            let after: BTreeSet<&str> = new.replicas_for(name).into_iter().collect();
+            for g in gained {
+                assert!(after.contains(g.as_str()) && !before.contains(g.as_str()));
+            }
+        }
+        // Only the joining node can gain blobs on a pure join.
+        assert!(plan
+            .iter()
+            .all(|(_, gained)| gained.iter().all(|g| g == "hub3")));
+        assert!(!plan.is_empty(), "a joining node should take over some arcs");
+    }
+}

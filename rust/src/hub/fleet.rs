@@ -1,0 +1,697 @@
+//! The sharded multi-hub fleet: cluster-aware clients that place blobs
+//! on a consistent-hash ring ([`crate::hub::cluster`]) with R-way
+//! replication, download one blob from many replicas at once, and
+//! rebalance only the blobs whose ownership moved on membership change.
+//!
+//! ## Multi-peer download
+//!
+//! A fleet download fans out as concurrent `Range` requests at
+//! index-derived frame boundaries ([`crate::codec::index::stripe_spans`]):
+//! each stripe starts on a `0xF5` frame offset, so a peer's bytes are
+//! whole frames that verify independently (the stripe worker prepends
+//! the container header it already holds and walks the frames with the
+//! wire scanner, per-frame checksums included when the container
+//! carries them). Every peer connection runs under the shared
+//! [`RetryPolicy`]; a dead or `Busy` replica fails the stripe over to
+//! the next replica in ring order. Reassembly is gated on the
+//! whole-blob checksum from [`HubClient::stat_full`] — the same
+//! end-to-end gate as the single-hub path.
+//!
+//! Un-indexed or single-frame blobs fall back to the resumable
+//! single-peer [`HubClient::download`], with the same replica failover.
+//!
+//! ## Rebalance
+//!
+//! [`FleetClient::add_node`] / [`FleetClient::remove_node`] diff the old
+//! and new rings ([`crate::hub::cluster::moved_blobs`]) and stream only
+//! the blobs that gained a replica, each verified against its source
+//! checksum before the copy counts. Removal treats the node as already
+//! dead — with R ≥ 2 every blob still has a live source replica.
+
+use crate::codec::index::{section_span, stripe_spans, TensorIndex, INDEX_FOOTER_LEN, INDEX_MAGIC};
+use crate::codec::stream::{scan_wire, Checksummer, WireScan, STREAM_HEADER_LEN};
+use crate::codec::{CodecConfig, MappedBytes, TensorMeta, ZnnReader};
+use crate::error::{Error, Result};
+use crate::hub::client::{HubClient, RetryPolicy, TensorFetch, TransferReport};
+use crate::hub::cluster::{moved_blobs, HashRing};
+use crate::hub::netsim::NetSim;
+use crate::hub::server::HubServer;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io::Read;
+
+/// Fleet-client tuning. Defaults come from the `ZIPNN_FLEET_*` env
+/// knobs (see [`crate::util::env`]), falling back to R=2, 3 peers, and
+/// the default ring geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Replicas per blob (R).
+    pub replication: usize,
+    /// Stripes fetched concurrently per download (one peer connection
+    /// each).
+    pub peers: usize,
+    /// Virtual nodes per hub on the ring.
+    pub vnodes: u32,
+    /// Retry policy applied to every per-peer connection.
+    pub retry: RetryPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replication: crate::util::env::fleet_replication().unwrap_or(2),
+            peers: crate::util::env::fleet_peers().unwrap_or(3),
+            vnodes: crate::util::env::fleet_vnodes().unwrap_or(64) as u32,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// What one multi-peer transfer did, on top of the usual
+/// [`TransferReport`].
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// End-to-end accounting. `transfer_secs` is the simulated
+    /// *aggregate* time: peers transfer in parallel, so it is the
+    /// slowest peer's simulated time, not the sum.
+    pub report: TransferReport,
+    /// Distinct peers that served stripes (1 on the single-peer
+    /// fallback).
+    pub peers: usize,
+    /// Stripes the download was split into.
+    pub stripes: usize,
+    /// Replica failovers: stripe attempts that moved past a dead,
+    /// busy, or corrupt-serving peer.
+    pub failovers: u64,
+}
+
+/// What a rebalance streamed after a membership change.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    /// Per blob: the nodes that newly received a copy. Blobs whose
+    /// ownership did not move are absent.
+    pub moved: Vec<(String, Vec<String>)>,
+    /// Total blob bytes streamed to new replicas.
+    pub bytes: u64,
+}
+
+/// Whole-blob checksum matching the hash the server reports via Stat.
+fn blob_ck(data: &[u8]) -> u64 {
+    let mut ck = Checksummer::streaming();
+    ck.update(data);
+    ck.finalize()
+}
+
+/// Cluster-aware client: a ring of node ids, an id→address map, and a
+/// cached connection per node.
+pub struct FleetClient {
+    ring: HashRing,
+    addrs: HashMap<String, String>,
+    cfg: FleetConfig,
+    clients: HashMap<String, HubClient>,
+    threads: usize,
+    direct: bool,
+}
+
+impl FleetClient {
+    /// Build a client over `members` (`(node id, address)` pairs).
+    /// Connections are dialed lazily and honor `ZIPNN_FAULT_PROFILE`
+    /// like [`HubClient::connect`].
+    pub fn connect(members: &[(String, String)], cfg: FleetConfig) -> FleetClient {
+        FleetClient::build(members, cfg, false)
+    }
+
+    /// Like [`FleetClient::connect`], but connections bypass the
+    /// env-armed fault proxy — for tests that wire their own faults and
+    /// need exact accounting.
+    pub fn connect_direct(members: &[(String, String)], cfg: FleetConfig) -> FleetClient {
+        FleetClient::build(members, cfg, true)
+    }
+
+    fn build(members: &[(String, String)], cfg: FleetConfig, direct: bool) -> FleetClient {
+        let mut ring = HashRing::with_vnodes(cfg.replication, cfg.vnodes);
+        let mut addrs = HashMap::new();
+        for (id, addr) in members {
+            ring.add_node(id);
+            addrs.insert(id.clone(), addr.clone());
+        }
+        FleetClient { ring, addrs, cfg, clients: HashMap::new(), threads: 1, direct }
+    }
+
+    /// Worker threads for codec work during transfers.
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// The placement ring (read-only; membership changes go through
+    /// [`FleetClient::add_node`] / [`FleetClient::remove_node`] so the
+    /// rebalance runs).
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// The replica node ids a stored blob name lives on, primary first.
+    pub fn replicas_of(&self, stored: &str) -> Vec<String> {
+        self.ring.replicas_for(stored).into_iter().map(String::from).collect()
+    }
+
+    fn dial(&self, id: &str) -> Result<HubClient> {
+        let addr = self
+            .addrs
+            .get(id)
+            .ok_or_else(|| Error::Invalid(format!("unknown fleet node '{id}'")))?;
+        let c = if self.direct {
+            HubClient::connect_direct(addr)
+        } else {
+            HubClient::connect(addr)
+        }?;
+        Ok(c.with_threads(self.threads).with_retry_policy(self.cfg.retry))
+    }
+
+    /// Run `f` on the cached connection to `id`, dialing on first use.
+    /// Any error evicts the cached connection so the next use re-dials.
+    fn try_on<T>(&mut self, id: &str, f: impl FnOnce(&mut HubClient) -> Result<T>) -> Result<T> {
+        if !self.clients.contains_key(id) {
+            let c = self.dial(id)?;
+            self.clients.insert(id.to_string(), c);
+        }
+        let r = f(self.clients.get_mut(id).expect("just inserted"));
+        if r.is_err() {
+            self.clients.remove(id);
+        }
+        r
+    }
+
+    /// Stored blob name for a logical model name.
+    fn stored_name(name: &str, compressed: bool) -> String {
+        if compressed {
+            format!("{name}.znn")
+        } else {
+            name.to_string()
+        }
+    }
+
+    /// Upload to every replica of the blob's ring placement. The report
+    /// aggregates: `wire_total` and `transfer_secs` sum over replicas
+    /// (replica pushes are sequential), the rest describes one copy.
+    pub fn upload(
+        &mut self,
+        name: &str,
+        raw: &[u8],
+        cfg: Option<CodecConfig>,
+        sim: &mut NetSim,
+    ) -> Result<TransferReport> {
+        let stored = FleetClient::stored_name(name, cfg.is_some());
+        self.upload_with(&stored, |c, sim| c.upload(name, raw, cfg.clone(), sim), sim)
+    }
+
+    /// Upload compressed **with a tensor index** to every replica — the
+    /// index is what later lets downloads stripe at frame boundaries.
+    pub fn upload_indexed(
+        &mut self,
+        name: &str,
+        raw: &[u8],
+        tensors: Vec<TensorMeta>,
+        cfg: CodecConfig,
+        sim: &mut NetSim,
+    ) -> Result<TransferReport> {
+        let stored = format!("{name}.znn");
+        self.upload_with(
+            &stored,
+            |c, sim| c.upload_indexed(name, raw, tensors.clone(), cfg.clone(), sim),
+            sim,
+        )
+    }
+
+    fn upload_with(
+        &mut self,
+        stored: &str,
+        mut f: impl FnMut(&mut HubClient, &mut NetSim) -> Result<TransferReport>,
+        sim: &mut NetSim,
+    ) -> Result<TransferReport> {
+        let replicas = self.replicas_of(stored);
+        if replicas.is_empty() {
+            return Err(Error::Invalid("fleet has no nodes".into()));
+        }
+        let mut agg: Option<TransferReport> = None;
+        for id in &replicas {
+            let rep = self.try_on(id, |c| f(c, sim))?;
+            agg = Some(match agg {
+                None => rep,
+                Some(mut a) => {
+                    a.wire_total += rep.wire_total;
+                    a.transfer_secs += rep.transfer_secs;
+                    a
+                }
+            });
+        }
+        Ok(agg.expect("at least one replica"))
+    }
+
+    /// Download a blob from the fleet, striping across replicas when the
+    /// stored container carries a frame index; decompresses when it was
+    /// stored as `.znn`. Byte-identical to the single-hub
+    /// [`HubClient::download`], including under replica failure — every
+    /// stripe verifies its frames, failed peers fail over in ring order,
+    /// and the reassembled blob must hash to the checksum the fleet
+    /// reports before it is decoded.
+    pub fn download(
+        &mut self,
+        name: &str,
+        compressed: bool,
+        sim: &mut NetSim,
+    ) -> Result<(Vec<u8>, FleetReport)> {
+        let stored = FleetClient::stored_name(name, compressed);
+        let replicas = self.replicas_of(&stored);
+        if replicas.is_empty() {
+            return Err(Error::Invalid("fleet has no nodes".into()));
+        }
+        // Stat + index from the first live replica.
+        let mut meta: Option<(u64, u64, Option<(TensorIndex, Vec<u8>)>)> = None;
+        let mut failovers = 0u64;
+        let mut last_err: Option<Error> = None;
+        for id in &replicas {
+            match self.try_on(id, |c| {
+                let (total, _, _, ck) = c.stat_full(&stored)?;
+                let idx = fetch_remote_index(c, &stored, total)?;
+                Ok((total, ck, idx))
+            }) {
+                Ok(m) => {
+                    meta = Some(m);
+                    break;
+                }
+                Err(e) => {
+                    failovers += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+        let Some((total, stored_ck, idx)) = meta else {
+            return Err(last_err.unwrap_or_else(|| Error::Invalid("no replicas".into())));
+        };
+        let spans = match &idx {
+            Some((idx, _)) => stripe_spans(idx, total, self.cfg.peers.max(1)),
+            None => vec![(0, total)],
+        };
+        if spans.len() < 2 {
+            // Un-indexed, tiny, or single-frame blob: resumable
+            // single-peer path with replica failover.
+            return self.download_single_peer(name, compressed, &replicas, failovers, sim);
+        }
+        let header = idx.expect("spans imply an index").1;
+        let results = self.fetch_stripes(&stored, &spans, &replicas, &header);
+        let mut buf: Vec<u8> = Vec::with_capacity(total as usize);
+        let mut wire_total = 0u64;
+        let mut by_peer: BTreeMap<String, u64> = BTreeMap::new();
+        for r in results {
+            let s = r?;
+            failovers += s.failovers;
+            wire_total += s.bytes.len() as u64;
+            *by_peer.entry(s.node).or_insert(0) += s.bytes.len() as u64;
+            buf.extend_from_slice(&s.bytes);
+        }
+        if buf.len() as u64 != total {
+            return Err(Error::Corrupt(format!(
+                "striped download assembled {} of {total} bytes",
+                buf.len()
+            )));
+        }
+        if blob_ck(&buf) != stored_ck {
+            return Err(Error::Corrupt(
+                "striped download failed its end-to-end checksum".into(),
+            ));
+        }
+        // Peers transfer in parallel: the simulated aggregate time is
+        // the slowest peer's, which is the whole point of striping.
+        let transfer_secs = by_peer
+            .values()
+            .map(|&b| sim.transfer_secs(b))
+            .fold(0.0f64, f64::max);
+        let peers = by_peer.len();
+        let (raw, codec_secs) = decode_blob(buf, compressed, self.threads)?;
+        let report = TransferReport {
+            name: name.to_string(),
+            raw_len: raw.len(),
+            wire_len: total as usize,
+            wire_total,
+            codec_secs,
+            transfer_secs,
+        };
+        Ok((raw, FleetReport { report, peers, stripes: spans.len(), failovers }))
+    }
+
+    fn download_single_peer(
+        &mut self,
+        name: &str,
+        compressed: bool,
+        replicas: &[String],
+        mut failovers: u64,
+        sim: &mut NetSim,
+    ) -> Result<(Vec<u8>, FleetReport)> {
+        let mut last_err: Option<Error> = None;
+        for id in replicas {
+            match self.try_on(id, |c| c.download(name, compressed, sim)) {
+                Ok((raw, report)) => {
+                    return Ok((
+                        raw,
+                        FleetReport { report, peers: 1, stripes: 1, failovers },
+                    ))
+                }
+                Err(e) => {
+                    failovers += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Invalid("no replicas".into())))
+    }
+
+    /// Fan the stripes out, one worker per stripe, each trying the
+    /// replica list rotated by stripe index (spreading load), each
+    /// connection under the fleet retry policy.
+    fn fetch_stripes(
+        &self,
+        stored: &str,
+        spans: &[(u64, u64)],
+        replicas: &[String],
+        header: &[u8],
+    ) -> Vec<Result<StripeResult>> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(off, len))| {
+                    let cands: Vec<(String, String)> = (0..replicas.len())
+                        .map(|k| {
+                            let id = &replicas[(i + k) % replicas.len()];
+                            (id.clone(), self.addrs.get(id).cloned().unwrap_or_default())
+                        })
+                        .collect();
+                    let retry = self.cfg.retry;
+                    let direct = self.direct;
+                    s.spawn(move || fetch_stripe(stored, off, len, cands, header, retry, direct))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::Invalid("stripe worker panicked".into())))
+                })
+                .collect()
+        })
+    }
+
+    /// Fetch one tensor by name, with replica failover. The placement
+    /// offset comes from the validated wire meta
+    /// ([`HubClient::get_tensor_placed`]).
+    pub fn get_tensor(&mut self, name: &str, tensor: &str) -> Result<TensorFetch> {
+        let stored = format!("{name}.znn");
+        let replicas = self.replicas_of(&stored);
+        let mut last_err: Option<Error> = None;
+        for id in &replicas {
+            match self.try_on(id, |c| c.get_tensor_placed(name, tensor)) {
+                Ok(f) => return Ok(f),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Invalid("no replicas".into())))
+    }
+
+    /// Every blob name stored anywhere in the fleet.
+    pub fn list_all(&mut self) -> Result<Vec<String>> {
+        let mut names = BTreeSet::new();
+        let ids: Vec<String> = self.ring.nodes().to_vec();
+        let mut last_err: Option<Error> = None;
+        let mut any = false;
+        for id in &ids {
+            match self.try_on(id, |c| c.list()) {
+                Ok(list) => {
+                    any = true;
+                    names.extend(list);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if !any {
+            return Err(last_err
+                .unwrap_or_else(|| Error::Invalid("fleet has no reachable nodes".into())));
+        }
+        Ok(names.into_iter().collect())
+    }
+
+    /// Join `id` at `addr` and stream only the blobs whose ring
+    /// ownership moved onto it.
+    pub fn add_node(&mut self, id: &str, addr: &str) -> Result<RebalanceReport> {
+        let old = self.ring.clone();
+        if !self.ring.add_node(id) {
+            return Err(Error::Invalid(format!("node '{id}' already in the fleet")));
+        }
+        self.addrs.insert(id.to_string(), addr.to_string());
+        self.rebalance_from(&old)
+    }
+
+    /// Remove `id` (treated as already dead: nothing is read from it)
+    /// and re-replicate the blobs it owned onto their new replicas.
+    /// With R ≥ 2 every such blob still has a live source.
+    pub fn remove_node(&mut self, id: &str) -> Result<RebalanceReport> {
+        let old = self.ring.clone();
+        if !self.ring.remove_node(id) {
+            return Err(Error::Invalid(format!("node '{id}' not in the fleet")));
+        }
+        self.addrs.remove(id);
+        self.clients.remove(id);
+        self.rebalance_from(&old)
+    }
+
+    /// Stream exactly the blobs whose replica set changed between `old`
+    /// and the current ring, each verified against its source checksum.
+    fn rebalance_from(&mut self, old: &HashRing) -> Result<RebalanceReport> {
+        let mut names: BTreeSet<String> = BTreeSet::new();
+        let surviving: Vec<String> = old
+            .nodes()
+            .iter()
+            .filter(|id| self.addrs.contains_key(*id))
+            .cloned()
+            .collect();
+        for id in &surviving {
+            if let Ok(list) = self.try_on(id, |c| c.list()) {
+                names.extend(list);
+            }
+        }
+        let plan = moved_blobs(old, &self.ring, names.iter().map(String::as_str));
+        let mut bytes = 0u64;
+        // The simulated clock is irrelevant for a control-plane copy;
+        // a throwaway sim keeps the client API uniform.
+        let mut sim = NetSim::new(crate::hub::netsim::NetProfile::UPLOAD, 0);
+        for (name, gained) in &plan {
+            let src = old
+                .replicas_for(name)
+                .into_iter()
+                .find(|id| self.addrs.contains_key(*id))
+                .map(String::from)
+                .ok_or_else(|| {
+                    Error::Invalid(format!("blob '{name}' has no surviving source replica"))
+                })?;
+            let (total, _, _, ck) = self.try_on(&src, |c| c.stat_full(name))?;
+            let blob = self.try_on(&src, |c| c.get_range(name, 0, total))?;
+            if blob.len() as u64 != total || blob_ck(&blob) != ck {
+                return Err(Error::Corrupt(format!(
+                    "rebalance source copy of '{name}' failed its checksum"
+                )));
+            }
+            for dst in gained {
+                // cfg None: the stored bytes move verbatim under their
+                // stored name (already `.znn`-suffixed when compressed).
+                self.try_on(dst, |c| c.upload(name, &blob, None, &mut sim))?;
+                bytes += total;
+            }
+        }
+        Ok(RebalanceReport { moved: plan, bytes })
+    }
+}
+
+struct StripeResult {
+    node: String,
+    bytes: Vec<u8>,
+    failovers: u64,
+}
+
+/// One stripe worker: try each candidate replica in order; a candidate
+/// counts only if its bytes arrive complete *and* its frames verify.
+fn fetch_stripe(
+    stored: &str,
+    off: u64,
+    len: u64,
+    candidates: Vec<(String, String)>,
+    header: &[u8],
+    retry: RetryPolicy,
+    direct: bool,
+) -> Result<StripeResult> {
+    let mut last_err: Option<Error> = None;
+    for (i, (id, addr)) in candidates.iter().enumerate() {
+        let conn = if direct { HubClient::connect_direct(addr) } else { HubClient::connect(addr) };
+        let mut c = match conn {
+            Ok(c) => c.with_retry_policy(retry),
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
+        match c.get_range(stored, off, len) {
+            Ok(bytes) if bytes.len() as u64 == len => {
+                if verify_stripe(header, off, &bytes) {
+                    return Ok(StripeResult { node: id.clone(), bytes, failovers: i as u64 });
+                }
+                last_err = Some(Error::Corrupt(format!(
+                    "stripe [{off}, {}) from '{id}' failed frame verification",
+                    off + len
+                )));
+            }
+            Ok(bytes) => {
+                last_err = Some(Error::Corrupt(format!(
+                    "stripe [{off}, {}) from '{id}' arrived short: {} of {len} bytes",
+                    off + len,
+                    bytes.len()
+                )));
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| Error::Invalid("stripe has no candidate replicas".into())))
+}
+
+/// Scan a stripe's frames. Stripes start on frame boundaries, so
+/// prepending the container header (for stripes past the first) yields
+/// a well-formed frame sequence the wire scanner can walk — per-frame
+/// checksums verify when the container carries them. The final stripe
+/// ends in the trailer plus index tail, which the end-to-end checksum
+/// covers.
+fn verify_stripe(header: &[u8], off: u64, bytes: &[u8]) -> bool {
+    let prefixed;
+    let view: &[u8] = if off == 0 {
+        bytes
+    } else {
+        prefixed = [header, bytes].concat();
+        &prefixed
+    };
+    match scan_wire(view) {
+        // A mid-container stripe ends exactly on a frame boundary: the
+        // scanner wants the next frame but verified everything held.
+        WireScan::NeedMore { verified } => verified == view.len(),
+        // The last stripe: frames + trailer verified; the index tail
+        // past the trailer is covered by the end-to-end checksum.
+        WireScan::Complete { .. } => true,
+        WireScan::Corrupt { .. } => false,
+        // Structureless bytes can't be frame-verified mid-stream; the
+        // striped path only runs on indexed ZNS1 containers, so this is
+        // a corrupt (or mis-sliced) stripe.
+        WireScan::Opaque => false,
+    }
+}
+
+/// Fetch and parse a stored container's tensor index plus its stream
+/// header. `Ok(None)` when the blob carries no (plausible) index — the
+/// caller falls back to the single-peer path.
+fn fetch_remote_index(
+    c: &mut HubClient,
+    stored: &str,
+    total: u64,
+) -> Result<Option<(TensorIndex, Vec<u8>)>> {
+    if total < (INDEX_FOOTER_LEN + STREAM_HEADER_LEN) as u64 {
+        return Ok(None);
+    }
+    let footer = c.get_range(stored, total - INDEX_FOOTER_LEN as u64, INDEX_FOOTER_LEN as u64)?;
+    let Some((off, len)) = section_span(total, &footer) else {
+        return Ok(None);
+    };
+    // Same implausibility cap as the server's index probe: a lying
+    // footer must not trigger a huge fetch.
+    if len > 1 << 26 {
+        return Ok(None);
+    }
+    let section = c.get_range(stored, off, len as u64)?;
+    if section.len() < 4 || section[..4] != INDEX_MAGIC {
+        return Ok(None);
+    }
+    let Ok(idx) = TensorIndex::parse_section(&section) else {
+        return Ok(None);
+    };
+    let header = c.get_range(stored, 0, STREAM_HEADER_LEN as u64)?;
+    Ok(Some((idx, header)))
+}
+
+/// Decode downloaded container bytes (or pass raw bytes through).
+fn decode_blob(buf: Vec<u8>, compressed: bool, threads: usize) -> Result<(Vec<u8>, f64)> {
+    if !compressed {
+        return Ok((buf, 0.0));
+    }
+    let t = crate::util::Timer::start();
+    let mapped = MappedBytes::from_vec(buf);
+    let mut zr = ZnnReader::from_mapped(mapped)?.with_threads(threads);
+    let mut out = Vec::new();
+    zr.read_to_end(&mut out)?;
+    drop(zr);
+    Ok((out, t.secs()))
+}
+
+/// A local fleet of in-process hubs for tests, benches, and the CLI:
+/// N servers on ephemeral loopback ports, with stable logical ids
+/// (`hub0`, `hub1`, …) so placement survives a node's address changing
+/// (e.g. being fronted by a fault proxy).
+pub struct Fleet {
+    servers: Vec<Option<HubServer>>,
+    ids: Vec<String>,
+    addrs: Vec<String>,
+}
+
+impl Fleet {
+    /// Start `n` hubs with default tuning.
+    pub fn start(n: usize) -> Result<Fleet> {
+        let mut servers = Vec::with_capacity(n);
+        let mut ids = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = HubServer::start()?;
+            ids.push(format!("hub{i}"));
+            addrs.push(s.addr().to_string());
+            servers.push(Some(s));
+        }
+        Ok(Fleet { servers, ids, addrs })
+    }
+
+    /// `(id, address)` membership pairs for a [`FleetClient`].
+    pub fn members(&self) -> Vec<(String, String)> {
+        self.ids.iter().cloned().zip(self.addrs.iter().cloned()).collect()
+    }
+
+    /// A node's dial address.
+    pub fn addr_of(&self, id: &str) -> Option<&str> {
+        let i = self.ids.iter().position(|n| n == id)?;
+        Some(&self.addrs[i])
+    }
+
+    /// Kill one node (replica death). Returns `false` for an unknown or
+    /// already-stopped id.
+    pub fn stop_node(&mut self, id: &str) -> bool {
+        let Some(i) = self.ids.iter().position(|n| n == id) else {
+            return false;
+        };
+        match self.servers[i].take() {
+            Some(s) => {
+                s.shutdown();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Shut every node down.
+    pub fn shutdown(mut self) {
+        for s in self.servers.iter_mut() {
+            if let Some(s) = s.take() {
+                s.shutdown();
+            }
+        }
+    }
+}

@@ -14,16 +14,20 @@
 //! requests — idle keep-alive connections cost no threads.
 
 pub mod client;
+pub mod cluster;
 pub(crate) mod conn;
 pub mod faultsim;
+pub mod fleet;
 pub mod netsim;
 pub mod protocol;
 pub(crate) mod reactor;
 pub mod server;
 pub mod sys;
 
-pub use client::{HubClient, RetryPolicy, TransferReport};
+pub use client::{HubClient, RetryPolicy, TensorFetch, TransferReport};
+pub use cluster::{moved_blobs, HashRing};
 pub use faultsim::{FaultKind, FaultProfile, FaultProxy, FaultSpec, ScriptedFault};
-pub use netsim::{NetProfile, NetSim};
+pub use fleet::{Fleet, FleetClient, FleetConfig, FleetReport, RebalanceReport};
+pub use netsim::{BANDWIDTH_FLOOR_MB_S, NetProfile, NetSim};
 pub use protocol::{encode_range, parse_range, Op, ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
 pub use server::{HubServer, HubServerBuilder};

@@ -15,7 +15,22 @@ pub struct NetProfile {
     pub jitter: f64,
 }
 
+/// Hard floor on the jittered bandwidth a transfer can draw, in MB/s.
+/// A profile whose jitter range dips below this floor would have its
+/// tail latencies silently flattened by the clamp — `transfer_secs`
+/// debug-asserts every draw stays above it, so such a profile fails
+/// loudly in tests instead of understating simulated tail latency. The
+/// clamp itself still applies in release builds as a division guard.
+pub const BANDWIDTH_FLOOR_MB_S: f64 = 0.1;
+
 impl NetProfile {
+    /// Worst-case bandwidth a jitter draw of this profile can produce
+    /// (`mbps * (1 - jitter)`). Keep it above
+    /// [`BANDWIDTH_FLOOR_MB_S`] or the clamp distorts tail latency.
+    pub fn min_mbps(&self) -> f64 {
+        self.mbps * (1.0 - self.jitter)
+    }
+
     /// Cloud VM, first (uncached) download: 20–40 MB/s.
     pub const CLOUD_FIRST: NetProfile =
         NetProfile { name: "cloud-1st", mbps: 30.0, jitter: 0.33 };
@@ -44,10 +59,22 @@ impl NetSim {
         NetSim { profile, rng: Xoshiro256::seed_from_u64(seed) }
     }
 
-    /// Simulated seconds to move `bytes` over this regime.
+    /// Simulated seconds to move `bytes` over this regime. The jittered
+    /// bandwidth is clamped at [`BANDWIDTH_FLOOR_MB_S`]; a draw that
+    /// actually hits the clamp trips a debug assertion, because a
+    /// profile jittering below the floor would report flattened (too
+    /// optimistic) tail latencies without any signal.
     pub fn transfer_secs(&mut self, bytes: u64) -> f64 {
         let jitter = 1.0 + (self.rng.uniform() * 2.0 - 1.0) * self.profile.jitter;
-        let bw = (self.profile.mbps * jitter).max(0.1) * 1e6; // bytes/s
+        let drawn = self.profile.mbps * jitter;
+        debug_assert!(
+            drawn >= BANDWIDTH_FLOOR_MB_S,
+            "NetProfile '{}' drew {drawn:.4} MB/s, below the {BANDWIDTH_FLOOR_MB_S} MB/s floor \
+             (min_mbps {:.4}): the clamp would understate simulated tail latency",
+            self.profile.name,
+            self.profile.min_mbps(),
+        );
+        let bw = drawn.max(BANDWIDTH_FLOOR_MB_S) * 1e6; // bytes/s
         bytes as f64 / bw
     }
 
@@ -75,6 +102,36 @@ mod tests {
         for _ in 0..1000 {
             let t = sim.transfer_secs(30_000_000); // nominal 1s
             assert!((0.7..1.55).contains(&t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn clamp_boundary_profile_never_exceeds_floor_time() {
+        // min_mbps sits exactly on the floor: every draw is legal, and
+        // no transfer can take longer than the floor-rate time.
+        let p = NetProfile { name: "floor-edge", mbps: 0.2, jitter: 0.5 };
+        assert!((p.min_mbps() - BANDWIDTH_FLOOR_MB_S).abs() < 1e-12);
+        let mut sim = NetSim::new(p, 7);
+        let bytes = 1u64 << 20;
+        let floor_secs = bytes as f64 / (BANDWIDTH_FLOOR_MB_S * 1e6);
+        for _ in 0..1000 {
+            let t = sim.transfer_secs(bytes);
+            assert!(t <= floor_secs * (1.0 + 1e-9), "t={t} exceeds floor time {floor_secs}");
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "below the 0.1 MB/s floor")]
+    fn draw_below_floor_asserts() {
+        // min_mbps is under the floor, so some draw in a long run must
+        // land below it and trip the debug assertion instead of being
+        // silently clamped.
+        let p = NetProfile { name: "too-jittery", mbps: 0.15, jitter: 0.9 };
+        assert!(p.min_mbps() < BANDWIDTH_FLOOR_MB_S);
+        let mut sim = NetSim::new(p, 8);
+        for _ in 0..1000 {
+            let _ = sim.transfer_secs(1 << 10);
         }
     }
 

@@ -21,6 +21,14 @@
 //! GET_TENSOR's body is a tensor name; the server answers with a 24-byte
 //! placement header followed by a self-contained `ZNS1` sub-container of
 //! the covering frames (see `hub::client::HubClient::get_tensor`).
+//!
+//! **Versioning note — the fleet layer adds no wire surface.** Sharded
+//! multi-hub placement, multi-peer striped downloads, rebalance, and the
+//! edge read-through cache (see `hub::cluster` / `hub::fleet`) are all
+//! composed from the seven ops above: a stripe is an ordinary RANGE, a
+//! rebalance copy is STAT + RANGE + PUT, and an edge's upstream pull is
+//! an ordinary client fetch. Any peer speaking this protocol can join a
+//! fleet; there is no version byte to bump.
 
 use crate::error::{Error, Result};
 use std::collections::VecDeque;

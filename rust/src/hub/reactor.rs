@@ -65,6 +65,9 @@ pub(crate) struct ReactorConfig {
     /// In-flight request-body budget: PUT bodies beyond this are shed
     /// with a clean error instead of buffered.
     pub(crate) max_body: u64,
+    /// Edge-cache mode: a GET/Range/GetTensor/Stat miss pulls the blob
+    /// read-through from this origin hub before answering.
+    pub(crate) origin: Option<Arc<str>>,
 }
 
 /// A finished request execution, routed back to its connection.
@@ -332,9 +335,10 @@ impl Reactor {
         let wake = Arc::clone(&self.wake_tx);
         let spool = self.cfg.spool_dir.clone();
         let max_body = self.cfg.max_body;
+        let origin = self.cfg.origin.clone();
         let job = move || {
             let (resp, close_after) =
-                execute_request(req, &store, &stop, spool.as_deref(), max_body);
+                execute_request(req, &store, &stop, spool.as_deref(), max_body, origin.as_deref());
             completions
                 .lock()
                 .unwrap()

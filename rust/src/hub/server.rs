@@ -207,6 +207,7 @@ pub struct HubServerBuilder {
     spool_dir: Option<PathBuf>,
     io_timeout: Option<Duration>,
     max_body: Option<u64>,
+    origin: Option<String>,
 }
 
 impl HubServerBuilder {
@@ -250,6 +251,17 @@ impl HubServerBuilder {
         self
     }
 
+    /// Edge-cache mode: a GET/Range/GetTensor/Stat miss pulls the whole
+    /// blob read-through from the hub at `origin` (checksum-verified, one
+    /// hop, stored like a local PUT — spooled when a spool dir is set)
+    /// and then serves it from the local store; later hits never touch
+    /// the origin again. List and Put stay local. Default: the
+    /// `ZIPNN_FLEET_ORIGIN` env var, else off.
+    pub fn read_through(mut self, origin: impl Into<String>) -> Self {
+        self.origin = Some(origin.into());
+        self
+    }
+
     /// Bind an ephemeral loopback port and start the reactor.
     pub fn start(self) -> Result<HubServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
@@ -269,6 +281,10 @@ impl HubServerBuilder {
             spool_dir,
             io_timeout: self.io_timeout.unwrap_or(Duration::from_secs(5)),
             max_body: self.max_body.unwrap_or_else(default_max_body),
+            origin: self
+                .origin
+                .or_else(crate::util::env::fleet_origin)
+                .map(|o| Arc::<str>::from(o.as_str())),
         };
         // Built here so setup failures (poller, self-pipe) surface as an
         // error instead of a silently dead server.
@@ -320,6 +336,7 @@ impl HubServer {
             spool_dir: None,
             io_timeout: None,
             max_body: None,
+            origin: None,
         }
     }
 
@@ -361,6 +378,7 @@ pub(crate) fn execute_request(
     stop: &AtomicBool,
     spool: Option<&Path>,
     max_body: u64,
+    origin: Option<&str>,
 ) -> (Response, bool) {
     match req.op {
         Op::Put => {
@@ -387,7 +405,7 @@ pub(crate) fn execute_request(
             (Response::Small(small_response(true, b"")), false)
         }
         Op::Get => {
-            let blob = store.lock().unwrap().get(&req.name).cloned();
+            let blob = lookup(store, &req.name, origin, spool, max_body);
             match blob {
                 Some(blob) => {
                     let len = blob.total;
@@ -403,7 +421,7 @@ pub(crate) fn execute_request(
             }
         }
         Op::Range => {
-            let blob = store.lock().unwrap().get(&req.name).cloned();
+            let blob = lookup(store, &req.name, origin, spool, max_body);
             let Some(blob) = blob else {
                 return (Response::Small(small_response(false, b"not found")), false);
             };
@@ -439,7 +457,7 @@ pub(crate) fn execute_request(
             (Response::Stream { head: ok_head(), segs }, false)
         }
         Op::GetTensor => {
-            let blob = store.lock().unwrap().get(&req.name).cloned();
+            let blob = lookup(store, &req.name, origin, spool, max_body);
             let Some(blob) = blob else {
                 return (Response::Small(small_response(false, b"not found")), false);
             };
@@ -471,7 +489,7 @@ pub(crate) fn execute_request(
             )
         }
         Op::Stat => {
-            let blob = store.lock().unwrap().get(&req.name).cloned();
+            let blob = lookup(store, &req.name, origin, spool, max_body);
             match blob {
                 Some(blob) => {
                     // `total frames max_frame checksum` — the trailing
@@ -494,6 +512,66 @@ pub(crate) fn execute_request(
             (Response::Small(small_response(true, b"")), true)
         }
     }
+}
+
+/// Read-path blob lookup: the local store, then — in edge-cache mode —
+/// a read-through pull from the origin hub on a miss. The pull runs on
+/// the worker thread (blocking client I/O never touches the reactor);
+/// concurrent misses of the same blob may pull twice, last store wins —
+/// both copies are verified identical bytes, so that is only wasted
+/// work, never a wrong answer.
+fn lookup(
+    store: &Store,
+    name: &str,
+    origin: Option<&str>,
+    spool: Option<&Path>,
+    max_body: u64,
+) -> Option<Arc<StoredBlob>> {
+    if let Some(blob) = store.lock().unwrap().get(name).cloned() {
+        return Some(blob);
+    }
+    let origin = origin?;
+    pull_from_origin(name, origin, store, spool, max_body)
+}
+
+/// Pull one blob from the origin hub into the local store: stat (for the
+/// checksum), ranged GET of the whole stored bytes, verify, then store
+/// exactly like a local PUT (spooled to disk when configured). One hop
+/// only — an origin that is itself an edge would chain, so don't
+/// configure rings of edges. `None` on any failure: the caller answers
+/// "not found" and the next request retries the pull.
+fn pull_from_origin(
+    name: &str,
+    origin: &str,
+    store: &Store,
+    spool: Option<&Path>,
+    max_body: u64,
+) -> Option<Arc<StoredBlob>> {
+    // Direct connection: the edge's upstream leg must not be re-routed
+    // through an env-armed fault proxy meant for the client under test.
+    let mut c = crate::hub::client::HubClient::connect_direct(origin).ok()?;
+    let (total, _, _, ck) = c.stat_full(name).ok()?;
+    if total > max_body {
+        return None;
+    }
+    let bytes = c.get_range(name, 0, total).ok()?;
+    if bytes.len() as u64 != total {
+        return None;
+    }
+    let mut h = Checksummer::streaming();
+    h.update(&bytes);
+    if h.finalize() != ck {
+        return None;
+    }
+    let frames: Vec<Vec<u8>> = bytes.chunks(FRAME_MAX).map(<[u8]>::to_vec).collect();
+    let blob = match spool {
+        Some(dir) => spool_blob(dir, &frames, total)
+            .unwrap_or_else(|_| StoredBlob::in_memory(frames, total)),
+        None => StoredBlob::in_memory(frames, total),
+    };
+    let blob = Arc::new(blob);
+    store.lock().unwrap().insert(name.to_string(), Arc::clone(&blob));
+    Some(blob)
 }
 
 /// Serialize a complete small response (status byte + chunked body).

@@ -16,7 +16,12 @@
 //!   delta       XOR-delta-compress one file against a base
 //!   apply       recover a file from base + delta
 //!   train       run the AOT training driver and report checkpoints
-//!   serve       start a model-hub server
+//!   serve       start a model-hub server (--edge-of ORIGIN makes it a
+//!               read-through edge cache of another hub)
+//!   fleet       sharded multi-hub operations: `fleet serve` starts N
+//!               hubs as one consistent-hash fleet; put/get/ls run
+//!               against a running fleet's members (multi-peer striped
+//!               downloads with replica failover)
 //!
 //! (Argument parsing is hand-rolled: no CLI crates are available offline.)
 
@@ -83,7 +88,12 @@ fn usage() -> ExitCode {
   delta      --base A --next B --out D.znn [--dtype bf16]
   apply      --base A --delta D.znn --out B
   train      [--preset lm_tiny|lm_small|cnn_tiny|cnn_small] [--steps N] [--artifacts DIR]
-  serve      (runs until killed; prints address)"
+  serve      [--edge-of ORIGIN_ADDR] (runs until killed; prints address)
+  fleet      serve [--n 3]                       start N hubs as one fleet (prints members)
+             put <file> --peers LIST [--compress] [--index (.znnm only)] [--replication R]
+             get <name> --peers LIST [--raw] [--out F] [--replication R] [--stripes N]
+             ls  --peers LIST
+             (LIST = comma-separated id=host:port members, as printed by fleet serve)"
     );
     ExitCode::FAILURE
 }
@@ -469,14 +479,135 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("'train' needs the PJRT runtime: rebuild with --features pjrt");
         }
         "serve" => {
-            let server = zipnn::hub::HubServer::start()?;
-            println!("zipnn hub serving on {}", server.addr());
+            let mut b = zipnn::hub::HubServer::builder();
+            if let Some(origin) = args.flags.get("edge-of") {
+                b = b.read_through(origin);
+            }
+            let server = b.start()?;
+            match args.flags.get("edge-of") {
+                Some(origin) => println!(
+                    "zipnn edge hub serving on {} (read-through of {origin})",
+                    server.addr()
+                ),
+                None => println!("zipnn hub serving on {}", server.addr()),
+            }
             println!("(press Ctrl-C to stop)");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
         }
+        "fleet" => return run_fleet(args),
         _ => anyhow::bail!("unknown command '{cmd}' (run without args for usage)"),
+    }
+    Ok(())
+}
+
+/// Parse a `--peers` member list: comma-separated `id=host:port` pairs,
+/// the format `fleet serve` prints.
+fn parse_members(spec: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut members = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (id, addr) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--peers wants id=host:port pairs, got '{part}'"))?;
+        members.push((id.to_string(), addr.to_string()));
+    }
+    if members.is_empty() {
+        anyhow::bail!("--peers listed no members");
+    }
+    Ok(members)
+}
+
+fn run_fleet(args: &Args) -> anyhow::Result<()> {
+    use zipnn::hub::{Fleet, FleetClient, FleetConfig, NetProfile, NetSim};
+    let sub = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("fleet needs a subcommand: serve|put|get|ls"))?;
+    if sub == "serve" {
+        let n = args.usize_flag("n", 3).max(1);
+        let fleet = Fleet::start(n)?;
+        let members: Vec<String> =
+            fleet.members().into_iter().map(|(id, addr)| format!("{id}={addr}")).collect();
+        println!("zipnn fleet of {n} hubs serving; members:");
+        println!("  --peers {}", members.join(","));
+        println!("(press Ctrl-C to stop)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let members = parse_members(&args.flag("peers", ""))?;
+    let mut cfg = FleetConfig::default();
+    if let Some(r) = args.flags.get("replication").and_then(|v| v.parse().ok()) {
+        cfg.replication = r;
+    }
+    if let Some(p) = args.flags.get("stripes").and_then(|v| v.parse().ok()) {
+        cfg.peers = p;
+    }
+    let mut client = FleetClient::connect(&members, cfg);
+    match sub.as_str() {
+        "put" => {
+            let input = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("fleet put needs an input file"))?;
+            let mut sim = NetSim::new(NetProfile::UPLOAD, 0);
+            let report = if args.flags.contains_key("index") {
+                if !input.ends_with(".znnm") {
+                    anyhow::bail!("--index needs a .znnm model");
+                }
+                let model = read_model(input)?;
+                let spans = zipnn::model::tensor_spans(&model);
+                let raw = model.to_bytes();
+                let cfg = CodecConfig::for_dtype(model.dominant_dtype())
+                    .with_threads(args.usize_flag("threads", 1));
+                client.upload_indexed(input, &raw, spans, cfg, &mut sim)?
+            } else if args.flags.contains_key("compress") {
+                let (raw, dtype) = read_input(input, args)?;
+                let cfg =
+                    CodecConfig::for_dtype(dtype).with_threads(args.usize_flag("threads", 1));
+                client.upload(input, &raw, Some(cfg), &mut sim)?
+            } else {
+                let raw = std::fs::read(input)?;
+                client.upload(input, &raw, None, &mut sim)?
+            };
+            println!(
+                "{} -> {} replicas: {} raw, {} on the wire per copy ({:.1}%)",
+                input,
+                cfg.replication.min(members.len()),
+                human_bytes(report.raw_len as u64),
+                human_bytes(report.wire_len as u64),
+                report.pct()
+            );
+        }
+        "get" => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("fleet get needs a blob name"))?;
+            let compressed = !args.flags.contains_key("raw");
+            let mut sim = NetSim::new(NetProfile::CLOUD_FIRST, 0);
+            let (bytes, rep) = client.download(name, compressed, &mut sim)?;
+            let out = args.flag("out", &format!("{name}.out"));
+            std::fs::write(&out, &bytes)?;
+            println!(
+                "{} -> {} ({}): {} stripes from {} peers, {} failovers, {:.2} s simulated",
+                name,
+                out,
+                human_bytes(bytes.len() as u64),
+                rep.stripes,
+                rep.peers,
+                rep.failovers,
+                rep.report.transfer_secs
+            );
+        }
+        "ls" => {
+            for name in client.list_all()? {
+                let replicas = client.replicas_of(&name).join(",");
+                println!("{name:<50} [{replicas}]");
+            }
+        }
+        other => anyhow::bail!("unknown fleet subcommand '{other}' (serve|put|get|ls)"),
     }
     Ok(())
 }

@@ -16,6 +16,10 @@
 //! | `ZIPNN_HUB_MAX_BODY_MB` | usize | Hub in-flight request-body budget (default 4096)   |
 //! | `ZIPNN_FAULT_PROFILE`   | name  | Hub clients connect through a fault-injecting proxy|
 //! | `ZIPNN_FAULT_SEED`      | u64   | Deterministic schedule seed for the fault proxy    |
+//! | `ZIPNN_FLEET_REPLICATION` | usize | Replicas per blob on the fleet ring (default 2)  |
+//! | `ZIPNN_FLEET_PEERS`     | usize | Concurrent peer stripes per fleet download (def. 3)|
+//! | `ZIPNN_FLEET_VNODES`    | usize | Virtual nodes per hub on the ring (default 64)     |
+//! | `ZIPNN_FLEET_ORIGIN`    | addr  | Hub serves GET misses read-through from this origin|
 //!
 //! Boolean knobs are "set at all" flags (any value, even empty, turns
 //! them on). Numeric knobs ignore unset, unparsable, and zero values —
@@ -93,4 +97,28 @@ pub fn fault_profile() -> Option<String> {
 /// schedule, so a failing run replays exactly (default 1).
 pub fn fault_seed() -> Option<u64> {
     std::env::var("ZIPNN_FAULT_SEED").ok().and_then(|v| v.parse::<u64>().ok())
+}
+
+/// `ZIPNN_FLEET_REPLICATION`: replicas per blob (R) on the fleet's
+/// consistent-hash ring (default 2).
+pub fn fleet_replication() -> Option<usize> {
+    usize_var("ZIPNN_FLEET_REPLICATION")
+}
+
+/// `ZIPNN_FLEET_PEERS`: concurrent peer stripes a fleet download fans
+/// out to (default 3; indexed blobs only — frame boundaries permitting).
+pub fn fleet_peers() -> Option<usize> {
+    usize_var("ZIPNN_FLEET_PEERS")
+}
+
+/// `ZIPNN_FLEET_VNODES`: virtual nodes per hub on the placement ring
+/// (default 64).
+pub fn fleet_vnodes() -> Option<usize> {
+    usize_var("ZIPNN_FLEET_VNODES")
+}
+
+/// `ZIPNN_FLEET_ORIGIN`: when set, a hub serves GET/Range/Stat misses
+/// read-through from this origin hub address (edge-cache mode).
+pub fn fleet_origin() -> Option<String> {
+    std::env::var("ZIPNN_FLEET_ORIGIN").ok().filter(|v| !v.is_empty())
 }

@@ -1,0 +1,323 @@
+//! Integration: the sharded multi-hub fleet — multi-peer striped
+//! downloads, replica failover under scripted faults and dead nodes,
+//! edge read-through caching, and membership-change rebalancing.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+use zipnn::codec::CodecConfig;
+use zipnn::fp::DType;
+use zipnn::hub::{
+    FaultKind, FaultProxy, Fleet, FleetClient, FleetConfig, HubClient, HubServer, NetProfile,
+    NetSim, RetryPolicy, ScriptedFault,
+};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+use zipnn::model::tensor_spans;
+
+/// A fast-failing policy so dead-replica tests don't sit in backoff.
+fn quick_retry() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        base_backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(10),
+        deadline: Duration::from_secs(30),
+    }
+}
+
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        replication: 2,
+        peers: 3,
+        vnodes: 64,
+        retry: quick_retry(),
+    }
+}
+
+/// Small chunks so a ~2 MiB model yields many container frames — the
+/// stripe boundaries multi-peer downloads split at.
+fn small_chunk_cfg() -> CodecConfig {
+    CodecConfig::for_dtype(DType::BF16).with_chunk_size(16 * 1024)
+}
+
+/// Tentpole acceptance: a 3-hub / R=2 fleet serves a striped multi-peer
+/// download byte-identical to the single-hub path, with both replicas
+/// actually carrying stripes.
+#[test]
+fn multi_peer_download_matches_single_hub() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let model = generate(&SyntheticSpec::new("mp", Category::RegularBF16, 2 << 20, 7));
+    let spans = tensor_spans(&model);
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 1);
+    client
+        .upload_indexed("mp", &raw, spans, small_chunk_cfg(), &mut sim)
+        .unwrap();
+
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 2);
+    let (got, rep) = client.download("mp", true, &mut down).unwrap();
+    assert_eq!(got, raw, "fleet download must return exact bytes");
+    assert!(rep.stripes >= 2, "expected a striped download, got {} stripe(s)", rep.stripes);
+    assert_eq!(rep.peers, 2, "both replicas should serve stripes");
+    assert_eq!(rep.failovers, 0, "no failovers on a healthy fleet");
+    assert_eq!(rep.report.wire_total, rep.report.wire_len as u64);
+
+    // Byte-identical to the single-hub client against one replica.
+    let replica = client.replicas_of("mp.znn")[0].clone();
+    let addr = fleet.addr_of(&replica).unwrap().to_string();
+    let mut single = HubClient::connect_direct(&addr).unwrap();
+    let (single_got, _) = single.download("mp", true, &mut down).unwrap();
+    assert_eq!(single_got, got, "fleet and single-hub paths must agree");
+    fleet.shutdown();
+}
+
+/// The whole fleet surface under whatever `ZIPNN_FAULT_PROFILE` the
+/// environment arms (the CI fleet fault leg): uploads replicate,
+/// striped and fallback downloads stay byte-identical. No accounting
+/// asserts — fault schedules change peer/failover counts.
+#[test]
+fn fleet_roundtrip_env_faults() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect(&fleet.members(), fleet_cfg());
+    let model = generate(&SyntheticSpec::new("ef", Category::RegularBF16, 1 << 20, 11));
+    let spans = tensor_spans(&model);
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 3);
+    client
+        .upload_indexed("ef", &raw, spans, small_chunk_cfg(), &mut sim)
+        .unwrap();
+    let blob: Vec<u8> = (0..96 * 1024).map(|i| (i % 251) as u8).collect();
+    client.upload("ef-raw", &blob, None, &mut sim).unwrap();
+
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 4);
+    let (got, _) = client.download("ef", true, &mut down).unwrap();
+    assert_eq!(got, raw);
+    let (got_raw, rep) = client.download("ef-raw", false, &mut down).unwrap();
+    assert_eq!(got_raw, blob);
+    assert_eq!(rep.stripes, 1, "un-indexed blobs use the single-peer fallback");
+    fleet.shutdown();
+}
+
+/// One replica keeps dropping connections mid-stripe (scripted proxy on
+/// its dial address — placement is by node id, so the ring is
+/// untouched): the download fails the stripe over to the other replica
+/// and still returns byte-identical data.
+#[test]
+fn replica_death_mid_stripe_fails_over_byte_identical() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut placer = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let model = generate(&SyntheticSpec::new("rd", Category::RegularBF16, 2 << 20, 21));
+    let spans = tensor_spans(&model);
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 5);
+    placer
+        .upload_indexed("rd", &raw, spans, small_chunk_cfg(), &mut sim)
+        .unwrap();
+
+    // Front the primary replica with a proxy that drops every
+    // connection 64 KiB into the response — mid-stripe, every retry.
+    let primary = placer.replicas_of("rd.znn")[0].clone();
+    let primary_addr = fleet.addr_of(&primary).unwrap().to_string();
+    let script: Vec<ScriptedFault> = (0..12)
+        .map(|_| ScriptedFault { after_bytes: 64 * 1024, kind: FaultKind::Drop })
+        .collect();
+    let proxy = FaultProxy::start_scripted(&primary_addr, script).unwrap();
+    let members: Vec<(String, String)> = fleet
+        .members()
+        .into_iter()
+        .map(|(id, addr)| {
+            if id == primary {
+                (id, proxy.addr().to_string())
+            } else {
+                (id, addr)
+            }
+        })
+        .collect();
+
+    let mut client = FleetClient::connect_direct(&members, fleet_cfg());
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 6);
+    let (got, rep) = client.download("rd", true, &mut down).unwrap();
+    assert_eq!(got, raw, "failover download must stay byte-identical");
+    assert!(
+        rep.failovers >= 1,
+        "the dropping replica must have cost at least one failover"
+    );
+    fleet.shutdown();
+}
+
+/// A replica that is outright dead (listener closed): single-peer
+/// fallback and meta fetches fail over to the surviving replica.
+#[test]
+fn dead_replica_falls_over_to_survivor() {
+    let mut fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let blob: Vec<u8> = (0..128 * 1024).map(|i| (i * 31 % 256) as u8).collect();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 7);
+    client.upload("dead", &blob, None, &mut sim).unwrap();
+
+    let primary = client.replicas_of("dead")[0].clone();
+    assert!(fleet.stop_node(&primary));
+
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 8);
+    let (got, rep) = client.download("dead", false, &mut down).unwrap();
+    assert_eq!(got, blob);
+    assert!(rep.failovers >= 1, "the dead primary must be failed over");
+    fleet.shutdown();
+}
+
+/// Edge read-through: a miss pulls the blob from the origin into the
+/// edge's local store; after that the origin can die and the edge keeps
+/// serving — including tensor range-GETs out of the cached container.
+#[test]
+fn edge_read_through_caches_and_survives_origin_death() {
+    let origin = HubServer::start().unwrap();
+    let edge = HubServer::builder().read_through(origin.addr()).start().unwrap();
+
+    let model = generate(&SyntheticSpec::new("edge", Category::RegularBF16, 1 << 20, 31));
+    let spans = tensor_spans(&model);
+    let tensor = spans[spans.len() / 2].clone();
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 9);
+    let mut up = HubClient::connect_direct(origin.addr()).unwrap();
+    up.upload_indexed("edge", &raw, spans, small_chunk_cfg(), &mut sim)
+        .unwrap();
+
+    // Miss → pull → serve. List stays local: the edge starts empty.
+    let mut c = HubClient::connect_direct(edge.addr()).unwrap();
+    assert!(c.list().unwrap().is_empty());
+    let (got, _) = c.download("edge", true, &mut sim).unwrap();
+    assert_eq!(got, raw, "read-through download must be byte-identical");
+    assert!(c.list().unwrap().contains(&"edge.znn".to_string()));
+
+    origin.shutdown();
+    // Cached: served from the edge's own store, origin long gone.
+    let mut c2 = HubClient::connect_direct(edge.addr()).unwrap();
+    let (again, _) = c2.download("edge", true, &mut sim).unwrap();
+    assert_eq!(again, raw);
+    let fetched = c2.get_tensor_placed("edge", &tensor.name).unwrap();
+    assert_eq!(fetched.offset, tensor.offset);
+    assert_eq!(
+        fetched.data,
+        raw[tensor.offset as usize..(tensor.offset + tensor.len) as usize].to_vec()
+    );
+    // A name the origin never held is a clean miss, not a hang.
+    assert!(c2.stat("nope").is_err());
+    edge.shutdown();
+}
+
+/// Uploads land on exactly the ring's replica set — every member holds
+/// a blob iff the ring places it there.
+#[test]
+fn upload_places_exactly_on_ring_replicas() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 10);
+    let names: Vec<String> = (0..6).map(|i| format!("place-{i}")).collect();
+    for name in &names {
+        let blob = vec![name.as_bytes()[6]; 32 * 1024];
+        client.upload(name, &blob, None, &mut sim).unwrap();
+    }
+    for (id, addr) in fleet.members() {
+        let held: BTreeSet<String> =
+            HubClient::connect_direct(&addr).unwrap().list().unwrap().into_iter().collect();
+        for name in &names {
+            let expect = client.replicas_of(name).contains(&id);
+            assert_eq!(
+                held.contains(name),
+                expect,
+                "'{name}' on {id}: held={} placed={expect}",
+                held.contains(name)
+            );
+        }
+    }
+    fleet.shutdown();
+}
+
+/// Membership changes stream only the blobs whose ring ownership moved,
+/// and everything stays downloadable afterwards — including after a
+/// node dies and is removed.
+#[test]
+fn rebalance_streams_only_moved_blobs() {
+    let mut fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 12);
+    let mut blobs: Vec<(String, Vec<u8>)> = Vec::new();
+    for i in 0..6 {
+        let name = format!("reb-{i}");
+        let blob: Vec<u8> = (0..48 * 1024).map(|k| ((k + i * 37) % 256) as u8).collect();
+        client.upload(&name, &blob, None, &mut sim).unwrap();
+        blobs.push((name, blob));
+    }
+    let before: Vec<BTreeSet<String>> = blobs
+        .iter()
+        .map(|(n, _)| client.replicas_of(n).into_iter().collect())
+        .collect();
+
+    // Join a standalone 4th hub.
+    let extra = HubServer::start().unwrap();
+    let report = client.add_node("hub3", extra.addr()).unwrap();
+    assert!(
+        report.moved.iter().all(|(_, gained)| gained == &vec!["hub3".to_string()]),
+        "a pure join may only stream blobs onto the joiner: {:?}",
+        report.moved
+    );
+    let moved_names: BTreeSet<&str> =
+        report.moved.iter().map(|(n, _)| n.as_str()).collect();
+    // The joiner holds exactly the moved blobs; unmoved placements are
+    // untouched.
+    let on_joiner: BTreeSet<String> =
+        HubClient::connect_direct(extra.addr()).unwrap().list().unwrap().into_iter().collect();
+    assert_eq!(
+        on_joiner,
+        moved_names.iter().map(|s| s.to_string()).collect::<BTreeSet<_>>(),
+        "the joiner must hold exactly the streamed blobs"
+    );
+    for ((name, _), old_set) in blobs.iter().zip(&before) {
+        let new_set: BTreeSet<String> = client.replicas_of(name).into_iter().collect();
+        if !moved_names.contains(name.as_str()) {
+            assert_eq!(&new_set, old_set, "unmoved '{name}' changed placement");
+        }
+    }
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 13);
+    for (name, blob) in &blobs {
+        let (got, _) = client.download(name, false, &mut down).unwrap();
+        assert_eq!(&got, blob, "'{name}' corrupted by the join rebalance");
+    }
+
+    // Kill hub0 and remove it: its blobs re-replicate from survivors
+    // (R=2 guarantees a live source) and every blob stays readable.
+    assert!(fleet.stop_node("hub0"));
+    let report = client.remove_node("hub0").unwrap();
+    for (name, gained) in &report.moved {
+        assert!(!gained.contains(&"hub0".to_string()), "'{name}' gained the dead node");
+    }
+    for (name, blob) in &blobs {
+        assert!(!client.replicas_of(name).contains(&"hub0".to_string()));
+        let (got, _) = client.download(name, false, &mut down).unwrap();
+        assert_eq!(&got, blob, "'{name}' lost after removing a dead node");
+    }
+    fleet.shutdown();
+    extra.shutdown();
+}
+
+/// `get_tensor` routes to a replica and surfaces validated placement.
+#[test]
+fn fleet_get_tensor_places_and_validates() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let model = generate(&SyntheticSpec::new("gt", Category::RegularBF16, 1 << 20, 17));
+    let spans = tensor_spans(&model);
+    let tensor = spans[spans.len() / 2].clone();
+    let raw = model.to_bytes();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 14);
+    client
+        .upload_indexed("gt", &raw, spans, small_chunk_cfg(), &mut sim)
+        .unwrap();
+    let fetched = client.get_tensor("gt", &tensor.name).unwrap();
+    assert_eq!(fetched.offset, tensor.offset);
+    assert_eq!(
+        fetched.data,
+        raw[tensor.offset as usize..(tensor.offset + tensor.len) as usize].to_vec()
+    );
+    assert!(fetched.wire > 0 && fetched.wire < raw.len() as u64);
+    fleet.shutdown();
+}

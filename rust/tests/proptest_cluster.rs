@@ -1,0 +1,215 @@
+//! Hand-rolled property tests for the fleet's consistent-hash ring
+//! (`hub::cluster`): placement balance, replica distinctness, and the
+//! minimal-remapping invariants the rebalance path depends on.
+
+use std::collections::BTreeSet;
+use zipnn::hub::{moved_blobs, HashRing};
+use zipnn::util::Xoshiro256;
+
+fn ring_of(n: usize, r: usize) -> HashRing {
+    let mut ring = HashRing::new(r);
+    for i in 0..n {
+        assert!(ring.add_node(&format!("hub{i}")));
+    }
+    ring
+}
+
+fn names(count: usize) -> Vec<String> {
+    (0..count).map(|i| format!("model-{i}.znn")).collect()
+}
+
+fn replica_set(ring: &HashRing, name: &str) -> BTreeSet<String> {
+    ring.replicas_for(name).into_iter().map(String::from).collect()
+}
+
+/// Placement balance: across 1k synthetic names, with 64 vnodes per
+/// node, no node's replica load strays past a generous band around the
+/// mean. (Deterministic — fixed names, fixed node ids — so the bound
+/// either always holds or never does.)
+#[test]
+fn balance_bound_over_1k_names() {
+    for &(n, r) in &[(3usize, 2usize), (5, 2), (8, 3)] {
+        let ring = ring_of(n, r);
+        let names = names(1000);
+        let mut load = vec![0usize; n];
+        for name in &names {
+            for rep in ring.replicas_for(name) {
+                let i: usize = rep.trim_start_matches("hub").parse().unwrap();
+                load[i] += 1;
+            }
+        }
+        let total: usize = load.iter().sum();
+        assert_eq!(total, 1000 * r, "every name places on exactly R nodes");
+        let mean = total as f64 / n as f64;
+        let max = *load.iter().max().unwrap() as f64;
+        let min = *load.iter().min().unwrap() as f64;
+        assert!(
+            max <= mean * 2.0,
+            "n={n} R={r}: max load {max} exceeds 2x mean {mean} ({load:?})"
+        );
+        assert!(
+            min >= mean / 4.0,
+            "n={n} R={r}: min load {min} under a quarter of mean {mean} ({load:?})"
+        );
+    }
+}
+
+/// Random memberships and names: replicas are always R distinct live
+/// nodes, and placement is a pure function of (membership, name).
+#[test]
+fn replicas_distinct_and_deterministic_under_random_membership() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5eed);
+    for _ in 0..20 {
+        let n = 2 + (rng.next_u64() % 9) as usize; // 2..=10 nodes
+        let r = 1 + (rng.next_u64() % 4) as usize; // R in 1..=4
+        let mut ring = HashRing::new(r);
+        // Join in a scrambled order — placement must not depend on it.
+        let mut ids: Vec<String> = (0..n).map(|i| format!("node-{i}")).collect();
+        for i in (1..ids.len()).rev() {
+            ids.swap(i, (rng.next_u64() % (i as u64 + 1)) as usize);
+        }
+        for id in &ids {
+            ring.add_node(id);
+        }
+        let reference = ring_of_ids(&{
+            let mut sorted = ids.clone();
+            sorted.sort();
+            sorted
+        }, r);
+        for k in 0..100 {
+            let name = format!("blob-{}-{k}", rng.next_u64());
+            let reps = ring.replicas_for(&name);
+            assert_eq!(reps.len(), r.min(n));
+            let set: BTreeSet<&&str> = reps.iter().collect();
+            assert_eq!(set.len(), reps.len(), "replicas must be distinct");
+            assert_eq!(
+                reps,
+                reference.replicas_for(&name),
+                "placement must not depend on join order"
+            );
+        }
+    }
+}
+
+fn ring_of_ids(ids: &[String], r: usize) -> HashRing {
+    let mut ring = HashRing::new(r);
+    for id in ids {
+        ring.add_node(id);
+    }
+    ring
+}
+
+/// Join: only the joining node gains blobs, at most one old replica is
+/// displaced per moved name, untouched names keep byte-identical
+/// replica sets, and the moved fraction stays near the joiner's fair
+/// share of the ring.
+#[test]
+fn join_remaps_only_a_bounded_share() {
+    let old = ring_of(5, 2);
+    let mut new = old.clone();
+    assert!(new.add_node("hub5"));
+    let names = names(1000);
+    let mut moved = 0usize;
+    for name in &names {
+        let before = replica_set(&old, name);
+        let after = replica_set(&new, name);
+        if before == after {
+            continue;
+        }
+        moved += 1;
+        let gained: Vec<&String> = after.difference(&before).collect();
+        let lost: Vec<&String> = before.difference(&after).collect();
+        assert_eq!(gained, vec!["hub5"], "only the joiner may gain '{name}'");
+        assert!(lost.len() <= 1, "at most one displaced replica for '{name}'");
+    }
+    // Fair share: the joiner owns ~1/6 of each of the R=2 replica
+    // slots ⇒ expect ~1/3 of names to move; bound it well clear of a
+    // full reshuffle.
+    assert!(moved > 0, "a joining node must take over some placements");
+    assert!(
+        moved <= 550,
+        "join moved {moved}/1000 names — far beyond the joiner's share"
+    );
+    // The rebalance plan streams exactly the names whose set changed.
+    let plan = moved_blobs(&old, &new, names.iter().map(String::as_str));
+    assert_eq!(plan.len(), moved, "plan must cover exactly the moved names");
+}
+
+/// Leave: names that held no replica on the leaver keep *identical*
+/// replica sets (surviving ring points never move), and names that did
+/// re-replicate onto exactly one new node while keeping the survivors.
+#[test]
+fn leave_touches_only_the_leavers_blobs() {
+    let old = ring_of(5, 2);
+    let mut new = old.clone();
+    assert!(new.remove_node("hub2"));
+    let names = names(1000);
+    let mut touched = 0usize;
+    for name in &names {
+        let before = replica_set(&old, name);
+        let after = replica_set(&new, name);
+        if !before.contains("hub2") {
+            assert_eq!(
+                before, after,
+                "'{name}' held no replica on the leaver but its placement moved"
+            );
+            continue;
+        }
+        touched += 1;
+        assert!(!after.contains("hub2"));
+        assert_eq!(after.len(), 2, "replication factor must hold after the leave");
+        let survivors: BTreeSet<String> =
+            before.iter().filter(|n| *n != "hub2").cloned().collect();
+        assert!(
+            after.is_superset(&survivors),
+            "'{name}' lost a surviving replica on an unrelated node"
+        );
+        assert_eq!(
+            after.difference(&survivors).count(),
+            1,
+            "'{name}' must gain exactly one replacement replica"
+        );
+    }
+    // ~R/n of names lived on the leaver; bound generously.
+    assert!(touched > 0);
+    assert!(
+        touched <= 650,
+        "leave touched {touched}/1000 names — far beyond the leaver's share"
+    );
+}
+
+/// `moved_blobs` across random join/leave sequences agrees with a
+/// brute-force set diff of every name's placement.
+#[test]
+fn moved_blobs_matches_brute_force_diff() {
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    let names = names(300);
+    let mut ring = ring_of(4, 2);
+    let mut next_id = 4usize;
+    for step in 0..12 {
+        let old = ring.clone();
+        if ring.len() <= 2 || rng.next_u64() % 2 == 0 {
+            ring.add_node(&format!("hub{next_id}"));
+            next_id += 1;
+        } else {
+            let victim = ring.nodes()[(rng.next_u64() % ring.len() as u64) as usize].clone();
+            ring.remove_node(&victim);
+        }
+        let plan = moved_blobs(&old, &ring, names.iter().map(String::as_str));
+        for name in &names {
+            let before = replica_set(&old, name);
+            let after = replica_set(&ring, name);
+            let expect: Vec<String> = after.difference(&before).cloned().collect();
+            let planned = plan
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, gained)| {
+                    let mut g = gained.clone();
+                    g.sort();
+                    g
+                })
+                .unwrap_or_default();
+            assert_eq!(planned, expect, "step {step}: plan disagrees for '{name}'");
+        }
+    }
+}
