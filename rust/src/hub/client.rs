@@ -702,6 +702,35 @@ impl HubClient {
         })
     }
 
+    /// Delete a stored blob. Idempotent: `Ok(true)` when a blob was
+    /// removed, `Ok(false)` when the name was already absent — repair and
+    /// rebalance re-issue deletes freely without treating "already gone"
+    /// as failure. On a persisted hub the on-disk pair is removed too.
+    pub fn delete(&mut self, name: &str) -> Result<bool> {
+        self.with_retries(|c| {
+            write_request(&mut c.stream, Op::Delete, name, b"")?;
+            let payload = read_response(&mut c.stream)?;
+            Ok(payload == b"1")
+        })
+    }
+
+    /// Health probe: `Ok` iff the server answered. The fleet repair loop
+    /// uses it (with a short timeout and no retries) to tell a live peer
+    /// from a dead one before trusting its inventory.
+    pub fn ping(&mut self) -> Result<()> {
+        self.with_retries(|c| {
+            write_request(&mut c.stream, Op::Ping, "", b"")?;
+            let payload = read_response(&mut c.stream)?;
+            if payload != b"pong" {
+                return Err(Error::Format(format!(
+                    "bad ping response '{}'",
+                    String::from_utf8_lossy(&payload)
+                )));
+            }
+            Ok(())
+        })
+    }
+
     /// List stored blob names.
     pub fn list(&mut self) -> Result<Vec<String>> {
         self.with_retries(|c| {

@@ -233,10 +233,13 @@ impl Conn {
                         // PUT bodies stream up to the server's in-flight
                         // body budget. Range/GetTensor bodies are tiny by
                         // contract (16 bytes / a tensor name), so retain
-                        // at most NAME_MAX bytes. Either way `total`
-                        // keeps the true count and the executor rejects
-                        // oversized requests with a clean error — the
-                        // server never buffers past its budget.
+                        // at most NAME_MAX bytes. Everything else —
+                        // including the empty-by-contract Delete/Ping
+                        // bodies — is counted but never retained. Either
+                        // way `total` keeps the true count and the
+                        // executor rejects oversized requests with a
+                        // clean error — the server never buffers past
+                        // its budget.
                         let keep = match req.op {
                             Op::Put => req.total <= self.max_body,
                             Op::Range | Op::GetTensor => req.total <= NAME_MAX as u64,

@@ -26,7 +26,20 @@
 //! and new rings ([`crate::hub::cluster::moved_blobs`]) and stream only
 //! the blobs that gained a replica, each verified against its source
 //! checksum before the copy counts. Removal treats the node as already
-//! dead — with R ≥ 2 every blob still has a live source replica.
+//! dead — with R ≥ 2 every blob still has a live source replica. Once a
+//! moved blob provably serves from every current replica, the copies the
+//! ring displaced are dropped with the `Delete` op — stale replicas stop
+//! wasting space the moment they stop being the last line of defence.
+//!
+//! ## Self-healing
+//!
+//! Hubs started with a cluster view ([`Fleet::start_durable`],
+//! [`crate::hub::HubServer::enable_repair`]) re-replicate and drop
+//! server-to-server, with no client involved. [`FleetClient::repair`] is
+//! the operator-driven equivalent for fleets running without one:
+//! one synchronous pass that copies every under-replicated blob onto its
+//! missing replicas (checksum-verified) and deletes provably-redundant
+//! stale copies.
 
 use crate::codec::index::{section_span, stripe_spans, TensorIndex, INDEX_FOOTER_LEN, INDEX_MAGIC};
 use crate::codec::stream::{scan_wire, Checksummer, WireScan, STREAM_HEADER_LEN};
@@ -35,9 +48,12 @@ use crate::error::{Error, Result};
 use crate::hub::client::{HubClient, RetryPolicy, TensorFetch, TransferReport};
 use crate::hub::cluster::{moved_blobs, HashRing};
 use crate::hub::netsim::NetSim;
+use crate::hub::repair::ClusterConfig;
 use crate::hub::server::HubServer;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::Read;
+use std::path::Path;
+use std::time::Duration;
 
 /// Fleet-client tuning. Defaults come from the `ZIPNN_FLEET_*` env
 /// knobs (see [`crate::util::env`]), falling back to R=2, 3 peers, and
@@ -92,6 +108,20 @@ pub struct RebalanceReport {
     pub moved: Vec<(String, Vec<String>)>,
     /// Total blob bytes streamed to new replicas.
     pub bytes: u64,
+    /// Per blob: surviving nodes whose now-displaced copy was deleted
+    /// (only after every current replica verifiably served the blob).
+    pub dropped: Vec<(String, Vec<String>)>,
+}
+
+/// What a client-driven [`FleetClient::repair`] pass did.
+#[derive(Debug, Clone, Default)]
+pub struct RepairReport {
+    /// Per blob: the replicas that were missing it and received a
+    /// verified copy.
+    pub copied: Vec<(String, Vec<String>)>,
+    /// Per blob: non-replica nodes whose stale copy was deleted (only
+    /// after every ring replica held the blob).
+    pub dropped: Vec<(String, Vec<String>)>,
 }
 
 /// Whole-blob checksum matching the hash the server reports via Stat.
@@ -481,6 +511,7 @@ impl FleetClient {
         }
         let plan = moved_blobs(old, &self.ring, names.iter().map(String::as_str));
         let mut bytes = 0u64;
+        let mut dropped: Vec<(String, Vec<String>)> = Vec::new();
         // The simulated clock is irrelevant for a control-plane copy;
         // a throwaway sim keeps the client API uniform.
         let mut sim = NetSim::new(crate::hub::netsim::NetProfile::UPLOAD, 0);
@@ -506,8 +537,167 @@ impl FleetClient {
                 self.try_on(dst, |c| c.upload(name, &blob, None, &mut sim))?;
                 bytes += total;
             }
+            if let Some(from) = self.drop_displaced(name, old) {
+                dropped.push((name.clone(), from));
+            }
         }
-        Ok(RebalanceReport { moved: plan, bytes })
+        Ok(RebalanceReport { moved: plan, bytes, dropped })
+    }
+
+    /// Delete `name` from surviving nodes the new ring no longer places
+    /// it on — but only once every *current* replica verifiably serves
+    /// it. A replica that can't be statted leaves the stale copy in
+    /// place: while the real replica set is degraded, a displaced copy
+    /// is the last line of defence, not garbage. `None` when nothing was
+    /// displaced or the drop wasn't safe.
+    fn drop_displaced(&mut self, name: &str, old: &HashRing) -> Option<Vec<String>> {
+        let current = self.replicas_of(name);
+        let stale: Vec<String> = old
+            .replicas_for(name)
+            .into_iter()
+            .map(String::from)
+            .filter(|id| self.addrs.contains_key(id) && !current.contains(id))
+            .collect();
+        if stale.is_empty() {
+            return None;
+        }
+        for id in &current {
+            if self.try_on(id, |c| c.stat_full(name)).is_err() {
+                return None;
+            }
+        }
+        let mut from = Vec::new();
+        for id in &stale {
+            if matches!(self.try_on(id, |c| c.delete(name)), Ok(true)) {
+                from.push(id.clone());
+            }
+        }
+        if from.is_empty() {
+            None
+        } else {
+            Some(from)
+        }
+    }
+
+    /// Delete a stored blob from every fleet node (idempotent, like the
+    /// wire op). Returns how many nodes actually held a copy. Errors
+    /// only when *no* node was reachable.
+    pub fn delete(&mut self, stored: &str) -> Result<usize> {
+        let ids: Vec<String> = self.ring.nodes().to_vec();
+        let mut removed = 0usize;
+        let mut reached = false;
+        let mut last_err: Option<Error> = None;
+        for id in &ids {
+            match self.try_on(id, |c| c.delete(stored)) {
+                Ok(had) => {
+                    reached = true;
+                    removed += usize::from(had);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if !reached {
+            return Err(last_err
+                .unwrap_or_else(|| Error::Invalid("fleet has no reachable nodes".into())));
+        }
+        Ok(removed)
+    }
+
+    /// One synchronous, client-driven repair pass over the whole fleet:
+    /// every blob missing from one of its ring replicas is copied there
+    /// from a live holder (length- and checksum-verified first), and
+    /// stale copies on non-replica nodes are deleted once every replica
+    /// holds the blob. Unreachable nodes take no part — their blobs are
+    /// re-replicated from whoever else holds them, and nothing is
+    /// deleted while a replica can't be verified.
+    pub fn repair(&mut self) -> Result<RepairReport> {
+        let ids: Vec<String> = self.ring.nodes().to_vec();
+        let mut inventory: HashMap<String, BTreeSet<String>> = HashMap::new();
+        for id in &ids {
+            if let Ok(list) = self.try_on(id, |c| c.list()) {
+                inventory.insert(id.clone(), list.into_iter().collect());
+            }
+        }
+        if inventory.is_empty() {
+            return Err(Error::Invalid("fleet has no reachable nodes".into()));
+        }
+        let names: BTreeSet<String> = inventory.values().flatten().cloned().collect();
+        let mut report = RepairReport::default();
+        let mut sim = NetSim::new(crate::hub::netsim::NetProfile::UPLOAD, 0);
+        for name in &names {
+            let replicas = self.replicas_of(name);
+            let missing: Vec<String> = replicas
+                .iter()
+                .filter(|id| inventory.get(*id).is_some_and(|inv| !inv.contains(name)))
+                .cloned()
+                .collect();
+            if !missing.is_empty() {
+                if let Some(bytes) = self.fetch_verified(name, &inventory) {
+                    let mut fixed = Vec::new();
+                    for dst in &missing {
+                        if self.try_on(dst, |c| c.upload(name, &bytes, None, &mut sim)).is_ok() {
+                            fixed.push(dst.clone());
+                            if let Some(inv) = inventory.get_mut(dst) {
+                                inv.insert(name.clone());
+                            }
+                        }
+                    }
+                    if !fixed.is_empty() {
+                        report.copied.push((name.clone(), fixed));
+                    }
+                }
+            }
+            let all_replicas_hold = replicas
+                .iter()
+                .all(|id| inventory.get(id).is_some_and(|inv| inv.contains(name)));
+            if !all_replicas_hold {
+                continue;
+            }
+            let stale: Vec<String> = inventory
+                .iter()
+                .filter(|(id, inv)| !replicas.contains(*id) && inv.contains(name))
+                .map(|(id, _)| id.clone())
+                .collect();
+            let mut from = Vec::new();
+            for id in &stale {
+                if matches!(self.try_on(id, |c| c.delete(name)), Ok(true)) {
+                    from.push(id.clone());
+                    if let Some(inv) = inventory.get_mut(id) {
+                        inv.remove(name);
+                    }
+                }
+            }
+            if !from.is_empty() {
+                report.dropped.push((name.clone(), from));
+            }
+        }
+        Ok(report)
+    }
+
+    /// Fetch `name`'s bytes from the first live holder whose copy passes
+    /// the length + whole-blob-checksum gate.
+    fn fetch_verified(
+        &mut self,
+        name: &str,
+        inventory: &HashMap<String, BTreeSet<String>>,
+    ) -> Option<Vec<u8>> {
+        let holders: Vec<String> = inventory
+            .iter()
+            .filter(|(_, inv)| inv.contains(name))
+            .map(|(id, _)| id.clone())
+            .collect();
+        for src in &holders {
+            let Ok((total, _, _, ck)) = self.try_on(src, |c| c.stat_full(name)) else {
+                continue;
+            };
+            let Ok(bytes) = self.try_on(src, |c| c.get_range(name, 0, total)) else {
+                continue;
+            };
+            if bytes.len() as u64 == total && blob_ck(&bytes) == ck {
+                return Some(bytes);
+            }
+        }
+        None
     }
 }
 
@@ -660,9 +850,51 @@ impl Fleet {
         Ok(Fleet { servers, ids, addrs })
     }
 
+    /// Start `n` hubs persisting under `root/hub<i>` (crash-safe
+    /// storage, scrubbing every `scrub`), then wire them into a
+    /// self-healing cluster: every hub learns the full membership and
+    /// runs the background repair loop every `repair` with
+    /// `replication`-way placement. Repair can only be enabled after
+    /// every member is bound — addresses are ephemeral until then.
+    pub fn start_durable(
+        n: usize,
+        root: &Path,
+        replication: usize,
+        scrub: Duration,
+        repair: Duration,
+    ) -> Result<Fleet> {
+        let mut servers = Vec::with_capacity(n);
+        let mut ids = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = HubServer::builder()
+                .persist_dir(root.join(format!("hub{i}")))
+                .scrub_interval(scrub)
+                .start()?;
+            ids.push(format!("hub{i}"));
+            addrs.push(s.addr().to_string());
+            servers.push(Some(s));
+        }
+        let members: Vec<(String, String)> =
+            ids.iter().cloned().zip(addrs.iter().cloned()).collect();
+        for (i, s) in servers.iter_mut().enumerate() {
+            if let Some(s) = s.as_mut() {
+                s.enable_repair(ClusterConfig::new(&ids[i], members.clone(), replication), repair);
+            }
+        }
+        Ok(Fleet { servers, ids, addrs })
+    }
+
     /// `(id, address)` membership pairs for a [`FleetClient`].
     pub fn members(&self) -> Vec<(String, String)> {
         self.ids.iter().cloned().zip(self.addrs.iter().cloned()).collect()
+    }
+
+    /// Borrow a running node's server — tests reach through this for
+    /// recovery reports, persisted blob paths, and repair counters.
+    pub fn server(&self, id: &str) -> Option<&HubServer> {
+        let i = self.ids.iter().position(|n| n == id)?;
+        self.servers[i].as_ref()
     }
 
     /// A node's dial address.

@@ -21,13 +21,17 @@ pub mod fleet;
 pub mod netsim;
 pub mod protocol;
 pub(crate) mod reactor;
+pub mod repair;
 pub mod server;
+pub mod store;
 pub mod sys;
 
 pub use client::{HubClient, RetryPolicy, TensorFetch, TransferReport};
 pub use cluster::{moved_blobs, HashRing};
 pub use faultsim::{FaultKind, FaultProfile, FaultProxy, FaultSpec, ScriptedFault};
-pub use fleet::{Fleet, FleetClient, FleetConfig, FleetReport, RebalanceReport};
+pub use fleet::{Fleet, FleetClient, FleetConfig, FleetReport, RebalanceReport, RepairReport};
 pub use netsim::{BANDWIDTH_FLOOR_MB_S, NetProfile, NetSim};
 pub use protocol::{encode_range, parse_range, Op, ReqEvent, RequestParser, FRAME_MAX, NAME_MAX};
+pub use repair::{ClusterConfig, RepairCounters};
 pub use server::{HubServer, HubServerBuilder};
+pub use store::{PersistStore, RecoveryReport};

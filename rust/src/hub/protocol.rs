@@ -11,7 +11,7 @@
 //! body:     ([len u32 in 1..=FRAME_MAX][bytes])* [0 u32]
 //! ```
 //! ops: 0 = PUT, 1 = GET, 2 = LIST, 3 = SHUTDOWN, 4 = STAT, 5 = RANGE,
-//! 6 = GET_TENSOR.
+//! 6 = GET_TENSOR, 7 = DELETE, 8 = PING.
 //! status: 0 = OK, 1 = err (body is a UTF-8 message).
 //!
 //! RANGE requests a byte range of a stored blob: the body is exactly 16
@@ -22,13 +22,16 @@
 //! placement header followed by a self-contained `ZNS1` sub-container of
 //! the covering frames (see `hub::client::HubClient::get_tensor`).
 //!
-//! **Versioning note — the fleet layer adds no wire surface.** Sharded
-//! multi-hub placement, multi-peer striped downloads, rebalance, and the
-//! edge read-through cache (see `hub::cluster` / `hub::fleet`) are all
-//! composed from the seven ops above: a stripe is an ordinary RANGE, a
-//! rebalance copy is STAT + RANGE + PUT, and an edge's upstream pull is
-//! an ordinary client fetch. Any peer speaking this protocol can join a
-//! fleet; there is no version byte to bump.
+//! **Versioning note — the fleet layer composes these ops, nothing
+//! more.** Sharded multi-hub placement, multi-peer striped downloads,
+//! rebalance, and the edge read-through cache (see `hub::cluster` /
+//! `hub::fleet`) are all composed from the ops above: a stripe is an
+//! ordinary RANGE, a repair copy is STAT + RANGE + PUT, a health probe is
+//! a PING, and dropping a displaced replica is a DELETE. DELETE and PING
+//! arrived with the self-healing fleet (both empty-body, name-in-header
+//! requests — an older peer rejects the opcode byte with a clean error,
+//! which repair treats as "peer can't, skip"); there is still no version
+//! byte to bump.
 
 use crate::error::{Error, Result};
 use std::collections::VecDeque;
@@ -56,6 +59,12 @@ pub enum Op {
     Range = 5,
     /// Fetch one tensor of an indexed container (body: tensor name).
     GetTensor = 6,
+    /// Remove a stored blob (empty body). Idempotent: the OK payload is
+    /// `"1"` when a blob was removed, `"0"` when the name was absent.
+    Delete = 7,
+    /// Health probe (empty name and body); the OK payload is `"pong"`.
+    /// Fleet repair uses it to tell a live peer from a dead one.
+    Ping = 8,
 }
 
 impl Op {
@@ -69,6 +78,8 @@ impl Op {
             4 => Some(Op::Stat),
             5 => Some(Op::Range),
             6 => Some(Op::GetTensor),
+            7 => Some(Op::Delete),
+            8 => Some(Op::Ping),
             _ => None,
         }
     }

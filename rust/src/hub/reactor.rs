@@ -29,7 +29,7 @@
 
 use crate::coordinator::pool::WorkerPool;
 use crate::hub::conn::{Conn, ReadOutcome, Request, Response, WriteOutcome};
-use crate::hub::server::{execute_request, Store};
+use crate::hub::server::{execute_request, ServerCtx};
 use crate::hub::sys::{Event, Interest, Poller};
 use std::io::{Read, Write};
 use std::net::TcpListener;
@@ -57,17 +57,13 @@ pub(crate) struct ReactorConfig {
     pub(crate) workers: usize,
     /// Connection cap; excess accepts are shed with a busy response.
     pub(crate) max_conns: usize,
-    /// Spool directory for PUT bodies (served back from a memory mapping).
-    pub(crate) spool_dir: Option<Arc<std::path::Path>>,
     /// A connection mid-request (either direction, stalled writers
     /// included) with no progress for this long is dropped by the sweep.
     pub(crate) io_timeout: Duration,
-    /// In-flight request-body budget: PUT bodies beyond this are shed
-    /// with a clean error instead of buffered.
-    pub(crate) max_body: u64,
-    /// Edge-cache mode: a GET/Range/GetTensor/Stat miss pulls the blob
-    /// read-through from this origin hub before answering.
-    pub(crate) origin: Option<Arc<str>>,
+    /// Everything request execution needs — the store, the stop flag,
+    /// spool/persist configuration, body budget, edge origin. Shared with
+    /// the server's background scrub/repair threads.
+    pub(crate) ctx: Arc<ServerCtx>,
 }
 
 /// A finished request execution, routed back to its connection.
@@ -89,7 +85,6 @@ pub(crate) struct Reactor {
     wake_tx: Arc<UnixStream>,
     completions: Arc<Mutex<Vec<Completion>>>,
     pool: WorkerPool,
-    store: Store,
     stop: Arc<AtomicBool>,
     cfg: ReactorConfig,
     /// Connection table; token = index + `TOKEN_BASE`.
@@ -107,7 +102,6 @@ pub(crate) struct Reactor {
 impl Reactor {
     pub(crate) fn new(
         listener: TcpListener,
-        store: Store,
         stop: Arc<AtomicBool>,
         cfg: ReactorConfig,
     ) -> std::io::Result<Reactor> {
@@ -126,7 +120,6 @@ impl Reactor {
             wake_tx: Arc::new(wake_tx),
             completions: Arc::new(Mutex::new(Vec::new())),
             pool,
-            store,
             stop,
             cfg,
             slots: Vec::new(),
@@ -232,7 +225,7 @@ impl Reactor {
                         self.slots.len() - 1
                     });
                     self.next_gen += 1;
-                    let conn = Conn::new(stream, self.next_gen, self.cfg.max_body);
+                    let conn = Conn::new(stream, self.next_gen, self.cfg.ctx.max_body);
                     let token = TOKEN_BASE + slot as u64;
                     if self
                         .poller
@@ -329,16 +322,11 @@ impl Reactor {
     fn dispatch(&mut self, conn: &mut Conn, slot: usize, req: Request) -> bool {
         conn.busy = true;
         let gen = conn.gen;
-        let store = Arc::clone(&self.store);
-        let stop = Arc::clone(&self.stop);
+        let ctx = Arc::clone(&self.cfg.ctx);
         let completions = Arc::clone(&self.completions);
         let wake = Arc::clone(&self.wake_tx);
-        let spool = self.cfg.spool_dir.clone();
-        let max_body = self.cfg.max_body;
-        let origin = self.cfg.origin.clone();
         let job = move || {
-            let (resp, close_after) =
-                execute_request(req, &store, &stop, spool.as_deref(), max_body, origin.as_deref());
+            let (resp, close_after) = execute_request(req, &ctx);
             completions
                 .lock()
                 .unwrap()

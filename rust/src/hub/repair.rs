@@ -1,0 +1,292 @@
+//! Self-healing fleet repair: the server-to-server loop that keeps every
+//! blob at full replication without a client driving it.
+//!
+//! Each hub in a fleet runs one repair thread (see
+//! [`HubServer::enable_repair`](crate::hub::server::HubServer::enable_repair)).
+//! A round works entirely from the hub's own view of the cluster:
+//!
+//! 1. **Probe** — ping every other member ([`crate::hub::protocol::Op::Ping`],
+//!    short timeout, no retries). Only peers that answer are trusted for the
+//!    rest of the round; a dead peer's replicas are exactly what repair
+//!    exists to re-create elsewhere.
+//! 2. **Inventory** — `List` each live peer and union with the local store.
+//! 3. **Pull** — for every name this hub owns on the ring but doesn't hold
+//!    (a scrubber quarantined it, a disk died, the ring changed), fetch it
+//!    from a live holder, verify length + whole-blob checksum against the
+//!    holder's `Stat`, and commit through the same
+//!    [`store_blob`](crate::hub::server::store_blob) path a PUT uses — so a
+//!    persisted hub makes the repaired copy durable before counting it.
+//! 4. **Drop** — for every name this hub holds but no longer owns, delete
+//!    the local copy *only after* re-statting it on every ring replica in
+//!    the same round. Stale copies are garbage, but they are also the last
+//!    line of defence while the real replicas are degraded — never drop a
+//!    byte that isn't provably held everywhere it belongs.
+//!
+//! Every per-name failure is skipped, not retried: the next round sees the
+//! same gap and tries again. Repair therefore converges (each round only
+//! adds verified replicas and removes provably-redundant ones) and is
+//! idempotent across hubs — two hubs repairing the same blob concurrently
+//! just both end up holding it, which is the goal.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codec::stream::Checksummer;
+use crate::hub::client::{HubClient, RetryPolicy};
+use crate::hub::cluster::HashRing;
+use crate::hub::protocol::FRAME_MAX;
+use crate::hub::server::{store_blob, ServerCtx};
+use crate::hub::store::sleep_until;
+
+/// How long a repair round waits on any single peer socket operation.
+/// Repair runs in the background against peers that may be mid-crash;
+/// a short timeout keeps one wedged peer from stalling the whole round.
+const PEER_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Static cluster view a repairing hub works from: its own identity, the
+/// full membership (id → address), and the ring parameters every member
+/// must agree on for ownership decisions to line up.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// This hub's node id — must appear in `members`.
+    pub self_id: String,
+    /// All fleet members as `(node_id, host:port)`, including this hub.
+    pub members: Vec<(String, String)>,
+    /// Ring replication factor R.
+    pub replication: usize,
+    /// Virtual nodes per member (all members must use the same value).
+    pub vnodes: u32,
+}
+
+impl ClusterConfig {
+    /// Cluster view with the default vnode count.
+    pub fn new(self_id: &str, members: Vec<(String, String)>, replication: usize) -> ClusterConfig {
+        ClusterConfig {
+            self_id: self_id.to_string(),
+            members,
+            replication,
+            vnodes: crate::hub::cluster::DEFAULT_VNODES,
+        }
+    }
+
+    fn ring(&self) -> HashRing {
+        let mut ring = HashRing::with_vnodes(self.replication, self.vnodes);
+        for (id, _) in &self.members {
+            ring.add_node(id);
+        }
+        ring
+    }
+}
+
+/// What the repair loop has done so far. Tests (and the CLI) read these to
+/// prove re-replication was server-driven: a pull counted here happened
+/// with no client in the loop.
+#[derive(Debug, Default)]
+pub struct RepairCounters {
+    rounds: AtomicU64,
+    pulled: AtomicU64,
+    dropped: AtomicU64,
+    skipped: AtomicU64,
+}
+
+impl RepairCounters {
+    /// Completed repair rounds.
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Blobs this hub fetched from a peer and stored because the ring says
+    /// it should hold them.
+    pub fn pulled(&self) -> u64 {
+        self.pulled.load(Ordering::Relaxed)
+    }
+
+    /// Stale local copies dropped after every ring replica verified.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Per-name actions abandoned this far (peer unreachable, verify
+    /// failed, replica set degraded) — retried on a later round.
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+}
+
+/// Live peer handle for one repair round: an open connection plus the
+/// blob names it reported.
+struct Peer {
+    client: HubClient,
+    inventory: Vec<String>,
+}
+
+/// Background repair thread body. Sleeps `interval`, runs a round,
+/// repeats until `stop`. The first round is delayed one interval so a
+/// freshly-started fleet finishes binding all members before anyone
+/// starts comparing inventories.
+pub(crate) fn repair_loop(
+    ctx: Arc<ServerCtx>,
+    cluster: ClusterConfig,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+    counters: Arc<RepairCounters>,
+) {
+    loop {
+        sleep_until(&stop, interval);
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        repair_round(&ctx, &cluster, &counters);
+        counters.rounds.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One full probe → inventory → pull → drop pass. Public in the crate so
+/// the CLI can run a single client-driven round synchronously.
+pub(crate) fn repair_round(ctx: &ServerCtx, cluster: &ClusterConfig, counters: &RepairCounters) {
+    let ring = cluster.ring();
+    let mut peers: Vec<(String, Peer)> = Vec::new();
+    for (id, addr) in &cluster.members {
+        if *id == cluster.self_id {
+            continue;
+        }
+        if let Some(peer) = probe_peer(addr) {
+            peers.push((id.clone(), peer));
+        }
+    }
+
+    // Union of every name anyone in the (reachable) fleet holds.
+    let local: Vec<String> = {
+        let map = ctx.store.lock().unwrap();
+        map.keys().cloned().collect()
+    };
+    let mut names: Vec<String> = local.clone();
+    for (_, peer) in &peers {
+        names.extend(peer.inventory.iter().cloned());
+    }
+    names.sort();
+    names.dedup();
+
+    for name in &names {
+        if ctx.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let replicas = ring.replicas_for(name);
+        let owned = replicas.iter().any(|r| *r == cluster.self_id);
+        let held = local.binary_search_by(|l| l.as_str().cmp(name)).is_ok();
+        if owned && !held {
+            match pull_blob(ctx, name, &mut peers) {
+                Ok(true) => counters.pulled.fetch_add(1, Ordering::Relaxed),
+                Ok(false) => counters.skipped.fetch_add(1, Ordering::Relaxed),
+                Err(_) => counters.skipped.fetch_add(1, Ordering::Relaxed),
+            };
+        } else if !owned && held {
+            if drop_is_safe(name, &replicas, &mut peers) {
+                ctx.store.lock().unwrap().remove(name);
+                if let Some(p) = &ctx.persist {
+                    p.remove(name);
+                }
+                counters.dropped.fetch_add(1, Ordering::Relaxed);
+            } else {
+                counters.skipped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Connect + ping + list one member. `None` means the peer is dead or
+/// unresponsive this round — its inventory is unknowable and nothing is
+/// pulled from or verified against it.
+fn probe_peer(addr: &str) -> Option<Peer> {
+    let mut client = HubClient::connect_direct(addr)
+        .and_then(|c| c.with_timeout(PEER_TIMEOUT))
+        .ok()?
+        .with_retry_policy(RetryPolicy::none());
+    client.ping().ok()?;
+    let inventory = client.list().ok()?;
+    Some(Peer { client, inventory })
+}
+
+/// Fetch `name` from the first live peer that holds it, verify, and store
+/// it the way a PUT would. `Ok(false)` = nobody reachable holds it.
+fn pull_blob(
+    ctx: &ServerCtx,
+    name: &str,
+    peers: &mut [(String, Peer)],
+) -> crate::error::Result<bool> {
+    for (_, peer) in peers.iter_mut() {
+        if !peer.inventory.iter().any(|n| n == name) {
+            continue;
+        }
+        let (total, _, _, want_ck) = match peer.client.stat_full(name) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let bytes = match peer.client.get_range(name, 0, total) {
+            Ok(b) => b,
+            Err(_) => continue,
+        };
+        if bytes.len() as u64 != total {
+            continue;
+        }
+        let mut ck = Checksummer::streaming();
+        ck.update(&bytes);
+        if ck.finalize() != want_ck {
+            // The holder's copy (or the wire) is damaged — its own
+            // scrubber will quarantine it; try the next holder.
+            continue;
+        }
+        let frames: Vec<Vec<u8>> = bytes.chunks(FRAME_MAX).map(|c| c.to_vec()).collect();
+        if store_blob(ctx, name, frames, total).is_err() {
+            return Ok(false);
+        }
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+/// A stale copy may be dropped only when every ring replica answered this
+/// round's probe *and* serves the blob right now. Anything less and the
+/// stale copy stays — it might be the only good replica left.
+fn drop_is_safe(name: &str, replicas: &[&str], peers: &mut [(String, Peer)]) -> bool {
+    for owner in replicas {
+        let Some((_, peer)) = peers.iter_mut().find(|(id, _)| id == owner) else {
+            return false; // replica dead or not a known member
+        };
+        if peer.client.stat_full(name).is_err() {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_config_ring_orders_ownership_consistently() {
+        let members = vec![
+            ("a".to_string(), "127.0.0.1:1".to_string()),
+            ("b".to_string(), "127.0.0.1:2".to_string()),
+            ("c".to_string(), "127.0.0.1:3".to_string()),
+        ];
+        let ca = ClusterConfig::new("a", members.clone(), 2);
+        let cb = ClusterConfig::new("b", members, 2);
+        // Every member derives the same ownership from the same view.
+        for name in ["m0", "m1", "weights.znn", "tokenizer.json"] {
+            assert_eq!(ca.ring().replicas_for(name), cb.ring().replicas_for(name));
+            assert_eq!(ca.ring().replicas_for(name).len(), 2);
+        }
+    }
+
+    #[test]
+    fn counters_start_zeroed() {
+        let c = RepairCounters::default();
+        assert_eq!(
+            (c.rounds(), c.pulled(), c.dropped(), c.skipped()),
+            (0, 0, 0, 0)
+        );
+    }
+}

@@ -18,7 +18,18 @@
 //! a memory mapping: GET responses stream frames straight out of the OS
 //! page cache instead of long-lived heap buffers, so the server's resident
 //! heap stays flat no matter how many models it holds. The spool file is
-//! unlinked right after mapping (Unix), so crashed servers leak nothing.
+//! unlinked right after mapping (Unix), so crashed servers leak nothing —
+//! and keep nothing: a restarted spool-only hub starts empty.
+//!
+//! With a **persist root** (builder [`HubServerBuilder::persist_dir`] or
+//! `ZIPNN_HUB_PERSIST`), acknowledged PUTs are instead committed
+//! crash-safely to disk (tmp-write → fsync → atomic rename, sidecar
+//! record as the commit point — see [`crate::hub::store`]), re-indexed
+//! and verified on startup, and re-verified in the background by a scrub
+//! thread that quarantines bit rot. [`HubServer::enable_repair`] adds the
+//! self-healing fleet loop on top: health probes (`Ping`), inventory
+//! exchange, server-to-server re-replication of under-replicated blobs,
+//! and `Delete` of stale displaced copies.
 //!
 //! Blobs are also **byte-range addressable**: `Range` returns any span of
 //! the stored bytes, and `GetTensor` uses a container's tensor index (see
@@ -33,6 +44,8 @@ use crate::error::Result;
 use crate::hub::conn::{Request, Response, Segment};
 use crate::hub::protocol::{parse_range, write_response, write_response_header, Op, FRAME_MAX};
 use crate::hub::reactor::{Reactor, ReactorConfig};
+use crate::hub::repair::{repair_loop, ClusterConfig, RepairCounters};
+use crate::hub::store::{scrub_loop, PersistStore, RecoveryReport};
 use crate::util::mmap::Mmap;
 use std::collections::HashMap;
 use std::io::Write;
@@ -123,6 +136,34 @@ impl StoredBlob {
         }
     }
 
+    /// Map a committed persist file and serve it page-cache resident,
+    /// re-framed as `FRAME_MAX`-sized spans. Errors when mmap can't
+    /// engage (non-Unix, `ZIPNN_NO_MMAP`) or the file's length disagrees
+    /// with the sidecar — callers fall back to heap frames.
+    pub(crate) fn from_mapped_file(path: &Path, total: u64, ck: u64) -> std::io::Result<StoredBlob> {
+        if cfg!(not(unix)) || crate::util::env::no_mmap() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap unavailable; keep the blob heap-resident",
+            ));
+        }
+        let map = Mmap::map(&std::fs::File::open(path)?)?;
+        if map.len() as u64 != total {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "persisted blob length disagrees with its sidecar",
+            ));
+        }
+        let mut spans = Vec::with_capacity(map.len().div_ceil(FRAME_MAX.max(1)));
+        let mut off = 0usize;
+        while off < map.len() {
+            let len = FRAME_MAX.min(map.len() - off);
+            spans.push((off, len));
+            off += len;
+        }
+        Ok(StoredBlob { bytes: BlobBytes::Mapped { map, spans }, total, ck })
+    }
+
     /// Copy an absolute byte range out of the stored frames (used for
     /// small metadata reads — the container header and index section).
     pub(crate) fn read_range(&self, off: u64, len: usize) -> Option<Vec<u8>> {
@@ -200,11 +241,52 @@ fn write_and_map(path: &Path, frames: &[Vec<u8>], total: u64) -> std::io::Result
 /// Shared blob store (name → frames).
 pub(crate) type Store = Arc<Mutex<HashMap<String, Arc<StoredBlob>>>>;
 
+/// Everything request execution (and the background scrub/repair loops)
+/// needs, bundled once at server start and shared by `Arc`.
+pub(crate) struct ServerCtx {
+    pub(crate) store: Store,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) spool: Option<Arc<Path>>,
+    pub(crate) persist: Option<Arc<PersistStore>>,
+    pub(crate) max_body: u64,
+    pub(crate) origin: Option<Arc<str>>,
+}
+
+/// Store one blob body the way this server is configured to: durably
+/// committed when persisting (a commit failure fails the request — a
+/// persist-configured hub never acknowledges bytes it can't make
+/// durable), spooled + mapped when spooling (failure falls back to heap),
+/// heap frames otherwise. Shared by PUT, the edge read-through pull, and
+/// the fleet repair pull.
+pub(crate) fn store_blob(
+    ctx: &ServerCtx,
+    name: &str,
+    frames: Vec<Vec<u8>>,
+    total: u64,
+) -> std::result::Result<Arc<StoredBlob>, String> {
+    let blob = if let Some(p) = &ctx.persist {
+        p.persist(name, frames, total)
+            .map_err(|e| format!("persist failed: {e}"))?
+    } else if let Some(dir) = &ctx.spool {
+        spool_blob(dir, &frames, total).unwrap_or_else(|_| StoredBlob::in_memory(frames, total))
+    } else {
+        StoredBlob::in_memory(frames, total)
+    };
+    let blob = Arc::new(blob);
+    ctx.store
+        .lock()
+        .unwrap()
+        .insert(name.to_string(), Arc::clone(&blob));
+    Ok(blob)
+}
+
 /// Configuration for a [`HubServer`]; construct via [`HubServer::builder`].
 pub struct HubServerBuilder {
     workers: Option<usize>,
     max_conns: Option<usize>,
     spool_dir: Option<PathBuf>,
+    persist_dir: Option<PathBuf>,
+    scrub_interval: Option<Duration>,
     io_timeout: Option<Duration>,
     max_body: Option<u64>,
     origin: Option<String>,
@@ -251,6 +333,26 @@ impl HubServerBuilder {
         self
     }
 
+    /// Durable crash-safe storage: commit every acknowledged PUT under
+    /// `root` (tmp-write → fsync → atomic rename, sidecar as the commit
+    /// point), re-index + verify on startup, and run a background scrub
+    /// thread that quarantines bit rot (see [`crate::hub::store`]).
+    /// Takes precedence over the spool for PUT bodies — persisted blobs
+    /// are already file-backed and mapped. Default: the
+    /// `ZIPNN_HUB_PERSIST` env var, else off.
+    pub fn persist_dir(mut self, root: impl Into<PathBuf>) -> Self {
+        self.persist_dir = Some(root.into());
+        self
+    }
+
+    /// How often the background scrubber re-verifies every persisted
+    /// blob from disk. Only meaningful with a persist root. Default: the
+    /// `ZIPNN_HUB_SCRUB_SECS` env var, else 60 s.
+    pub fn scrub_interval(mut self, t: Duration) -> Self {
+        self.scrub_interval = Some(t.max(Duration::from_millis(10)));
+        self
+    }
+
     /// Edge-cache mode: a GET/Range/GetTensor/Stat miss pulls the whole
     /// blob read-through from the hub at `origin` (checksum-verified, one
     /// hop, stored like a local PUT — spooled when a spool dir is set)
@@ -262,7 +364,10 @@ impl HubServerBuilder {
         self
     }
 
-    /// Bind an ephemeral loopback port and start the reactor.
+    /// Bind an ephemeral loopback port and start the reactor. With a
+    /// persist root this first re-indexes and verifies the committed
+    /// blobs on disk (see [`HubServer::recovery`]) and starts the
+    /// background scrubber.
     pub fn start(self) -> Result<HubServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?.to_string();
@@ -275,22 +380,62 @@ impl HubServerBuilder {
             }
             None => None,
         };
-        let cfg = ReactorConfig {
-            workers: self.workers.unwrap_or_else(default_workers),
-            max_conns: self.max_conns.unwrap_or_else(default_max_conns),
-            spool_dir,
-            io_timeout: self.io_timeout.unwrap_or(Duration::from_secs(5)),
+        let persist = match self.persist_dir.or_else(crate::util::env::hub_persist_dir) {
+            Some(root) => Some(Arc::new(PersistStore::open(root)?)),
+            None => None,
+        };
+        let mut recovery = None;
+        if let Some(p) = &persist {
+            let (blobs, report) = p.recover()?;
+            let mut map = store.lock().unwrap();
+            for (name, blob) in blobs {
+                map.insert(name, Arc::new(blob));
+            }
+            drop(map);
+            recovery = Some(report);
+        }
+        let ctx = Arc::new(ServerCtx {
+            store,
+            stop: Arc::clone(&stop),
+            spool: spool_dir,
+            persist,
             max_body: self.max_body.unwrap_or_else(default_max_body),
             origin: self
                 .origin
                 .or_else(crate::util::env::fleet_origin)
                 .map(|o| Arc::<str>::from(o.as_str())),
+        });
+        let cfg = ReactorConfig {
+            workers: self.workers.unwrap_or_else(default_workers),
+            max_conns: self.max_conns.unwrap_or_else(default_max_conns),
+            io_timeout: self.io_timeout.unwrap_or(Duration::from_secs(5)),
+            ctx: Arc::clone(&ctx),
         };
         // Built here so setup failures (poller, self-pipe) surface as an
         // error instead of a silently dead server.
-        let reactor = Reactor::new(listener, store, Arc::clone(&stop), cfg)?;
+        let reactor = Reactor::new(listener, Arc::clone(&stop), cfg)?;
         let handle = std::thread::spawn(move || reactor.run());
-        Ok(HubServer { addr, stop, handle: Some(handle) })
+        let mut aux = Vec::new();
+        if let Some(p) = ctx.persist.clone() {
+            let interval = self
+                .scrub_interval
+                .or_else(|| crate::util::env::hub_scrub_secs().map(Duration::from_secs))
+                .unwrap_or(Duration::from_secs(60));
+            let scrub_store = Arc::clone(&ctx.store);
+            let scrub_stop = Arc::clone(&stop);
+            aux.push(std::thread::spawn(move || {
+                scrub_loop(p, scrub_store, scrub_stop, interval)
+            }));
+        }
+        Ok(HubServer {
+            addr,
+            stop,
+            handle: Some(handle),
+            aux,
+            ctx,
+            recovery,
+            repair_counters: None,
+        })
     }
 }
 
@@ -320,6 +465,11 @@ pub struct HubServer {
     addr: String,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
+    /// Background scrub/repair threads, joined on shutdown.
+    aux: Vec<JoinHandle<()>>,
+    ctx: Arc<ServerCtx>,
+    recovery: Option<RecoveryReport>,
+    repair_counters: Option<Arc<RepairCounters>>,
 }
 
 impl HubServer {
@@ -334,6 +484,8 @@ impl HubServer {
             workers: None,
             max_conns: None,
             spool_dir: None,
+            persist_dir: None,
+            scrub_interval: None,
             io_timeout: None,
             max_body: None,
             origin: None,
@@ -343,6 +495,40 @@ impl HubServer {
     /// Address to connect to.
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// What startup recovery found on disk (persisted hubs only).
+    pub fn recovery(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
+    }
+
+    /// Path of the committed persist file serving `name`, if this hub
+    /// persists and holds it (tests corrupt it to exercise the scrubber).
+    pub fn persisted_blob_path(&self, name: &str) -> Option<PathBuf> {
+        self.ctx.persist.as_ref()?.blob_path(name)
+    }
+
+    /// Join a self-healing fleet: start the background repair loop with
+    /// this hub's identity and the full membership map. Called after
+    /// every member is bound (addresses are only known then). The loop
+    /// pings peers, exchanges inventories, re-replicates blobs this hub
+    /// should hold but doesn't (quarantined, missed, under-replicated)
+    /// server-to-server, and deletes stale copies the ring no longer
+    /// places here — no client involved.
+    pub fn enable_repair(&mut self, cluster: ClusterConfig, interval: Duration) {
+        let counters = Arc::new(RepairCounters::default());
+        self.repair_counters = Some(Arc::clone(&counters));
+        let ctx = Arc::clone(&self.ctx);
+        let stop = Arc::clone(&self.stop);
+        let interval = interval.max(Duration::from_millis(10));
+        self.aux.push(std::thread::spawn(move || {
+            repair_loop(ctx, cluster, interval, stop, counters)
+        }));
+    }
+
+    /// Live repair-loop counters (None until [`HubServer::enable_repair`]).
+    pub fn repair_counters(&self) -> Option<&RepairCounters> {
+        self.repair_counters.as_deref()
     }
 
     /// Request shutdown and join the reactor (which joins every worker).
@@ -360,6 +546,9 @@ impl HubServer {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        for h in self.aux.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -372,40 +561,31 @@ impl Drop for HubServer {
 /// Execute one complete request against the store (runs on a worker
 /// thread; touches no sockets). Returns the response plus whether the
 /// connection should close once it is written.
-pub(crate) fn execute_request(
-    req: Request,
-    store: &Store,
-    stop: &AtomicBool,
-    spool: Option<&Path>,
-    max_body: u64,
-    origin: Option<&str>,
-) -> (Response, bool) {
+pub(crate) fn execute_request(req: Request, ctx: &ServerCtx) -> (Response, bool) {
     match req.op {
         Op::Put => {
             debug_assert!(req.frames.iter().all(|f| f.len() <= FRAME_MAX));
             // Oversized bodies were counted but not retained by the
             // connection (graceful degradation: the budget bounds server
             // memory, the client gets a clean protocol error).
-            if req.total > max_body {
+            if req.total > ctx.max_body {
                 let msg = format!(
                     "put body of {} bytes exceeds the server's {} byte budget",
-                    req.total, max_body
+                    req.total, ctx.max_body
                 );
                 return (Response::Small(small_response(false, msg.as_bytes())), false);
             }
-            // Spool to disk + mmap when configured; any spool failure
-            // (full disk, bad dir) falls back to heap frames, so a PUT
-            // never fails on account of the optimization.
-            let blob = match spool {
-                Some(dir) => spool_blob(dir, &req.frames, req.total)
-                    .unwrap_or_else(|_| StoredBlob::in_memory(req.frames, req.total)),
-                None => StoredBlob::in_memory(req.frames, req.total),
-            };
-            store.lock().unwrap().insert(req.name, Arc::new(blob));
-            (Response::Small(small_response(true, b"")), false)
+            // Persisting commits durably (a failure fails the PUT — never
+            // acknowledge bytes that aren't on disk); spooling falls back
+            // to heap frames, so there a PUT never fails on account of
+            // the optimization.
+            match store_blob(ctx, &req.name, req.frames, req.total) {
+                Ok(_) => (Response::Small(small_response(true, b"")), false),
+                Err(msg) => (Response::Small(small_response(false, msg.as_bytes())), false),
+            }
         }
         Op::Get => {
-            let blob = lookup(store, &req.name, origin, spool, max_body);
+            let blob = lookup(ctx, &req.name);
             match blob {
                 Some(blob) => {
                     let len = blob.total;
@@ -421,7 +601,7 @@ pub(crate) fn execute_request(
             }
         }
         Op::Range => {
-            let blob = lookup(store, &req.name, origin, spool, max_body);
+            let blob = lookup(ctx, &req.name);
             let Some(blob) = blob else {
                 return (Response::Small(small_response(false, b"not found")), false);
             };
@@ -457,7 +637,7 @@ pub(crate) fn execute_request(
             (Response::Stream { head: ok_head(), segs }, false)
         }
         Op::GetTensor => {
-            let blob = lookup(store, &req.name, origin, spool, max_body);
+            let blob = lookup(ctx, &req.name);
             let Some(blob) = blob else {
                 return (Response::Small(small_response(false, b"not found")), false);
             };
@@ -482,14 +662,14 @@ pub(crate) fn execute_request(
             }
         }
         Op::List => {
-            let names: Vec<String> = store.lock().unwrap().keys().cloned().collect();
+            let names: Vec<String> = ctx.store.lock().unwrap().keys().cloned().collect();
             (
                 Response::Small(small_response(true, names.join("\n").as_bytes())),
                 false,
             )
         }
         Op::Stat => {
-            let blob = lookup(store, &req.name, origin, spool, max_body);
+            let blob = lookup(ctx, &req.name);
             match blob {
                 Some(blob) => {
                     // `total frames max_frame checksum` — the trailing
@@ -507,8 +687,21 @@ pub(crate) fn execute_request(
                 None => (Response::Small(small_response(false, b"not found")), false),
             }
         }
+        Op::Delete => {
+            // Idempotent by design: repair loops and rebalance retries
+            // re-issue deletes freely; "already gone" must not read as
+            // failure. The payload says which case it was.
+            let served = ctx.store.lock().unwrap().remove(&req.name).is_some();
+            let persisted = match &ctx.persist {
+                Some(p) => p.remove(&req.name),
+                None => false,
+            };
+            let payload: &[u8] = if served || persisted { b"1" } else { b"0" };
+            (Response::Small(small_response(true, payload)), false)
+        }
+        Op::Ping => (Response::Small(small_response(true, b"pong")), false),
         Op::Shutdown => {
-            stop.store(true, Ordering::Relaxed);
+            ctx.stop.store(true, Ordering::Relaxed);
             (Response::Small(small_response(true, b"")), true)
         }
     }
@@ -520,18 +713,12 @@ pub(crate) fn execute_request(
 /// concurrent misses of the same blob may pull twice, last store wins —
 /// both copies are verified identical bytes, so that is only wasted
 /// work, never a wrong answer.
-fn lookup(
-    store: &Store,
-    name: &str,
-    origin: Option<&str>,
-    spool: Option<&Path>,
-    max_body: u64,
-) -> Option<Arc<StoredBlob>> {
-    if let Some(blob) = store.lock().unwrap().get(name).cloned() {
+fn lookup(ctx: &ServerCtx, name: &str) -> Option<Arc<StoredBlob>> {
+    if let Some(blob) = ctx.store.lock().unwrap().get(name).cloned() {
         return Some(blob);
     }
-    let origin = origin?;
-    pull_from_origin(name, origin, store, spool, max_body)
+    let origin = ctx.origin.as_deref()?;
+    pull_from_origin(name, origin, ctx)
 }
 
 /// Pull one blob from the origin hub into the local store: stat (for the
@@ -540,18 +727,12 @@ fn lookup(
 /// only — an origin that is itself an edge would chain, so don't
 /// configure rings of edges. `None` on any failure: the caller answers
 /// "not found" and the next request retries the pull.
-fn pull_from_origin(
-    name: &str,
-    origin: &str,
-    store: &Store,
-    spool: Option<&Path>,
-    max_body: u64,
-) -> Option<Arc<StoredBlob>> {
+fn pull_from_origin(name: &str, origin: &str, ctx: &ServerCtx) -> Option<Arc<StoredBlob>> {
     // Direct connection: the edge's upstream leg must not be re-routed
     // through an env-armed fault proxy meant for the client under test.
     let mut c = crate::hub::client::HubClient::connect_direct(origin).ok()?;
     let (total, _, _, ck) = c.stat_full(name).ok()?;
-    if total > max_body {
+    if total > ctx.max_body {
         return None;
     }
     let bytes = c.get_range(name, 0, total).ok()?;
@@ -564,14 +745,7 @@ fn pull_from_origin(
         return None;
     }
     let frames: Vec<Vec<u8>> = bytes.chunks(FRAME_MAX).map(<[u8]>::to_vec).collect();
-    let blob = match spool {
-        Some(dir) => spool_blob(dir, &frames, total)
-            .unwrap_or_else(|_| StoredBlob::in_memory(frames, total)),
-        None => StoredBlob::in_memory(frames, total),
-    };
-    let blob = Arc::new(blob);
-    store.lock().unwrap().insert(name.to_string(), Arc::clone(&blob));
-    Some(blob)
+    store_blob(ctx, name, frames, total).ok()
 }
 
 /// Serialize a complete small response (status byte + chunked body).

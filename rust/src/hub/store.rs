@@ -1,0 +1,720 @@
+//! Durable, crash-safe on-disk blob storage for the hub.
+//!
+//! With a **persist root** (builder
+//! [`crate::hub::HubServerBuilder::persist_dir`] or `ZIPNN_HUB_PERSIST`),
+//! every acknowledged PUT survives a crash: the body is written to
+//! `<root>/tmp/`, fsynced, and atomically renamed into `<root>/blobs/`
+//! next to a small sidecar record carrying the blob's name, length,
+//! whole-blob checksum, and whether the container declares per-frame
+//! checksums. The **sidecar rename is the commit point** — a blob is
+//! acknowledged only after both files are durable and the directory is
+//! fsynced, so a crash at any instant leaves either the old state or the
+//! new state, never a half-written blob that could be served.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! <root>/blobs/<hash16>-<gen>.blob   # the PUT body, bytes as stored
+//! <root>/blobs/<hash16>-<gen>.meta   # sidecar: name, total, ck, frame-ck flag
+//! <root>/tmp/                        # in-flight writes; reaped wholesale on startup
+//! <root>/quarantine/                 # damaged blob/sidecar pairs, never served
+//! ```
+//!
+//! `<hash16>` is a hash of the blob name (filenames stay filesystem-safe;
+//! the sidecar holds the authoritative name) and `<gen>` is a
+//! monotonically increasing generation: a re-PUT of an existing name
+//! commits a *new* pair before the old one is deleted, so even a crash
+//! mid-overwrite preserves one fully-verified copy.
+//!
+//! ## Recovery
+//!
+//! [`PersistStore::recover`] re-indexes the directory on startup: temp
+//! files and orphan `.blob`s (no committed sidecar) are reaped, every
+//! committed pair is re-read from disk and verified — length, whole-blob
+//! checksum, and a full [`scan_wire`] structural walk (per-frame
+//! checksums) when the container carries them — and blobs that fail
+//! verification are moved to `quarantine/` instead of being served. When
+//! several generations of a name survive a crash, the newest verified one
+//! wins.
+//!
+//! ## Scrubbing
+//!
+//! [`scrub_loop`] re-walks the stored blobs in the background (interval:
+//! builder knob or `ZIPNN_HUB_SCRUB_SECS`), re-reading each from disk —
+//! deliberately *not* through the serving mmap, whose resident pages
+//! could mask on-disk bit rot — and quarantines any blob whose bytes no
+//! longer match the sidecar, removing it from the serving store so the
+//! fleet repair loop can re-replicate a good copy.
+
+use crate::codec::stream::{scan_wire, Checksummer, WireScan, SFLAG_FRAME_CK, STREAM_VERSION};
+use crate::codec::STREAM_MAGIC;
+use crate::hub::protocol::FRAME_MAX;
+use crate::hub::server::{Store, StoredBlob};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Sidecar magic + format version.
+const META_MAGIC: &[u8; 8] = b"ZNNMETA1";
+/// Sidecar flag: the stored container declares per-frame checksums, so
+/// recovery and scrubbing can (and must) verify frame structure too.
+const MFLAG_FRAME_CK: u8 = 1;
+/// Structural-walk budget: blobs beyond this are still fully verified by
+/// the whole-blob checksum, just without buffering them for `scan_wire`.
+const MAX_SCAN_BYTES: u64 = 1 << 28;
+
+/// One blob's sidecar record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Sidecar {
+    name: String,
+    total: u64,
+    ck: u64,
+    frame_ck: bool,
+}
+
+impl Sidecar {
+    fn encode(&self) -> Vec<u8> {
+        let name = self.name.as_bytes();
+        let mut out = Vec::with_capacity(8 + 1 + 8 + 8 + 4 + name.len());
+        out.extend_from_slice(META_MAGIC);
+        out.push(if self.frame_ck { MFLAG_FRAME_CK } else { 0 });
+        out.extend_from_slice(&self.total.to_le_bytes());
+        out.extend_from_slice(&self.ck.to_le_bytes());
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name);
+        out
+    }
+
+    fn parse(bytes: &[u8]) -> Option<Sidecar> {
+        if bytes.len() < 29 || &bytes[..8] != META_MAGIC {
+            return None;
+        }
+        let flags = bytes[8];
+        let total = u64::from_le_bytes(bytes[9..17].try_into().ok()?);
+        let ck = u64::from_le_bytes(bytes[17..25].try_into().ok()?);
+        let name_len = u32::from_le_bytes(bytes[25..29].try_into().ok()?) as usize;
+        if bytes.len() != 29 + name_len {
+            return None;
+        }
+        let name = String::from_utf8(bytes[29..].to_vec()).ok()?;
+        Some(Sidecar { name, total, ck, frame_ck: flags & MFLAG_FRAME_CK != 0 })
+    }
+}
+
+/// What startup recovery found on disk.
+#[derive(Debug, Default)]
+pub struct RecoveryReport {
+    /// Names re-indexed, verified, and served again.
+    pub recovered: Vec<String>,
+    /// Names whose stored bytes failed verification; their files were
+    /// moved to `quarantine/` and they are not served.
+    pub quarantined: Vec<String>,
+    /// In-flight temp files reaped from `tmp/`.
+    pub reaped_tmp: usize,
+    /// Uncommitted `.blob` files (no sidecar — the crash hit between the
+    /// two renames) deleted from `blobs/`.
+    pub reaped_orphans: usize,
+}
+
+/// Result of re-reading one stored blob from disk.
+enum VerifyOutcome {
+    Ok,
+    Missing,
+    Damaged(String),
+}
+
+#[derive(Clone)]
+struct Entry {
+    gen: u64,
+    sidecar: Sidecar,
+}
+
+/// The durable blob store: a directory of committed `(blob, sidecar)`
+/// pairs plus an in-memory name index. All mutation goes through
+/// tmp-write → fsync → rename, so the committed set is crash-consistent.
+pub struct PersistStore {
+    root: PathBuf,
+    blobs: PathBuf,
+    tmp: PathBuf,
+    quarantine: PathBuf,
+    seq: AtomicU64,
+    index: Mutex<HashMap<String, Entry>>,
+}
+
+impl PersistStore {
+    /// Open (creating if needed) a persist root. Call
+    /// [`PersistStore::recover`] next to re-index committed blobs.
+    pub fn open(root: impl Into<PathBuf>) -> std::io::Result<PersistStore> {
+        let root = root.into();
+        let blobs = root.join("blobs");
+        let tmp = root.join("tmp");
+        let quarantine = root.join("quarantine");
+        std::fs::create_dir_all(&blobs)?;
+        std::fs::create_dir_all(&tmp)?;
+        std::fs::create_dir_all(&quarantine)?;
+        Ok(PersistStore {
+            root,
+            blobs,
+            tmp,
+            quarantine,
+            seq: AtomicU64::new(1),
+            index: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The quarantine directory (damaged pairs land here, never served).
+    pub fn quarantine_dir(&self) -> &Path {
+        &self.quarantine
+    }
+
+    /// Path of the committed blob file for `name`, if one exists.
+    pub fn blob_path(&self, name: &str) -> Option<PathBuf> {
+        let index = self.index.lock().unwrap();
+        let e = index.get(name)?;
+        Some(self.pair(name, e.gen).0)
+    }
+
+    fn pair(&self, name: &str, gen: u64) -> (PathBuf, PathBuf) {
+        let stem = format!("{:016x}-{gen}", hash64(name.as_bytes()));
+        (
+            self.blobs.join(format!("{stem}.blob")),
+            self.blobs.join(format!("{stem}.meta")),
+        )
+    }
+
+    /// Re-index the directory after a restart: reap `tmp/` and orphan
+    /// blobs, verify every committed pair by re-reading it from disk, and
+    /// quarantine damaged ones. Returns the verified blobs (ready to
+    /// serve — mapped when mmap is available, heap-resident otherwise)
+    /// plus a report of what was found.
+    pub(crate) fn recover(&self) -> std::io::Result<(Vec<(String, StoredBlob)>, RecoveryReport)> {
+        let mut report = RecoveryReport::default();
+
+        // In-flight writes never committed: reap wholesale.
+        for entry in std::fs::read_dir(&self.tmp)? {
+            let entry = entry?;
+            if std::fs::remove_file(entry.path()).is_ok() {
+                report.reaped_tmp += 1;
+            }
+        }
+
+        // Collect committed sidecars; group candidate generations by name.
+        let mut by_name: HashMap<String, Vec<(u64, PathBuf, PathBuf, Sidecar)>> = HashMap::new();
+        let mut meta_stems: Vec<PathBuf> = Vec::new();
+        let mut blob_stems: Vec<PathBuf> = Vec::new();
+        let mut max_gen = 0u64;
+        for entry in std::fs::read_dir(&self.blobs)? {
+            let path = entry?.path();
+            match path.extension().and_then(|e| e.to_str()) {
+                Some("meta") => meta_stems.push(path),
+                Some("blob") => blob_stems.push(path),
+                _ => {}
+            }
+        }
+        for meta in &meta_stems {
+            let Some(gen) = gen_of(meta) else { continue };
+            max_gen = max_gen.max(gen);
+            let blob = meta.with_extension("blob");
+            let sidecar = std::fs::read(meta).ok().and_then(|b| Sidecar::parse(&b));
+            match sidecar {
+                Some(sc) if blob.exists() => {
+                    by_name
+                        .entry(sc.name.clone())
+                        .or_default()
+                        .push((gen, blob, meta.clone(), sc));
+                }
+                // A sidecar that doesn't parse, or whose blob is gone, is
+                // damage: quarantine what's there rather than deleting
+                // evidence.
+                _ => {
+                    self.move_to_quarantine(&blob, meta);
+                }
+            }
+        }
+        // Orphan blobs: written but never committed (crash between the
+        // two renames) — by construction unacknowledged, safe to reap.
+        for blob in &blob_stems {
+            if !blob.with_extension("meta").exists() {
+                let _ = std::fs::remove_file(blob);
+                report.reaped_orphans += 1;
+            }
+        }
+
+        // Per name: newest generation that verifies wins; superseded
+        // generations are deleted; damaged ones are quarantined.
+        let mut recovered: Vec<(String, StoredBlob)> = Vec::new();
+        let mut index = self.index.lock().unwrap();
+        for (name, mut gens) in by_name {
+            gens.sort_by_key(|(gen, ..)| std::cmp::Reverse(*gen));
+            let mut chosen: Option<(u64, Sidecar, StoredBlob)> = None;
+            for (gen, blob_path, meta_path, sc) in gens {
+                if chosen.is_some() {
+                    // Superseded by a newer verified generation.
+                    let _ = std::fs::remove_file(&blob_path);
+                    let _ = std::fs::remove_file(&meta_path);
+                    continue;
+                }
+                match verify_file(&blob_path, &sc) {
+                    VerifyOutcome::Ok => match load_blob(&blob_path, &sc) {
+                        Ok(blob) => chosen = Some((gen, sc, blob)),
+                        Err(_) => self.move_to_quarantine(&blob_path, &meta_path),
+                    },
+                    _ => self.move_to_quarantine(&blob_path, &meta_path),
+                }
+            }
+            match chosen {
+                Some((gen, sidecar, blob)) => {
+                    index.insert(name.clone(), Entry { gen, sidecar });
+                    report.recovered.push(name.clone());
+                    recovered.push((name, blob));
+                }
+                None => report.quarantined.push(name),
+            }
+        }
+        drop(index);
+        self.seq.store(max_gen + 1, Ordering::Relaxed);
+        sync_dir(&self.blobs);
+        report.recovered.sort();
+        report.quarantined.sort();
+        Ok((recovered, report))
+    }
+
+    /// Durably commit one PUT body and return the blob to serve (mapped
+    /// from the committed file when mmap is available, else the heap
+    /// frames handed in). The returned blob exists on disk — with its
+    /// sidecar, fsynced, directory synced — before this returns, so
+    /// acknowledging the PUT is safe.
+    pub(crate) fn persist(
+        &self,
+        name: &str,
+        frames: Vec<Vec<u8>>,
+        total: u64,
+    ) -> std::io::Result<StoredBlob> {
+        let gen = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut ckh = Checksummer::streaming();
+        for f in &frames {
+            ckh.update(f);
+        }
+        let sidecar = Sidecar {
+            name: name.to_string(),
+            total,
+            ck: ckh.finalize(),
+            frame_ck: declares_frame_ck(&frames),
+        };
+
+        let tmp_blob = self.tmp.join(format!("{}-{gen}.blob", std::process::id()));
+        let tmp_meta = self.tmp.join(format!("{}-{gen}.meta", std::process::id()));
+        let write = (|| -> std::io::Result<()> {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp_blob)?);
+            for frame in &frames {
+                f.write_all(frame)?;
+            }
+            f.flush()?;
+            f.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+            let mut m = std::fs::File::create(&tmp_meta)?;
+            m.write_all(&sidecar.encode())?;
+            m.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp_blob);
+            let _ = std::fs::remove_file(&tmp_meta);
+            return Err(e);
+        }
+
+        // Commit: blob first, sidecar last — a crash in between leaves an
+        // orphan blob recovery reaps; the sidecar's arrival is the moment
+        // the blob becomes servable.
+        let (blob_path, meta_path) = self.pair(name, gen);
+        if let Err(e) = std::fs::rename(&tmp_blob, &blob_path)
+            .and_then(|()| std::fs::rename(&tmp_meta, &meta_path))
+        {
+            let _ = std::fs::remove_file(&tmp_blob);
+            let _ = std::fs::remove_file(&tmp_meta);
+            let _ = std::fs::remove_file(&blob_path);
+            return Err(e);
+        }
+        sync_dir(&self.blobs);
+
+        // Serve from the committed file; fall back to the frames we
+        // already hold when mapping is unavailable.
+        let blob = match StoredBlob::from_mapped_file(&blob_path, total, sidecar.ck) {
+            Ok(b) => b,
+            Err(_) => StoredBlob::in_memory(frames, total),
+        };
+
+        // Swap the index entry and drop the superseded generation only
+        // after the new one is fully committed.
+        let old = self
+            .index
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Entry { gen, sidecar });
+        if let Some(old) = old {
+            let (ob, om) = self.pair(name, old.gen);
+            let _ = std::fs::remove_file(om);
+            let _ = std::fs::remove_file(ob);
+            sync_dir(&self.blobs);
+        }
+        Ok(blob)
+    }
+
+    /// Delete `name`'s committed pair. Returns whether it existed.
+    pub(crate) fn remove(&self, name: &str) -> bool {
+        let Some(e) = self.index.lock().unwrap().remove(name) else {
+            return false;
+        };
+        let (blob, meta) = self.pair(name, e.gen);
+        // Sidecar first: if the crash hits between the two unlinks, the
+        // leftover blob is an orphan recovery reaps, not a servable blob.
+        let _ = std::fs::remove_file(meta);
+        let _ = std::fs::remove_file(blob);
+        sync_dir(&self.blobs);
+        true
+    }
+
+    /// Move `name`'s committed pair to `quarantine/` and forget it.
+    /// Returns whether there was a pair to move.
+    pub(crate) fn quarantine(&self, name: &str) -> bool {
+        let Some(e) = self.index.lock().unwrap().remove(name) else {
+            return false;
+        };
+        let (blob, meta) = self.pair(name, e.gen);
+        self.move_to_quarantine(&blob, &meta);
+        true
+    }
+
+    fn move_to_quarantine(&self, blob: &Path, meta: &Path) {
+        for p in [blob, meta] {
+            if let Some(fname) = p.file_name() {
+                let _ = std::fs::rename(p, self.quarantine.join(fname));
+            }
+        }
+        sync_dir(&self.blobs);
+        sync_dir(&self.quarantine);
+    }
+
+    /// Re-read one stored blob from disk and check it against its
+    /// sidecar. A fresh file read on purpose: the serving mmap's resident
+    /// pages can mask on-disk rot.
+    fn verify_on_disk(&self, name: &str) -> VerifyOutcome {
+        let Some(e) = self.index.lock().unwrap().get(name).cloned() else {
+            return VerifyOutcome::Missing;
+        };
+        let (blob, _) = self.pair(name, e.gen);
+        verify_file(&blob, &e.sidecar)
+    }
+
+    /// One scrub pass: re-verify every committed blob from disk,
+    /// quarantining damaged ones and dropping them from the serving
+    /// `store`. Returns the names quarantined this pass.
+    pub(crate) fn scrub_pass(&self, store: &Store) -> Vec<String> {
+        let names: Vec<String> = self.index.lock().unwrap().keys().cloned().collect();
+        let mut quarantined = Vec::new();
+        for name in names {
+            match self.verify_on_disk(&name) {
+                VerifyOutcome::Ok | VerifyOutcome::Missing => {}
+                VerifyOutcome::Damaged(_) => {
+                    // Stop serving first (in-flight responses keep their
+                    // Arc and finish from the still-mapped inode), then
+                    // move the files out of the committed set.
+                    store.lock().unwrap().remove(&name);
+                    self.quarantine(&name);
+                    quarantined.push(name);
+                }
+            }
+        }
+        quarantined
+    }
+}
+
+/// Background scrubber: periodically re-verify every persisted blob from
+/// disk, quarantining bit rot. Runs until `stop`; sleeps in small slices
+/// so shutdown never waits out a full interval.
+pub(crate) fn scrub_loop(
+    persist: std::sync::Arc<PersistStore>,
+    store: Store,
+    stop: std::sync::Arc<AtomicBool>,
+    interval: Duration,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        sleep_until(&stop, interval);
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let _ = persist.scrub_pass(&store);
+    }
+}
+
+/// Sleep for `d` in small slices, returning early when `stop` is raised.
+pub(crate) fn sleep_until(stop: &AtomicBool, d: Duration) {
+    let slice = Duration::from_millis(25);
+    let mut left = d;
+    while !left.is_zero() {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let step = slice.min(left);
+        std::thread::sleep(step);
+        left -= step;
+    }
+}
+
+/// Fsync a directory so a just-renamed entry is durable, not merely
+/// sitting in the directory's dirty page. Best-effort: platforms that
+/// refuse to open or fsync directories still get the rename's atomicity,
+/// just without the durability fence.
+fn sync_dir(dir: &Path) {
+    if let Ok(f) = std::fs::File::open(dir) {
+        let _ = f.sync_all();
+    }
+}
+
+/// Does the stored body declare per-frame checksums? (`ZNS1` header flag
+/// — byte 5 of the container, which always sits in the first frame.)
+fn declares_frame_ck(frames: &[Vec<u8>]) -> bool {
+    match frames.first() {
+        Some(f) if f.len() >= 6 => {
+            f[0..4] == STREAM_MAGIC && f[4] == STREAM_VERSION && f[5] & SFLAG_FRAME_CK != 0
+        }
+        _ => false,
+    }
+}
+
+/// Verify a blob file against its sidecar: length, whole-blob checksum
+/// (streaming read), and — when the container declares per-frame
+/// checksums — a full structural [`scan_wire`] walk.
+fn verify_file(path: &Path, sc: &Sidecar) -> VerifyOutcome {
+    let mut f = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(_) => return VerifyOutcome::Missing,
+    };
+    // The whole-blob checksum catches every flipped bit on its own; the
+    // structural walk adds frame attribution, so it is worth buffering
+    // the body for — but not at any size.
+    let scan = sc.frame_ck && sc.total <= MAX_SCAN_BYTES;
+    let mut ckh = Checksummer::streaming();
+    let mut len = 0u64;
+    let mut body = if scan { Vec::with_capacity(sc.total as usize) } else { Vec::new() };
+    let mut buf = vec![0u8; 256 * 1024];
+    loop {
+        match f.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                ckh.update(&buf[..n]);
+                len += n as u64;
+                if scan {
+                    body.extend_from_slice(&buf[..n]);
+                }
+                if len > sc.total {
+                    return VerifyOutcome::Damaged(format!(
+                        "file longer than sidecar total {}",
+                        sc.total
+                    ));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return VerifyOutcome::Damaged(format!("read failed: {e}")),
+        }
+    }
+    if len != sc.total {
+        return VerifyOutcome::Damaged(format!("length {len} != sidecar total {}", sc.total));
+    }
+    if ckh.finalize() != sc.ck {
+        return VerifyOutcome::Damaged("whole-blob checksum mismatch".into());
+    }
+    if scan {
+        match scan_wire(&body) {
+            WireScan::Complete { .. } => {}
+            WireScan::Corrupt { verified, .. } => {
+                return VerifyOutcome::Damaged(format!("frame damaged at byte {verified}"));
+            }
+            WireScan::NeedMore { .. } => {
+                return VerifyOutcome::Damaged("container truncated".into());
+            }
+            // The sidecar says this was a ZNS1 container at commit time;
+            // an unrecognizable header now is damage the whole-blob
+            // checksum should have caught — treat it as such regardless.
+            WireScan::Opaque => {
+                return VerifyOutcome::Damaged("container header unrecognizable".into());
+            }
+        }
+    }
+    VerifyOutcome::Ok
+}
+
+/// Load a verified blob file for serving: mapped (page-cache resident)
+/// when mmap is available, heap frames otherwise.
+fn load_blob(path: &Path, sc: &Sidecar) -> std::io::Result<StoredBlob> {
+    match StoredBlob::from_mapped_file(path, sc.total, sc.ck) {
+        Ok(b) => Ok(b),
+        Err(_) => {
+            let bytes = std::fs::read(path)?;
+            if bytes.len() as u64 != sc.total {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "blob changed during recovery",
+                ));
+            }
+            let frames: Vec<Vec<u8>> = bytes.chunks(FRAME_MAX).map(<[u8]>::to_vec).collect();
+            Ok(StoredBlob::in_memory(frames, sc.total))
+        }
+    }
+}
+
+/// Trailing `-<gen>` of a committed filename stem.
+fn gen_of(path: &Path) -> Option<u64> {
+    let stem = path.file_stem()?.to_str()?;
+    stem.rsplit('-').next()?.parse().ok()
+}
+
+/// FNV-1a + splitmix64 finalizer (same construction as the ring hash):
+/// filename-safe 64-bit name digest. Collisions are harmless — the
+/// sidecar carries the authoritative name and generations keep stems
+/// unique.
+fn hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "zipnn-persist-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn frames_of(bytes: &[u8]) -> Vec<Vec<u8>> {
+        bytes.chunks(FRAME_MAX).map(<[u8]>::to_vec).collect()
+    }
+
+    #[test]
+    fn sidecar_roundtrip() {
+        let sc = Sidecar { name: "a/b c".into(), total: 7, ck: 0xdead_beef, frame_ck: true };
+        assert_eq!(Sidecar::parse(&sc.encode()), Some(sc));
+        assert_eq!(Sidecar::parse(b"junk"), None);
+        let mut enc = Sidecar { name: "x".into(), total: 1, ck: 2, frame_ck: false }.encode();
+        enc.truncate(enc.len() - 1);
+        assert_eq!(Sidecar::parse(&enc), None);
+    }
+
+    #[test]
+    fn persist_commit_and_recover() {
+        let root = tmp_root("roundtrip");
+        let body: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        {
+            let ps = PersistStore::open(&root).unwrap();
+            let blob = ps.persist("model.znn", frames_of(&body), body.len() as u64).unwrap();
+            assert_eq!(blob.read_range(0, body.len()).unwrap(), body);
+        }
+        let ps = PersistStore::open(&root).unwrap();
+        let (blobs, report) = ps.recover().unwrap();
+        assert_eq!(report.recovered, vec!["model.znn".to_string()]);
+        assert!(report.quarantined.is_empty());
+        assert_eq!(blobs.len(), 1);
+        assert_eq!(blobs[0].1.read_range(0, body.len()).unwrap(), body);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reput_keeps_newest_generation() {
+        let root = tmp_root("reput");
+        let ps = PersistStore::open(&root).unwrap();
+        ps.persist("m", frames_of(b"old-bytes"), 9).unwrap();
+        ps.persist("m", frames_of(b"new-bytes!"), 10).unwrap();
+        drop(ps);
+        let ps = PersistStore::open(&root).unwrap();
+        let (blobs, report) = ps.recover().unwrap();
+        assert_eq!(report.recovered, vec!["m".to_string()]);
+        assert_eq!(blobs[0].1.read_range(0, 10).unwrap(), b"new-bytes!");
+        // the superseded generation is gone from disk
+        let n = std::fs::read_dir(root.join("blobs")).unwrap().count();
+        assert_eq!(n, 2, "one blob + one sidecar expected");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn recovery_reaps_tmp_and_orphans_and_quarantines_damage() {
+        let root = tmp_root("recovery");
+        let ps = PersistStore::open(&root).unwrap();
+        ps.persist("good", frames_of(b"kept bytes"), 10).unwrap();
+        ps.persist("bad", frames_of(b"soon damaged"), 12).unwrap();
+        let bad_path = ps.blob_path("bad").unwrap();
+        drop(ps);
+        // bit rot in one blob
+        let mut bytes = std::fs::read(&bad_path).unwrap();
+        bytes[3] ^= 0x40;
+        std::fs::write(&bad_path, &bytes).unwrap();
+        // a half-written temp file and an uncommitted orphan blob
+        std::fs::write(root.join("tmp").join("123-9.blob"), b"half").unwrap();
+        std::fs::write(root.join("blobs").join("feedfeedfeedfeed-99.blob"), b"orphan").unwrap();
+
+        let ps = PersistStore::open(&root).unwrap();
+        let (blobs, report) = ps.recover().unwrap();
+        assert_eq!(report.recovered, vec!["good".to_string()]);
+        assert_eq!(report.quarantined, vec!["bad".to_string()]);
+        assert_eq!(report.reaped_tmp, 1);
+        assert_eq!(report.reaped_orphans, 1);
+        assert_eq!(blobs.len(), 1);
+        assert!(std::fs::read_dir(root.join("tmp")).unwrap().next().is_none());
+        let quarantined = std::fs::read_dir(root.join("quarantine")).unwrap().count();
+        assert_eq!(quarantined, 2, "damaged blob + its sidecar");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn scrub_quarantines_bit_rot_and_stops_serving() {
+        let root = tmp_root("scrub");
+        let ps = PersistStore::open(&root).unwrap();
+        let body: Vec<u8> = (0..50_000u32).map(|i| (i % 13) as u8).collect();
+        let blob = ps.persist("rotting", frames_of(&body), body.len() as u64).unwrap();
+        let store: Store = Arc::new(Mutex::new(HashMap::new()));
+        store.lock().unwrap().insert("rotting".into(), Arc::new(blob));
+
+        assert!(ps.scrub_pass(&store).is_empty(), "clean blob must not be quarantined");
+
+        let path = ps.blob_path("rotting").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[1000] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+
+        assert_eq!(ps.scrub_pass(&store), vec!["rotting".to_string()]);
+        assert!(store.lock().unwrap().is_empty(), "quarantined blob still served");
+        assert!(ps.blob_path("rotting").is_none());
+        assert!(std::fs::read_dir(root.join("quarantine")).unwrap().count() >= 2);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn remove_deletes_the_pair() {
+        let root = tmp_root("remove");
+        let ps = PersistStore::open(&root).unwrap();
+        ps.persist("gone", frames_of(b"bytes"), 5).unwrap();
+        assert!(ps.remove("gone"));
+        assert!(!ps.remove("gone"));
+        assert!(std::fs::read_dir(root.join("blobs")).unwrap().next().is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

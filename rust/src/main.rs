@@ -88,11 +88,17 @@ fn usage() -> ExitCode {
   delta      --base A --next B --out D.znn [--dtype bf16]
   apply      --base A --delta D.znn --out B
   train      [--preset lm_tiny|lm_small|cnn_tiny|cnn_small] [--steps N] [--artifacts DIR]
-  serve      [--edge-of ORIGIN_ADDR] (runs until killed; prints address)
-  fleet      serve [--n 3]                       start N hubs as one fleet (prints members)
+  serve      [--edge-of ORIGIN_ADDR] [--persist DIR [--scrub-secs N]]
+             [--id ID --cluster LIST [--replication R] [--repair-secs N]]
+             (runs until killed; prints address; --persist survives crashes,
+              --id/--cluster joins a self-healing fleet)
+  fleet      serve [--n 3] [--persist DIR [--scrub-secs N] [--repair-secs N] [--replication R]]
+                                                 start N hubs as one fleet (prints members)
              put <file> --peers LIST [--compress] [--index (.znnm only)] [--replication R]
              get <name> --peers LIST [--raw] [--out F] [--replication R] [--stripes N]
              ls  --peers LIST
+             rm <name> --peers LIST              delete a stored blob from every node
+             repair --peers LIST [--replication R]  one client-driven repair pass
              (LIST = comma-separated id=host:port members, as printed by fleet serve)"
     );
     ExitCode::FAILURE
@@ -483,7 +489,46 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             if let Some(origin) = args.flags.get("edge-of") {
                 b = b.read_through(origin);
             }
-            let server = b.start()?;
+            if let Some(root) = args.flags.get("persist") {
+                b = b.persist_dir(root);
+            }
+            if let Some(secs) = args.flags.get("scrub-secs").and_then(|v| v.parse::<u64>().ok()) {
+                b = b.scrub_interval(std::time::Duration::from_secs(secs));
+            }
+            let mut server = b.start()?;
+            if let Some(r) = server.recovery() {
+                println!(
+                    "recovered {} blob(s), quarantined {}, reaped {} temp + {} orphan file(s)",
+                    r.recovered.len(),
+                    r.quarantined.len(),
+                    r.reaped_tmp,
+                    r.reaped_orphans
+                );
+                for name in &r.quarantined {
+                    eprintln!("quarantined: {name}");
+                }
+            }
+            // A cluster view turns this hub into a self-healing fleet
+            // member: it probes peers, re-replicates what it should hold,
+            // and deletes what the ring moved away.
+            if let (Some(id), Some(spec)) = (args.flags.get("id"), args.flags.get("cluster")) {
+                let members = parse_members(spec)?;
+                if !members.iter().any(|(m, _)| m == id) {
+                    anyhow::bail!("--id '{id}' does not appear in --cluster");
+                }
+                let replication = args.usize_flag("replication", 2);
+                let secs = args
+                    .flags
+                    .get("repair-secs")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .or_else(zipnn::util::env::hub_repair_secs)
+                    .unwrap_or(5);
+                server.enable_repair(
+                    zipnn::hub::ClusterConfig::new(id, members, replication),
+                    std::time::Duration::from_secs(secs),
+                );
+                println!("self-healing repair loop running every {secs}s as '{id}'");
+            }
             match args.flags.get("edge-of") {
                 Some(origin) => println!(
                     "zipnn edge hub serving on {} (read-through of {origin})",
@@ -523,10 +568,40 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
     let sub = args
         .positional
         .first()
-        .ok_or_else(|| anyhow::anyhow!("fleet needs a subcommand: serve|put|get|ls"))?;
+        .ok_or_else(|| anyhow::anyhow!("fleet needs a subcommand: serve|put|get|ls|rm|repair"))?;
     if sub == "serve" {
         let n = args.usize_flag("n", 3).max(1);
-        let fleet = Fleet::start(n)?;
+        let fleet = match args.flags.get("persist") {
+            Some(root) => {
+                // Durable self-healing mode: per-hub crash-safe stores
+                // under root/hub<i>, background scrub + repair loops.
+                let replication = args.usize_flag("replication", 2);
+                let scrub = args
+                    .flags
+                    .get("scrub-secs")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .or_else(zipnn::util::env::hub_scrub_secs)
+                    .unwrap_or(60);
+                let repair = args
+                    .flags
+                    .get("repair-secs")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .or_else(zipnn::util::env::hub_repair_secs)
+                    .unwrap_or(5);
+                let fleet = Fleet::start_durable(
+                    n,
+                    std::path::Path::new(root),
+                    replication,
+                    std::time::Duration::from_secs(scrub),
+                    std::time::Duration::from_secs(repair),
+                )?;
+                println!(
+                    "durable fleet under {root} (R={replication}, scrub {scrub}s, repair {repair}s)"
+                );
+                fleet
+            }
+            None => Fleet::start(n)?,
+        };
         let members: Vec<String> =
             fleet.members().into_iter().map(|(id, addr)| format!("{id}={addr}")).collect();
         println!("zipnn fleet of {n} hubs serving; members:");
@@ -607,7 +682,29 @@ fn run_fleet(args: &Args) -> anyhow::Result<()> {
                 println!("{name:<50} [{replicas}]");
             }
         }
-        other => anyhow::bail!("unknown fleet subcommand '{other}' (serve|put|get|ls)"),
+        "rm" => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("fleet rm needs a blob name"))?;
+            let removed = client.delete(name)?;
+            println!("{name}: removed from {removed} node(s)");
+        }
+        "repair" => {
+            let report = client.repair()?;
+            for (name, fixed) in &report.copied {
+                println!("re-replicated {name} -> [{}]", fixed.join(","));
+            }
+            for (name, from) in &report.dropped {
+                println!("dropped stale {name} from [{}]", from.join(","));
+            }
+            println!(
+                "repair pass done: {} blob(s) re-replicated, {} stale cop(ies) dropped",
+                report.copied.len(),
+                report.dropped.len()
+            );
+        }
+        other => anyhow::bail!("unknown fleet subcommand '{other}' (serve|put|get|ls|rm|repair)"),
     }
     Ok(())
 }

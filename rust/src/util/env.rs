@@ -13,6 +13,9 @@
 //! | `ZIPNN_HUB_WORKERS`     | usize | Hub reactor worker threads (default ncpu, max 16)  |
 //! | `ZIPNN_HUB_MAX_CONNS`   | usize | Hub concurrent-connection cap (default 4096)       |
 //! | `ZIPNN_HUB_SPOOL_DIR`   | path  | Spool hub PUT bodies to files under this directory |
+//! | `ZIPNN_HUB_PERSIST`     | path  | Durable content-addressed store root (crash-safe)  |
+//! | `ZIPNN_HUB_SCRUB_SECS`  | u64   | Seconds between scrubber passes (default 60)       |
+//! | `ZIPNN_HUB_REPAIR_SECS` | u64   | Seconds between fleet repair rounds (default 5)    |
 //! | `ZIPNN_HUB_MAX_BODY_MB` | usize | Hub in-flight request-body budget (default 4096)   |
 //! | `ZIPNN_FAULT_PROFILE`   | name  | Hub clients connect through a fault-injecting proxy|
 //! | `ZIPNN_FAULT_SEED`      | u64   | Deterministic schedule seed for the fault proxy    |
@@ -78,6 +81,34 @@ pub fn hub_max_conns() -> Option<usize> {
 /// `ZIPNN_HUB_SPOOL_DIR`: directory for hub PUT spool files.
 pub fn hub_spool_dir() -> Option<PathBuf> {
     std::env::var_os("ZIPNN_HUB_SPOOL_DIR").map(PathBuf::from)
+}
+
+/// `ZIPNN_HUB_PERSIST`: root directory for the durable store. When set
+/// (or when the builder passes a root), PUTs commit via fsync + atomic
+/// rename and the hub re-indexes surviving blobs on startup. Takes
+/// precedence over the spool dir.
+pub fn hub_persist_dir() -> Option<PathBuf> {
+    std::env::var_os("ZIPNN_HUB_PERSIST")
+        .filter(|v| !v.is_empty())
+        .map(PathBuf::from)
+}
+
+/// `ZIPNN_HUB_SCRUB_SECS`: seconds between background scrubber passes
+/// over the persisted blobs (default 60; persist mode only).
+pub fn hub_scrub_secs() -> Option<u64> {
+    std::env::var("ZIPNN_HUB_SCRUB_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// `ZIPNN_HUB_REPAIR_SECS`: seconds between self-healing repair rounds
+/// on fleet members started with a cluster view (default 5).
+pub fn hub_repair_secs() -> Option<u64> {
+    std::env::var("ZIPNN_HUB_REPAIR_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&n| n > 0)
 }
 
 /// `ZIPNN_HUB_MAX_BODY_MB`: cap on request-body bytes the hub holds in

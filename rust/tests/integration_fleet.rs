@@ -277,6 +277,25 @@ fn rebalance_streams_only_moved_blobs() {
             assert_eq!(&new_set, old_set, "unmoved '{name}' changed placement");
         }
     }
+    // Every moved blob's displaced old copy was dropped — and only from
+    // nodes the new ring no longer places it on.
+    let dropped_names: BTreeSet<&str> =
+        report.dropped.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(
+        dropped_names, moved_names,
+        "each moved blob must drop exactly its displaced copy"
+    );
+    for (name, from) in &report.dropped {
+        let current: BTreeSet<String> = client.replicas_of(name).into_iter().collect();
+        for node in from {
+            assert!(!current.contains(node), "'{name}' dropped from a current replica");
+            let held = HubClient::connect_direct(fleet.addr_of(node).unwrap())
+                .unwrap()
+                .list()
+                .unwrap();
+            assert!(!held.contains(name), "'{name}' still on displaced node {node}");
+        }
+    }
     let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 13);
     for (name, blob) in &blobs {
         let (got, _) = client.download(name, false, &mut down).unwrap();

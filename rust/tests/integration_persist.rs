@@ -1,0 +1,439 @@
+//! Integration: durable crash-safe hub storage and the self-healing
+//! fleet — restart persistence, SIGKILL-mid-PUT recovery (real `zipnn
+//! serve` subprocess), startup quarantine/reaping, the Delete/Ping wire
+//! ops end to end, background scrub + server-to-server repair with no
+//! client driving, and client-driven fleet repair/delete.
+
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+use zipnn::codec::CodecConfig;
+use zipnn::fp::DType;
+use zipnn::hub::{
+    Fleet, FleetClient, FleetConfig, HubClient, HubServer, NetProfile, NetSim, RetryPolicy,
+};
+use zipnn::model::synthetic::{generate, Category, SyntheticSpec};
+
+/// A fresh scratch root under the system temp dir, unique per test.
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "zipnn-it-persist-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_retry() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 3,
+        base_backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(10),
+        deadline: Duration::from_secs(30),
+    }
+}
+
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        replication: 2,
+        peers: 3,
+        vnodes: 64,
+        retry: quick_retry(),
+    }
+}
+
+/// A deterministic raw test blob.
+fn raw_blob(len: usize, salt: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 31 + salt * 97) % 256) as u8).collect()
+}
+
+/// Flip one byte of a file in place (no truncation — the serving mmap
+/// stays valid; the scrubber reads the file fresh anyway).
+fn flip_byte(path: &Path, off: u64) {
+    let mut f = std::fs::OpenOptions::new().read(true).write(true).open(path).unwrap();
+    f.seek(SeekFrom::Start(off)).unwrap();
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b).unwrap();
+    f.seek(SeekFrom::Start(off)).unwrap();
+    f.write_all(&[b[0] ^ 0x20]).unwrap();
+    f.sync_all().unwrap();
+}
+
+/// Acknowledged blobs survive a clean restart byte-identically — raw and
+/// compressed — and the recovery report says exactly what came back.
+#[test]
+fn restart_serves_acknowledged_blobs_byte_identical() {
+    let root = tmp_root("restart");
+    let model = generate(&SyntheticSpec::new("p", Category::RegularBF16, 1 << 20, 5));
+    let raw = model.to_bytes();
+    let blob = raw_blob(200 * 1024, 1);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 1);
+
+    // `connect` (not `connect_direct`): under the CI fault legs these
+    // transfers dial through the env-armed fault proxy — durability and
+    // wire resilience composed.
+    {
+        let server = HubServer::builder().persist_dir(&root).start().unwrap();
+        let r = server.recovery().expect("persisted server must report recovery");
+        assert!(r.recovered.is_empty() && r.quarantined.is_empty(), "fresh dir must be empty");
+        let mut c = HubClient::connect(server.addr()).unwrap();
+        c.upload("model", &raw, Some(CodecConfig::for_dtype(DType::BF16)), &mut sim).unwrap();
+        c.upload("plain", &blob, None, &mut sim).unwrap();
+        server.shutdown();
+    }
+
+    let server = HubServer::builder().persist_dir(&root).start().unwrap();
+    let r = server.recovery().unwrap();
+    assert_eq!(
+        r.recovered,
+        vec!["model.znn".to_string(), "plain".to_string()],
+        "both acknowledged blobs must be re-indexed"
+    );
+    assert!(r.quarantined.is_empty());
+    let mut c = HubClient::connect(server.addr()).unwrap();
+    let (got_model, _) = c.download("model", true, &mut sim).unwrap();
+    assert_eq!(got_model, raw, "compressed blob must survive restart byte-identical");
+    let (got_plain, _) = c.download("plain", false, &mut sim).unwrap();
+    assert_eq!(got_plain, blob, "raw blob must survive restart byte-identical");
+    assert!(
+        std::fs::read_dir(root.join("tmp")).unwrap().next().is_none(),
+        "tmp/ must be empty after a clean cycle"
+    );
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Delete and Ping end to end over the wire: idempotent delete removes
+/// the served copy *and* the committed on-disk pair, and stays deleted
+/// across a restart.
+#[test]
+fn delete_is_idempotent_and_durable() {
+    let root = tmp_root("delete");
+    let blob = raw_blob(64 * 1024, 2);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 2);
+    {
+        let server = HubServer::builder().persist_dir(&root).start().unwrap();
+        let mut c = HubClient::connect_direct(server.addr()).unwrap();
+        c.ping().expect("ping must succeed against a live hub");
+        c.upload("zap", &blob, None, &mut sim).unwrap();
+        assert!(server.persisted_blob_path("zap").is_some());
+        assert!(c.delete("zap").unwrap(), "first delete removes the blob");
+        assert!(!c.delete("zap").unwrap(), "second delete is a clean no-op");
+        assert!(c.stat("zap").is_err(), "deleted blob must not be served");
+        assert!(server.persisted_blob_path("zap").is_none(), "on-disk pair must be gone");
+        server.shutdown();
+    }
+    let server = HubServer::builder().persist_dir(&root).start().unwrap();
+    assert!(server.recovery().unwrap().recovered.is_empty(), "deleted blob must not recover");
+    let mut c = HubClient::connect_direct(server.addr()).unwrap();
+    assert!(c.stat("zap").is_err());
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Startup recovery on a dirty directory: damaged blobs are quarantined
+/// (not served, files preserved as evidence), in-flight temp files and
+/// uncommitted orphans are reaped, intact blobs serve.
+#[test]
+fn recovery_quarantines_damage_and_reaps_junk() {
+    let root = tmp_root("quarantine");
+    let good = raw_blob(64 * 1024, 3);
+    let bad = raw_blob(48 * 1024, 4);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 3);
+    let bad_path = {
+        let server = HubServer::builder().persist_dir(&root).start().unwrap();
+        let mut c = HubClient::connect_direct(server.addr()).unwrap();
+        c.upload("good", &good, None, &mut sim).unwrap();
+        c.upload("bad", &bad, None, &mut sim).unwrap();
+        let p = server.persisted_blob_path("bad").unwrap();
+        server.shutdown();
+        p
+    };
+    // Bit rot in one blob, a crash-leftover temp file, and a blob that
+    // never got its sidecar (crash between the two commit renames).
+    flip_byte(&bad_path, 1000);
+    std::fs::write(root.join("tmp").join("999-7.blob"), b"crash leftover").unwrap();
+    std::fs::write(root.join("blobs").join("feedfeedfeedfeed-99.blob"), b"orphan").unwrap();
+
+    let server = HubServer::builder().persist_dir(&root).start().unwrap();
+    let r = server.recovery().unwrap();
+    assert_eq!(r.recovered, vec!["good".to_string()]);
+    assert_eq!(r.quarantined, vec!["bad".to_string()]);
+    assert_eq!(r.reaped_tmp, 1);
+    assert_eq!(r.reaped_orphans, 1);
+    let mut c = HubClient::connect_direct(server.addr()).unwrap();
+    let (got, _) = c.download("good", false, &mut sim).unwrap();
+    assert_eq!(got, good);
+    assert!(c.stat("bad").is_err(), "quarantined blob must not be served");
+    assert!(std::fs::read_dir(root.join("tmp")).unwrap().next().is_none());
+    assert_eq!(
+        std::fs::read_dir(root.join("quarantine")).unwrap().count(),
+        2,
+        "damaged blob + sidecar preserved in quarantine/"
+    );
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Kill a real `zipnn serve` subprocess on drop so a panicking test
+/// never leaks a listener.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Spawn `zipnn serve --persist <dir>` and wait for its address line.
+/// Returns the guard, the dial address, and the recovery summary the CLI
+/// printed (present from the second boot of a directory onward).
+fn spawn_serve(dir: &Path) -> (KillOnDrop, String, Option<String>) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_zipnn"))
+        .arg("serve")
+        .arg("--persist")
+        .arg(dir)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn zipnn serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut lines = BufReader::new(stdout);
+    let mut recovery = None;
+    let addr = loop {
+        let mut line = String::new();
+        if lines.read_line(&mut line).expect("read server stdout") == 0 {
+            panic!("zipnn serve exited before printing its address");
+        }
+        let line = line.trim();
+        if line.starts_with("recovered ") {
+            recovery = Some(line.to_string());
+        }
+        if let Some(rest) = line.strip_prefix("zipnn hub serving on ") {
+            break rest.to_string();
+        }
+    };
+    (KillOnDrop(child), addr, recovery)
+}
+
+/// The tentpole crash test, against the real binary: SIGKILL the server
+/// with a PUT half-way up the wire. On restart every acknowledged blob
+/// is byte-identical, the never-acknowledged in-flight name does not
+/// exist, and crash leftovers in `tmp/` are reaped.
+#[test]
+fn sigkill_mid_put_preserves_acknowledged_state() {
+    let root = tmp_root("sigkill");
+    std::fs::create_dir_all(&root).unwrap();
+    let acked = raw_blob(300 * 1024, 5);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 4);
+
+    {
+        let (guard, addr, _) = spawn_serve(&root);
+        let mut c = HubClient::connect_direct(&addr).unwrap();
+        c.upload("acked", &acked, None, &mut sim).unwrap();
+
+        // A PUT caught mid-body: header plus one frame, no terminator —
+        // the request can never have been acknowledged.
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        let mut req = vec![0u8]; // Op::Put
+        req.extend_from_slice(&(b"inflight".len() as u32).to_le_bytes());
+        req.extend_from_slice(b"inflight");
+        let frame = vec![0xABu8; 32 * 1024];
+        req.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        req.extend_from_slice(&frame);
+        s.write_all(&req).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+
+        drop(guard); // SIGKILL with the PUT still in flight
+        drop(s);
+    }
+    // A crash-leftover temp file, as if the kill had landed mid-commit.
+    std::fs::write(root.join("tmp").join("777-3.blob"), b"interrupted commit").unwrap();
+
+    let (guard, addr, recovery) = spawn_serve(&root);
+    let recovery = recovery.expect("restart must print a recovery summary");
+    assert!(
+        recovery.starts_with("recovered 1 blob(s)"),
+        "exactly the acknowledged blob must recover, got: {recovery}"
+    );
+    let mut c = HubClient::connect_direct(&addr).unwrap();
+    let (got, _) = c.download("acked", false, &mut sim).unwrap();
+    assert_eq!(got, acked, "acknowledged blob must survive SIGKILL byte-identical");
+    assert!(c.stat("inflight").is_err(), "half-uploaded blob must not exist after the crash");
+    assert!(
+        std::fs::read_dir(root.join("tmp")).unwrap().next().is_none(),
+        "crash leftovers in tmp/ must be reaped on restart"
+    );
+    drop(guard);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A whole durable fleet comes back after a full stop: every blob
+/// uploaded before the restart downloads byte-identically from the
+/// rebooted fleet, served out of the per-hub persist roots.
+#[test]
+fn durable_fleet_survives_full_restart() {
+    let root = tmp_root("fleet-restart");
+    // Long scrub/repair intervals: this test is about persistence only.
+    let slow = Duration::from_secs(600);
+    let blobs: Vec<(String, Vec<u8>)> = (0..4)
+        .map(|i| (format!("dur-{i}"), raw_blob(72 * 1024, 10 + i)))
+        .collect();
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 5);
+    // Fault-aware connects: under the CI fault legs the replica pushes
+    // and striped reads here run through the fault proxy too.
+    {
+        let fleet = Fleet::start_durable(3, &root, 2, slow, slow).unwrap();
+        let mut client = FleetClient::connect(&fleet.members(), fleet_cfg());
+        for (name, blob) in &blobs {
+            client.upload(name, blob, None, &mut sim).unwrap();
+        }
+        fleet.shutdown();
+    }
+    let fleet = Fleet::start_durable(3, &root, 2, slow, slow).unwrap();
+    for i in 0..3 {
+        assert!(
+            fleet.server(&format!("hub{i}")).unwrap().recovery().is_some(),
+            "hub{i} must have run recovery"
+        );
+    }
+    let mut client = FleetClient::connect(&fleet.members(), fleet_cfg());
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 6);
+    for (name, blob) in &blobs {
+        let (got, _) = client.download(name, false, &mut down).unwrap();
+        assert_eq!(&got, blob, "'{name}' corrupted by the fleet restart");
+    }
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The self-healing tentpole, with **no client driving the repair**:
+/// corrupt one replica's on-disk copy, then only watch. The victim's
+/// scrubber detects the rot and quarantines the pair; its background
+/// repair loop notices the hole in its ring ownership and pulls a
+/// verified copy from the surviving replica, server to server, until
+/// R-way replication is restored.
+#[test]
+fn scrub_and_background_repair_restore_replication() {
+    let root = tmp_root("selfheal");
+    let fleet = Fleet::start_durable(
+        3,
+        &root,
+        2,
+        Duration::from_millis(200),
+        Duration::from_millis(300),
+    )
+    .unwrap();
+    let blob = raw_blob(96 * 1024, 21);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 7);
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    client.upload("heal", &blob, None, &mut sim).unwrap();
+
+    let replicas = client.replicas_of("heal");
+    assert_eq!(replicas.len(), 2);
+    let victim = replicas[0].clone();
+    let victim_path = fleet
+        .server(&victim)
+        .unwrap()
+        .persisted_blob_path("heal")
+        .expect("replica must hold a committed copy");
+    let quarantine = root.join(&victim).join("quarantine");
+    flip_byte(&victim_path, 4096);
+
+    // From here on: no client writes. Scrub must quarantine, repair must
+    // re-replicate, entirely between the servers.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let srv = fleet.server(&victim).unwrap();
+        let quarantined =
+            std::fs::read_dir(&quarantine).map(|d| d.count() >= 2).unwrap_or(false);
+        let restored = srv
+            .persisted_blob_path("heal")
+            .map(|p| std::fs::read(&p).map(|b| b == blob).unwrap_or(false))
+            .unwrap_or(false);
+        let pulled = srv.repair_counters().map(|c| c.pulled()).unwrap_or(0);
+        if quarantined && restored && pulled >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "self-heal incomplete after 60s: quarantined={quarantined} restored={restored} pulled={pulled}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Read-only confirmation: the healed replica serves the exact bytes.
+    let mut c = HubClient::connect_direct(fleet.addr_of(&victim).unwrap()).unwrap();
+    let (got, _) = c.download("heal", false, &mut sim).unwrap();
+    assert_eq!(got, blob, "healed replica must serve the original bytes");
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Client-driven repair pass: a replica missing its copy gets a verified
+/// one back, and a stale copy parked on a non-replica node is deleted —
+/// but only because every ring replica verifiably holds the blob.
+#[test]
+fn client_repair_restores_missing_and_drops_stale() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let blob = raw_blob(80 * 1024, 31);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 8);
+    client.upload("fix", &blob, None, &mut sim).unwrap();
+
+    let replicas = client.replicas_of("fix");
+    let missing = replicas[0].clone();
+    let stale: String = fleet
+        .members()
+        .into_iter()
+        .map(|(id, _)| id)
+        .find(|id| !replicas.contains(id))
+        .expect("3 nodes, R=2: one non-replica");
+    // Knock the copy off one replica; park a stray copy elsewhere.
+    let mut on_missing =
+        HubClient::connect_direct(fleet.addr_of(&missing).unwrap()).unwrap();
+    assert!(on_missing.delete("fix").unwrap());
+    let mut on_stale = HubClient::connect_direct(fleet.addr_of(&stale).unwrap()).unwrap();
+    on_stale.upload("fix", &blob, None, &mut sim).unwrap();
+
+    let report = client.repair().unwrap();
+    assert_eq!(report.copied, vec![("fix".to_string(), vec![missing.clone()])]);
+    assert_eq!(report.dropped, vec![("fix".to_string(), vec![stale.clone()])]);
+    assert!(
+        on_missing.list().unwrap().contains(&"fix".to_string()),
+        "repair must restore the missing replica"
+    );
+    assert!(
+        !on_stale.list().unwrap().contains(&"fix".to_string()),
+        "repair must drop the stale non-replica copy"
+    );
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 9);
+    let (got, _) = client.download("fix", false, &mut down).unwrap();
+    assert_eq!(got, blob);
+    // A second pass is a no-op: the fleet is converged.
+    let again = client.repair().unwrap();
+    assert!(again.copied.is_empty() && again.dropped.is_empty());
+    fleet.shutdown();
+}
+
+/// Fleet-wide delete: every replica drops its copy, the count says how
+/// many actually held one, and a re-delete is a clean zero.
+#[test]
+fn fleet_delete_removes_every_copy() {
+    let fleet = Fleet::start(3).unwrap();
+    let mut client = FleetClient::connect_direct(&fleet.members(), fleet_cfg());
+    let blob = raw_blob(40 * 1024, 41);
+    let mut sim = NetSim::new(NetProfile::UPLOAD, 10);
+    client.upload("gone", &blob, None, &mut sim).unwrap();
+
+    assert_eq!(client.delete("gone").unwrap(), 2, "both replicas held a copy");
+    assert!(!client.list_all().unwrap().contains(&"gone".to_string()));
+    let mut down = NetSim::new(NetProfile::CLOUD_FIRST, 11);
+    assert!(client.download("gone", false, &mut down).is_err());
+    assert_eq!(client.delete("gone").unwrap(), 0, "re-delete is idempotent");
+    fleet.shutdown();
+}

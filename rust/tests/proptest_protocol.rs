@@ -77,7 +77,7 @@ fn summarize(events: &[ReqEvent]) -> (Vec<(u8, String)>, Vec<u8>, usize) {
 #[test]
 fn any_split_yields_identical_events() {
     forall(40, |rng| {
-        let op = rng.below(7) as u8; // all valid opcodes (incl. Range/GetTensor)
+        let op = rng.below(9) as u8; // all valid opcodes (incl. Delete/Ping)
         let name: String = (0..rng.below(40))
             .map(|_| (b'a' + (rng.below(26) as u8)) as char)
             .collect();
@@ -274,19 +274,53 @@ fn malformed_range_bodies_rejected() {
     assert!(parse_range(&body).is_err(), "23-byte body must be rejected");
 }
 
-/// Bytes 7..=255 are not opcodes: garbage interleaved at a request
+/// Bytes 9..=255 are not opcodes: garbage interleaved at a request
 /// boundary is a sticky parser error (the connection drops), exactly as
 /// for the historic ops.
 #[test]
 fn unknown_opcodes_stay_rejected() {
-    for bad in [7u8, 8, 99, 255] {
+    for bad in [9u8, 42, 99, 255] {
         let mut p = RequestParser::new();
         assert!(p.feed(&[bad]).is_err(), "opcode {bad} accepted");
         assert!(p.feed(&[Op::Range as u8]).is_err(), "error not sticky");
     }
     assert_eq!(Op::from_u8(5), Some(Op::Range));
     assert_eq!(Op::from_u8(6), Some(Op::GetTensor));
-    assert_eq!(Op::from_u8(7), None);
+    assert_eq!(Op::from_u8(7), Some(Op::Delete));
+    assert_eq!(Op::from_u8(8), Some(Op::Ping));
+    assert_eq!(Op::from_u8(9), None);
+}
+
+/// Delete and Ping are empty-body, name-in-header requests; both survive
+/// arbitrary feed splits and interleave cleanly with the historic ops on
+/// a keep-alive connection.
+#[test]
+fn delete_and_ping_survive_any_split() {
+    forall(30, |rng| {
+        let name: String = (0..1 + rng.below(30))
+            .map(|_| (b'a' + (rng.below(26) as u8)) as char)
+            .collect();
+        let mut wire = encode_request(rng, Op::Delete as u8, &name, b"");
+        wire.extend_from_slice(&encode_request(rng, Op::Ping as u8, "", b""));
+        wire.extend_from_slice(&encode_request(rng, Op::List as u8, "", b""));
+        for max_split in [1usize, 5, 4096] {
+            let (mut p, events, _) = feed_in_splits(rng, &wire, max_split);
+            assert!(!p.mid_request());
+            assert!(p.take().is_none());
+            let (headers, body, ends) = summarize(&events);
+            assert_eq!(
+                headers,
+                vec![
+                    (Op::Delete as u8, name.clone()),
+                    (Op::Ping as u8, String::new()),
+                    (Op::List as u8, String::new()),
+                ],
+                "split {max_split}"
+            );
+            assert!(body.is_empty(), "delete/ping bodies must be empty");
+            assert_eq!(ends, 3);
+        }
+    });
 }
 
 #[test]
