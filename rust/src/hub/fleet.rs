@@ -546,10 +546,13 @@ impl FleetClient {
 
     /// Delete `name` from surviving nodes the new ring no longer places
     /// it on — but only once every *current* replica verifiably serves
-    /// it. A replica that can't be statted leaves the stale copy in
-    /// place: while the real replica set is degraded, a displaced copy
-    /// is the last line of defence, not garbage. `None` when nothing was
-    /// displaced or the drop wasn't safe.
+    /// the same bytes (length + whole-blob checksum all agree), and only
+    /// for displaced copies matching those bytes. A replica that can't
+    /// be statted, or one serving a divergent (older, damaged) version,
+    /// leaves the stale copy in place: while the real replica set is
+    /// degraded or inconsistent, a displaced copy is the last line of
+    /// defence, not garbage. `None` when nothing was displaced or the
+    /// drop wasn't safe.
     fn drop_displaced(&mut self, name: &str, old: &HashRing) -> Option<Vec<String>> {
         let current = self.replicas_of(name);
         let stale: Vec<String> = old
@@ -561,13 +564,29 @@ impl FleetClient {
         if stale.is_empty() {
             return None;
         }
+        // Every current replica must serve the blob and all must agree on
+        // its identity — that agreed (length, checksum) is the reference
+        // a displaced copy is compared against before deletion.
+        let mut reference: Option<(u64, u64)> = None;
         for id in &current {
-            if self.try_on(id, |c| c.stat_full(name)).is_err() {
+            let Ok((total, _, _, ck)) = self.try_on(id, |c| c.stat_full(name)) else {
                 return None;
+            };
+            match reference {
+                None => reference = Some((total, ck)),
+                Some(r) if r == (total, ck) => {}
+                Some(_) => return None, // replicas disagree — repair first
             }
         }
+        let reference = reference?;
         let mut from = Vec::new();
         for id in &stale {
+            // A displaced copy that diverges from what the replicas serve
+            // might be the only surviving newest version — keep it.
+            match self.try_on(id, |c| c.stat_full(name)) {
+                Ok((total, _, _, ck)) if (total, ck) == reference => {}
+                _ => continue,
+            }
             if matches!(self.try_on(id, |c| c.delete(name)), Ok(true)) {
                 from.push(id.clone());
             }
@@ -658,8 +677,40 @@ impl FleetClient {
                 .filter(|(id, inv)| !replicas.contains(*id) && inv.contains(name))
                 .map(|(id, _)| id.clone())
                 .collect();
+            if stale.is_empty() {
+                continue;
+            }
+            // Inventory says every replica holds *a* copy; before deleting
+            // anything, stat them all and require agreement on length +
+            // whole-blob checksum — that identity is the reference a stale
+            // copy must match, or it might be the only newest version.
+            let mut reference: Option<(u64, u64)> = None;
+            let mut agreed = true;
+            for id in &replicas {
+                match self.try_on(id, |c| c.stat_full(name)) {
+                    Ok((total, _, _, ck)) => match reference {
+                        None => reference = Some((total, ck)),
+                        Some(r) if r == (total, ck) => {}
+                        Some(_) => {
+                            agreed = false;
+                            break;
+                        }
+                    },
+                    Err(_) => {
+                        agreed = false;
+                        break;
+                    }
+                }
+            }
+            let Some(reference) = reference.filter(|_| agreed) else {
+                continue;
+            };
             let mut from = Vec::new();
             for id in &stale {
+                match self.try_on(id, |c| c.stat_full(name)) {
+                    Ok((total, _, _, ck)) if (total, ck) == reference => {}
+                    _ => continue,
+                }
                 if matches!(self.try_on(id, |c| c.delete(name)), Ok(true)) {
                     from.push(id.clone());
                     if let Some(inv) = inventory.get_mut(id) {

@@ -18,9 +18,11 @@
 //!    persisted hub makes the repaired copy durable before counting it.
 //! 4. **Drop** — for every name this hub holds but no longer owns, delete
 //!    the local copy *only after* re-statting it on every ring replica in
-//!    the same round. Stale copies are garbage, but they are also the last
-//!    line of defence while the real replicas are degraded — never drop a
-//!    byte that isn't provably held everywhere it belongs.
+//!    the same round and checking each replica's length + whole-blob
+//!    checksum against the local copy. Stale copies are garbage, but they
+//!    are also the last line of defence while the real replicas are
+//!    degraded — never drop a byte that isn't provably held, bit-for-bit,
+//!    everywhere it belongs.
 //!
 //! Every per-name failure is skipped, not retried: the next round sees the
 //! same gap and tries again. Repair therefore converges (each round only
@@ -28,6 +30,7 @@
 //! idempotent across hubs — two hubs repairing the same blob concurrently
 //! just both end up holding it, which is the goal.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -157,11 +160,11 @@ pub(crate) fn repair_round(ctx: &ServerCtx, cluster: &ClusterConfig, counters: &
     }
 
     // Union of every name anyone in the (reachable) fleet holds.
-    let local: Vec<String> = {
+    let local: HashSet<String> = {
         let map = ctx.store.lock().unwrap();
         map.keys().cloned().collect()
     };
-    let mut names: Vec<String> = local.clone();
+    let mut names: Vec<String> = local.iter().cloned().collect();
     for (_, peer) in &peers {
         names.extend(peer.inventory.iter().cloned());
     }
@@ -174,7 +177,7 @@ pub(crate) fn repair_round(ctx: &ServerCtx, cluster: &ClusterConfig, counters: &
         }
         let replicas = ring.replicas_for(name);
         let owned = replicas.iter().any(|r| *r == cluster.self_id);
-        let held = local.binary_search_by(|l| l.as_str().cmp(name)).is_ok();
+        let held = local.contains(name);
         if owned && !held {
             match pull_blob(ctx, name, &mut peers) {
                 Ok(true) => counters.pulled.fetch_add(1, Ordering::Relaxed),
@@ -182,10 +185,25 @@ pub(crate) fn repair_round(ctx: &ServerCtx, cluster: &ClusterConfig, counters: &
                 Err(_) => counters.skipped.fetch_add(1, Ordering::Relaxed),
             };
         } else if !owned && held {
-            if drop_is_safe(name, &replicas, &mut peers) {
-                ctx.store.lock().unwrap().remove(name);
+            // The local copy's identity (length + whole-blob checksum) is
+            // what every replica must match before it may be dropped.
+            let local_meta = ctx
+                .store
+                .lock()
+                .unwrap()
+                .get(name)
+                .map(|b| (b.total, b.ck));
+            let safe = match local_meta {
+                Some((total, ck)) => drop_is_safe(name, total, ck, &replicas, &mut peers),
+                None => false, // vanished mid-round (scrubber, Delete)
+            };
+            if safe {
                 if let Some(p) = &ctx.persist {
+                    let _commit = p.commit_lock(name);
+                    ctx.store.lock().unwrap().remove(name);
                     p.remove(name);
+                } else {
+                    ctx.store.lock().unwrap().remove(name);
                 }
                 counters.dropped.fetch_add(1, Ordering::Relaxed);
             } else {
@@ -247,15 +265,25 @@ fn pull_blob(
 }
 
 /// A stale copy may be dropped only when every ring replica answered this
-/// round's probe *and* serves the blob right now. Anything less and the
-/// stale copy stays — it might be the only good replica left.
-fn drop_is_safe(name: &str, replicas: &[&str], peers: &mut [(String, Peer)]) -> bool {
+/// round's probe *and* serves the blob right now *and* its copy matches
+/// the local one bit-for-bit (length + whole-blob checksum). Anything
+/// less and the stale copy stays — a replica serving a different (older,
+/// damaged) version doesn't count as holding the blob, and this copy
+/// might be the only good version left.
+fn drop_is_safe(
+    name: &str,
+    total: u64,
+    ck: u64,
+    replicas: &[&str],
+    peers: &mut [(String, Peer)],
+) -> bool {
     for owner in replicas {
         let Some((_, peer)) = peers.iter_mut().find(|(id, _)| id == owner) else {
             return false; // replica dead or not a known member
         };
-        if peer.client.stat_full(name).is_err() {
-            return false;
+        match peer.client.stat_full(name) {
+            Ok((r_total, _, _, r_ck)) if r_total == total && r_ck == ck => {}
+            _ => return false,
         }
     }
     true

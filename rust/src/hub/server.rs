@@ -264,10 +264,24 @@ pub(crate) fn store_blob(
     frames: Vec<Vec<u8>>,
     total: u64,
 ) -> std::result::Result<Arc<StoredBlob>, String> {
-    let blob = if let Some(p) = &ctx.persist {
-        p.persist(name, frames, total)
-            .map_err(|e| format!("persist failed: {e}"))?
-    } else if let Some(dir) = &ctx.spool {
+    if let Some(p) = &ctx.persist {
+        // Commit + publish under the per-name commit lock: without it two
+        // concurrent same-name PUTs (or a PUT racing a Delete) can leave
+        // the served bytes and the on-disk generation pointing at
+        // different copies, and a restart or scrub silently reverts what
+        // GET serves.
+        let _commit = p.commit_lock(name);
+        let blob = Arc::new(
+            p.persist(name, frames, total)
+                .map_err(|e| format!("persist failed: {e}"))?,
+        );
+        ctx.store
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&blob));
+        return Ok(blob);
+    }
+    let blob = if let Some(dir) = &ctx.spool {
         spool_blob(dir, &frames, total).unwrap_or_else(|_| StoredBlob::in_memory(frames, total))
     } else {
         StoredBlob::in_memory(frames, total)
@@ -690,11 +704,16 @@ pub(crate) fn execute_request(req: Request, ctx: &ServerCtx) -> (Response, bool)
         Op::Delete => {
             // Idempotent by design: repair loops and rebalance retries
             // re-issue deletes freely; "already gone" must not read as
-            // failure. The payload says which case it was.
-            let served = ctx.store.lock().unwrap().remove(&req.name).is_some();
-            let persisted = match &ctx.persist {
-                Some(p) => p.remove(&req.name),
-                None => false,
+            // failure. The payload says which case it was. On a persisted
+            // hub both removals happen under the per-name commit lock so
+            // a racing PUT can't land between them and be half-deleted.
+            let (served, persisted) = match &ctx.persist {
+                Some(p) => {
+                    let _commit = p.commit_lock(&req.name);
+                    let served = ctx.store.lock().unwrap().remove(&req.name).is_some();
+                    (served, p.remove(&req.name))
+                }
+                None => (ctx.store.lock().unwrap().remove(&req.name).is_some(), false),
             };
             let payload: &[u8] = if served || persisted { b"1" } else { b"0" };
             (Response::Small(small_response(true, payload)), false)

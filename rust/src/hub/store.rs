@@ -66,6 +66,11 @@ const MFLAG_FRAME_CK: u8 = 1;
 /// the whole-blob checksum, just without buffering them for `scan_wire`.
 const MAX_SCAN_BYTES: u64 = 1 << 28;
 
+/// Stripe count for the per-name commit locks (see
+/// [`PersistStore::commit_lock`]). Power of two, sized so concurrent PUTs
+/// of *different* names practically never contend.
+const COMMIT_STRIPES: usize = 64;
+
 /// One blob's sidecar record.
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Sidecar {
@@ -142,6 +147,8 @@ pub struct PersistStore {
     quarantine: PathBuf,
     seq: AtomicU64,
     index: Mutex<HashMap<String, Entry>>,
+    /// Striped per-name commit locks — see [`PersistStore::commit_lock`].
+    commit_locks: Vec<Mutex<()>>,
 }
 
 impl PersistStore {
@@ -162,7 +169,24 @@ impl PersistStore {
             quarantine,
             seq: AtomicU64::new(1),
             index: Mutex::new(HashMap::new()),
+            commit_locks: (0..COMMIT_STRIPES).map(|_| Mutex::new(())).collect(),
         })
+    }
+
+    /// Per-name critical section for commit + publish. The durable commit
+    /// ([`PersistStore::persist`] / [`PersistStore::remove`] /
+    /// [`PersistStore::quarantine`]) and the serving-store update happen
+    /// under separate locks; without a section spanning both, two
+    /// concurrent same-name PUTs (or a PUT racing a Delete or the
+    /// scrubber) can leave the served bytes and the on-disk generation
+    /// pointing at different copies — and a restart or scrub would then
+    /// silently revert what GET serves. Callers hold this guard across
+    /// the whole mutate-disk-then-publish sequence. Lock order: the
+    /// commit lock is always taken *before* the serving-store lock and
+    /// the index lock, never after.
+    pub(crate) fn commit_lock(&self, name: &str) -> std::sync::MutexGuard<'_, ()> {
+        let i = (hash64(name.as_bytes()) as usize) % COMMIT_STRIPES;
+        self.commit_locks[i].lock().unwrap()
     }
 
     pub fn root(&self) -> &Path {
@@ -240,9 +264,10 @@ impl PersistStore {
         }
         // Orphan blobs: written but never committed (crash between the
         // two renames) — by construction unacknowledged, safe to reap.
+        // Count only actual unlinks: a blob already moved to quarantine
+        // alongside its unparseable sidecar is not an orphan twice over.
         for blob in &blob_stems {
-            if !blob.with_extension("meta").exists() {
-                let _ = std::fs::remove_file(blob);
+            if !blob.with_extension("meta").exists() && std::fs::remove_file(blob).is_ok() {
                 report.reaped_orphans += 1;
             }
         }
@@ -422,6 +447,13 @@ impl PersistStore {
             match self.verify_on_disk(&name) {
                 VerifyOutcome::Ok | VerifyOutcome::Missing => {}
                 VerifyOutcome::Damaged(_) => {
+                    // Re-verify under the commit lock: a racing re-PUT
+                    // may have just committed a fresh generation, which
+                    // must not be quarantined on the stale verdict.
+                    let _commit = self.commit_lock(&name);
+                    if !matches!(self.verify_on_disk(&name), VerifyOutcome::Damaged(_)) {
+                        continue;
+                    }
                     // Stop serving first (in-flight responses keep their
                     // Arc and finish from the still-mapped inode), then
                     // move the files out of the committed set.
